@@ -1,0 +1,122 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts for Rust.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids, so text round-trips cleanly. Lowered
+with return_tuple=True; the Rust side unwraps with to_tupleN().
+
+Usage (from python/): python -m compile.aot --out ../artifacts
+Writes one .hlo.txt per entry point plus manifest.json describing the
+shapes and the geometry constants, which the Rust side cross-checks
+against its own mirrored constants (rust/src/hedm/geometry.rs).
+
+`make artifacts` is the only place Python runs; the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import geometry, model
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(cfg: geometry.Config):
+    """Name -> (callable, example args). Shapes are static per config."""
+    h = w = cfg.frame
+    k = cfg.dark_frames
+    b = cfg.b_batch
+    s = cfg.s_max
+    o = cfg.o_max
+    return {
+        "dark_median": (
+            model.dark_median,
+            [_spec((k, h, w))],
+        ),
+        "reduce_frame": (
+            lambda frame, dark: model.reduce_frame(frame, dark, cfg),
+            [_spec((h, w)), _spec((h, w))],
+        ),
+        "peak_search": (
+            lambda mask, intensity: model.peak_search(mask, intensity, cfg),
+            [_spec((h, w)), _spec((h, w))],
+        ),
+        "fit_orientation": (
+            lambda e, g, gm, ob, om: model.fit_orientation(e, g, gm, ob, om, cfg),
+            [_spec((b, 3)), _spec((s, 3)), _spec((s,)), _spec((o, 3)), _spec((o,))],
+        ),
+        # Tiny smoke computation for runtime unit tests: (x + y, x * y).
+        "smoke_addmul": (
+            lambda x, y: (x + y, x * y),
+            [_spec((4,)), _spec((4,))],
+        ),
+    }
+
+
+def build(out_dir: pathlib.Path, cfg: geometry.Config) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "config": dataclasses.asdict(cfg),
+        "gvectors": geometry.gvectors(cfg).tolist(),
+        "gvector_mask": geometry.gvector_mask(cfg).tolist(),
+        "entry_points": {},
+    }
+    for name, (fn, args) in entry_points(cfg).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        # Execute on example zeros to record output arity/shapes.
+        outs = jax.eval_shape(fn, *args)
+        flat, _ = jax.tree.flatten(outs)
+        manifest["entry_points"][name] = {
+            "file": path.name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)} for o in flat
+            ],
+        }
+        print(f"  {name}: {len(text)} chars, {len(flat)} outputs")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--frame", type=int, default=geometry.DEFAULT_FRAME)
+    args = ap.parse_args()
+    cfg = geometry.Config(frame=args.frame)
+    out = pathlib.Path(args.out)
+    print(f"lowering artifacts to {out.resolve()} (frame={cfg.frame})")
+    build(out, cfg)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""Shared HEDM geometry: physics constants, reciprocal lattice, detector.
+
+This module is the single source of truth for the diffraction geometry
+used by the L1 Pallas kernels, the L2 JAX model, the pure-jnp reference
+oracle, and (via the artifact manifest) the Rust detector simulator and
+indexer. Keeping every constant here guarantees that the synthetic
+detector (Rust), the reduction pipeline (L2), and the orientation fit
+(L1) agree on the forward model.
+
+Physics (far-field HEDM, monochromatic rotating-crystal method):
+
+  - Incident beam along +x with wavevector k = 2*pi/lambda.
+  - Sample rotates about the lab z axis by omega.
+  - A reciprocal-lattice vector G (crystal frame) diffracts at the
+    omega where the elastic condition |k_in + g| = |k_in| holds, i.e.
+
+        g_x(omega) = -lambda * |g|^2 / (4*pi)
+
+    with g(omega) = Rz(omega) * R_crystal * G.  Writing the x component
+    as A*cos(omega + phi), A = sqrt(gx^2 + gy^2), phi = atan2(gy, gx),
+    the condition has two solutions (Friedel pair) when |t| <= 1:
+
+        omega = +/- acos(t) - phi,   t = -lambda |g|^2 / (4 pi A)
+
+  - The scattered wavevector is k_out = k_in + g(omega*); a far-field
+    detector at distance DET_DIST along +x records the spot at
+
+        u = DET_DIST * k_out_y / k_out_x   (horizontal, micrometres)
+        v = DET_DIST * k_out_z / k_out_x   (vertical,   micrometres)
+
+    converted to pixels by PIXEL_SIZE.
+
+These are the same equations the paper's FF-HEDM indexing code (MIDAS
+lineage, refs [17], [18]) implements in C; we use one shared constant
+set so Rust and JAX agree bit-for-bit up to float error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Experiment constants (the "parameter file" of Fig 8).
+# ---------------------------------------------------------------------------
+
+#: X-ray wavelength in Angstrom (71.68 keV, E > 50 keV per the paper).
+WAVELENGTH = 0.172979
+
+#: Cubic lattice parameter in Angstrom (FCC gold, the Fig 2 sample).
+LATTICE_A = 4.0782
+
+#: Sample-to-detector distance, micrometres. The paper's FF setup is
+#: "up to 1 m" with a 2048-pixel panel; our default panel is 512 px
+#: (see DEFAULT_FRAME), so the distance is scaled to 0.25 m to keep the
+#: same angular acceptance (all rings through hmax=3 on-panel).
+DET_DIST = 2.5e5
+
+#: Detector pixel size, micrometres (FF: "~200 um pixel size").
+PIXEL_SIZE = 200.0
+
+#: Detector panel size in pixels (square). The paper's detectors produce
+#: 8 MB frames (2048x2048 u16); the default artifact size is reduced so
+#: that interpret-mode Pallas stays fast. The Rust detector simulator
+#: scales all byte accounting back to the paper's 8 MB frames.
+DEFAULT_FRAME = 512
+
+#: Number of rotation steps per layer ("360 to 1,440 angles").
+DEFAULT_OMEGA_STEPS = 360
+
+#: Omega range covered by a scan, degrees.
+OMEGA_SPAN = 360.0
+
+#: Maximum reciprocal-lattice vectors used for simulation/fitting.
+#: 58 = the complete {111},{200},{220},{311},{222} shells; gvectors()
+#: only admits whole |G| shells so the set stays inversion-symmetric.
+S_MAX = 58
+
+#: Maximum observed spots per fit (padded; mask marks the valid prefix).
+O_MAX = 512
+
+#: Orientation candidates scored per kernel invocation.
+B_BATCH = 256
+
+#: Weight converting omega degrees into pixel-equivalent distance for
+#: the spot-matching metric (a spot is (u_px, v_px, omega * OMEGA_WEIGHT)).
+OMEGA_WEIGHT = 4.0
+
+#: Match tolerance in the weighted spot metric, pixels.
+MATCH_TOL = 6.0
+
+#: Dark-field stack depth for the median dark frame.
+DARK_FRAMES = 8
+
+#: Reduction thresholds (counts above dark median / LoG response).
+INTENSITY_THRESHOLD = 80.0
+LOG_THRESHOLD = 12.0
+
+#: LoG filter width.
+LOG_SIGMA = 1.2
+LOG_HALF = 2  # 5x5 kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Bundle of geometry constants, overridable for tests."""
+
+    wavelength: float = WAVELENGTH
+    lattice_a: float = LATTICE_A
+    det_dist: float = DET_DIST
+    pixel_size: float = PIXEL_SIZE
+    frame: int = DEFAULT_FRAME
+    omega_steps: int = DEFAULT_OMEGA_STEPS
+    s_max: int = S_MAX
+    o_max: int = O_MAX
+    b_batch: int = B_BATCH
+    omega_weight: float = OMEGA_WEIGHT
+    match_tol: float = MATCH_TOL
+    dark_frames: int = DARK_FRAMES
+    intensity_threshold: float = INTENSITY_THRESHOLD
+    log_threshold: float = LOG_THRESHOLD
+    log_sigma: float = LOG_SIGMA
+    log_half: int = LOG_HALF
+
+    @property
+    def k_in(self) -> float:
+        """Incident wavevector magnitude, 1/Angstrom."""
+        return 2.0 * math.pi / self.wavelength
+
+    @property
+    def center(self) -> float:
+        """Beam-centre pixel (square panel, centred)."""
+        return self.frame / 2.0
+
+
+DEFAULT_CONFIG = Config()
+
+
+# ---------------------------------------------------------------------------
+# Reciprocal lattice.
+# ---------------------------------------------------------------------------
+
+
+def fcc_allowed(h: int, k: int, l: int) -> bool:
+    """FCC structure-factor selection rule: h,k,l all even or all odd."""
+    parities = {h % 2, k % 2, l % 2}
+    return len(parities) == 1
+
+
+def gvectors(cfg: Config = DEFAULT_CONFIG, hmax: int = 3) -> np.ndarray:
+    """Reciprocal-lattice vectors (s_max, 3), f32, sorted by |G| then hkl.
+
+    Cubic: G = (2*pi / a) * (h, k, l). Only FCC-allowed reflections are
+    kept, and only *complete* |G| shells are admitted (so the set is
+    inversion-symmetric: Friedel mates are never split by truncation).
+    The array is zero-padded to cfg.s_max rows (padding marked by
+    gvector_mask) so artifact shapes stay static.
+    """
+    out = []
+    for h in range(-hmax, hmax + 1):
+        for k in range(-hmax, hmax + 1):
+            for l in range(-hmax, hmax + 1):
+                if h == 0 and k == 0 and l == 0:
+                    continue
+                if not fcc_allowed(h, k, l):
+                    continue
+                norm2 = h * h + k * k + l * l
+                out.append((norm2, h, k, l))
+    out.sort()
+    kept: list[tuple[int, int, int]] = []
+    i = 0
+    while i < len(out):
+        # Extend by the whole shell (equal |G|^2) or stop.
+        j = i
+        while j < len(out) and out[j][0] == out[i][0]:
+            j += 1
+        if len(kept) + (j - i) > cfg.s_max:
+            break
+        kept.extend((h, k, l) for _, h, k, l in out[i:j])
+        i = j
+    scale = 2.0 * math.pi / cfg.lattice_a
+    vecs = np.array(kept, dtype=np.float32) * scale
+    if vecs.shape[0] < cfg.s_max:
+        pad = np.zeros((cfg.s_max - vecs.shape[0], 3), dtype=np.float32)
+        vecs = np.concatenate([vecs, pad], axis=0)
+    return vecs
+
+
+def gvector_mask(cfg: Config = DEFAULT_CONFIG, hmax: int = 3) -> np.ndarray:
+    """Validity mask (s_max,) for zero-padded rows of :func:`gvectors`."""
+    g = gvectors(cfg, hmax)
+    return (np.linalg.norm(g, axis=1) > 1e-6).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotations (numpy reference; jnp versions live in kernels/ref.py).
+# ---------------------------------------------------------------------------
+
+
+def euler_to_matrix(phi1: float, capphi: float, phi2: float) -> np.ndarray:
+    """Bunge ZXZ Euler angles (radians) -> 3x3 rotation matrix (f64).
+
+    R = Rz(phi1) @ Rx(capphi) @ Rz(phi2); the convention used across the
+    Rust simulator and the JAX kernels.
+    """
+    c1, s1 = math.cos(phi1), math.sin(phi1)
+    cP, sP = math.cos(capphi), math.sin(capphi)
+    c2, s2 = math.cos(phi2), math.sin(phi2)
+    rz1 = np.array([[c1, -s1, 0], [s1, c1, 0], [0, 0, 1]])
+    rx = np.array([[1, 0, 0], [0, cP, -sP], [0, sP, cP]])
+    rz2 = np.array([[c2, -s2, 0], [s2, c2, 0], [0, 0, 1]])
+    return rz1 @ rx @ rz2
+
+
+def simulate_spots(
+    euler: tuple[float, float, float],
+    cfg: Config = DEFAULT_CONFIG,
+    hmax: int = 3,
+) -> np.ndarray:
+    """Forward-simulate the (u_px, v_px, omega_deg) spot list for one grain.
+
+    Pure-numpy oracle used by tests and mirrored by the Rust detector
+    simulator (rust/src/hedm/geometry.rs). Returns an (n, 3) f64 array of
+    spots that land on the detector panel.
+    """
+    rot = euler_to_matrix(*euler)
+    gv = gvectors(cfg, hmax).astype(np.float64)
+    mask = gvector_mask(cfg, hmax) > 0.5
+    lam = cfg.wavelength
+    k = cfg.k_in
+    spots = []
+    for keep, g0 in zip(mask, gv):
+        if not keep:
+            continue
+        g = rot @ g0
+        gsq = float(g @ g)
+        a = math.hypot(g[0], g[1])
+        if a < 1e-12:
+            continue
+        t = -lam * gsq / (4.0 * math.pi) / a
+        if abs(t) > 1.0:
+            continue
+        phi = math.atan2(g[1], g[0])
+        for sign in (1.0, -1.0):
+            omega = sign * math.acos(t) - phi
+            # wrap to [-pi, pi)
+            omega = (omega + math.pi) % (2.0 * math.pi) - math.pi
+            co, so = math.cos(omega), math.sin(omega)
+            gxr = g[0] * co - g[1] * so
+            gyr = g[0] * so + g[1] * co
+            kfx = k + gxr
+            kfy = gyr
+            kfz = g[2]
+            if kfx <= 0.0:
+                continue
+            u = cfg.det_dist * kfy / kfx / cfg.pixel_size + cfg.center
+            v = cfg.det_dist * kfz / kfx / cfg.pixel_size + cfg.center
+            if 0.0 <= u < cfg.frame and 0.0 <= v < cfg.frame:
+                spots.append((u, v, math.degrees(omega)))
+    return np.array(spots, dtype=np.float64).reshape(-1, 3)
+
+
+def log_kernel_2d(sigma: float = LOG_SIGMA, half: int = LOG_HALF) -> np.ndarray:
+    """(2*half+1)^2 Laplacian-of-Gaussian filter, zero-mean, f32.
+
+    Sign convention: positive response at the centre of a *bright* blob
+    (i.e. the negated classic LoG), so thresholding is `response > thr`.
+    """
+    n = 2 * half + 1
+    y, x = np.mgrid[-half : half + 1, -half : half + 1].astype(np.float64)
+    r2 = x * x + y * y
+    s2 = sigma * sigma
+    log = (r2 - 2.0 * s2) / (s2 * s2) * np.exp(-r2 / (2.0 * s2))
+    log -= log.mean()
+    # negate: bright blob centre -> positive response
+    return (-log).astype(np.float32).reshape(n, n)

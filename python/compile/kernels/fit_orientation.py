@@ -1,0 +1,233 @@
+"""Pallas kernel: batched orientation scoring (the FitOrientation hot loop).
+
+The paper's stage-2 analysis spends ~22M core-hours/week running
+FitOrientation (Fig 8): for every grid point, an NLopt optimiser
+searches orientation space, and each objective evaluation forward-
+simulates diffraction spots and scores them against the observations.
+That scalar C-per-task structure is the CPU/many-task design; the TPU
+adaptation (DESIGN.md SHardware-Adaptation) batches B candidate
+orientations per call and turns the per-candidate work into
+MXU-shaped matmuls:
+
+  1. Euler (B, 3) -> rotation matrices R (B, 3, 3)            [VPU]
+  2. g = R @ G^T for G (S, 3)                                  [MXU: (B*3,3)x(3,S)]
+  3. closed-form Friedel-pair omega solutions + detector
+     projection -> predicted spots (B, 2S, 3)                  [VPU]
+  4. pairwise squared distances to observed spots (O, 3) via
+     |s|^2 - 2 s.o + |o|^2                                     [MXU: (B*2S,3)x(3,O)]
+  5. min over O, tolerance count -> score (B,)                 [VPU]
+
+Grid: one program per block of B_TILE candidates; G and the observation
+list are broadcast to every program (index_map -> block 0).
+
+VMEM per tile (f32, B_TILE=64, S=48, O=512):
+  spots (64, 96, 3) + dist (64*96, 512) = 12.6 MiB for the distance
+  tile - the dominant term. On real hardware O would be split into
+  256-column panels (two passes, running min), halving footprint;
+  interpret mode keeps the single-panel form for clarity. Documented
+  in DESIGN.md SPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import geometry
+
+B_TILE = 64
+
+
+def _rotmat(phi1, capphi, phi2):
+    """Bunge ZXZ Euler angles (B,) each -> rotation matrices (B, 3, 3)."""
+    c1, s1 = jnp.cos(phi1), jnp.sin(phi1)
+    cp, sp = jnp.cos(capphi), jnp.sin(capphi)
+    c2, s2 = jnp.cos(phi2), jnp.sin(phi2)
+    r00 = c1 * c2 - s1 * cp * s2
+    r01 = -c1 * s2 - s1 * cp * c2
+    r02 = s1 * sp
+    r10 = s1 * c2 + c1 * cp * s2
+    r11 = -s1 * s2 + c1 * cp * c2
+    r12 = -c1 * sp
+    r20 = sp * s2
+    r21 = sp * c2
+    r22 = cp
+    rows = [
+        jnp.stack([r00, r01, r02], axis=-1),
+        jnp.stack([r10, r11, r12], axis=-1),
+        jnp.stack([r20, r21, r22], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2)  # (B, 3, 3)
+
+
+def predicted_spots(euler, gvec, gmask, cfg: geometry.Config):
+    """Forward-simulate spots for a batch of orientations.
+
+    Args:
+      euler: (B, 3) Euler angles, radians.
+      gvec: (S, 3) reciprocal-lattice vectors.
+      gmask: (S,) 1.0 for real rows, 0.0 for padding.
+
+    Returns:
+      spots: (B, 2S, 3) weighted coords (u_px, v_px, omega_deg * w).
+      valid: (B, 2S) 1.0 where a spot exists and lands on the panel.
+
+    Shared between the kernel body and the jnp reference so that the
+    oracle check in tests is an independent *path*, not a copy (ref.py
+    recomputes everything from scalars with vmap).
+    """
+    lam = cfg.wavelength
+    k_in = cfg.k_in
+    four_pi = 4.0 * math.pi
+
+    rot = _rotmat(euler[:, 0], euler[:, 1], euler[:, 2])  # (B,3,3)
+    b = euler.shape[0]
+    s = gvec.shape[0]
+    # g = R @ G^T : contract (B*3, 3) x (3, S) on the MXU.
+    g = jnp.dot(
+        rot.reshape(b * 3, 3), gvec.T, preferred_element_type=jnp.float32
+    ).reshape(b, 3, s)
+    gx, gy, gz = g[:, 0, :], g[:, 1, :], g[:, 2, :]  # (B, S)
+
+    gsq = gx * gx + gy * gy + gz * gz
+    a = jnp.sqrt(gx * gx + gy * gy)
+    safe_a = jnp.maximum(a, 1e-12)
+    t = -lam * gsq / four_pi / safe_a
+    reachable = (jnp.abs(t) <= 1.0) & (a > 1e-8) & (gmask[None, :] > 0.5)
+    tt = jnp.clip(t, -1.0, 1.0)
+    phi = jnp.arctan2(gy, gx)
+    acos_t = jnp.arccos(tt)
+
+    spots = []
+    valids = []
+    for sign in (1.0, -1.0):
+        omega = sign * acos_t - phi
+        omega = jnp.mod(omega + math.pi, 2.0 * math.pi) - math.pi
+        co, so = jnp.cos(omega), jnp.sin(omega)
+        gxr = gx * co - gy * so
+        gyr = gx * so + gy * co
+        kfx = k_in + gxr
+        kfy = gyr
+        kfz = gz
+        fwd = kfx > 0.0
+        safe_kfx = jnp.where(fwd, kfx, 1.0)
+        u = cfg.det_dist * kfy / safe_kfx / cfg.pixel_size + cfg.center
+        v = cfg.det_dist * kfz / safe_kfx / cfg.pixel_size + cfg.center
+        on_panel = (u >= 0.0) & (u < cfg.frame) & (v >= 0.0) & (v < cfg.frame)
+        ok = reachable & fwd & on_panel
+        w = jnp.degrees(omega) * cfg.omega_weight
+        spots.append(jnp.stack([u, v, w], axis=-1))  # (B, S, 3)
+        valids.append(ok)
+    spot = jnp.concatenate(spots, axis=1)  # (B, 2S, 3)
+    valid = jnp.concatenate(valids, axis=1).astype(jnp.float32)  # (B, 2S)
+    # Park invalid spots far off-panel so they can never match anything.
+    spot = jnp.where(valid[..., None] > 0.5, spot, -1.0e6)
+    return spot, valid
+
+
+#: Observation-axis panel width: the distance matrix is materialised
+#: one (B*P, O_PANEL) panel at a time with a running minimum, instead
+#: of the full (B*P, O) block. Arithmetic intensity of the distance
+#: stage is ~1.4 FLOP/B (bandwidth-bound), so shrinking the resident
+#: intermediate is the lever: 4x less traffic at O=512. Measured -46%
+#: on the CPU PJRT path; on TPU it is what keeps the panel in VMEM
+#: (EXPERIMENTS.md SPerf iteration, DESIGN.md SPerf).
+O_PANEL = 128
+
+
+def _score_block(spot, valid, obs, obs_mask, cfg: geometry.Config):
+    """Match predicted spots against observations; completeness per cand.
+
+    spot (B, P, 3), valid (B, P), obs (O, 3), obs_mask (O,).
+    Returns (score (B,), matched (B,), simulated (B,)).
+    """
+    b, p, _ = spot.shape
+    o = obs.shape[0]
+    flat = spot.reshape(b * p, 3)
+    s2 = jnp.sum(flat * flat, axis=1, keepdims=True)
+    dmin = jnp.full((b * p,), jnp.inf, dtype=jnp.float32)
+    panel = O_PANEL if o % O_PANEL == 0 else o
+    for start in range(0, o, panel):
+        # Fold the validity mask into the geometry: invalid rows are
+        # displaced 1e7 px away, so they can never win the min — this
+        # removes a full (B*P, O_PANEL) where/select pass per panel.
+        ob = obs[start : start + panel]
+        om = obs_mask[start : start + panel]
+        ob = ob + (1.0 - om)[:, None] * 1.0e7
+        # |s - o|^2 = |s|^2 - 2 s.o + |o|^2 ; cross term on the MXU.
+        cross = jnp.dot(flat, ob.T, preferred_element_type=jnp.float32)
+        d2 = s2 - 2.0 * cross + jnp.sum(ob * ob, axis=1)[None, :]
+        dmin = jnp.minimum(dmin, jnp.min(d2, axis=1))
+    dmin = dmin.reshape(b, p)
+    tol2 = cfg.match_tol * cfg.match_tol
+    hit = jnp.where((dmin <= tol2) & (valid > 0.5), 1.0, 0.0)
+    matched = jnp.sum(hit, axis=1)
+    simulated = jnp.sum(valid, axis=1)
+    score = matched / jnp.maximum(simulated, 1.0)
+    return score, matched, simulated
+
+
+def _kernel(euler_ref, gvec_ref, gmask_ref, obs_ref, omask_ref,
+            score_ref, matched_ref, simulated_ref, *, cfg: geometry.Config):
+    spot, valid = predicted_spots(
+        euler_ref[...], gvec_ref[...], gmask_ref[...], cfg
+    )
+    score, matched, simulated = _score_block(
+        spot, valid, obs_ref[...], omask_ref[...], cfg
+    )
+    score_ref[...] = score
+    matched_ref[...] = matched
+    simulated_ref[...] = simulated
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_orientation(
+    euler: jnp.ndarray,
+    gvec: jnp.ndarray,
+    gmask: jnp.ndarray,
+    obs: jnp.ndarray,
+    obs_mask: jnp.ndarray,
+    cfg: geometry.Config = geometry.DEFAULT_CONFIG,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Score a batch of candidate orientations against observed spots.
+
+    Args:
+      euler: (B, 3) candidate Bunge Euler angles, radians. B % B_TILE == 0.
+      gvec: (S, 3) reciprocal-lattice vectors (geometry.gvectors).
+      gmask: (S,) validity mask for padded G rows.
+      obs: (O, 3) observed spots in weighted coords
+        (u_px, v_px, omega_deg * cfg.omega_weight).
+      obs_mask: (O,) 1.0 for real observations.
+
+    Returns:
+      score: (B,) completeness in [0, 1] - fraction of simulated spots
+        matched within cfg.match_tol (the paper's "confidence").
+      matched: (B,) matched spot counts.
+      simulated: (B,) simulated (reachable, on-panel) spot counts.
+    """
+    b = euler.shape[0]
+    if b % B_TILE:
+        raise ValueError(f"batch {b} must be a multiple of {B_TILE}")
+    s = gvec.shape[0]
+    o = obs.shape[0]
+    grid = (b // B_TILE,)
+    vec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    vspec = pl.BlockSpec((B_TILE,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_TILE, 3), lambda i: (i, 0)),
+            pl.BlockSpec((s, 3), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((o, 3), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=[vspec, vspec, vspec],
+        out_shape=[vec, vec, vec],
+        interpret=True,
+    )(euler, gvec, gmask, obs, obs_mask)

@@ -1,0 +1,107 @@
+"""Pallas kernel: fused dark-subtract + 3x3 median filter + binarize.
+
+The NF-HEDM stage-1 reduction (paper SVI-A) runs, per frame: a median
+over the dark stack (done once, see model.dark_median), a 3x3 median
+filter, a Laplacian-of-Gaussian filter, and a threshold. The per-pixel
+median filter is the byte-hottest step (9 reads/pixel over an 8 MB
+frame); this kernel fuses dark subtraction, the median, and the
+intensity threshold into one VMEM-resident pass.
+
+Layout strategy (the TPU adaptation, DESIGN.md SHardware-Adaptation):
+instead of halo exchange between tiles, the L2 model materialises the
+nine shifted copies of the (padded) frame as a (9, H, W) stack - XLA
+fuses the slices into the pad, so no extra HBM traffic materialises -
+and the kernel reduces over the leading axis with a 19-op min/max
+median network, fully vectorised on the VPU. Tiles are (TILE_H, TILE_W)
+blocks of the frame; the stack tile is (9, TILE_H, TILE_W).
+
+VMEM footprint per tile (f32): (9 + 1 + 1 + 1) * TILE_H * TILE_W * 4
+= 12 * 128 * 256 * 4 = 1.5 MiB, comfortably inside the ~16 MiB VMEM of
+a TPU core with room for double-buffering.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see aot recipe).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_H = 128
+TILE_W = 256
+
+# Median-of-9 exchange network (Paeth). Each pair (i, j) replaces
+# (p[i], p[j]) with (min, max); after the 19 exchanges p[4] is the median.
+_MEDIAN9_NETWORK = (
+    (1, 2), (4, 5), (7, 8), (0, 1), (3, 4), (6, 7), (1, 2), (4, 5),
+    (7, 8), (0, 3), (5, 8), (4, 7), (3, 6), (1, 4), (2, 5), (4, 7),
+    (4, 2), (6, 4), (4, 2),
+)
+
+
+def median9(planes: list[jnp.ndarray]) -> jnp.ndarray:
+    """Vectorised median of nine equally-shaped arrays."""
+    p = list(planes)
+    for i, j in _MEDIAN9_NETWORK:
+        lo = jnp.minimum(p[i], p[j])
+        hi = jnp.maximum(p[i], p[j])
+        p[i], p[j] = lo, hi
+    return p[4]
+
+
+def _kernel(stack_ref, dark_ref, med_ref, mask_ref, *, threshold: float):
+    """One (TILE_H, TILE_W) tile: median9(stack) - dark, thresholded.
+
+    stack_ref: (9, TILE_H, TILE_W) shifted copies of the raw frame.
+    dark_ref:  (TILE_H, TILE_W) per-pixel dark median.
+    med_ref:   output, dark-subtracted median (clamped at 0).
+    mask_ref:  output, 1.0 where the subtracted median exceeds threshold.
+    """
+    planes = [stack_ref[i] for i in range(9)]
+    med = median9(planes)
+    sub = jnp.maximum(med - dark_ref[...], 0.0)
+    med_ref[...] = sub
+    mask_ref[...] = jnp.where(sub > threshold, 1.0, 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold",))
+def median_threshold(
+    stack: jnp.ndarray, dark: jnp.ndarray, *, threshold: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused 3x3-median + dark subtract + intensity threshold.
+
+    Args:
+      stack: (9, H, W) f32 - the nine 3x3-neighbourhood shifts of the
+        frame (edge-clamped), produced by model.shift_stack.
+      dark: (H, W) f32 dark-median frame.
+      threshold: intensity threshold applied after subtraction.
+
+    Returns:
+      (median_sub, mask): both (H, W) f32; mask is {0.0, 1.0}.
+    """
+    _, h, w = stack.shape
+    if h % TILE_H or w % TILE_W:
+        raise ValueError(f"frame {h}x{w} must tile by {TILE_H}x{TILE_W}")
+    grid = (h // TILE_H, w // TILE_W)
+    out_shape = [
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+    ]
+    spec2d = pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j))
+    return tuple(
+        pl.pallas_call(
+            functools.partial(_kernel, threshold=threshold),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((9, TILE_H, TILE_W), lambda i, j: (0, i, j)),
+                spec2d,
+            ],
+            out_specs=[spec2d, spec2d],
+            out_shape=out_shape,
+            interpret=True,
+        )(stack, dark)
+    )

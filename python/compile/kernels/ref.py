@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an independently written counterpart
+here; python/tests asserts allclose between the two. The references are
+deliberately *naive* (sort-based median, per-candidate vmap over scalar
+geometry) so that a bug shared between kernel and oracle is unlikely.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry
+
+
+def median_threshold_ref(
+    stack: jnp.ndarray, dark: jnp.ndarray, *, threshold: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based median over the 9-plane stack, then subtract/threshold."""
+    med = jnp.median(stack, axis=0)
+    sub = jnp.maximum(med - dark, 0.0)
+    mask = (sub > threshold).astype(jnp.float32)
+    return sub, mask
+
+
+def _rotmat_single(e):
+    """Bunge ZXZ rotation matrix from one (3,) Euler triple."""
+    c1, s1 = jnp.cos(e[0]), jnp.sin(e[0])
+    cp, sp = jnp.cos(e[1]), jnp.sin(e[1])
+    c2, s2 = jnp.cos(e[2]), jnp.sin(e[2])
+    rz1 = jnp.array([[c1, -s1, 0.0], [s1, c1, 0.0], [0.0, 0.0, 1.0]])
+    rx = jnp.array([[1.0, 0.0, 0.0], [0.0, cp, -sp], [0.0, sp, cp]])
+    rz2 = jnp.array([[c2, -s2, 0.0], [s2, c2, 0.0], [0.0, 0.0, 1.0]])
+    return rz1 @ rx @ rz2
+
+
+def _spots_single(e, gvec, gmask, cfg: geometry.Config):
+    """Predicted spots for ONE orientation, scalar-geometry formulation."""
+    lam = cfg.wavelength
+    rot = _rotmat_single(e)
+    g = (rot @ gvec.T).T  # (S, 3)
+    gx, gy, gz = g[:, 0], g[:, 1], g[:, 2]
+    gsq = gx**2 + gy**2 + gz**2
+    a = jnp.sqrt(gx**2 + gy**2)
+    t = -lam * gsq / (4.0 * math.pi) / jnp.maximum(a, 1e-12)
+    reachable = (jnp.abs(t) <= 1.0) & (a > 1e-8) & (gmask > 0.5)
+    phi = jnp.arctan2(gy, gx)
+    acos_t = jnp.arccos(jnp.clip(t, -1.0, 1.0))
+
+    def branch(sign):
+        omega = sign * acos_t - phi
+        omega = jnp.mod(omega + math.pi, 2 * math.pi) - math.pi
+        gxr = gx * jnp.cos(omega) - gy * jnp.sin(omega)
+        gyr = gx * jnp.sin(omega) + gy * jnp.cos(omega)
+        kfx = cfg.k_in + gxr
+        ok = reachable & (kfx > 0.0)
+        kfx_s = jnp.where(ok, kfx, 1.0)
+        u = cfg.det_dist * gyr / kfx_s / cfg.pixel_size + cfg.center
+        v = cfg.det_dist * gz / kfx_s / cfg.pixel_size + cfg.center
+        ok = ok & (u >= 0) & (u < cfg.frame) & (v >= 0) & (v < cfg.frame)
+        w = jnp.degrees(omega) * cfg.omega_weight
+        spot = jnp.stack([u, v, w], axis=-1)
+        spot = jnp.where(ok[:, None], spot, -1.0e6)
+        return spot, ok.astype(jnp.float32)
+
+    sp, vp = branch(1.0)
+    sm, vm = branch(-1.0)
+    return jnp.concatenate([sp, sm], axis=0), jnp.concatenate([vp, vm], axis=0)
+
+
+def fit_orientation_ref(
+    euler: jnp.ndarray,
+    gvec: jnp.ndarray,
+    gmask: jnp.ndarray,
+    obs: jnp.ndarray,
+    obs_mask: jnp.ndarray,
+    cfg: geometry.Config = geometry.DEFAULT_CONFIG,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """vmap-over-candidates oracle for kernels.fit_orientation."""
+
+    def one(e):
+        spot, valid = _spots_single(e, gvec, gmask, cfg)
+        diff = spot[:, None, :] - obs[None, :, :]  # (P, O, 3)
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.where(obs_mask[None, :] > 0.5, d2, jnp.inf)
+        dmin = jnp.min(d2, axis=1)
+        hit = ((dmin <= cfg.match_tol**2) & (valid > 0.5)).astype(jnp.float32)
+        matched = jnp.sum(hit)
+        simulated = jnp.sum(valid)
+        return matched / jnp.maximum(simulated, 1.0), matched, simulated
+
+    return jax.vmap(one)(euler)
+
+
+def log_filter_ref(img: jnp.ndarray, cfg: geometry.Config) -> jnp.ndarray:
+    """Direct jnp LoG convolution, SAME padding, independent of lax.conv."""
+    k = jnp.asarray(geometry.log_kernel_2d(cfg.log_sigma, cfg.log_half))
+    half = cfg.log_half
+    pad = jnp.pad(img, half, mode="constant")
+    out = jnp.zeros_like(img)
+    n = 2 * half + 1
+    h, w = img.shape
+    for dy in range(n):
+        for dx in range(n):
+            out = out + k[dy, dx] * pad[dy : dy + h, dx : dx + w]
+    return out

@@ -1,0 +1,149 @@
+"""Layer 2: the HEDM compute graphs, AOT-lowered for the Rust runtime.
+
+Each public function here is a jit-able JAX computation with *static*
+shapes fixed by geometry.Config; aot.py lowers them to HLO text and the
+Rust runtime (rust/src/runtime) executes them from leaf tasks of the
+dataflow engine. The functions call the L1 Pallas kernels for their
+hot loops and plain jnp/lax for glue.
+
+Entry points (shapes for the default config, frame=512):
+
+  dark_median   (K, H, W)                     -> (H, W)
+  reduce_frame  (9, H, W), (H, W)             -> (H, W) sub, (H, W) mask,
+                                                 (H, W) log response, (1,) count
+  peak_search   (H, W) mask, (H, W) intensity -> (H, W) peaks, (H, W) weighted
+  fit_orientation (B,3), (S,3), (S,), (O,3), (O,) -> (B,), (B,), (B,)
+
+`shift_stack` is traced *inside* reduce_frame's artifact so the Rust
+side feeds the raw frame directly; the 9-plane stack never crosses the
+FFI boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import geometry
+from .kernels import fit_orientation as fit_kernel
+from .kernels import median as median_kernel
+
+
+def shift_stack(frame: jnp.ndarray) -> jnp.ndarray:
+    """(H, W) -> (9, H, W): the 3x3 neighbourhood shifts, edge-clamped.
+
+    Plane order is row-major over (dy, dx) in {-1,0,1}^2; plane 4 is the
+    identity. XLA fuses these slices of the padded frame, so this is
+    layout glue, not a data copy at HBM scale.
+    """
+    padded = jnp.pad(frame, 1, mode="edge")
+    h, w = frame.shape
+    planes = [
+        padded[dy : dy + h, dx : dx + w]
+        for dy in range(3)
+        for dx in range(3)
+    ]
+    return jnp.stack(planes, axis=0)
+
+
+def dark_median(stack: jnp.ndarray) -> jnp.ndarray:
+    """Median over the dark-frame stack (K, H, W) -> (H, W).
+
+    The paper's stage-1 'median calculation on each pixel of the
+    detector, using all images' (SVI-A). Sort-based; K is small (8).
+    """
+    return jnp.median(stack, axis=0).astype(jnp.float32)
+
+
+def log_filter(img: jnp.ndarray, cfg: geometry.Config) -> jnp.ndarray:
+    """Laplacian-of-Gaussian response, SAME (zero) padding.
+
+    Expressed as 25 shifted-and-scaled adds rather than `lax.conv`: the
+    `convolution` HLO op mis-executes (returns zeros) on the pinned
+    xla_extension 0.5.1 CPU runtime the Rust side links, while slices
+    and adds round-trip fine — and XLA fuses this into one loop anyway.
+    """
+    k = geometry.log_kernel_2d(cfg.log_sigma, cfg.log_half)
+    half = cfg.log_half
+    h, w = img.shape
+    padded = jnp.pad(img, half, mode="constant")
+    out = jnp.zeros_like(img)
+    n = 2 * half + 1
+    for dy in range(n):
+        for dx in range(n):
+            out = out + float(k[dy, dx]) * jax.lax.dynamic_slice(
+                padded, (dy, dx), (h, w)
+            )
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def reduce_frame(
+    frame: jnp.ndarray,
+    dark: jnp.ndarray,
+    cfg: geometry.Config = geometry.DEFAULT_CONFIG,
+):
+    """NF/FF stage-1 per-frame reduction (SVI-A).
+
+    median filter (Pallas) -> dark subtract -> LoG edge/blob filter ->
+    joint threshold -> binary diffraction-signal mask.
+
+    Returns (sub, mask, logresp, count):
+      sub: dark-subtracted median-filtered frame (H, W).
+      mask: binary signal mask (H, W) - the '~1 MB binary file' content.
+      logresp: LoG response (H, W) (kept for peak characterisation).
+      count: (1,) number of signal pixels (sparsity telemetry).
+    """
+    stack = shift_stack(frame)
+    sub, intensity_mask = median_kernel.median_threshold(
+        stack, dark, threshold=cfg.intensity_threshold
+    )
+    logresp = log_filter(sub, cfg)
+    mask = intensity_mask * jnp.where(logresp > cfg.log_threshold, 1.0, 0.0)
+    count = jnp.sum(mask, dtype=jnp.float32).reshape(1)
+    return sub, mask, logresp, count
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def peak_search(
+    mask: jnp.ndarray,
+    intensity: jnp.ndarray,
+    cfg: geometry.Config = geometry.DEFAULT_CONFIG,
+):
+    """FF stage-1 peak characterisation support (SVI-C).
+
+    Marks local maxima of `intensity` within masked regions (5x5
+    window) and emits the masked intensity; the Rust side walks the
+    maxima to produce the ~50 KB text file of peak properties
+    (centroids via connected components in rust/src/hedm/ccl.rs).
+
+    Returns (peaks, weighted): both (H, W) f32.
+    """
+    masked = mask * intensity
+    # 5x5 windowed max as 25 shifted maxima (see log_filter for why
+    # reduce_window/conv are avoided in AOT artifacts).
+    h, w = masked.shape
+    pad = 2
+    padded = jnp.pad(masked, pad, mode="constant", constant_values=-jnp.inf)
+    neigh = jnp.full_like(masked, -jnp.inf)
+    for dy in range(5):
+        for dx in range(5):
+            neigh = jnp.maximum(
+                neigh, jax.lax.dynamic_slice(padded, (dy, dx), (h, w))
+            )
+    peaks = jnp.where((masked >= neigh) & (mask > 0.5), 1.0, 0.0)
+    return peaks.astype(jnp.float32), masked
+
+
+def fit_orientation(
+    euler: jnp.ndarray,
+    gvec: jnp.ndarray,
+    gmask: jnp.ndarray,
+    obs: jnp.ndarray,
+    obs_mask: jnp.ndarray,
+    cfg: geometry.Config = geometry.DEFAULT_CONFIG,
+):
+    """Stage-2 batched orientation scoring; see kernels.fit_orientation."""
+    return fit_kernel.fit_orientation(euler, gvec, gmask, obs, obs_mask, cfg)

@@ -1,0 +1,35 @@
+"""Shared fixtures for the python test suite."""
+
+import numpy as np
+import pytest
+
+from compile import geometry
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    """Small-frame config so interpret-mode Pallas stays fast in CI."""
+    return geometry.Config(frame=256, det_dist=1.25e5)
+
+
+@pytest.fixture(scope="session")
+def gvecs(cfg):
+    return geometry.gvectors(cfg), geometry.gvector_mask(cfg)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_obs(spots: np.ndarray, cfg: geometry.Config) -> tuple[np.ndarray, np.ndarray]:
+    """Pack an (n,3) spot list into padded (O,3)/(O,) kernel inputs."""
+    obs = np.full((cfg.o_max, 3), -1.0e6, dtype=np.float32)
+    mask = np.zeros((cfg.o_max,), dtype=np.float32)
+    n = min(len(spots), cfg.o_max)
+    if n:
+        obs[:n, 0] = spots[:n, 0]
+        obs[:n, 1] = spots[:n, 1]
+        obs[:n, 2] = spots[:n, 2] * cfg.omega_weight
+        mask[:n] = 1.0
+    return obs, mask

@@ -1,0 +1,66 @@
+"""AOT lowering: artifacts exist, manifest is consistent, HLO is text."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, geometry
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a small-frame artifact set once for the module."""
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = geometry.Config(frame=256, det_dist=1.25e5)
+    manifest = aot.build(out, cfg)
+    return out, cfg, manifest
+
+
+class TestArtifacts:
+    def test_all_entry_points_emitted(self, built):
+        out, cfg, manifest = built
+        for name in aot.entry_points(cfg):
+            assert (out / f"{name}.hlo.txt").exists(), name
+            assert name in manifest["entry_points"]
+
+    def test_hlo_is_text(self, built):
+        out, cfg, _ = built
+        text = (out / "fit_orientation.hlo.txt").read_text()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_manifest_shapes(self, built):
+        _, cfg, manifest = built
+        fit = manifest["entry_points"]["fit_orientation"]
+        assert fit["inputs"][0]["shape"] == [cfg.b_batch, 3]
+        assert fit["inputs"][3]["shape"] == [cfg.o_max, 3]
+        assert [o["shape"] for o in fit["outputs"]] == [[cfg.b_batch]] * 3
+        red = manifest["entry_points"]["reduce_frame"]
+        assert red["inputs"][0]["shape"] == [cfg.frame, cfg.frame]
+        assert len(red["outputs"]) == 4
+
+    def test_manifest_gvectors(self, built):
+        _, cfg, manifest = built
+        assert len(manifest["gvectors"]) == cfg.s_max
+        assert len(manifest["gvector_mask"]) == cfg.s_max
+
+    def test_manifest_config_round_trips(self, built):
+        out, cfg, _ = built
+        data = json.loads((out / "manifest.json").read_text())
+        assert data["config"]["frame"] == cfg.frame
+        assert data["config"]["wavelength"] == pytest.approx(cfg.wavelength)
+
+    def test_deterministic_sha(self, built, tmp_path):
+        """Lowering is deterministic: same config -> same artifact hash."""
+        out, cfg, manifest = built
+        again = aot.build(tmp_path, cfg)
+        for name, entry in manifest["entry_points"].items():
+            assert again["entry_points"][name]["sha256"] == entry["sha256"], name
+
+    def test_no_custom_calls(self, built):
+        """interpret=True must leave no Mosaic custom-calls in the HLO
+        (the CPU PJRT plugin cannot execute them)."""
+        out, _, _ = built
+        for path in out.glob("*.hlo.txt"):
+            assert "custom-call" not in path.read_text(), path.name

@@ -1,0 +1,123 @@
+"""Pallas median/threshold kernel vs the sort-based oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import median, ref
+
+
+def run_both(frame, dark, threshold):
+    stack = model.shift_stack(jnp.asarray(frame))
+    got = median.median_threshold(stack, jnp.asarray(dark), threshold=threshold)
+    want = ref.median_threshold_ref(stack, jnp.asarray(dark), threshold=threshold)
+    return got, want
+
+
+class TestMedianNetwork:
+    """The 19-op exchange network against jnp.median directly."""
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_network_matches_sort(self, seed):
+        rng = np.random.default_rng(seed)
+        planes = [jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+                  for _ in range(9)]
+        got = median.median9(planes)
+        want = jnp.median(jnp.stack(planes), axis=0)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_network_with_duplicates(self):
+        planes = [jnp.full((4, 4), float(v)) for v in [3, 1, 3, 1, 3, 1, 3, 1, 3]]
+        assert float(median.median9(planes)[0, 0]) == 3.0
+
+    def test_network_all_equal(self):
+        planes = [jnp.full((4, 4), 7.0)] * 9
+        assert float(median.median9(planes)[0, 0]) == 7.0
+
+
+class TestKernelVsRef:
+    def test_random_frame(self, rng):
+        frame = rng.uniform(0, 400, (256, 256)).astype(np.float32)
+        dark = rng.uniform(0, 60, (256, 256)).astype(np.float32)
+        (sub, mask), (sub_r, mask_r) = run_both(frame, dark, 80.0)
+        np.testing.assert_allclose(sub, sub_r, atol=0)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
+
+    def test_all_below_threshold(self, rng):
+        frame = rng.uniform(0, 10, (128, 256)).astype(np.float32)
+        dark = np.zeros((128, 256), np.float32)
+        (sub, mask), _ = run_both(frame, dark, 80.0)
+        assert float(jnp.sum(mask)) == 0.0
+
+    def test_all_above_threshold(self):
+        frame = np.full((128, 256), 500.0, np.float32)
+        dark = np.zeros((128, 256), np.float32)
+        (sub, mask), _ = run_both(frame, dark, 80.0)
+        assert float(jnp.sum(mask)) == 128 * 256
+        np.testing.assert_allclose(sub, 500.0)
+
+    def test_dark_subtraction_clamps_at_zero(self):
+        frame = np.full((128, 256), 10.0, np.float32)
+        dark = np.full((128, 256), 50.0, np.float32)
+        (sub, mask), _ = run_both(frame, dark, 5.0)
+        assert float(jnp.min(sub)) == 0.0
+        assert float(jnp.sum(mask)) == 0.0
+
+    def test_salt_noise_removed(self, rng):
+        """The defining property of a median filter: isolated hot pixels
+        (detector 'zingers') vanish; a 3x3 solid blob survives."""
+        frame = np.zeros((128, 256), np.float32)
+        frame[40, 40] = 1000.0  # isolated zinger
+        frame[80:83, 80:83] = 1000.0  # real 3x3 signal blob
+        dark = np.zeros_like(frame)
+        (sub, mask), _ = run_both(frame, dark, 80.0)
+        assert float(mask[40, 40]) == 0.0
+        assert float(mask[81, 81]) == 1.0
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        h_tiles=st.integers(1, 2),
+        w_tiles=st.integers(1, 2),
+        threshold=st.floats(0.0, 200.0),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_sweep(self, seed, h_tiles, w_tiles, threshold):
+        """Hypothesis sweep over tile-multiple shapes and thresholds."""
+        rng = np.random.default_rng(seed)
+        h, w = median.TILE_H * h_tiles, median.TILE_W * w_tiles
+        frame = rng.uniform(0, 300, (h, w)).astype(np.float32)
+        dark = rng.uniform(0, 40, (h, w)).astype(np.float32)
+        (sub, mask), (sub_r, mask_r) = run_both(frame, dark, threshold)
+        np.testing.assert_allclose(sub, sub_r, atol=0)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
+
+    def test_rejects_untileable_shape(self):
+        frame = jnp.zeros((100, 100))
+        dark = jnp.zeros((100, 100))
+        stack = model.shift_stack(frame)
+        with pytest.raises(ValueError, match="must tile"):
+            median.median_threshold(stack, dark, threshold=1.0)
+
+
+class TestShiftStack:
+    def test_center_plane_is_identity(self, rng):
+        frame = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        stack = model.shift_stack(frame)
+        np.testing.assert_array_equal(np.asarray(stack[4]), np.asarray(frame))
+
+    def test_plane_order(self):
+        frame = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+        stack = model.shift_stack(frame)
+        # plane 0 is the (dy=-1, dx=-1) shift: stack[0][i,j] = frame[i-1,j-1]
+        assert float(stack[0][1, 1]) == float(frame[0, 0])
+        # plane 8 is (dy=+1, dx=+1): stack[8][i,j] = frame[i+1,j+1]
+        assert float(stack[8][1, 1]) == float(frame[2, 2])
+
+    def test_edges_clamped(self):
+        frame = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+        stack = model.shift_stack(frame)
+        assert float(stack[0][0, 0]) == float(frame[0, 0])

@@ -1,0 +1,119 @@
+"""L2 model graphs: reduction pipeline, dark median, peak search."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import geometry, model
+from compile.kernels import ref
+
+
+def splat_gaussian(frame: np.ndarray, u: float, v: float, amp: float, sigma: float = 1.5):
+    """Add a Gaussian diffraction spot at (u, v) [pixels]; mirrors the
+    Rust detector simulator's splatting."""
+    h, w = frame.shape
+    r = int(3 * sigma) + 1
+    cu, cv = int(round(u)), int(round(v))
+    for y in range(max(0, cv - r), min(h, cv + r + 1)):
+        for x in range(max(0, cu - r), min(w, cu + r + 1)):
+            d2 = (y - v) ** 2 + (x - u) ** 2
+            frame[y, x] += amp * np.exp(-d2 / (2 * sigma * sigma))
+
+
+class TestDarkMedian:
+    def test_median_of_constant_stack(self):
+        stack = jnp.full((8, 64, 64), 13.0)
+        out = model.dark_median(stack)
+        np.testing.assert_allclose(out, 13.0)
+
+    def test_robust_to_outlier_frame(self, rng):
+        stack = np.full((8, 32, 32), 50.0, np.float32)
+        stack[3] = 5000.0  # one bad dark frame
+        out = model.dark_median(jnp.asarray(stack))
+        np.testing.assert_allclose(out, 50.0)
+
+    def test_matches_numpy(self, rng):
+        stack = rng.uniform(0, 100, (8, 32, 32)).astype(np.float32)
+        out = model.dark_median(jnp.asarray(stack))
+        np.testing.assert_allclose(out, np.median(stack, axis=0), atol=1e-5)
+
+
+class TestLogFilter:
+    def test_matches_direct_convolution(self, cfg, rng):
+        img = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+        got = model.log_filter(img, cfg)
+        want = ref.log_filter_ref(img, cfg)
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+    def test_flat_image_zero_response(self, cfg):
+        img = jnp.full((64, 64), 100.0)
+        out = np.asarray(model.log_filter(img, cfg))
+        # Zero-mean kernel: interior response vanishes on flat input.
+        assert np.abs(out[8:-8, 8:-8]).max() < 1e-2
+
+
+class TestReduceFrame:
+    """End-to-end stage-1 reduction on a synthetic frame."""
+
+    def make_frame(self, cfg, rng, spots, amp=400.0):
+        frame = rng.normal(40.0, 3.0, (cfg.frame, cfg.frame)).astype(np.float32)
+        for u, v, _ in spots:
+            splat_gaussian(frame, u, v, amp)
+        dark = np.full((cfg.frame, cfg.frame), 40.0, np.float32)
+        return frame, dark
+
+    def test_detects_spots_and_rejects_background(self, cfg, rng):
+        spots = geometry.simulate_spots((0.3, 0.7, 1.1), cfg)[:12]
+        frame, dark = self.make_frame(cfg, rng, spots)
+        sub, mask, logresp, count = model.reduce_frame(
+            jnp.asarray(frame), jnp.asarray(dark), cfg
+        )
+        mask = np.asarray(mask)
+        # every injected spot produces signal at its centre
+        for u, v, _ in spots:
+            assert mask[int(round(v)), int(round(u))] == 1.0, (u, v)
+        # sparsity: the paper's 8 MB -> 1 MB reduction implies a sparse mask
+        assert float(count[0]) == mask.sum()
+        assert mask.mean() < 0.02
+
+    def test_empty_frame_yields_empty_mask(self, cfg, rng):
+        frame = rng.normal(40.0, 3.0, (cfg.frame, cfg.frame)).astype(np.float32)
+        dark = np.full((cfg.frame, cfg.frame), 40.0, np.float32)
+        _, mask, _, count = model.reduce_frame(jnp.asarray(frame), jnp.asarray(dark), cfg)
+        assert float(count[0]) == 0.0
+
+    def test_count_is_mask_sum(self, cfg, rng):
+        spots = geometry.simulate_spots((1.9, 0.4, 0.8), cfg)[:6]
+        frame, dark = self.make_frame(cfg, rng, spots)
+        _, mask, _, count = model.reduce_frame(jnp.asarray(frame), jnp.asarray(dark), cfg)
+        assert float(count[0]) == float(np.asarray(mask).sum())
+
+
+class TestPeakSearch:
+    def test_single_blob_single_peak(self, cfg):
+        h = cfg.frame
+        inten = np.zeros((h, h), np.float32)
+        splat_gaussian(inten, 100.0, 120.0, 500.0)
+        mask = (inten > 50).astype(np.float32)
+        peaks, weighted = model.peak_search(jnp.asarray(mask), jnp.asarray(inten), cfg)
+        peaks = np.asarray(peaks)
+        ys, xs = np.nonzero(peaks)
+        assert len(ys) == 1
+        assert (ys[0], xs[0]) == (120, 100)
+
+    def test_two_separated_blobs(self, cfg):
+        h = cfg.frame
+        inten = np.zeros((h, h), np.float32)
+        splat_gaussian(inten, 50.0, 60.0, 500.0)
+        splat_gaussian(inten, 150.0, 160.0, 300.0)
+        mask = (inten > 50).astype(np.float32)
+        peaks, _ = model.peak_search(jnp.asarray(mask), jnp.asarray(inten), cfg)
+        assert int(np.asarray(peaks).sum()) == 2
+
+    def test_no_mask_no_peaks(self, cfg, rng):
+        h = cfg.frame
+        inten = rng.uniform(0, 100, (h, h)).astype(np.float32)
+        mask = np.zeros((h, h), np.float32)
+        peaks, weighted = model.peak_search(jnp.asarray(mask), jnp.asarray(inten), cfg)
+        assert float(np.asarray(peaks).sum()) == 0.0
+        assert float(np.asarray(weighted).sum()) == 0.0

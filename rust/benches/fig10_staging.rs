@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 10 (Staging+Write aggregate bandwidth vs
+//! node count) and measure the simulator's host-time cost per point.
+//!
+//! Run: `cargo bench --bench fig10_staging`
+
+use xstage::experiments::fig10;
+use xstage::util::bench::{bench_n, section};
+
+fn main() {
+    section("Fig 10 — virtual results (paper: 134 GB/s at 8,192 nodes)");
+    let result = fig10::default();
+    result.print();
+
+    // Shape assertions: near-linear scaling to the ION-layer ceiling.
+    let pts = result.series_named("staging+write GB/s").unwrap();
+    let (n0, bw0) = pts[0];
+    let (n1, bw1) = *pts.last().unwrap();
+    assert!(
+        bw1 / bw0 > 0.8 * n1 / n0,
+        "staging bandwidth must scale near-linearly: {pts:?}"
+    );
+    let endpoint = pts.iter().find(|(n, _)| *n == 8192.0).map(|(_, b)| *b);
+    if let Some(bw) = endpoint {
+        assert!((bw - 134.0).abs() < 8.0, "8192-node endpoint {bw} GB/s");
+        println!("\nendpoint OK: {bw:.1} GB/s vs paper 134 GB/s");
+    }
+
+    section("host cost of one Fig 10 sweep point");
+    for nodes in [512u32, 8192] {
+        bench_n(&format!("fig10/nodes={nodes}"), 5, || {
+            let _ = fig10::run_point(nodes);
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate Fig 11 (end-to-end input bandwidth, hook vs
+//! naive) + the SVI-B wall-time table, and check the paper's shape:
+//! who wins (hook), by what factor (~5x at 8K nodes), where the
+//! advantage appears (grows with scale), and the flat Read phase.
+//!
+//! Run: `cargo bench --bench fig11_endtoend`
+
+use xstage::experiments::fig11;
+use xstage::util::bench::{bench_n, section};
+
+fn main() {
+    section("Fig 11 — virtual results (paper: 101 vs 21 GB/s at 8,192 nodes)");
+    let result = fig11::default();
+    result.print();
+
+    let staged = result.series_named("staged GB/s").unwrap();
+    let naive = result.series_named("naive GB/s").unwrap();
+    // Shape: the hook wins everywhere measured at >= 512 nodes, and
+    // its advantage grows with scale.
+    let ratio_first = staged[0].1 / naive[0].1;
+    let ratio_last = staged.last().unwrap().1 / naive.last().unwrap().1;
+    assert!(ratio_last > ratio_first, "advantage must grow with scale");
+    assert!(
+        ratio_last > 4.0 && ratio_last < 6.5,
+        "8K-node factor {ratio_last} (paper ~4.8x)"
+    );
+    println!("\nfactor at scale: {ratio_last:.1}x (paper: ~4.8x) — OK");
+
+    section("SVI-B phase wall times at 8,192 nodes");
+    let p = fig11::run_staged(8192);
+    println!(
+        "staging+write {:.1} s | read {:.1} s | total {:.2} s (paper: 35.9 + 10.8 = 46.75 s)",
+        p.stage_write_secs, p.read_secs, p.total_secs
+    );
+    assert!((p.total_secs - 46.75).abs() < 2.5);
+    assert!((p.read_secs - 10.8).abs() < 0.2, "Read must be flat at 10.8 s");
+
+    section("host cost per experiment point");
+    bench_n("fig11/staged@8192", 5, || {
+        let _ = fig11::run_staged(8192);
+    });
+    bench_n("fig11/naive@8192", 5, || {
+        let _ = fig11::run_naive(8192);
+    });
+}

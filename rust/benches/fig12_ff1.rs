@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 12 (FF-HEDM stage 1 makespan scaling — 720
+//! peak-search jobs, 5-160 s each, on Orthros).
+//!
+//! Run: `cargo bench --bench fig12_ff1`
+
+use xstage::experiments::fig12;
+use xstage::util::bench::{bench_n, section};
+
+fn main() {
+    section("Fig 12 — virtual results (720 jobs on Orthros)");
+    let result = fig12::default();
+    result.print();
+
+    let pts = result.series_named("makespan s").unwrap();
+    // Shape: monotone decreasing makespan, flattening at high core
+    // counts (straggler bound), never below the longest task (160 s).
+    for w in pts.windows(2) {
+        assert!(w[1].1 <= w[0].1 + 1e-9, "makespan must not increase: {pts:?}");
+    }
+    let last = pts.last().unwrap().1;
+    assert!(last >= 150.0, "cannot beat the longest task: {last}");
+    let speedup_early = pts[0].1 / pts[1].1;
+    let speedup_late = pts[pts.len() - 2].1 / pts[pts.len() - 1].1;
+    assert!(
+        speedup_early > speedup_late,
+        "scaling must flatten: early {speedup_early}, late {speedup_late}"
+    );
+    println!("\nscaling flattens toward the straggler bound — matches Fig 12's shape");
+
+    section("host cost per sweep point");
+    bench_n("fig12/320-cores", 5, || {
+        let _ = fig12::run_point(320, 42);
+    });
+}

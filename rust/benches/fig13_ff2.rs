@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig 13 (FF-HEDM stage 2 makespan scaling — 4,109
+//! grain tasks, 5-25 s each, on Orthros).
+//!
+//! Run: `cargo bench --bench fig13_ff2`
+
+use xstage::experiments::fig13;
+use xstage::util::bench::{bench_n, section};
+
+fn main() {
+    section("Fig 13 — virtual results (4,109 tasks on Orthros)");
+    let result = fig13::default();
+    result.print();
+
+    let pts = result.series_named("makespan s").unwrap();
+    // Shape: near-linear scaling (short tasks pack well — the contrast
+    // with Fig 12).
+    let speedup = pts[0].1 / pts.last().unwrap().1;
+    let ideal = pts.last().unwrap().0 / pts[0].0;
+    assert!(
+        speedup > 0.85 * ideal,
+        "FF2 should scale near-ideally: {speedup:.2}x vs ideal {ideal:.2}x"
+    );
+    println!("\nspeedup {speedup:.2}x vs ideal {ideal:.2}x — near-linear, matches Fig 13");
+
+    section("host cost per sweep point");
+    bench_n("fig13/320-cores", 5, || {
+        let _ = fig13::run_point(320, 43);
+    });
+}

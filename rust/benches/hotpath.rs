@@ -1,0 +1,189 @@
+//! Bench: hot-path microbenchmarks for the performance pass
+//! (EXPERIMENTS.md SPerf). Targets, per DESIGN.md SPerf:
+//!
+//! - DES core >= 1M events/s
+//! - flow-network recompute O(bundles), independent of node count
+//! - scheduler >= 100K task dispatches/s
+//! - glob / CCL / reduction kernels at memory-bound rates
+//! - PJRT fit_orientation call throughput (candidates/s)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use xstage::cluster::{bgq, orthros, Topology};
+use xstage::dataflow::graph::{Task, TaskGraph};
+use xstage::dataflow::sched::{run_workflow, SchedulerCfg};
+use xstage::engine::SimCore;
+use xstage::hedm::ccl::find_peaks;
+use xstage::hedm::detector::splat;
+use xstage::hedm::fit::{ArtifactScorer, Scorer};
+use xstage::hedm::geometry::simulate_spots;
+use xstage::mpisim::Comm;
+use xstage::pfs::{Blob, GpfsParams, ParallelFs};
+use xstage::simtime::flownet::{Capacity, FlowNet};
+use xstage::simtime::plan::Plan;
+use xstage::units::{Duration, GB, MB};
+use xstage::util::bench::{bench, bench_n, section};
+use xstage::util::prng::Pcg64;
+
+fn bench_engine_events() {
+    section("L3: discrete-event engine");
+    // 100K delay steps in one plan: pure heap + dispatch cost.
+    let s = bench_n("engine/100k-delay-steps", 3, || {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(0);
+        for i in 0..100_000u64 {
+            p.delay(Duration(1 + i % 977), vec![], "d");
+        }
+        core.submit(p);
+        core.run_to_completion();
+        std::hint::black_box(core.events_processed);
+    });
+    println!("  -> {:.2}M events/s", 0.1 / s.median);
+}
+
+fn bench_flownet() {
+    section("L3: flow-network recompute (must be O(bundles), not O(nodes))");
+    for bundles in [10usize, 100, 1000] {
+        let mut net = FlowNet::new();
+        let links: Vec<_> = (0..8)
+            .map(|i| net.add_link(format!("l{i}"), Capacity::Fixed(10.0 * GB as f64)))
+            .collect();
+        let mut rng = Pcg64::new(1);
+        for i in 0..bundles {
+            let path = vec![links[i % 8], links[(i + 3) % 8]];
+            net.start(path, 1 + rng.below(8192), GB);
+        }
+        bench_n(&format!("flownet/recompute-{bundles}-bundles"), 20, || {
+            net.recompute();
+        });
+    }
+}
+
+fn bench_scheduler() {
+    section("L3: ADLB scheduler dispatch");
+    let s = bench_n("sched/100k-tasks-8192-ranks", 3, || {
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(512), GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        g.foreach(100_000, |i| {
+            Task::compute(format!("t{i}"), Duration::from_secs(30))
+        });
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        std::hint::black_box(stats.makespan);
+    });
+    println!("  -> {:.0}K tasks/s dispatched+completed", 100.0 / s.median);
+}
+
+fn bench_staging_sim() {
+    section("L3: full staging-experiment simulation");
+    bench_n("staging/fig11-staged-8192", 5, || {
+        let _ = xstage::experiments::fig11::run_staged(8192);
+    });
+}
+
+fn bench_glob() {
+    section("L3: filesystem glob");
+    let mut fs = ParallelFs::new();
+    for d in 0..100 {
+        for f in 0..100 {
+            fs.write(format!("/data/run{d:02}/f{f:03}.bin"), Blob::synthetic(MB, 1));
+        }
+    }
+    bench("glob/10k-files", || {
+        std::hint::black_box(fs.glob("/data/run4?/f*.bin").len());
+    });
+}
+
+fn bench_ccl() {
+    section("science: connected components (512^2, 32 spots)");
+    let n = 512;
+    let mut img = vec![0f32; n * n];
+    let mut rng = Pcg64::new(2);
+    for _ in 0..32 {
+        splat(
+            &mut img,
+            n,
+            rng.range_f64(10.0, 500.0),
+            rng.range_f64(10.0, 500.0),
+            400.0,
+            1.5,
+        );
+    }
+    let mask: Vec<f32> = img.iter().map(|&v| if v > 50.0 { 1.0 } else { 0.0 }).collect();
+    bench("ccl/find_peaks-512", || {
+        std::hint::black_box(find_peaks(&mask, &img, n, 2).len());
+    });
+}
+
+fn bench_forward_model() {
+    section("science: forward model (58 G-vectors)");
+    let g = xstage::hedm::geometry::Geom::default();
+    let mut rng = Pcg64::new(3);
+    bench("geometry/simulate_spots", || {
+        let e = [
+            rng.range_f64(0.0, 6.28),
+            rng.range_f64(0.0, 3.14),
+            rng.range_f64(0.0, 6.28),
+        ];
+        std::hint::black_box(simulate_spots(e, &g).len());
+    });
+}
+
+fn bench_pjrt_fit() {
+    use xstage::runtime::Runtime;
+    if !Runtime::artifacts_available() {
+        println!("(artifacts missing — skipping PJRT fit bench)");
+        return;
+    }
+    section("L1/L2: AOT fit_orientation on PJRT (batch=256 candidates)");
+    let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+    let geom = xstage::hedm::geometry::Geom::from_manifest(&rt.manifest.config);
+    let obs = simulate_spots([0.9, 1.3, 0.2], &geom);
+    let mut scorer = ArtifactScorer::new(&mut rt, &obs);
+    let mut rng = Pcg64::new(4);
+    let eulers: Vec<[f64; 3]> = (0..256)
+        .map(|_| {
+            [
+                rng.range_f64(0.0, 6.28),
+                rng.range_f64(0.0, 3.14),
+                rng.range_f64(0.0, 6.28),
+            ]
+        })
+        .collect();
+    let _ = scorer.score(&eulers).unwrap(); // warm compile
+    let s = bench_n("fit/score-256-candidates", 10, || {
+        std::hint::black_box(scorer.score(&eulers).unwrap().len());
+    });
+    println!("  -> {:.0}K candidates/s", 0.256 / s.median);
+}
+
+fn bench_cluster_farm() {
+    section("L3: Orthros task farm (Fig 12 class)");
+    bench_n("farm/720-tasks-320-cores", 5, || {
+        let mut core = SimCore::new();
+        let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let g = xstage::hedm::workloads::ff1_graph(42);
+        // Inputs present node-locally.
+        let (lo, hi) = comm.node_range();
+        for i in 0..720 {
+            core.nodes.write_range(lo, hi, format!("/tmp/ff/frame_{i:04}.bin"),
+                                   Blob::synthetic(8 * MB, i as u64));
+        }
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        std::hint::black_box(stats.makespan);
+    });
+}
+
+fn main() {
+    bench_engine_events();
+    bench_flownet();
+    bench_scheduler();
+    bench_staging_sim();
+    bench_glob();
+    bench_ccl();
+    bench_forward_model();
+    bench_cluster_farm();
+    bench_pjrt_fit();
+}

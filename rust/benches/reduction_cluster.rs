@@ -1,0 +1,56 @@
+//! Bench: regenerate the SVI-A table (NF reduction, 736 images on
+//! Orthros — paper: 106 s at 320 cores) plus host-time measurements of
+//! the *real* per-frame reduction kernel (native Rust and, when
+//! artifacts exist, the AOT Pallas path on PJRT).
+//!
+//! Run: `cargo bench --bench reduction_cluster`
+
+use xstage::experiments::reduction;
+use xstage::hedm::detector::splat;
+use xstage::hedm::reduce::{reduce_frame_artifact, reduce_frame_native, ReduceParams};
+use xstage::runtime::Runtime;
+use xstage::util::bench::{bench, bench_n, section};
+use xstage::util::prng::Pcg64;
+
+fn main() {
+    section("SVI-A — virtual results (paper: 106 s at 320 cores)");
+    let result = reduction::run();
+    result.print();
+    let at320 = result
+        .series_named("makespan s")
+        .unwrap()
+        .iter()
+        .find(|(c, _)| *c == 320.0)
+        .unwrap()
+        .1;
+    assert!((at320 - 106.0).abs() < 12.0, "320-core makespan {at320}");
+    println!("\n320-core point OK: {at320:.1} s vs paper 106 s");
+
+    section("real per-frame reduction kernel (host time)");
+    let n = 512usize;
+    let mut rng = Pcg64::new(1);
+    let mut frame = vec![0f32; n * n];
+    for px in frame.iter_mut() {
+        *px = 40.0 + rng.normal() as f32 * 3.0;
+    }
+    for i in 0..16 {
+        splat(&mut frame, n, 30.0 + 28.0 * i as f64, 256.0, 400.0, 1.5);
+    }
+    let dark = vec![40.0f32; n * n];
+    let params = ReduceParams::default();
+    bench("reduce/native-512", || {
+        let r = reduce_frame_native(&frame, &dark, n, &params);
+        std::hint::black_box(r.count);
+    });
+    if Runtime::artifacts_available() {
+        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+        // Warm the executable cache before timing.
+        let _ = reduce_frame_artifact(&mut rt, &frame, &dark).unwrap();
+        bench_n("reduce/artifact-512 (PJRT)", 10, || {
+            let r = reduce_frame_artifact(&mut rt, &frame, &dark).unwrap();
+            std::hint::black_box(r.count);
+        });
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT bench)");
+    }
+}

@@ -1,0 +1,167 @@
+//! Metadata catalog: step 4 of the Fig 7 workflow.
+//!
+//! The paper records transferred datasets in a metadata catalog
+//! (Malik et al. [9]) so downstream HPC jobs and humans can find them.
+//! This is the minimal production shape of that service: datasets with
+//! typed attributes and provenance edges, queryable by attribute, with
+//! deterministic iteration for reproducible reports.
+
+use std::collections::BTreeMap;
+
+/// Identifies a dataset record.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct DatasetId(pub u64);
+
+/// One catalogued dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub id: DatasetId,
+    pub name: String,
+    /// Glob root of the files on the shared filesystem.
+    pub location: String,
+    pub files: u64,
+    pub bytes: u64,
+    /// Free-form typed attributes ("sample" -> "gold-wire", ...).
+    pub attrs: BTreeMap<String, String>,
+    /// Datasets this one was derived from (provenance).
+    pub parents: Vec<DatasetId>,
+}
+
+/// The catalog.
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    next: u64,
+    datasets: BTreeMap<DatasetId, Dataset>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a dataset; returns its id.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        location: impl Into<String>,
+        files: u64,
+        bytes: u64,
+    ) -> DatasetId {
+        let id = DatasetId(self.next);
+        self.next += 1;
+        self.datasets.insert(
+            id,
+            Dataset {
+                id,
+                name: name.into(),
+                location: location.into(),
+                files,
+                bytes,
+                attrs: BTreeMap::new(),
+                parents: Vec::new(),
+            },
+        );
+        id
+    }
+
+    pub fn set_attr(&mut self, id: DatasetId, key: impl Into<String>, val: impl Into<String>) {
+        if let Some(d) = self.datasets.get_mut(&id) {
+            d.attrs.insert(key.into(), val.into());
+        }
+    }
+
+    pub fn add_parent(&mut self, id: DatasetId, parent: DatasetId) {
+        assert!(self.datasets.contains_key(&parent), "unknown parent {parent:?}");
+        if let Some(d) = self.datasets.get_mut(&id) {
+            d.parents.push(parent);
+        }
+    }
+
+    pub fn get(&self, id: DatasetId) -> Option<&Dataset> {
+        self.datasets.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.datasets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.datasets.is_empty()
+    }
+
+    /// All datasets with `key == val`.
+    pub fn find_by_attr(&self, key: &str, val: &str) -> Vec<&Dataset> {
+        self.datasets
+            .values()
+            .filter(|d| d.attrs.get(key).map(String::as_str) == Some(val))
+            .collect()
+    }
+
+    /// Transitive provenance chain (parents-first, deduped).
+    pub fn lineage(&self, id: DatasetId) -> Vec<DatasetId> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(cur) = stack.pop() {
+            if out.contains(&cur) {
+                continue;
+            }
+            out.push(cur);
+            if let Some(d) = self.datasets.get(&cur) {
+                stack.extend(&d.parents);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_query() {
+        let mut c = Catalog::new();
+        let raw = c.register("run7-raw", "/alcf/run7", 736, 736 << 20, );
+        c.set_attr(raw, "sample", "gold-wire");
+        c.set_attr(raw, "technique", "nf-hedm");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(raw).unwrap().files, 736);
+        assert_eq!(c.find_by_attr("sample", "gold-wire").len(), 1);
+        assert!(c.find_by_attr("sample", "steel").is_empty());
+    }
+
+    #[test]
+    fn provenance_chain() {
+        let mut c = Catalog::new();
+        let raw = c.register("raw", "/a", 10, 100);
+        let reduced = c.register("reduced", "/b", 10, 20);
+        let fit = c.register("microstructure", "/c", 1, 5);
+        c.add_parent(reduced, raw);
+        c.add_parent(fit, reduced);
+        let lin = c.lineage(fit);
+        assert!(lin.contains(&raw) && lin.contains(&reduced) && lin.contains(&fit));
+        assert_eq!(lin.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown parent")]
+    fn bad_parent_panics() {
+        let mut c = Catalog::new();
+        let d = c.register("x", "/x", 1, 1);
+        c.add_parent(d, DatasetId(99));
+    }
+
+    #[test]
+    fn lineage_handles_diamonds() {
+        let mut c = Catalog::new();
+        let a = c.register("a", "/", 1, 1);
+        let b1 = c.register("b1", "/", 1, 1);
+        let b2 = c.register("b2", "/", 1, 1);
+        let d = c.register("d", "/", 1, 1);
+        c.add_parent(b1, a);
+        c.add_parent(b2, a);
+        c.add_parent(d, b1);
+        c.add_parent(d, b2);
+        assert_eq!(c.lineage(d).len(), 4);
+    }
+}

@@ -1,0 +1,121 @@
+//! The `xstage` command-line interface.
+//!
+//! One subcommand per paper experiment plus utility commands:
+//!
+//! ```text
+//! xstage fig10 [--nodes 512,1024,...]   staging+write bandwidth sweep
+//! xstage fig11 [--nodes ...]            staged vs naive end-to-end
+//! xstage fig12 [--cores 64,128,...]     FF stage-1 makespan scaling
+//! xstage fig13 [--cores ...]            FF stage-2 makespan scaling
+//! xstage reduction                      SVI-A cluster reduction
+//! xstage cache                          SVI-B worker-cache experiment
+//! xstage all                            every table, in order
+//! xstage runtime-check                  load artifacts + smoke-execute
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::experiments;
+use crate::util::args::Args;
+
+pub const USAGE: &str = "usage: xstage <command> [flags]
+
+commands:
+  fig10       Staging+Write aggregate bandwidth vs nodes   [--nodes a,b,c]
+  fig11       End-to-end input: I/O hook vs naive          [--nodes a,b,c]
+  fig12       FF-HEDM stage 1 makespan scaling             [--cores a,b,c]
+  fig13       FF-HEDM stage 2 makespan scaling             [--cores a,b,c]
+  reduction   NF-HEDM data reduction on the cluster (SVI-A)
+  cache       Worker input-cache experiment (SVI-B)
+  reuse       Staged-data reuse across interactive cycles (SI)
+  all         Run every experiment table in order
+  runtime-check  Load AOT artifacts and smoke-execute on PJRT
+";
+
+/// Dispatch a parsed command line; returns the process exit code.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("fig10") => {
+            let sweep = args.u32_list_or("nodes", experiments::BGQ_SWEEP)?;
+            experiments::fig10::run(&sweep).print();
+        }
+        Some("fig11") => {
+            let sweep = args.u32_list_or("nodes", experiments::BGQ_SWEEP)?;
+            experiments::fig11::run(&sweep).print();
+        }
+        Some("fig12") => {
+            let sweep = args.u32_list_or("cores", experiments::ORTHROS_SWEEP)?;
+            experiments::fig12::run(&sweep).print();
+        }
+        Some("fig13") => {
+            let sweep = args.u32_list_or("cores", experiments::ORTHROS_SWEEP)?;
+            experiments::fig13::run(&sweep).print();
+        }
+        Some("reduction") => experiments::reduction::run().print(),
+        Some("reuse") => experiments::reuse::run().print(),
+        Some("cache") => experiments::cache::run().print(),
+        Some("all") => {
+            experiments::fig10::default().print();
+            println!();
+            experiments::fig11::default().print();
+            println!();
+            experiments::fig12::default().print();
+            println!();
+            experiments::fig13::default().print();
+            println!();
+            experiments::reduction::run().print();
+            println!();
+            experiments::cache::run().print();
+            println!();
+            experiments::reuse::run().print();
+        }
+        Some("runtime-check") => runtime_check()?,
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => bail!("{USAGE}"),
+    }
+    Ok(())
+}
+
+fn runtime_check() -> Result<()> {
+    use crate::runtime::{Runtime, TensorF32};
+    if !Runtime::artifacts_available() {
+        bail!("no artifacts found — run `make artifacts` first");
+    }
+    let mut rt = Runtime::load(Runtime::default_dir())?;
+    println!("platform: {}", rt.platform());
+    println!("entry points: {}", rt.manifest.entry_points.len());
+    for (name, ep) in rt.manifest.entry_points.clone() {
+        println!("  {name}: {} -> {} tensors", ep.inputs.len(), ep.outputs.len());
+    }
+    let x = TensorF32::scalar_vec(vec![1.0, 2.0, 3.0, 4.0]);
+    let y = TensorF32::scalar_vec(vec![5.0, 6.0, 7.0, 8.0]);
+    let outs = rt.call("smoke_addmul", &[x, y])?;
+    anyhow::ensure!(outs[0].data == vec![6.0, 8.0, 10.0, 12.0], "bad add");
+    println!("smoke_addmul OK: {:?}", outs[0].data);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&parse("nonsense")).is_err());
+        assert!(dispatch(&parse("")).is_err());
+    }
+
+    #[test]
+    fn fig12_small_sweep_runs() {
+        dispatch(&parse("fig12 --cores 64,128")).unwrap();
+    }
+
+    #[test]
+    fn cache_runs() {
+        dispatch(&parse("cache")).unwrap();
+    }
+}

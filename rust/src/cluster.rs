@@ -1,0 +1,354 @@
+//! Machine models: the ALCF Blue Gene/Q systems and the APS Orthros
+//! cluster, plus the node-local storage data plane.
+//!
+//! A [`MachineSpec`] carries the published hardware constants; a
+//! [`Topology`] materialises the machine's bandwidth structure as
+//! flow-network links. Aggregation note: symmetric layers made of `g`
+//! identical links with uniformly spread load are modelled as one link
+//! of capacity `g x link_bw` — exact for fair-shared symmetric bundles
+//! and what keeps recomputation O(1) in machine size.
+//!
+//! BG/Q specifics that shape the paper's results:
+//!
+//! - Compute nodes have **no direct filesystem access**; all I/O
+//!   forwards over per-I/O-node uplinks (1 ION per 128 compute nodes
+//!   on Mira). The `/tmp` RAM disk itself "is actually an I/O node
+//!   service" (SVI-B), so *writing staged data to /tmp* also rides the
+//!   ION uplink — this is why Staging+Write tops out at 134 GB/s on
+//!   8,192 nodes (64 IONs x ~2.1 GB/s).
+//! - The 5D torus gives every node a ~1.8 GB/s usable injection rate;
+//!   collective broadcast is effectively pipelined and never the
+//!   staging bottleneck.
+//! - Reading staged data back from /tmp was measured at a flat
+//!   53.4 MB/s per process (10.8 +/- 0.1 s for 577 MB) independent of
+//!   allocation size; we model it as a per-process rate cap.
+
+use crate::pfs::{Blob, GpfsParams};
+use crate::simtime::flownet::{Capacity, FlowNet, LinkId};
+use crate::units::{GB, MB};
+
+/// Hardware description of one machine.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineSpec {
+    pub name: &'static str,
+    /// Compute nodes in the allocation.
+    pub nodes: u32,
+    /// Physical cores per node (BG/Q A2: 16; Orthros AMD: 64).
+    pub cores_per_node: u32,
+    /// Hardware threads per core (BG/Q: 4).
+    pub threads_per_core: u32,
+    /// Worker ranks per node the many-task runtime schedules.
+    pub ranks_per_node: u32,
+    /// Compute nodes served by one I/O node (0 = direct-attached FS).
+    pub nodes_per_ion: u32,
+    /// Per-ION uplink bandwidth, bytes/s.
+    pub ion_bw: f64,
+    /// Per-node torus injection bandwidth, bytes/s.
+    pub torus_link_bw: f64,
+    /// Per-process read bandwidth from node-local storage, bytes/s.
+    pub ramdisk_proc_read_bw: f64,
+    /// Node-local writes traverse the ION uplink (BG/Q /tmp semantics).
+    pub local_write_via_ion: bool,
+}
+
+impl MachineSpec {
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+
+    pub fn total_ranks(&self) -> u64 {
+        self.nodes as u64 * self.ranks_per_node as u64
+    }
+
+    pub fn hw_threads(&self) -> u64 {
+        self.total_cores() * self.threads_per_core as u64
+    }
+
+    /// I/O nodes serving this allocation (at least one).
+    pub fn n_ions(&self) -> u32 {
+        if self.nodes_per_ion == 0 {
+            0
+        } else {
+            self.nodes.div_ceil(self.nodes_per_ion).max(1)
+        }
+    }
+}
+
+/// ALCF BG/Q (Mira/Cetus class) allocation of `nodes` nodes.
+///
+/// Constants: 16 PowerPC A2 cores @ 1.6 GHz / 64 HW threads per node
+/// (SVI); 128 nodes per ION with ~2.1 GB/s usable uplink (calibrated
+/// against Fig 10's 134 GB/s at 8,192 nodes = 64 IONs); 1.8 GB/s torus
+/// injection; 53.4 MB/s per-process /tmp read (SVI-B).
+pub fn bgq(nodes: u32) -> MachineSpec {
+    MachineSpec {
+        name: "bgq",
+        nodes,
+        cores_per_node: 16,
+        threads_per_core: 4,
+        ranks_per_node: 16,
+        nodes_per_ion: 128,
+        ion_bw: 2.1 * GB as f64,
+        torus_link_bw: 1.8 * GB as f64,
+        ramdisk_proc_read_bw: 53.4 * MB as f64,
+        local_write_via_ion: true,
+    }
+}
+
+/// The APS sector-1 Orthros cluster: "a 320-core x86 cluster...
+/// an Orthros node has 64 AMD cores running at 2.2 GHz" (SVI). Five
+/// fat nodes, direct-attached NFS (modelled as a 1.25 GB/s backplane
+/// via `GpfsParams` overrides in the experiment drivers), local disks.
+pub fn orthros() -> MachineSpec {
+    MachineSpec {
+        name: "orthros",
+        nodes: 5,
+        cores_per_node: 64,
+        threads_per_core: 1,
+        ranks_per_node: 64,
+        nodes_per_ion: 0, // direct-attached
+        ion_bw: 0.0,
+        torus_link_bw: 1.25 * GB as f64, // 10 GbE
+        ramdisk_proc_read_bw: 500.0 * MB as f64,
+        local_write_via_ion: false,
+    }
+}
+
+/// The machine's bandwidth structure materialised as flownet links.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub spec: MachineSpec,
+    pub gpfs: GpfsParams,
+    /// Filesystem aggregate backplane (240 GB/s class).
+    pub pfs_backplane: LinkId,
+    /// Degrading server-side stage traversed by uncoordinated reads.
+    pub pfs_disk: LinkId,
+    /// Metadata server ("bytes" = metadata operations).
+    pub pfs_meta: LinkId,
+    /// Aggregated ION uplink layer (None for direct-attached machines).
+    pub ion_layer: Option<LinkId>,
+    /// Aggregated torus/interconnect bisection.
+    pub torus: LinkId,
+}
+
+impl Topology {
+    /// Create links for `spec` + `gpfs` in `net`.
+    pub fn build(spec: MachineSpec, gpfs: GpfsParams, net: &mut FlowNet) -> Topology {
+        let pfs_backplane = net.add_link("pfs.backplane", Capacity::Fixed(gpfs.peak_bw));
+        let pfs_disk = net.add_link(
+            "pfs.disk",
+            Capacity::Degrading {
+                peak: gpfs.peak_bw,
+                pivot: gpfs.degrade_pivot,
+                half: gpfs.degrade_half,
+            },
+        );
+        let pfs_meta = net.add_link("pfs.meta", Capacity::Fixed(gpfs.meta_ops_per_sec));
+        let ion_layer = if spec.nodes_per_ion > 0 {
+            Some(net.add_link(
+                "ion.layer",
+                Capacity::Fixed(spec.n_ions() as f64 * spec.ion_bw),
+            ))
+        } else {
+            None
+        };
+        let torus = net.add_link(
+            "torus.bisection",
+            Capacity::Fixed(spec.nodes as f64 * spec.torus_link_bw),
+        );
+        Topology { spec, gpfs, pfs_backplane, pfs_disk, pfs_meta, ion_layer, torus }
+    }
+
+    /// Path of a *coordinated* (collective, large-aligned) GPFS read
+    /// landing on compute nodes: backplane + ION layer.
+    pub fn path_coordinated_read(&self) -> Vec<LinkId> {
+        let mut p = vec![self.pfs_backplane];
+        p.extend(self.ion_layer);
+        p
+    }
+
+    /// Path of an *uncoordinated* per-rank GPFS read: adds the
+    /// degrading disk stage.
+    pub fn path_uncoordinated_read(&self) -> Vec<LinkId> {
+        let mut p = vec![self.pfs_disk, self.pfs_backplane];
+        p.extend(self.ion_layer);
+        p
+    }
+
+    /// Path of a node-local RAM-disk write (BG/Q: via ION; clusters:
+    /// genuinely local, pathless).
+    pub fn path_local_write(&self) -> Vec<LinkId> {
+        if self.spec.local_write_via_ion {
+            self.ion_layer.into_iter().collect()
+        } else {
+            vec![]
+        }
+    }
+
+    /// Path of metadata operations.
+    pub fn path_meta(&self) -> Vec<LinkId> {
+        vec![self.pfs_meta]
+    }
+
+    /// Path of interconnect traffic (broadcast / redistribution).
+    pub fn path_torus(&self) -> Vec<LinkId> {
+        vec![self.torus]
+    }
+}
+
+/// Node-local storage data plane ("/tmp" on every node).
+///
+/// Replicas are stored once per *node range* (the staging hook writes
+/// the same blob to every node), so memory is O(files), not
+/// O(files x nodes), while per-node reads still verify membership and
+/// return the actual bytes.
+#[derive(Debug, Default)]
+pub struct NodeStores {
+    /// path -> newest-first list of (node_lo, node_hi, blob).
+    entries: std::collections::HashMap<String, Vec<(u32, u32, Blob)>>,
+}
+
+impl NodeStores {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write `data` at `path` on every node in `lo..=hi`.
+    pub fn write_range(&mut self, lo: u32, hi: u32, path: impl Into<String>, data: Blob) {
+        assert!(lo <= hi, "bad node range");
+        self.entries.entry(path.into()).or_default().insert(0, (lo, hi, data));
+    }
+
+    /// Write on a single node.
+    pub fn write(&mut self, node: u32, path: impl Into<String>, data: Blob) {
+        self.write_range(node, node, path, data);
+    }
+
+    /// Read `path` as seen by `node` (newest replica covering it).
+    pub fn read(&self, node: u32, path: &str) -> Option<&Blob> {
+        self.entries.get(path)?.iter().find_map(|(lo, hi, b)| {
+            if (*lo..=*hi).contains(&node) {
+                Some(b)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn exists_on(&self, node: u32, path: &str) -> bool {
+        self.read(node, path).is_some()
+    }
+
+    /// Bytes resident on one node.
+    pub fn bytes_on(&self, node: u32) -> u64 {
+        self.entries
+            .values()
+            .map(|v| {
+                v.iter()
+                    .find(|(lo, hi, _)| (*lo..=*hi).contains(&node))
+                    .map(|(_, _, b)| b.len())
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Number of distinct paths stored anywhere.
+    pub fn path_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Paths visible to `node`, sorted (deterministic enumeration for
+    /// the gather collective's local directory listing).
+    pub fn paths_on(&self, node: u32) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, v)| v.iter().any(|(lo, hi, _)| (*lo..=*hi).contains(&node)))
+            .map(|(k, _)| k.clone())
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bgq_spec_constants() {
+        let m = bgq(8192);
+        assert_eq!(m.total_cores(), 131_072);
+        assert_eq!(m.hw_threads(), 524_288); // paper: "524,288 hardware threads"
+        assert_eq!(m.n_ions(), 64);
+        assert_eq!(m.total_ranks(), 131_072);
+    }
+
+    #[test]
+    fn small_bgq_has_one_ion() {
+        assert_eq!(bgq(64).n_ions(), 1);
+        assert_eq!(bgq(129).n_ions(), 2);
+    }
+
+    #[test]
+    fn orthros_spec() {
+        let m = orthros();
+        assert_eq!(m.total_cores(), 320); // paper: "320-core x86 cluster"
+        assert_eq!(m.n_ions(), 0);
+    }
+
+    #[test]
+    fn topology_paths() {
+        let mut net = FlowNet::new();
+        let t = Topology::build(bgq(512), GpfsParams::default(), &mut net);
+        assert_eq!(t.path_coordinated_read().len(), 2);
+        assert_eq!(t.path_uncoordinated_read().len(), 3);
+        assert_eq!(t.path_local_write().len(), 1); // via ION
+        assert_eq!(t.path_meta().len(), 1);
+    }
+
+    #[test]
+    fn orthros_local_write_is_pathless() {
+        let mut net = FlowNet::new();
+        let t = Topology::build(orthros(), GpfsParams::default(), &mut net);
+        assert!(t.path_local_write().is_empty());
+        assert_eq!(t.path_coordinated_read().len(), 1);
+    }
+
+    #[test]
+    fn ion_layer_capacity_scales_with_allocation() {
+        let mut net = FlowNet::new();
+        let t8k = Topology::build(bgq(8192), GpfsParams::default(), &mut net);
+        let f = net.start(vec![t8k.ion_layer.unwrap()], 1, GB);
+        net.recompute();
+        // 64 IONs x 2.1 GB/s = 134.4 GB/s — the Fig 10 ceiling.
+        assert!((net.rate_each(f) - 134.4 * GB as f64).abs() < 0.1 * GB as f64);
+    }
+
+    #[test]
+    fn node_store_replicas() {
+        let mut ns = NodeStores::new();
+        let blob = Blob::real(vec![9; 64]);
+        ns.write_range(0, 511, "/tmp/param.txt", blob.clone());
+        assert!(ns.exists_on(0, "/tmp/param.txt"));
+        assert!(ns.exists_on(511, "/tmp/param.txt"));
+        assert!(!ns.exists_on(512, "/tmp/param.txt"));
+        assert!(ns.read(100, "/tmp/param.txt").unwrap().same_content(&blob));
+        assert_eq!(ns.bytes_on(77), 64);
+        assert_eq!(ns.bytes_on(1000), 0);
+        assert_eq!(ns.path_count(), 1);
+    }
+
+    #[test]
+    fn node_store_newest_wins() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 10, "/tmp/x", Blob::real(vec![1]));
+        ns.write(5, "/tmp/x", Blob::real(vec![2, 2]));
+        assert_eq!(ns.read(5, "/tmp/x").unwrap().len(), 2);
+        assert_eq!(ns.read(4, "/tmp/x").unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Task graphs: the compiled form of a Swift dataflow program.
+//!
+//! A Swift `foreach` over N grid points (Fig 8) compiles to N
+//! independent tasks; `merge(d, ...)` (Fig 4) compiles to a reduction
+//! tree whose edges are dataflow dependencies. Tasks name their file
+//! inputs so the scheduler can charge staged vs unstaged read costs
+//! and verify the data plane actually holds the bytes.
+
+use std::collections::VecDeque;
+
+use crate::units::Duration;
+
+/// Identifies a task within its graph.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TaskId(pub usize);
+
+/// A file a task reads before its compute phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskInput {
+    /// Node-local (staged) or shared-FS path.
+    pub path: String,
+    /// Expected size; None = whatever the data plane holds.
+    pub bytes: Option<u64>,
+}
+
+/// One leaf task (a C function invocation in the paper's workflows).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    /// Pure compute duration (the FitOrientation/NLopt solve etc.).
+    pub runtime: Duration,
+    /// Files read before compute.
+    pub inputs: Vec<TaskInput>,
+    /// Dataflow dependencies (must complete first).
+    pub deps: Vec<TaskId>,
+    /// Bytes written to the shared FS at completion (size only; the
+    /// science drivers write real blobs through effects instead).
+    pub output_bytes: u64,
+}
+
+impl Task {
+    pub fn compute(name: impl Into<String>, runtime: Duration) -> Task {
+        Task {
+            name: name.into(),
+            runtime,
+            inputs: Vec::new(),
+            deps: Vec::new(),
+            output_bytes: 0,
+        }
+    }
+
+    pub fn with_input(mut self, path: impl Into<String>, bytes: Option<u64>) -> Task {
+        self.inputs.push(TaskInput { path: path.into(), bytes });
+        self
+    }
+
+    pub fn with_dep(mut self, dep: TaskId) -> Task {
+        self.deps.push(dep);
+        self
+    }
+
+    pub fn with_output(mut self, bytes: u64) -> Task {
+        self.output_bytes = bytes;
+        self
+    }
+}
+
+/// A DAG of tasks.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    pub tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, task: Task) -> TaskId {
+        for d in &task.deps {
+            assert!(d.0 < self.tasks.len(), "dep on unknown task {d:?}");
+        }
+        self.tasks.push(task);
+        TaskId(self.tasks.len() - 1)
+    }
+
+    /// The Fig 8 pattern: `foreach i in [0..n) { body(i) }`.
+    pub fn foreach<F: FnMut(usize) -> Task>(&mut self, n: usize, mut body: F) -> Vec<TaskId> {
+        (0..n).map(|i| self.add(body(i))).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Tasks with no dependencies.
+    pub fn roots(&self) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.deps.is_empty())
+            .map(|(i, _)| TaskId(i))
+            .collect()
+    }
+
+    /// Kahn's algorithm; Err(()) if the graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<TaskId>, ()> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for d in &t.deps {
+                out[d.0].push(i);
+            }
+        }
+        let mut q: VecDeque<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = q.pop_front() {
+            order.push(TaskId(i));
+            for &j in &out[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    q.push_back(j);
+                }
+            }
+        }
+        if order.len() == n {
+            Ok(order)
+        } else {
+            Err(())
+        }
+    }
+
+    /// Sum of all task runtimes (the serial lower bound).
+    pub fn total_work(&self) -> Duration {
+        let ns = self.tasks.iter().map(|t| t.runtime.0).sum();
+        Duration(ns)
+    }
+
+    /// Critical-path length through the dependency DAG.
+    pub fn critical_path(&self) -> Duration {
+        let order = self.topo_order().expect("cyclic graph");
+        let mut finish = vec![0u64; self.tasks.len()];
+        for id in order {
+            let t = &self.tasks[id.0];
+            let start = t.deps.iter().map(|d| finish[d.0]).max().unwrap_or(0);
+            finish[id.0] = start + t.runtime.0;
+        }
+        Duration(finish.into_iter().max().unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn foreach_builds_independent_tasks() {
+        let mut g = TaskGraph::new();
+        let ids = g.foreach(10, |i| Task::compute(format!("t{i}"), Duration::from_secs(1)));
+        assert_eq!(ids.len(), 10);
+        assert_eq!(g.roots().len(), 10);
+        assert_eq!(g.total_work(), Duration::from_secs(10));
+        assert_eq!(g.critical_path(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn deps_shape_critical_path() {
+        let mut g = TaskGraph::new();
+        let a = g.add(Task::compute("a", Duration::from_secs(2)));
+        let b = g.add(Task::compute("b", Duration::from_secs(3)).with_dep(a));
+        let _c = g.add(Task::compute("c", Duration::from_secs(1)).with_dep(b));
+        let _free = g.add(Task::compute("free", Duration::from_secs(4)));
+        assert_eq!(g.critical_path(), Duration::from_secs(6));
+        assert_eq!(g.roots().len(), 2);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let mut g = TaskGraph::new();
+        let a = g.add(Task::compute("a", Duration::ZERO));
+        let b = g.add(Task::compute("b", Duration::ZERO).with_dep(a));
+        let c = g.add(Task::compute("c", Duration::ZERO).with_dep(a));
+        let d = g.add(Task::compute("d", Duration::ZERO).with_dep(b).with_dep(c));
+        let order = g.topo_order().unwrap();
+        let pos = |t: TaskId| order.iter().position(|&x| x == t).unwrap();
+        assert!(pos(a) < pos(b) && pos(a) < pos(c) && pos(b) < pos(d) && pos(c) < pos(d));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown task")]
+    fn forward_dep_panics() {
+        let mut g = TaskGraph::new();
+        g.add(Task::compute("bad", Duration::ZERO).with_dep(TaskId(5)));
+    }
+
+    #[test]
+    fn builder_helpers() {
+        let t = Task::compute("x", Duration::from_secs(1))
+            .with_input("/tmp/a.bin", Some(100))
+            .with_output(50);
+        assert_eq!(t.inputs.len(), 1);
+        assert_eq!(t.inputs[0].bytes, Some(100));
+        assert_eq!(t.output_bytes, 50);
+    }
+}

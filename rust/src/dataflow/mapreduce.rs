@@ -1,0 +1,110 @@
+//! The Fig 4/5 MapReduce pattern as a Swift-style task graph.
+//!
+//! The paper shows MapReduce expressed in ~20 lines of Swift: a
+//! `foreach` map phase filling an array, and a recursive pairwise
+//! `merge` reduction. Its defining property — noted explicitly ("this
+//! dataflow expression of simplified MapReduce does not have a barrier
+//! between the map and reduce phases") — is that a merge becomes
+//! eligible the moment its two inputs exist, while other maps still
+//! run. The test below asserts exactly that on the simulated cluster.
+
+use crate::units::Duration;
+
+use super::graph::{Task, TaskGraph, TaskId};
+
+/// Build the Fig 4 graph: `n` map tasks and a pairwise merge tree.
+/// `map_runtime(i)` and `merge_runtime(level)` control task costs.
+/// Returns the graph and the final (root) merge task.
+pub fn build<FM, FR>(
+    n: usize,
+    mut map_runtime: FM,
+    mut merge_runtime: FR,
+) -> (TaskGraph, TaskId)
+where
+    FM: FnMut(usize) -> Duration,
+    FR: FnMut(u32) -> Duration,
+{
+    assert!(n >= 1, "need at least one map task");
+    let mut g = TaskGraph::new();
+    // Map phase: d[i] = map_function(find_file(i))  (Fig 4 lines 5-8).
+    let mut level: Vec<TaskId> =
+        (0..n).map(|i| g.add(Task::compute(format!("map{i}"), map_runtime(i)))).collect();
+    // Reduce phase: recursive pairwise merge (Fig 4 lines 13-23).
+    let mut depth = 0u32;
+    while level.len() > 1 {
+        depth += 1;
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            if pair.len() == 2 {
+                let t = Task::compute(format!("merge/L{depth}"), merge_runtime(depth))
+                    .with_dep(pair[0])
+                    .with_dep(pair[1]);
+                next.push(g.add(t));
+            } else {
+                // Odd element passes through (Fig 4's start+s skew).
+                next.push(pair[0]);
+            }
+        }
+        level = next;
+    }
+    let root = level[0];
+    (g, root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{orthros, Topology};
+    use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+    use crate::engine::SimCore;
+    use crate::mpisim::Comm;
+    use crate::pfs::GpfsParams;
+
+    #[test]
+    fn tree_shape() {
+        let (g, root) = build(8, |_| Duration::from_secs(1), |_| Duration::from_secs(1));
+        // 8 maps + 4 + 2 + 1 merges.
+        assert_eq!(g.len(), 15);
+        assert_eq!(root.0, 14);
+        assert_eq!(g.roots().len(), 8);
+    }
+
+    #[test]
+    fn odd_counts_pass_through() {
+        let (g, _) = build(5, |_| Duration::ZERO, |_| Duration::ZERO);
+        // 5 maps; level1: 2 merges + carry; level2: merge + carry;
+        // level3: 1 merge = 5 + 2 + 1 + 1.
+        assert_eq!(g.len(), 9);
+    }
+
+    #[test]
+    fn single_map_needs_no_merge() {
+        let (g, root) = build(1, |_| Duration::from_secs(2), |_| Duration::ZERO);
+        assert_eq!(g.len(), 1);
+        assert_eq!(root.0, 0);
+    }
+
+    #[test]
+    fn no_barrier_between_map_and_reduce() {
+        // One straggler map (100 s); everything else 1 s. If there were
+        // a barrier, the first merge could not finish before t=100.
+        let (g, root) = build(
+            16,
+            |i| if i == 15 { Duration::from_secs(100) } else { Duration::from_secs(1) },
+            |_| Duration::from_secs(1),
+        );
+        let mut core = SimCore::new();
+        let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        // First merge (maps 0+1) completes around t=2, long before the
+        // straggler's t=100.
+        let first_merge_done = stats.completion[16].secs_f64();
+        assert!(first_merge_done < 5.0, "{first_merge_done}");
+        // The root waits for the straggler's subtree.
+        let root_done = stats.completion[root.0].secs_f64();
+        assert!(root_done > 100.0, "{root_done}");
+        // Total: straggler + its merge chain, not sum of phases.
+        assert!(root_done < 110.0, "{root_done}");
+    }
+}

@@ -1,0 +1,471 @@
+//! The task scheduler: ADLB-style worker pool over the simulated
+//! machine.
+//!
+//! ADLB (Lusk et al. [8]) gives Swift/T its work distribution: worker
+//! ranks pull ready tasks from server ranks; dispatch costs a small
+//! round-trip. The simulation models exactly that: a free-slot pool
+//! (one slot per worker rank), a FIFO ready queue released by
+//! dataflow dependencies, a fixed per-dispatch overhead, and per-task
+//! input-read charging:
+//!
+//! - input present in the node-local store -> RAM-disk stream at the
+//!   machine's measured per-process rate (53.4 MB/s on BG/Q /tmp);
+//! - input only on the shared FS -> uncoordinated GPFS read through
+//!   the degrading path (the naive mode's cost, per task);
+//! - input cached by a previous task of the same worker process
+//!   (SVI-B) -> free.
+//!
+//! Determinism: slot pool and ready queue are strictly ordered; equal
+//! event times break by insertion sequence in the engine's heap.
+
+use std::collections::HashSet;
+use std::collections::VecDeque;
+
+use crate::cluster::Topology;
+use crate::engine::{Director, Notice, SimCore};
+use crate::mpisim::Comm;
+use crate::simtime::plan::Plan;
+use crate::units::{Duration, SimTime};
+
+use super::graph::{TaskGraph, TaskId};
+
+/// Tag namespace for scheduler-owned plans (avoids collision with
+/// staging/transfer plans sharing the engine).
+pub const TASK_TAG_BASE: u64 = 1 << 48;
+
+/// Scheduler configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerCfg {
+    /// ADLB dispatch round-trip per task.
+    pub dispatch_overhead: Duration,
+    /// Enable the worker-process input cache (SVI-B optimisation).
+    pub cache_inputs: bool,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            dispatch_overhead: Duration::from_micros(500),
+            cache_inputs: false,
+        }
+    }
+}
+
+/// Outcome of a workflow run.
+#[derive(Clone, Debug)]
+pub struct WorkflowStats {
+    /// Virtual time from scheduler start to last task completion.
+    pub makespan: Duration,
+    pub tasks_run: usize,
+    /// Worker-seconds of pure compute in the graph.
+    pub total_work: Duration,
+    /// total_work / (makespan * workers): 1.0 = perfectly packed.
+    pub utilization: f64,
+    /// Completion time of every task, by TaskId index.
+    pub completion: Vec<SimTime>,
+    /// Bytes read from node-local staged replicas / from shared FS.
+    pub staged_read_bytes: u64,
+    pub unstaged_read_bytes: u64,
+    /// Reads skipped by the worker input cache.
+    pub cache_hits: u64,
+}
+
+/// The scheduler; implements [`Director`] so the engine drives it.
+pub struct Scheduler {
+    topo: Topology,
+    comm: Comm,
+    cfg: SchedulerCfg,
+    graph: TaskGraph,
+    /// Tasks whose deps are satisfied, FIFO.
+    ready: VecDeque<TaskId>,
+    /// Unsatisfied dependency counts.
+    missing: Vec<u32>,
+    /// Dependents adjacency.
+    dependents: Vec<Vec<u32>>,
+    /// Free worker slots (node ids, one entry per free rank), LIFO.
+    free_slots: Vec<u32>,
+    /// Node a running task occupies.
+    running_node: Vec<u32>,
+    /// (node, path) pairs already read by some worker on that node.
+    cache: HashSet<(u32, String)>,
+    start: Option<SimTime>,
+    completion: Vec<SimTime>,
+    remaining: usize,
+    staged_read_bytes: u64,
+    unstaged_read_bytes: u64,
+    cache_hits: u64,
+}
+
+impl Scheduler {
+    pub fn new(topo: Topology, comm: Comm, graph: TaskGraph, cfg: SchedulerCfg) -> Scheduler {
+        let n = graph.len();
+        assert!(n > 0, "empty task graph");
+        graph.topo_order().expect("task graph has a cycle");
+        let mut missing = vec![0u32; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut ready = VecDeque::new();
+        for (i, t) in graph.tasks.iter().enumerate() {
+            missing[i] = t.deps.len() as u32;
+            for d in &t.deps {
+                dependents[d.0].push(i as u32);
+            }
+            if t.deps.is_empty() {
+                ready.push_back(TaskId(i));
+            }
+        }
+        // Slot pool: highest node pushed first so pop() hands out node 0
+        // first — deterministic and friendly to small debug traces.
+        let mut free_slots = Vec::with_capacity(comm.size() as usize);
+        for node in (comm.node_lo..=comm.node_hi).rev() {
+            for _ in 0..comm.ranks_per_node {
+                free_slots.push(node);
+            }
+        }
+        Scheduler {
+            topo,
+            comm,
+            cfg,
+            ready,
+            missing,
+            dependents,
+            free_slots,
+            running_node: vec![u32::MAX; n],
+            cache: HashSet::new(),
+            start: None,
+            completion: vec![SimTime::ZERO; n],
+            remaining: n,
+            graph,
+            staged_read_bytes: 0,
+            unstaged_read_bytes: 0,
+            cache_hits: 0,
+        }
+    }
+
+    /// Launch as many ready tasks as there are free slots.
+    fn dispatch(&mut self, core: &mut SimCore) {
+        if self.start.is_none() {
+            self.start = Some(core.now);
+        }
+        while !self.ready.is_empty() && !self.free_slots.is_empty() {
+            let tid = self.ready.pop_front().unwrap();
+            let node = self.free_slots.pop().unwrap();
+            self.running_node[tid.0] = node;
+            let plan = self.task_plan(core, tid, node);
+            core.submit(plan);
+        }
+    }
+
+    /// Build the per-task plan: dispatch overhead -> input reads ->
+    /// compute -> output write.
+    fn task_plan(&mut self, core: &SimCore, tid: TaskId, node: u32) -> Plan {
+        let task = &self.graph.tasks[tid.0];
+        let mut p = Plan::new(TASK_TAG_BASE + tid.0 as u64);
+        let mut prev = p.delay(self.cfg.dispatch_overhead, vec![], "dispatch");
+
+        // Input reads.
+        let mut local_bytes = 0u64;
+        for input in &task.inputs {
+            let key = (node, input.path.clone());
+            if self.cfg.cache_inputs && self.cache.contains(&key) {
+                self.cache_hits += 1;
+                continue;
+            }
+            if let Some(blob) = core.nodes.read(node, &input.path) {
+                // Staged: node-local stream, perfectly scalable -> a
+                // pure delay at the per-process RAM-disk rate (not a
+                // flownet flow; it contends with nothing).
+                let bytes = input.bytes.unwrap_or(blob.len());
+                local_bytes += bytes;
+                self.staged_read_bytes += bytes;
+            } else if let Some(blob) = core.pfs.read(&input.path) {
+                // Not staged: fall back to an uncoordinated GPFS read —
+                // this IS the per-task naive I/O pattern.
+                let bytes = input.bytes.unwrap_or(blob.len());
+                self.unstaged_read_bytes += bytes;
+                prev = p.flow(
+                    self.topo.path_uncoordinated_read(),
+                    1,
+                    bytes,
+                    vec![prev],
+                    "read",
+                );
+            } else if let Some(bytes) = input.bytes {
+                // Size-only input (pure timing model, no data plane).
+                self.unstaged_read_bytes += bytes;
+                prev = p.flow(
+                    self.topo.path_uncoordinated_read(),
+                    1,
+                    bytes,
+                    vec![prev],
+                    "read",
+                );
+            } else {
+                panic!(
+                    "task {:?} input {:?} not found on node {node} nor shared FS",
+                    task.name, input.path
+                );
+            }
+            if self.cfg.cache_inputs {
+                self.cache.insert(key);
+            }
+        }
+        if local_bytes > 0 {
+            let dur = crate::units::transfer_time(
+                local_bytes,
+                self.topo.spec.ramdisk_proc_read_bw,
+            );
+            prev = p.delay(dur, vec![prev], "read");
+        }
+
+        // Compute.
+        prev = p.delay(task.runtime, vec![prev], "compute");
+
+        // Output write to the shared FS (small results, coordinated).
+        if task.output_bytes > 0 {
+            p.flow(
+                self.topo.path_coordinated_read(), // same links, reverse dir
+                1,
+                task.output_bytes,
+                vec![prev],
+                "output",
+            );
+        }
+        p
+    }
+
+    fn on_task_done(&mut self, core: &mut SimCore, tid: TaskId) {
+        self.completion[tid.0] = core.now;
+        self.remaining -= 1;
+        let node = std::mem::replace(&mut self.running_node[tid.0], u32::MAX);
+        debug_assert_ne!(node, u32::MAX, "completion of non-running task");
+        self.free_slots.push(node);
+        for d in std::mem::take(&mut self.dependents[tid.0]) {
+            self.missing[d as usize] -= 1;
+            if self.missing[d as usize] == 0 {
+                self.ready.push_back(TaskId(d as usize));
+            }
+        }
+        self.dispatch(core);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn stats(&self, end: SimTime) -> WorkflowStats {
+        assert!(self.is_done(), "workflow incomplete");
+        let start = self.start.unwrap_or(SimTime::ZERO);
+        let makespan = end - start;
+        let total_work = self.graph.total_work();
+        let workers = self.comm.size() as f64;
+        let util = if makespan.0 == 0 {
+            0.0
+        } else {
+            total_work.secs_f64() / (makespan.secs_f64() * workers)
+        };
+        WorkflowStats {
+            makespan,
+            tasks_run: self.graph.len(),
+            total_work,
+            utilization: util,
+            completion: self.completion.clone(),
+            staged_read_bytes: self.staged_read_bytes,
+            unstaged_read_bytes: self.unstaged_read_bytes,
+            cache_hits: self.cache_hits,
+        }
+    }
+}
+
+impl Director for Scheduler {
+    fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
+        if let Notice::PlanDone { tag, .. } = notice {
+            if tag >= TASK_TAG_BASE {
+                self.on_task_done(core, TaskId((tag - TASK_TAG_BASE) as usize));
+            }
+        }
+    }
+}
+
+/// Run `graph` on `core` over `comm` and return the stats. The
+/// scheduler starts at `core.now` (run staging first on the same core
+/// to model the paper's phase structure).
+pub fn run_workflow(
+    core: &mut SimCore,
+    topo: &Topology,
+    comm: &Comm,
+    graph: TaskGraph,
+    cfg: SchedulerCfg,
+) -> WorkflowStats {
+    let mut sched = Scheduler::new(topo.clone(), *comm, graph, cfg);
+    let t0 = core.now;
+    sched.start = Some(t0);
+    sched.dispatch(core);
+    core.run(&mut sched);
+    assert!(sched.is_done(), "workflow did not complete");
+    sched.stats(core.now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{bgq, orthros, Topology};
+    use crate::dataflow::graph::Task;
+    use crate::pfs::{Blob, GpfsParams};
+    use crate::units::MB;
+
+    fn orthros_core() -> (SimCore, Topology) {
+        let mut core = SimCore::new();
+        let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+        (core, topo)
+    }
+
+    #[test]
+    fn single_task_runs_for_its_runtime() {
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        g.add(Task::compute("t", Duration::from_secs(10)));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        assert!((stats.makespan.secs_f64() - 10.0).abs() < 0.01);
+        assert_eq!(stats.tasks_run, 1);
+    }
+
+    #[test]
+    fn perfect_task_farm_packs_cores() {
+        // 640 x 10 s tasks on 320 cores = exactly 2 waves ~= 20 s.
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        g.foreach(640, |i| Task::compute(format!("t{i}"), Duration::from_secs(10)));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        assert!((stats.makespan.secs_f64() - 20.0).abs() < 0.1, "{:?}", stats.makespan);
+        assert!(stats.utilization > 0.98, "{}", stats.utilization);
+    }
+
+    #[test]
+    fn makespan_scales_inversely_with_cores() {
+        // The Fig 12/13 property: same workload, half the cores -> ~2x.
+        let run = |nodes: u32| {
+            let mut core = SimCore::new();
+            let mut spec = orthros();
+            spec.nodes = nodes;
+            let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+            let comm = Comm::world(&topo.spec);
+            let mut g = TaskGraph::new();
+            let mut rng = crate::util::prng::Pcg64::new(7);
+            g.foreach(720, |i| {
+                Task::compute(
+                    format!("t{i}"),
+                    Duration::from_secs_f64(rng.log_uniform(5.0, 160.0)),
+                )
+            });
+            run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default())
+                .makespan
+                .secs_f64()
+        };
+        let t5 = run(5);
+        let t2 = run(2);
+        // Sub-linear (the 160 s stragglers bound the makespan at high
+        // core counts) but clearly better with 2.5x the cores — the
+        // same flattening the paper's Fig 12 shows.
+        let ratio = t2 / t5;
+        assert!(ratio > 1.5 && ratio < 2.6, "t5={t5} t2={t2} ratio={ratio}");
+    }
+
+    #[test]
+    fn dependencies_serialize() {
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        let a = g.add(Task::compute("a", Duration::from_secs(5)));
+        g.add(Task::compute("b", Duration::from_secs(5)).with_dep(a));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        assert!(stats.makespan.secs_f64() >= 10.0);
+    }
+
+    #[test]
+    fn staged_input_charges_ramdisk_rate() {
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        core.nodes.write_range(0, 4, "/tmp/d/in.bin", Blob::synthetic(500 * MB, 1));
+        let mut g = TaskGraph::new();
+        g.add(Task::compute("t", Duration::ZERO).with_input("/tmp/d/in.bin", None));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        // 500 MB at orthros local 500 MB/s = 1 s.
+        assert!((stats.makespan.secs_f64() - 1.0).abs() < 0.01, "{:?}", stats.makespan);
+        assert_eq!(stats.staged_read_bytes, 500 * MB);
+        assert_eq!(stats.unstaged_read_bytes, 0);
+    }
+
+    #[test]
+    fn unstaged_input_falls_back_to_gpfs() {
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        core.pfs.write("/data/in.bin", Blob::synthetic(100 * MB, 2));
+        let mut g = TaskGraph::new();
+        g.add(Task::compute("t", Duration::ZERO).with_input("/data/in.bin", None));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        assert_eq!(stats.unstaged_read_bytes, 100 * MB);
+        assert_eq!(stats.staged_read_bytes, 0);
+    }
+
+    #[test]
+    fn cache_eliminates_repeat_reads() {
+        // SVI-B: "tasks after the first do not need to perform Read
+        // operations at all".
+        let run = |cache: bool| {
+            let (mut core, topo) = orthros_core();
+            let comm = Comm::world(&topo.spec);
+            core.nodes.write_range(0, 4, "/tmp/d/in.bin", Blob::synthetic(500 * MB, 1));
+            let mut g = TaskGraph::new();
+            // 2 sequential waves per core would re-read without cache.
+            g.foreach(640, |i| {
+                Task::compute(format!("t{i}"), Duration::from_secs(1))
+                    .with_input("/tmp/d/in.bin", None)
+            });
+            let cfg = SchedulerCfg { cache_inputs: cache, ..Default::default() };
+            run_workflow(&mut core, &topo, &comm, g, cfg)
+        };
+        let cold = run(false);
+        let warm = run(true);
+        assert!(warm.cache_hits > 0);
+        assert!(
+            warm.makespan.secs_f64() < cold.makespan.secs_f64(),
+            "warm={:?} cold={:?}",
+            warm.makespan,
+            cold.makespan
+        );
+        // Cold: every task pays the 1 s read; warm: one read per node.
+        assert!((cold.makespan.secs_f64() - 4.0).abs() < 0.2, "{:?}", cold.makespan);
+        assert!((warm.makespan.secs_f64() - 3.0).abs() < 0.2, "{:?}", warm.makespan);
+    }
+
+    #[test]
+    #[should_panic(expected = "not found")]
+    fn missing_input_panics() {
+        let (mut core, topo) = orthros_core();
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        g.add(Task::compute("t", Duration::ZERO).with_input("/nope", None));
+        run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+    }
+
+    #[test]
+    fn bgq_scale_task_farm_is_tractable() {
+        // 100K grid points on 512 BG/Q nodes (8,192 ranks): the engine
+        // must handle this in well under a second of host time.
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(512), GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let mut g = TaskGraph::new();
+        let mut rng = crate::util::prng::Pcg64::new(3);
+        g.foreach(100_000, |i| {
+            Task::compute(format!("g{i}"), Duration::from_secs_f64(rng.range_f64(20.0, 40.0)))
+        });
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        // ~100000*30s / 8192 cores ~= 366 s.
+        let t = stats.makespan.secs_f64();
+        assert!(t > 300.0 && t < 450.0, "{t}");
+        assert!(stats.utilization > 0.9);
+    }
+}

@@ -1,0 +1,598 @@
+//! A Swift-subset frontend: parse the paper's workflow scripts and
+//! compile them to task graphs.
+//!
+//! The paper programs its workflows in Swift (SIII); Fig 8 is the
+//! production NF-HEDM stage-2 script. This module implements the
+//! subset those figures use, so the repository's workflows are driven
+//! by *the same scripts the paper shows*:
+//!
+//! ```swift
+//! main {
+//!     parameterFile = argv("p");
+//!     microstructureFile = argv("m");
+//!     start = toint(argp(1));
+//!     end = toint(argp(2));
+//!     foreach row in [start:end] {
+//!         FitOrientation(parameterFile, row, microstructureFile);
+//!     }
+//! }
+//! ```
+//!
+//! Semantics (faithful to implicitly-parallel Swift):
+//! - every statement may run concurrently, ordered only by dataflow;
+//! - `x = f(...)` makes later uses of `x` depend on that call;
+//! - `foreach i in [a:b] { ... }` expands the body per index (`a..=b`,
+//!   like Fig 8's row range), bodies mutually independent;
+//! - *leaf functions* are host-registered builders mapping evaluated
+//!   arguments to a [`Task`] (runtime model, inputs, outputs) — the
+//!   "user code in compiled (C, C++) or scripting languages" of SIII.
+//!
+//! Not implemented (documented limits): user-defined Swift functions
+//! and recursion (Fig 4's recursive merge is provided natively by
+//! [`super::mapreduce`]), arrays, conditionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::graph::{Task, TaskGraph, TaskId};
+
+/// A value in the interpreter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Str(s) => s.parse().map_err(|_| anyhow!("not an int: {s:?}")),
+        }
+    }
+}
+
+/// Builds a [`Task`] from a leaf-function invocation's evaluated args.
+pub type LeafFn<'a> = Box<dyn FnMut(&[Value]) -> Task + 'a>;
+
+/// The host environment a script runs against.
+pub struct Env<'a> {
+    /// Named arguments: `argv("p")`.
+    pub argv: BTreeMap<String, String>,
+    /// Positional arguments: `argp(1)`.
+    pub argp: Vec<String>,
+    /// Registered leaf functions.
+    leaves: BTreeMap<String, LeafFn<'a>>,
+}
+
+impl<'a> Env<'a> {
+    pub fn new() -> Self {
+        Env { argv: BTreeMap::new(), argp: Vec::new(), leaves: BTreeMap::new() }
+    }
+
+    pub fn arg(mut self, key: &str, val: &str) -> Self {
+        self.argv.insert(key.into(), val.into());
+        self
+    }
+
+    pub fn pos(mut self, val: &str) -> Self {
+        self.argp.push(val.into());
+        self
+    }
+
+    pub fn leaf(mut self, name: &str, f: impl FnMut(&[Value]) -> Task + 'a) -> Self {
+        self.leaves.insert(name.into(), Box::new(f));
+        self
+    }
+}
+
+impl Default for Env<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AST + parser (recursive descent over a token stream).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Expr {
+    Lit(Value),
+    Var(String),
+    /// builtin or leaf call.
+    Call(String, Vec<Expr>),
+}
+
+#[derive(Clone, Debug)]
+enum Stmt {
+    /// `x = expr;`
+    Assign(String, Expr),
+    /// bare `f(args);`
+    Call(Expr),
+    /// `foreach i in [a:b] { body }`
+    Foreach(String, Expr, Expr, Vec<Stmt>),
+}
+
+fn tokenize(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut chars = src.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            '/' => {
+                chars.next();
+                if chars.peek() == Some(&'/') {
+                    while let Some(&d) = chars.peek() {
+                        chars.next();
+                        if d == '\n' {
+                            break;
+                        }
+                    }
+                } else {
+                    out.push("/".into());
+                }
+            }
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            '"' => {
+                chars.next();
+                let mut s = String::from("\"");
+                for d in chars.by_ref() {
+                    if d == '"' {
+                        break;
+                    }
+                    s.push(d);
+                }
+                out.push(s);
+            }
+            c if c.is_alphanumeric() || c == '_' => {
+                let mut s = String::new();
+                while let Some(&d) = chars.peek() {
+                    if d.is_alphanumeric() || d == '_' {
+                        s.push(d);
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(s);
+            }
+            _ => {
+                chars.next();
+                out.push(c.to_string());
+            }
+        }
+    }
+    out
+}
+
+struct Parser {
+    toks: Vec<String>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&str> {
+        self.toks.get(self.i).map(String::as_str)
+    }
+
+    fn next(&mut self) -> Result<String> {
+        let t = self
+            .toks
+            .get(self.i)
+            .cloned()
+            .ok_or_else(|| anyhow!("unexpected end of script"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: &str) -> Result<()> {
+        let got = self.next()?;
+        if got != t {
+            bail!("expected {t:?}, got {got:?}");
+        }
+        Ok(())
+    }
+
+    fn program(&mut self) -> Result<Vec<Stmt>> {
+        self.expect("main")?;
+        self.expect("{")?;
+        let body = self.block_body()?;
+        if self.peek().is_some() {
+            bail!("trailing tokens after main block");
+        }
+        Ok(body)
+    }
+
+    fn block_body(&mut self) -> Result<Vec<Stmt>> {
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Some("}") => {
+                    self.next()?;
+                    return Ok(stmts);
+                }
+                Some(_) => stmts.push(self.stmt()?),
+                None => bail!("unterminated block"),
+            }
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        if self.peek() == Some("foreach") {
+            self.next()?;
+            let var = self.next()?;
+            self.expect("in")?;
+            self.expect("[")?;
+            let lo = self.expr()?;
+            self.expect(":")?;
+            let hi = self.expr()?;
+            self.expect("]")?;
+            self.expect("{")?;
+            let body = self.block_body()?;
+            return Ok(Stmt::Foreach(var, lo, hi, body));
+        }
+        let first = self.next()?;
+        if self.peek() == Some("=") {
+            self.next()?;
+            let e = self.expr()?;
+            self.expect(";")?;
+            Ok(Stmt::Assign(first, e))
+        } else if self.peek() == Some("(") {
+            let call = self.call_after_name(first)?;
+            self.expect(";")?;
+            Ok(Stmt::Call(call))
+        } else {
+            bail!("expected '=' or '(' after {first:?}")
+        }
+    }
+
+    fn call_after_name(&mut self, name: String) -> Result<Expr> {
+        self.expect("(")?;
+        let mut args = Vec::new();
+        if self.peek() != Some(")") {
+            loop {
+                args.push(self.expr()?);
+                match self.peek() {
+                    Some(",") => {
+                        self.next()?;
+                    }
+                    Some(")") => break,
+                    other => bail!("expected ',' or ')', got {other:?}"),
+                }
+            }
+        }
+        self.expect(")")?;
+        Ok(Expr::Call(name, args))
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let t = self.next()?;
+        if let Some(s) = t.strip_prefix('"') {
+            return Ok(Expr::Lit(Value::Str(s.to_string())));
+        }
+        if let Ok(n) = t.parse::<i64>() {
+            return Ok(Expr::Lit(Value::Int(n)));
+        }
+        if t == "-" {
+            let n = self.next()?;
+            let n: i64 = n.parse().map_err(|_| anyhow!("bad negative literal"))?;
+            return Ok(Expr::Lit(Value::Int(-n)));
+        }
+        if self.peek() == Some("(") {
+            return self.call_after_name(t);
+        }
+        Ok(Expr::Var(t))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interpreter: evaluate the script, emitting tasks into a TaskGraph
+// with def-use dataflow dependencies.
+// ---------------------------------------------------------------------------
+
+struct Interp<'e, 'a> {
+    env: &'e mut Env<'a>,
+    graph: TaskGraph,
+    /// Variable -> (value, producing task if any).
+    vars: BTreeMap<String, (Value, Option<TaskId>)>,
+}
+
+impl Interp<'_, '_> {
+    fn eval(&mut self, e: &Expr, deps: &mut Vec<TaskId>) -> Result<Value> {
+        match e {
+            Expr::Lit(v) => Ok(v.clone()),
+            Expr::Var(name) => {
+                let (v, producer) = self
+                    .vars
+                    .get(name)
+                    .ok_or_else(|| anyhow!("undefined variable {name:?}"))?
+                    .clone();
+                if let Some(t) = producer {
+                    deps.push(t);
+                }
+                Ok(v)
+            }
+            Expr::Call(name, args) => match name.as_str() {
+                "argv" => {
+                    let key = self.eval(&args[0], deps)?.as_str();
+                    self.env
+                        .argv
+                        .get(&key)
+                        .map(|s| Value::Str(s.clone()))
+                        .ok_or_else(|| anyhow!("missing argv {key:?}"))
+                }
+                "argp" => {
+                    let idx = self.eval(&args[0], deps)?.as_int()? as usize;
+                    self.env
+                        .argp
+                        .get(idx.checked_sub(1).ok_or_else(|| anyhow!("argp(0)"))?)
+                        .map(|s| Value::Str(s.clone()))
+                        .ok_or_else(|| anyhow!("missing argp {idx}"))
+                }
+                "toint" | "string2int" => {
+                    let v = self.eval(&args[0], deps)?;
+                    Ok(Value::Int(v.as_int()?))
+                }
+                "strcat" => {
+                    let mut s = String::new();
+                    for a in args {
+                        s.push_str(&self.eval(a, deps)?.as_str());
+                    }
+                    Ok(Value::Str(s))
+                }
+                _ => bail!("{name:?} is a leaf function; call it as a statement"),
+            },
+        }
+    }
+
+    fn exec_call(&mut self, e: &Expr) -> Result<Option<TaskId>> {
+        let Expr::Call(name, args) = e else { bail!("not a call") };
+        let mut deps = Vec::new();
+        let vals: Vec<Value> = args
+            .iter()
+            .map(|a| self.eval(a, &mut deps))
+            .collect::<Result<_>>()?;
+        let leaf = self
+            .env
+            .leaves
+            .get_mut(name.as_str())
+            .ok_or_else(|| anyhow!("unknown leaf function {name:?}"))?;
+        let mut task = leaf(&vals);
+        deps.sort();
+        deps.dedup();
+        for d in deps {
+            task = task.with_dep(d);
+        }
+        Ok(Some(self.graph.add(task)))
+    }
+
+    fn exec_block(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::Assign(name, expr) => match expr {
+                    Expr::Call(f, _) if self.env.leaves.contains_key(f.as_str()) => {
+                        let t = self.exec_call(expr)?;
+                        self.vars
+                            .insert(name.clone(), (Value::Str(name.clone()), t));
+                    }
+                    _ => {
+                        let mut deps = Vec::new();
+                        let v = self.eval(expr, &mut deps)?;
+                        // Pure expressions carry their producers forward.
+                        let producer = deps.into_iter().next();
+                        self.vars.insert(name.clone(), (v, producer));
+                    }
+                },
+                Stmt::Call(expr) => {
+                    self.exec_call(expr)?;
+                }
+                Stmt::Foreach(var, lo, hi, body) => {
+                    let mut deps = Vec::new();
+                    let lo = self.eval(lo, &mut deps)?.as_int()?;
+                    let hi = self.eval(hi, &mut deps)?.as_int()?;
+                    let saved = self.vars.get(var).cloned();
+                    for i in lo..=hi {
+                        self.vars.insert(var.clone(), (Value::Int(i), None));
+                        self.exec_block(body)?;
+                    }
+                    match saved {
+                        Some(v) => {
+                            self.vars.insert(var.clone(), v);
+                        }
+                        None => {
+                            self.vars.remove(var);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse and evaluate `src` against `env`; returns the compiled task
+/// graph (run it with [`super::sched::run_workflow`]).
+pub fn compile(src: &str, env: &mut Env) -> Result<TaskGraph> {
+    let mut p = Parser { toks: tokenize(src), i: 0 };
+    let stmts = p.program()?;
+    let mut interp = Interp { env, graph: TaskGraph::new(), vars: BTreeMap::new() };
+    interp.exec_block(&stmts)?;
+    if interp.graph.is_empty() {
+        bail!("script produced no tasks");
+    }
+    Ok(interp.graph)
+}
+
+/// The paper's Fig 8 script, verbatim (modulo the line-wrap artifact).
+pub const FIG8_NF_STAGE2: &str = r#"
+main {
+    parameterFile = argv("p");
+    microstructureFile = argv("m");
+    start = toint(argp(1));
+    end = toint(argp(2));
+    foreach row in [start:end] {
+        FitOrientation(parameterFile, row, microstructureFile);
+    }
+}
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Duration;
+
+    fn fit_env(count: std::rc::Rc<std::cell::RefCell<Vec<Vec<Value>>>>) -> Env<'static> {
+        Env::new()
+            .arg("p", "/tmp/hedm/ps.txt")
+            .arg("m", "/projects/out/micro.bin")
+            .pos("0")
+            .pos("9")
+            .leaf("FitOrientation", move |args| {
+                count.borrow_mut().push(args.to_vec());
+                Task::compute("fit", Duration::from_secs(30))
+                    .with_input(args[0].as_str(), None)
+            })
+    }
+
+    #[test]
+    fn fig8_compiles_to_row_tasks() {
+        let calls = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut env = fit_env(calls.clone());
+        let g = compile(FIG8_NF_STAGE2, &mut env).unwrap();
+        assert_eq!(g.len(), 10); // rows 0..=9
+        assert_eq!(g.roots().len(), 10); // implicitly parallel
+        let calls = calls.borrow();
+        assert_eq!(calls[3][0], Value::Str("/tmp/hedm/ps.txt".into()));
+        assert_eq!(calls[3][1], Value::Int(3));
+        assert_eq!(calls[3][2], Value::Str("/projects/out/micro.bin".into()));
+        // Every task reads the staged parameter file.
+        assert!(g.tasks.iter().all(|t| t.inputs[0].path == "/tmp/hedm/ps.txt"));
+    }
+
+    #[test]
+    fn dataflow_dependencies_from_assignment() {
+        // b consumes a's output variable: b depends on a; c is free.
+        let src = r#"
+        main {
+            x = produce("in");
+            consume(x);
+            other("y");
+        }
+        "#;
+        let mut env = Env::new()
+            .leaf("produce", |_| Task::compute("p", Duration::from_secs(1)))
+            .leaf("consume", |_| Task::compute("c", Duration::from_secs(1)))
+            .leaf("other", |_| Task::compute("o", Duration::from_secs(1)));
+        let g = compile(src, &mut env).unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.tasks[1].deps, vec![crate::dataflow::graph::TaskId(0)]);
+        assert!(g.tasks[2].deps.is_empty());
+    }
+
+    #[test]
+    fn foreach_bodies_are_independent() {
+        let src = r#"
+        main {
+            foreach i in [1:4] {
+                work(i);
+            }
+        }
+        "#;
+        let mut env =
+            Env::new().leaf("work", |_| Task::compute("w", Duration::from_secs(1)));
+        let g = compile(src, &mut env).unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.roots().len(), 4);
+        assert_eq!(g.critical_path(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn chains_inside_foreach() {
+        // Per-iteration two-stage pipeline: reduce(i) -> fit(i).
+        let src = r#"
+        main {
+            foreach i in [0:9] {
+                r = reduce(i);
+                fit(r);
+            }
+        }
+        "#;
+        let mut env = Env::new()
+            .leaf("reduce", |_| Task::compute("r", Duration::from_secs(2)))
+            .leaf("fit", |_| Task::compute("f", Duration::from_secs(3)));
+        let g = compile(src, &mut env).unwrap();
+        assert_eq!(g.len(), 20);
+        assert_eq!(g.critical_path(), Duration::from_secs(5));
+        assert_eq!(g.roots().len(), 10);
+    }
+
+    #[test]
+    fn comments_and_builtins() {
+        let src = r#"
+        main {
+            // threshold sweep tag
+            tag = strcat("run-", argv("id"));
+            work(tag);
+        }
+        "#;
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(String::new()));
+        let seen2 = seen.clone();
+        let mut env = Env::new().arg("id", "7").leaf("work", move |args| {
+            *seen2.borrow_mut() = args[0].as_str();
+            Task::compute("w", Duration::ZERO)
+        });
+        compile(src, &mut env).unwrap();
+        assert_eq!(*seen.borrow(), "run-7");
+    }
+
+    #[test]
+    fn error_cases() {
+        let mut env = Env::new();
+        assert!(compile("", &mut env).is_err());
+        assert!(compile("main { x = ; }", &mut env).is_err());
+        assert!(compile("main { nosuch(1); }", &mut env).is_err());
+        assert!(compile("main { x = argv(\"missing\"); work(x); }", &mut env).is_err());
+        assert!(compile("main { foreach i in [1:3] { }", &mut env).is_err());
+    }
+
+    #[test]
+    fn fig8_runs_on_the_simulated_machine() {
+        use crate::cluster::{orthros, Topology};
+        use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+        use crate::engine::SimCore;
+        use crate::mpisim::Comm;
+        use crate::pfs::{Blob, GpfsParams};
+
+        let mut env = Env::new()
+            .arg("p", "/tmp/hedm/ps.txt")
+            .arg("m", "/projects/out/micro.bin")
+            .pos("0")
+            .pos("600") // the Fig 2 grid: 601 points
+            .leaf("FitOrientation", |args| {
+                Task::compute(format!("fit{}", args[1].as_str()), Duration::from_secs(30))
+                    .with_input(args[0].as_str(), None)
+            });
+        let g = compile(FIG8_NF_STAGE2, &mut env).unwrap();
+        assert_eq!(g.len(), 601);
+
+        let mut core = SimCore::new();
+        let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        core.nodes
+            .write_range(0, 4, "/tmp/hedm/ps.txt", Blob::synthetic(1 << 20, 1));
+        let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+        // 601 x 30 s on 320 cores ~= 2 waves -> ~60 s.
+        let m = stats.makespan.secs_f64();
+        assert!(m > 55.0 && m < 75.0, "{m}");
+    }
+}

@@ -1,0 +1,509 @@
+//! The simulation core: executes [`Plan`] DAGs over the flow network
+//! under a deterministic virtual clock.
+//!
+//! The engine is a reactor. Subsystems that need to make decisions
+//! *during* the run (the dataflow scheduler launching tasks as cores
+//! free up, the staging hook chaining phases) implement [`Director`]
+//! and receive [`Notice`]s — plan completions, step notifications,
+//! timers — through which they submit more plans. All state mutation
+//! happens on the single thread that owns [`SimCore`]; runs are
+//! bit-reproducible.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::NodeStores;
+use crate::metrics::Metrics;
+use crate::pfs::ParallelFs;
+use crate::simtime::flownet::{FlowId, FlowNet};
+use crate::simtime::heap::EventHeap;
+use crate::simtime::plan::{Effect, Plan, PlanId, Step};
+use crate::units::{Duration, SimTime};
+
+/// Notification delivered to the [`Director`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Notice {
+    /// All steps of the plan finished. Carries the plan's `tag`.
+    PlanDone { plan: PlanId, tag: u64 },
+    /// An `Effect::Notify(tag)` step fired.
+    Step { tag: u64 },
+    /// A timer scheduled with [`SimCore::timer`] fired.
+    Timer { tag: u64 },
+}
+
+/// The decision-making layer driven by the engine.
+pub trait Director {
+    fn on_notice(&mut self, core: &mut SimCore, notice: Notice);
+}
+
+/// A director for static workloads: everything submitted up front.
+pub struct NullDirector;
+
+impl Director for NullDirector {
+    fn on_notice(&mut self, _core: &mut SimCore, _notice: Notice) {}
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Ev {
+    /// Re-examine flow completions; valid only if `epoch` is current.
+    FlowCheck { epoch: u64 },
+    /// A `Step::Delay` finished.
+    StepDone { plan: u32, step: u32 },
+    /// Director timer.
+    Timer { tag: u64 },
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum StepState {
+    Blocked,
+    Running,
+    Done,
+}
+
+struct PlanRun {
+    plan: Plan,
+    missing: Vec<u32>,
+    dependents: Vec<Vec<u32>>,
+    state: Vec<StepState>,
+    remaining: usize,
+}
+
+/// The simulation core. Owns the clock, the flow network, the shared
+/// filesystem, the node-local stores, and all in-flight plans.
+pub struct SimCore {
+    pub now: SimTime,
+    pub net: FlowNet,
+    pub pfs: ParallelFs,
+    pub nodes: NodeStores,
+    pub metrics: Metrics,
+    heap: EventHeap<Ev>,
+    plans: Vec<PlanRun>,
+    flow_owner: HashMap<FlowId, (u32, u32)>,
+    pending: VecDeque<Notice>,
+    last_net_update: SimTime,
+    net_dirty: bool,
+    /// Total events processed (perf telemetry).
+    pub events_processed: u64,
+}
+
+impl SimCore {
+    pub fn new() -> Self {
+        SimCore {
+            now: SimTime::ZERO,
+            net: FlowNet::new(),
+            pfs: ParallelFs::new(),
+            nodes: NodeStores::new(),
+            metrics: Metrics::new(),
+            heap: EventHeap::new(),
+            plans: Vec::new(),
+            flow_owner: HashMap::new(),
+            pending: VecDeque::new(),
+            last_net_update: SimTime::ZERO,
+            net_dirty: false,
+            events_processed: 0,
+        }
+    }
+
+    /// Submit a plan; its ready steps start at the current time.
+    pub fn submit(&mut self, plan: Plan) -> PlanId {
+        assert!(!plan.is_empty(), "empty plan");
+        let id = PlanId(self.plans.len());
+        let n = plan.len();
+        let mut missing = vec![0u32; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, s) in plan.steps.iter().enumerate() {
+            missing[i] = s.deps.len() as u32;
+            for d in &s.deps {
+                dependents[d.0].push(i as u32);
+            }
+        }
+        self.plans.push(PlanRun {
+            plan,
+            missing,
+            dependents,
+            state: vec![StepState::Blocked; n],
+            remaining: n,
+        });
+        for i in 0..n {
+            // An earlier instantaneous step may have already cascaded
+            // into this one via complete_step; only start steps still
+            // Blocked with no outstanding deps.
+            let run = &self.plans[id.0];
+            if run.missing[i] == 0 && run.state[i] == StepState::Blocked {
+                self.start_step(id.0 as u32, i as u32);
+            }
+        }
+        id
+    }
+
+    /// Deliver `Notice::Timer { tag }` to the director at time `at`.
+    pub fn timer(&mut self, at: SimTime, tag: u64) {
+        assert!(at >= self.now, "timer in the past");
+        self.heap.push(at, Ev::Timer { tag });
+    }
+
+    /// Run until the event queue drains. The director receives every
+    /// notice and may keep submitting work.
+    pub fn run(&mut self, director: &mut impl Director) {
+        loop {
+            self.settle_network();
+            while let Some(n) = self.pending.pop_front() {
+                director.on_notice(self, n);
+                self.settle_network();
+            }
+            let Some((t, ev)) = self.heap.pop() else { break };
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            self.events_processed += 1;
+            self.handle(ev);
+        }
+        assert!(
+            self.plans.iter().all(|p| p.remaining == 0),
+            "deadlock: {} plans incomplete at drain",
+            self.plans.iter().filter(|p| p.remaining > 0).count()
+        );
+    }
+
+    /// Convenience: run with no director.
+    pub fn run_to_completion(&mut self) {
+        self.run(&mut NullDirector);
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::FlowCheck { epoch } => {
+                if epoch != self.net.epoch {
+                    return; // stale: rates changed since scheduling
+                }
+                self.advance_net();
+                // Complete every flow that has drained (ties complete
+                // together at this timestamp).
+                let done: Vec<FlowId> = self
+                    .flow_owner
+                    .keys()
+                    .copied()
+                    .filter(|f| !self.net.is_done(*f) && self.net.remaining_each(*f) <= 0.5)
+                    .collect();
+                // Deterministic order.
+                let mut done = done;
+                done.sort();
+                for f in done {
+                    self.net.complete(f);
+                    let (p, s) = self.flow_owner.remove(&f).expect("unowned flow");
+                    self.complete_step(p, s);
+                }
+                self.net_dirty = true;
+            }
+            Ev::StepDone { plan, step } => {
+                self.complete_step(plan, step);
+            }
+            Ev::Timer { tag } => {
+                self.pending.push_back(Notice::Timer { tag });
+            }
+        }
+    }
+
+    /// Advance flow progress to `self.now`.
+    fn advance_net(&mut self) {
+        let dt = self.now - self.last_net_update;
+        if dt > Duration::ZERO {
+            self.net.advance(dt);
+        }
+        self.last_net_update = self.now;
+    }
+
+    /// If the active flow set changed, recompute fair shares and
+    /// reschedule the completion check.
+    fn settle_network(&mut self) {
+        if !self.net_dirty {
+            return;
+        }
+        self.advance_net();
+        self.net.recompute();
+        self.net_dirty = false;
+        if let Some((t, _)) = self.net.next_completion(self.now) {
+            self.heap.push(t, Ev::FlowCheck { epoch: self.net.epoch });
+        }
+    }
+
+    fn start_step(&mut self, plan: u32, step: u32) {
+        let run = &mut self.plans[plan as usize];
+        debug_assert_eq!(run.state[step as usize], StepState::Blocked);
+        run.state[step as usize] = StepState::Running;
+        let label = run.plan.steps[step as usize].label;
+        self.metrics.phase_start(label, self.now);
+        // Clone the step descriptor (cheap: blobs are Arc/descriptor).
+        let s = run.plan.steps[step as usize].step.clone();
+        match s {
+            Step::Flow { path, members, bytes_each, cap_each } => {
+                if bytes_each == 0 {
+                    self.complete_step(plan, step);
+                } else {
+                    self.advance_net();
+                    let f = self.net.start_capped(path, members, bytes_each, cap_each);
+                    self.flow_owner.insert(f, (plan, step));
+                    self.net_dirty = true;
+                }
+            }
+            Step::Delay(d) => {
+                if d == Duration::ZERO {
+                    self.complete_step(plan, step);
+                } else {
+                    self.heap.push(self.now + d, Ev::StepDone { plan, step });
+                }
+            }
+            Step::Effect(e) => {
+                self.apply_effect(e);
+                self.complete_step(plan, step);
+            }
+        }
+    }
+
+    fn apply_effect(&mut self, e: Effect) {
+        match e {
+            Effect::PfsWrite { path, data } => {
+                self.metrics.add_bytes("pfs.write", data.len());
+                self.pfs.write(path, data);
+            }
+            Effect::NodeWrite { nodes: (lo, hi), path, data } => {
+                self.metrics
+                    .add_bytes("node.write", data.len() * (hi - lo + 1) as u64);
+                self.nodes.write_range(lo, hi, path, data);
+            }
+            Effect::Notify(tag) => {
+                self.pending.push_back(Notice::Step { tag });
+            }
+        }
+    }
+
+    fn complete_step(&mut self, plan: u32, step: u32) {
+        let run = &mut self.plans[plan as usize];
+        debug_assert_ne!(run.state[step as usize], StepState::Done, "double completion");
+        run.state[step as usize] = StepState::Done;
+        run.remaining -= 1;
+        // Decide completion NOW: dependent steps started below may
+        // cascade (zero-length steps complete recursively) and push the
+        // plan's remaining to 0 inside the recursion — only the call
+        // whose decrement reached 0 may emit PlanDone.
+        let finished = run.remaining == 0;
+        let label = run.plan.steps[step as usize].label;
+        self.metrics.phase_end(label, self.now);
+        let deps = std::mem::take(&mut self.plans[plan as usize].dependents[step as usize]);
+        for d in deps {
+            let run = &mut self.plans[plan as usize];
+            run.missing[d as usize] -= 1;
+            if run.missing[d as usize] == 0 {
+                self.start_step(plan, d);
+            }
+        }
+        if finished {
+            self.pending.push_back(Notice::PlanDone {
+                plan: PlanId(plan as usize),
+                tag: self.plans[plan as usize].plan.tag,
+            });
+        }
+    }
+
+    /// True when a submitted plan has fully completed.
+    pub fn plan_done(&self, id: PlanId) -> bool {
+        self.plans[id.0].remaining == 0
+    }
+}
+
+impl Default for SimCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::Blob;
+    use crate::simtime::flownet::Capacity;
+    use crate::units::GB;
+
+    #[test]
+    fn delay_chain_accumulates_time() {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(1);
+        let a = p.delay(Duration::from_secs(2), vec![], "a");
+        p.delay(Duration::from_secs(3), vec![a], "b");
+        let id = core.submit(p);
+        core.run_to_completion();
+        assert!(core.plan_done(id));
+        assert_eq!(core.now.secs_f64(), 5.0);
+    }
+
+    #[test]
+    fn parallel_delays_overlap() {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(0);
+        p.delay(Duration::from_secs(2), vec![], "a");
+        p.delay(Duration::from_secs(3), vec![], "b");
+        p.barrier("join");
+        core.submit(p);
+        core.run_to_completion();
+        assert_eq!(core.now.secs_f64(), 3.0);
+    }
+
+    #[test]
+    fn flow_transfer_takes_bandwidth_time() {
+        let mut core = SimCore::new();
+        let l = core.net.add_link("l", Capacity::Fixed(GB as f64));
+        let mut p = Plan::new(0);
+        p.flow(vec![l], 1, 2 * GB, vec![], "xfer");
+        core.submit(p);
+        core.run_to_completion();
+        assert!((core.now.secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_flows_share_then_speed_up() {
+        // 1 GB and 3 GB on a 2 GB/s link: share 1 GB/s each; the small
+        // one finishes at t=1, the big one then runs at 2 GB/s and
+        // finishes at t = 1 + 2/2 = 2.
+        let mut core = SimCore::new();
+        let l = core.net.add_link("l", Capacity::Fixed(2.0 * GB as f64));
+        let mut p = Plan::new(0);
+        p.flow(vec![l], 1, GB, vec![], "small");
+        p.flow(vec![l], 1, 3 * GB, vec![], "big");
+        core.submit(p);
+        core.run_to_completion();
+        assert!((core.now.secs_f64() - 2.0).abs() < 1e-6, "{}", core.now);
+    }
+
+    #[test]
+    fn dependent_flow_starts_after_dep() {
+        let mut core = SimCore::new();
+        let l = core.net.add_link("l", Capacity::Fixed(GB as f64));
+        let mut p = Plan::new(0);
+        let a = p.flow(vec![l], 1, GB, vec![], "a");
+        p.flow(vec![l], 1, GB, vec![a], "b");
+        core.submit(p);
+        core.run_to_completion();
+        // Sequential: 1 + 1 = 2 s (no sharing since never concurrent).
+        assert!((core.now.secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn effects_apply_to_data_plane() {
+        let mut core = SimCore::new();
+        let blob = Blob::real(vec![5; 32]);
+        let mut p = Plan::new(0);
+        let w = p.effect(
+            Effect::PfsWrite { path: "/d/x".into(), data: blob.clone() },
+            vec![],
+            "w",
+        );
+        p.effect(
+            Effect::NodeWrite { nodes: (0, 7), path: "/tmp/x".into(), data: blob.clone() },
+            vec![w],
+            "n",
+        );
+        core.submit(p);
+        core.run_to_completion();
+        assert!(core.pfs.read("/d/x").unwrap().same_content(&blob));
+        assert!(core.nodes.read(3, "/tmp/x").unwrap().same_content(&blob));
+        assert!(core.nodes.read(8, "/tmp/x").is_none());
+    }
+
+    struct Chainer {
+        launched: bool,
+        done_tags: Vec<u64>,
+    }
+
+    impl Director for Chainer {
+        fn on_notice(&mut self, core: &mut SimCore, n: Notice) {
+            match n {
+                Notice::PlanDone { tag, .. } => {
+                    self.done_tags.push(tag);
+                    if !self.launched {
+                        self.launched = true;
+                        let mut p = Plan::new(99);
+                        p.delay(Duration::from_secs(1), vec![], "chained");
+                        core.submit(p);
+                    }
+                }
+                Notice::Timer { tag } => self.done_tags.push(1000 + tag),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn director_chains_plans_and_timers() {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(7);
+        p.delay(Duration::from_secs(2), vec![], "first");
+        core.submit(p);
+        core.timer(SimTime::ZERO + Duration::from_secs(1), 42);
+        let mut d = Chainer { launched: false, done_tags: vec![] };
+        core.run(&mut d);
+        assert_eq!(d.done_tags, vec![1042, 7, 99]);
+        assert_eq!(core.now.secs_f64(), 3.0);
+    }
+
+    #[test]
+    fn notify_effect_reaches_director() {
+        struct Catcher(Vec<u64>);
+        impl Director for Catcher {
+            fn on_notice(&mut self, _c: &mut SimCore, n: Notice) {
+                if let Notice::Step { tag } = n {
+                    self.0.push(tag);
+                }
+            }
+        }
+        let mut core = SimCore::new();
+        let mut p = Plan::new(0);
+        let d = p.delay(Duration::from_secs(1), vec![], "work");
+        p.effect(Effect::Notify(5), vec![d], "note");
+        core.submit(p);
+        let mut c = Catcher(vec![]);
+        core.run(&mut c);
+        assert_eq!(c.0, vec![5]);
+    }
+
+    #[test]
+    fn phase_metrics_span_wall_time() {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(0);
+        p.delay(Duration::from_secs(2), vec![], "stage");
+        p.delay(Duration::from_secs(3), vec![], "stage");
+        core.submit(p);
+        core.run_to_completion();
+        assert_eq!(core.metrics.phase_span("stage").unwrap().secs_f64(), 3.0);
+    }
+
+    #[test]
+    fn rate_change_mid_flight_is_honored() {
+        // Flow A alone for 1 s (2 GB/s), then B joins via a timer-driven
+        // director; A's completion reflects the reduced share.
+        struct Joiner {
+            link: crate::simtime::flownet::LinkId,
+        }
+        impl Director for Joiner {
+            fn on_notice(&mut self, core: &mut SimCore, n: Notice) {
+                if let Notice::Timer { .. } = n {
+                    let mut p = Plan::new(2);
+                    p.flow(vec![self.link], 1, 2 * GB, vec![], "b");
+                    core.submit(p);
+                }
+            }
+        }
+        let mut core = SimCore::new();
+        let l = core.net.add_link("l", Capacity::Fixed(2.0 * GB as f64));
+        let mut p = Plan::new(1);
+        p.flow(vec![l], 1, 4 * GB, vec![], "a");
+        core.submit(p);
+        core.timer(SimTime::ZERO + Duration::from_secs(1), 0);
+        core.run(&mut Joiner { link: l });
+        // A: 1 s at 2 GB/s (2 GB left), then shares at 1 GB/s -> 2 more
+        // seconds -> A done at t=3. B: 2 GB at 1 GB/s from t=1, but after
+        // A finishes at t=3 B has 0 GB left... both end at t=3.
+        assert!((core.now.secs_f64() - 3.0).abs() < 1e-6, "{}", core.now);
+    }
+}

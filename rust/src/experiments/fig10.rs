@@ -1,0 +1,75 @@
+//! Fig 10: "Staging+Write performance for NF-HEDM" — aggregate
+//! bandwidth of the Swift I/O hook (GPFS -> node-local RAM disk) as a
+//! function of node count. Paper endpoint: "at our highest reported
+//! node count, 8,192 nodes, the system delivers data at an aggregate
+//! rate of 134 GB/s".
+
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::simtime::plan::Plan;
+use crate::staging::staged_plan;
+use crate::units::GB;
+
+use super::{bgq_setup, ExpResult, BGQ_SWEEP, DATASET_BYTES};
+
+/// One sweep point: staging+write wall time and aggregate bandwidth.
+pub fn run_point(nodes: u32) -> (f64, f64) {
+    let (mut core, topo, spec) = bgq_setup(nodes);
+    let comm = Comm::leader(&topo.spec);
+    let mut p = Plan::new(0);
+    staged_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    let secs = core.now.secs_f64();
+    let agg = nodes as f64 * DATASET_BYTES as f64 / secs;
+    (secs, agg)
+}
+
+pub fn run(sweep: &[u32]) -> ExpResult {
+    let mut table = Table::new(
+        "Fig 10 — Staging+Write aggregate bandwidth (577 MB replica -> every node)",
+        &["nodes", "time (s)", "agg GB/s", "paper GB/s (8192: 134)"],
+    );
+    let mut pts = Vec::new();
+    for &n in sweep {
+        let (secs, agg) = run_point(n);
+        let paper = if n == 8192 { "134".to_string() } else { "~linear".to_string() };
+        table.row(&[
+            n.to_string(),
+            format!("{secs:.2}"),
+            format!("{:.1}", agg / GB as f64),
+            paper,
+        ]);
+        pts.push((n as f64, agg / GB as f64));
+    }
+    ExpResult { table, series: vec![("staging+write GB/s".into(), pts)] }
+}
+
+pub fn default() -> ExpResult {
+    run(BGQ_SWEEP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_matches_paper() {
+        let (secs, agg) = run_point(8192);
+        // Paper: ~35 s, 134 GB/s.
+        assert!((agg / GB as f64 - 134.0).abs() < 8.0, "agg={}", agg / GB as f64);
+        assert!((secs - 35.2).abs() < 2.0, "{secs}");
+    }
+
+    #[test]
+    fn scaling_is_near_linear() {
+        let r = run(&[512, 2048, 8192]);
+        let pts = r.series_named("staging+write GB/s").unwrap();
+        // Aggregate bandwidth grows ~proportionally with nodes (the
+        // ION layer scales with the allocation).
+        let slope1 = pts[1].1 / pts[0].1;
+        let slope2 = pts[2].1 / pts[1].1;
+        assert!((slope1 - 4.0).abs() < 0.8, "{slope1}");
+        assert!((slope2 - 4.0).abs() < 0.8, "{slope2}");
+    }
+}

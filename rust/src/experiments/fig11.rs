@@ -1,0 +1,139 @@
+//! Fig 11 + SVI-B wall times: end-to-end input performance, Swift I/O
+//! hook vs the naive per-task GPFS baseline.
+//!
+//! Paper: staged end-to-end reaches **101 GB/s** on 8,192 nodes vs
+//! **21 GB/s** naive; wall time drops from **210 s to 46.75 s** (4.7x);
+//! the Read phase is a flat **10.8 +/- 0.1 s** (53.4 MB/s/process) at
+//! every allocation size.
+
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::simtime::plan::Plan;
+use crate::staging::{naive_plan, read_phase, staged_plan};
+use crate::units::GB;
+
+use super::{bgq_setup, ExpResult, BGQ_SWEEP, DATASET_BYTES};
+
+/// Phase breakdown of one staged run.
+#[derive(Clone, Copy, Debug)]
+pub struct StagedPhases {
+    pub stage_write_secs: f64,
+    pub read_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Staged path: hook + per-process read phase. Returns phases.
+pub fn run_staged(nodes: u32) -> StagedPhases {
+    let (mut core, topo, spec) = bgq_setup(nodes);
+    let leader = Comm::leader(&topo.spec);
+    let world = Comm::world(&topo.spec);
+    let mut p = Plan::new(0);
+    let (manifest, done) =
+        staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+    read_phase(&mut p, &topo, &world, manifest.total_bytes, vec![done]);
+    core.submit(p);
+    core.run_to_completion();
+    let stage_write = core.metrics.phase_window("write").unwrap().1.secs_f64();
+    let (read_start, read_end) = core.metrics.phase_window("read").unwrap();
+    StagedPhases {
+        stage_write_secs: stage_write,
+        read_secs: (read_end - read_start).secs_f64(),
+        total_secs: core.now.secs_f64(),
+    }
+}
+
+/// Naive path: uncoordinated per-task reads. Returns wall seconds.
+pub fn run_naive(nodes: u32) -> f64 {
+    let (mut core, topo, spec) = bgq_setup(nodes);
+    let world = Comm::world(&topo.spec);
+    let mut p = Plan::new(0);
+    naive_plan(&mut p, &core.pfs, &topo, &world, &spec, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    core.now.secs_f64()
+}
+
+pub fn run(sweep: &[u32]) -> ExpResult {
+    let mut table = Table::new(
+        "Fig 11 — End-to-end input bandwidth: I/O hook vs naive (577 MB/node)",
+        &[
+            "nodes",
+            "staged (s)",
+            "read (s)",
+            "staged GB/s",
+            "naive (s)",
+            "naive GB/s",
+            "speedup",
+        ],
+    );
+    let mut staged_pts = Vec::new();
+    let mut naive_pts = Vec::new();
+    for &n in sweep {
+        let s = run_staged(n);
+        let naive_secs = run_naive(n);
+        let bytes = n as f64 * DATASET_BYTES as f64;
+        let s_bw = bytes / s.total_secs / GB as f64;
+        let n_bw = bytes / naive_secs / GB as f64;
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", s.total_secs),
+            format!("{:.2}", s.read_secs),
+            format!("{s_bw:.1}"),
+            format!("{naive_secs:.1}"),
+            format!("{n_bw:.1}"),
+            format!("{:.1}x", naive_secs / s.total_secs),
+        ]);
+        staged_pts.push((n as f64, s_bw));
+        naive_pts.push((n as f64, n_bw));
+    }
+    ExpResult {
+        table,
+        series: vec![
+            ("staged GB/s".into(), staged_pts),
+            ("naive GB/s".into(), naive_pts),
+        ],
+    }
+}
+
+pub fn default() -> ExpResult {
+    run(BGQ_SWEEP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_numbers_at_8192() {
+        let s = run_staged(8192);
+        let n = run_naive(8192);
+        // SVI-B: 46.75 s vs 210 s, read flat at 10.8 s.
+        assert!((s.total_secs - 46.75).abs() < 2.5, "staged {}", s.total_secs);
+        assert!((s.read_secs - 10.8).abs() < 0.2, "read {}", s.read_secs);
+        assert!((n - 210.0).abs() < 25.0, "naive {n}");
+        let speedup = n / s.total_secs;
+        assert!((speedup - 4.7).abs() < 0.7, "speedup {speedup}");
+        // Fig 11: 101 vs 21 GB/s.
+        let bytes = 8192.0 * DATASET_BYTES as f64;
+        assert!((bytes / s.total_secs / GB as f64 - 101.0).abs() < 6.0);
+        assert!((bytes / n / GB as f64 - 21.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn read_phase_flat_across_scales() {
+        // "The Read phase consistently takes 10.8 +/- 0.1 s regardless
+        // of allocation size."
+        let small = run_staged(512);
+        let large = run_staged(4096);
+        assert!((small.read_secs - large.read_secs).abs() < 0.1);
+        assert!((small.read_secs - 10.8).abs() < 0.2);
+    }
+
+    #[test]
+    fn hook_advantage_grows_with_scale() {
+        // The crossover shape: naive is competitive small, loses big.
+        let r512 = run_naive(512) / run_staged(512).total_secs;
+        let r8192 = run_naive(8192) / run_staged(8192).total_secs;
+        assert!(r8192 > r512 * 1.5, "512: {r512}, 8192: {r8192}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig 12: "Makespan scaling result for FF-HEDM stage 1" — 720
+//! peak-search jobs (5-160 s each) on Orthros, makespan vs cores.
+
+use crate::cluster::{orthros, Topology};
+use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+use crate::engine::SimCore;
+use crate::hedm::workloads;
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::pfs::{Blob, GpfsParams};
+
+use super::{ExpResult, ORTHROS_SWEEP};
+
+/// Run the FF1 farm on `cores` Orthros cores; returns makespan seconds.
+pub fn run_point(cores: u32, seed: u64) -> f64 {
+    assert!(cores % 64 == 0 || cores < 64, "orthros nodes have 64 cores");
+    let mut core = SimCore::new();
+    let mut spec = orthros();
+    if cores >= 64 {
+        spec.nodes = cores / 64;
+    } else {
+        spec.nodes = 1;
+        spec.ranks_per_node = cores;
+    }
+    let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+    let comm = Comm::world(&topo.spec);
+    // Inputs staged node-locally (the cluster has node-local scratch).
+    let (lo, hi) = comm.node_range();
+    for i in 0..workloads::FF1_JOBS {
+        core.nodes.write_range(
+            lo,
+            hi,
+            format!("/tmp/ff/frame_{i:04}.bin"),
+            Blob::synthetic(workloads::FF1_INPUT_BYTES, i as u64),
+        );
+    }
+    let g = workloads::ff1_graph(seed);
+    let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+    stats.makespan.secs_f64()
+}
+
+pub fn run(sweep: &[u32]) -> ExpResult {
+    let mut table = Table::new(
+        "Fig 12 — FF-HEDM stage 1 makespan (720 jobs, 5-160 s each, Orthros)",
+        &["cores", "makespan (s)", "speedup vs 64", "ideal"],
+    );
+    let mut pts = Vec::new();
+    let mut base = None;
+    for &c in sweep {
+        let m = run_point(c, 42);
+        let b = *base.get_or_insert(m);
+        table.row(&[
+            c.to_string(),
+            format!("{m:.1}"),
+            format!("{:.2}x", b / m),
+            format!("{:.2}x", c as f64 / sweep[0] as f64),
+        ]);
+        pts.push((c as f64, m));
+    }
+    ExpResult { table, series: vec![("makespan s".into(), pts)] }
+}
+
+pub fn default() -> ExpResult {
+    run(ORTHROS_SWEEP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_decreases_with_cores() {
+        let r = run(&[64, 320]);
+        let pts = r.series_named("makespan s").unwrap();
+        assert!(pts[1].1 < pts[0].1 * 0.35, "{pts:?}");
+    }
+
+    #[test]
+    fn flattens_at_high_core_counts() {
+        // Fig 12's visible sub-linearity: the 160 s stragglers bound
+        // the makespan once cores are plentiful.
+        let m320 = run_point(320, 42);
+        let total_work: f64 = workloads::ff1_graph(42)
+            .total_work()
+            .secs_f64();
+        let ideal = total_work / 320.0;
+        assert!(m320 > ideal, "makespan {m320} vs ideal {ideal}");
+        assert!(m320 >= 160.0, "cannot beat the longest task: {m320}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig 13: "Makespan scaling result for FF-HEDM stage 2" — 4,109
+//! grain-indexing tasks (5-25 s each) on Orthros, makespan vs cores.
+
+use crate::cluster::{orthros, Topology};
+use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+use crate::engine::SimCore;
+use crate::hedm::workloads;
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::pfs::GpfsParams;
+
+use super::{ExpResult, ORTHROS_SWEEP};
+
+/// Run the FF2 farm on `cores` Orthros cores; returns makespan seconds.
+pub fn run_point(cores: u32, seed: u64) -> f64 {
+    let mut core = SimCore::new();
+    let mut spec = orthros();
+    if cores >= 64 {
+        spec.nodes = cores / 64;
+    } else {
+        spec.nodes = 1;
+        spec.ranks_per_node = cores;
+    }
+    let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+    let comm = Comm::world(&topo.spec);
+    let g = workloads::ff2_graph(seed);
+    let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+    stats.makespan.secs_f64()
+}
+
+pub fn run(sweep: &[u32]) -> ExpResult {
+    let mut table = Table::new(
+        "Fig 13 — FF-HEDM stage 2 makespan (4,109 tasks, 5-25 s each, Orthros)",
+        &["cores", "makespan (s)", "speedup vs 64", "ideal"],
+    );
+    let mut pts = Vec::new();
+    let mut base = None;
+    for &c in sweep {
+        let m = run_point(c, 43);
+        let b = *base.get_or_insert(m);
+        table.row(&[
+            c.to_string(),
+            format!("{m:.1}"),
+            format!("{:.2}x", b / m),
+            format!("{:.2}x", c as f64 / sweep[0] as f64),
+        ]);
+        pts.push((c as f64, m));
+    }
+    ExpResult { table, series: vec![("makespan s".into(), pts)] }
+}
+
+pub fn default() -> ExpResult {
+    run(ORTHROS_SWEEP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_linear_scaling() {
+        // 4,109 short tasks pack tightly: scaling stays near-ideal
+        // through 320 cores (many waves, small stragglers) — the
+        // contrast with Fig 12 the paper's two figures show.
+        let m64 = run_point(64, 43);
+        let m320 = run_point(320, 43);
+        let speedup = m64 / m320;
+        assert!(speedup > 4.3 && speedup <= 5.05, "{speedup}");
+    }
+
+    #[test]
+    fn makespan_close_to_work_bound() {
+        let m = run_point(320, 43);
+        let ideal = workloads::ff2_graph(43).total_work().secs_f64() / 320.0;
+        assert!(m / ideal < 1.15, "makespan {m}, ideal {ideal}");
+    }
+}

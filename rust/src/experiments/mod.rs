@@ -1,0 +1,82 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation
+//! (SVI). Each regenerates its figure as a paper-vs-measured table;
+//! the CLI (`xstage <figN>`), the benches, and EXPERIMENTS.md all call
+//! these, so there is exactly one implementation of every experiment.
+
+pub mod cache;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod reduction;
+pub mod reuse;
+
+use crate::cluster::{bgq, Topology};
+use crate::engine::SimCore;
+use crate::pfs::{Blob, GpfsParams};
+use crate::staging::HookSpec;
+use crate::units::MB;
+
+/// A single experiment outcome: the rendered table plus raw (x, y)
+/// series for programmatic assertions in benches/tests.
+#[derive(Clone, Debug)]
+pub struct ExpResult {
+    pub table: crate::metrics::Table,
+    /// Named series: (label, points).
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl ExpResult {
+    pub fn series_named(&self, label: &str) -> Option<&[(f64, f64)]> {
+        self.series
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, pts)| pts.as_slice())
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.table.render());
+    }
+}
+
+/// The SVI-B staged dataset: 577 MB in 64 files under /projects/HEDM.
+pub const DATASET_BYTES: u64 = 577 * MB;
+pub const DATASET_FILES: usize = 64;
+pub const DATASET_GLOB: &str = "/projects/HEDM/layer0/*.bin";
+
+/// Standard BG/Q experiment harness: core + topology + dataset + spec.
+pub fn bgq_setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
+    let mut core = SimCore::new();
+    let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+    let per_file = DATASET_BYTES / DATASET_FILES as u64;
+    for i in 0..DATASET_FILES {
+        core.pfs.write(
+            format!("/projects/HEDM/layer0/f{i:04}.bin"),
+            Blob::synthetic(per_file, 0xDA7A + i as u64),
+        );
+    }
+    let spec =
+        HookSpec::parse(&format!("broadcast to /tmp/hedm {{ {DATASET_GLOB} }}")).unwrap();
+    (core, topo, spec)
+}
+
+/// Node counts swept by the BG/Q scaling figures.
+pub const BGQ_SWEEP: &[u32] = &[512, 1024, 2048, 4096, 8192];
+
+/// Orthros core counts swept by the cluster figures (1..=5 nodes of
+/// 64 cores).
+pub const ORTHROS_SWEEP: &[u32] = &[64, 128, 192, 256, 320];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setup_creates_dataset() {
+        let (core, topo, spec) = bgq_setup(64);
+        assert_eq!(core.pfs.glob(DATASET_GLOB).len(), DATASET_FILES);
+        assert_eq!(core.pfs.glob_bytes(DATASET_GLOB), DATASET_BYTES - DATASET_BYTES % 64);
+        assert_eq!(topo.spec.nodes, 64);
+        assert_eq!(spec.pattern_count(), 1);
+    }
+}

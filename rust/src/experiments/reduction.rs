@@ -1,0 +1,52 @@
+//! SVI-A: the NF-HEDM data-reduction step on the cluster — "when run
+//! on Orthros at our maximum allocation size of 320 cores, this data
+//! reduction step required 106 s to process 736 images from two
+//! detector distances."
+
+use crate::cluster::{orthros, Topology};
+use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+use crate::engine::SimCore;
+use crate::hedm::workloads;
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::pfs::GpfsParams;
+
+use super::ExpResult;
+
+/// Run the reduction workload on `cores` Orthros cores.
+pub fn run_point(cores: u32, seed: u64) -> f64 {
+    let mut core = SimCore::new();
+    let mut spec = orthros();
+    spec.nodes = (cores / 64).max(1);
+    let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+    let comm = Comm::world(&topo.spec);
+    let g = workloads::nf_reduce_graph(seed);
+    let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
+    stats.makespan.secs_f64()
+}
+
+pub fn run() -> ExpResult {
+    let mut table = Table::new(
+        "SVI-A — NF reduction: 736 images on Orthros (paper: 106 s @ 320 cores)",
+        &["cores", "makespan (s)", "paper (s)"],
+    );
+    let mut pts = Vec::new();
+    for &c in &[64u32, 128, 192, 256, 320] {
+        let m = run_point(c, 44);
+        let paper = if c == 320 { "106".to_string() } else { "-".to_string() };
+        table.row(&[c.to_string(), format!("{m:.1}"), paper]);
+        pts.push((c as f64, m));
+    }
+    ExpResult { table, series: vec![("makespan s".into(), pts)] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_at_320_cores() {
+        let m = run_point(320, 44);
+        assert!((m - 106.0).abs() < 12.0, "reduction makespan {m}");
+    }
+}

@@ -1,0 +1,109 @@
+//! SI future-work experiment: "For interactive analysis, the staged
+//! data could be reused over several human-in-the-loop cycles
+//! (although we do not address that here)." We address it: compare
+//! restaging the working set on every analysis cycle against staging
+//! once and reusing the node-local replicas, over a session of
+//! parameter-tweaking cycles on the same layer.
+
+use crate::dataflow::graph::{Task, TaskGraph};
+use crate::dataflow::sched::{run_workflow, SchedulerCfg};
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::simtime::plan::Plan;
+use crate::staging::{read_phase, staged_plan};
+use crate::units::Duration;
+
+use super::{bgq_setup, ExpResult};
+
+/// One analysis cycle's compute: a short re-fit pass (the scientist
+/// tweaked a threshold and reruns) — 2 waves of 20 s tasks.
+fn cycle_graph(comm: &Comm, staged_path: &str, cycle: u64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let n = comm.size() as usize * 2;
+    g.foreach(n, |i| {
+        Task::compute(
+            format!("c{cycle}/fit{i}"),
+            Duration::from_secs(20),
+        )
+        .with_input(staged_path.to_string(), None)
+    });
+    g
+}
+
+/// Run a `cycles`-cycle interactive session; returns total seconds.
+pub fn run_session(nodes: u32, cycles: u32, restage_each: bool) -> f64 {
+    let (mut core, topo, spec) = bgq_setup(nodes);
+    let leader = Comm::leader(&topo.spec);
+    let world = Comm::world(&topo.spec);
+    let mut staged_path = String::new();
+    for c in 0..cycles {
+        if restage_each || c == 0 {
+            let mut p = Plan::new(0);
+            let (m, done) =
+                staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+            read_phase(&mut p, &topo, &world, m.total_bytes, vec![done]);
+            staged_path = m.transfers[0].dst.clone();
+            core.submit(p);
+            core.run_to_completion();
+        }
+        let g = cycle_graph(&world, &staged_path, c as u64);
+        let cfg = SchedulerCfg { cache_inputs: true, ..Default::default() };
+        run_workflow(&mut core, &topo, &world, g, cfg);
+    }
+    core.now.secs_f64()
+}
+
+pub fn run() -> ExpResult {
+    let nodes = 2048;
+    let cycles = 5;
+    let restage = run_session(nodes, cycles, true);
+    let reuse = run_session(nodes, cycles, false);
+    let mut table = Table::new(
+        format!(
+            "SI future work — staged-data reuse over {cycles} interactive cycles ({nodes} nodes)"
+        ),
+        &["policy", "session (s)", "per cycle (s)"],
+    );
+    table.row(&[
+        "restage every cycle".into(),
+        format!("{restage:.1}"),
+        format!("{:.1}", restage / cycles as f64),
+    ]);
+    table.row(&[
+        "stage once, reuse".into(),
+        format!("{reuse:.1}"),
+        format!("{:.1}", reuse / cycles as f64),
+    ]);
+    table.row(&[
+        "saving".into(),
+        format!("{:.1}", restage - reuse),
+        format!("{:.0}%", 100.0 * (1.0 - reuse / restage)),
+    ]);
+    ExpResult {
+        table,
+        series: vec![(
+            "session s".into(),
+            vec![(0.0, restage), (1.0, reuse)],
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_beats_restaging() {
+        let restage = run_session(512, 3, true);
+        let reuse = run_session(512, 3, false);
+        // Each avoided restage saves roughly one staging+read pass.
+        assert!(reuse < restage - 2.0 * 40.0, "restage {restage}, reuse {reuse}");
+    }
+
+    #[test]
+    fn single_cycle_policies_equal() {
+        let a = run_session(512, 1, true);
+        let b = run_session(512, 1, false);
+        assert_eq!(a, b);
+    }
+}

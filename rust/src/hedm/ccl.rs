@@ -1,0 +1,259 @@
+//! Connected-component labeling and peak characterisation.
+//!
+//! Stage 1 of both HEDM variants ends with "a connected components
+//! labeling step, and a flood fill operation to retrieve information
+//! regarding all useful pixels" (SVI-A) / "properties of the
+//! diffraction spots are calculated" (SII). This module implements
+//! two-pass union-find CCL over the binary signal mask and extracts
+//! per-component peak properties (area, intensity-weighted centroid,
+//! integrated and peak intensity) — the contents of the "~50 KB text
+//! file" FF stage 1 emits per frame.
+
+/// Per-component peak properties.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Peak {
+    /// Intensity-weighted centroid, pixels (x = u, y = v).
+    pub u: f64,
+    pub v: f64,
+    /// Pixel count.
+    pub area: usize,
+    /// Sum of member intensities.
+    pub integrated: f64,
+    /// Max member intensity.
+    pub peak: f32,
+}
+
+/// Union-find with path halving.
+struct Uf {
+    parent: Vec<u32>,
+}
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        Uf { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // Smaller root wins: keeps labels stable/deterministic.
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi as usize] = lo;
+        }
+    }
+}
+
+/// Label 4-connected components of `mask` (non-zero = signal) and
+/// compute peak properties from `intensity`. Components smaller than
+/// `min_area` are dropped (hot-pixel leftovers). Peaks are returned
+/// sorted by integrated intensity, descending.
+pub fn find_peaks(
+    mask: &[f32],
+    intensity: &[f32],
+    width: usize,
+    min_area: usize,
+) -> Vec<Peak> {
+    assert_eq!(mask.len() % width, 0, "ragged mask");
+    assert_eq!(mask.len(), intensity.len());
+    let height = mask.len() / width;
+    let mut labels = vec![0u32; mask.len()]; // 0 = background, else id+1
+    let mut uf = Uf::new(0);
+    let mut next = 0u32;
+
+    // Pass 1: provisional labels + equivalences.
+    for y in 0..height {
+        for x in 0..width {
+            let i = y * width + x;
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let left = if x > 0 { labels[i - 1] } else { 0 };
+            let up = if y > 0 { labels[i - width] } else { 0 };
+            labels[i] = match (left, up) {
+                (0, 0) => {
+                    next += 1;
+                    uf.parent.push(next - 1);
+                    next
+                }
+                (l, 0) => l,
+                (0, u) => u,
+                (l, u) => {
+                    uf.union(l - 1, u - 1);
+                    l.min(u)
+                }
+            };
+        }
+    }
+
+    // Pass 2: resolve + accumulate.
+    #[derive(Default, Clone)]
+    struct Acc {
+        area: usize,
+        wsum: f64,
+        usum: f64,
+        vsum: f64,
+        peak: f32,
+    }
+    let mut accs: Vec<Acc> = vec![Acc::default(); next as usize];
+    for y in 0..height {
+        for x in 0..width {
+            let i = y * width + x;
+            if labels[i] == 0 {
+                continue;
+            }
+            let root = uf.find(labels[i] - 1) as usize;
+            let a = &mut accs[root];
+            let w = intensity[i].max(1e-6) as f64;
+            a.area += 1;
+            a.wsum += w;
+            a.usum += w * x as f64;
+            a.vsum += w * y as f64;
+            a.peak = a.peak.max(intensity[i]);
+        }
+    }
+    let mut peaks: Vec<Peak> = accs
+        .into_iter()
+        .filter(|a| a.area >= min_area)
+        .map(|a| Peak {
+            u: a.usum / a.wsum,
+            v: a.vsum / a.wsum,
+            area: a.area,
+            integrated: a.wsum,
+            peak: a.peak,
+        })
+        .collect();
+    peaks.sort_by(|a, b| b.integrated.partial_cmp(&a.integrated).unwrap());
+    peaks
+}
+
+/// Serialise peaks as the FF stage-1 text format (one line per peak).
+pub fn peaks_to_text(peaks: &[Peak], omega_deg: f64) -> String {
+    let mut out = String::from("# u_px v_px omega_deg area integrated peak\n");
+    for p in peaks {
+        out.push_str(&format!(
+            "{:.3} {:.3} {:.3} {} {:.1} {:.1}\n",
+            p.u, p.v, omega_deg, p.area, p.integrated, p.peak
+        ));
+    }
+    out
+}
+
+/// Parse the stage-1 text back into (u, v, omega) rows.
+pub fn parse_peaks_text(text: &str) -> Vec<(f64, f64, f64)> {
+    text.lines()
+        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+        .filter_map(|l| {
+            let mut it = l.split_whitespace();
+            let u = it.next()?.parse().ok()?;
+            let v = it.next()?.parse().ok()?;
+            let w = it.next()?.parse().ok()?;
+            Some((u, v, w))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hedm::detector::splat;
+
+    fn blob_mask(img: &[f32], thr: f32) -> Vec<f32> {
+        img.iter().map(|&v| if v > thr { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn single_blob_centroid() {
+        let n = 64;
+        let mut img = vec![0f32; n * n];
+        splat(&mut img, n, 20.3, 31.7, 500.0, 1.5);
+        let mask = blob_mask(&img, 50.0);
+        let peaks = find_peaks(&mask, &img, n, 1);
+        assert_eq!(peaks.len(), 1);
+        assert!((peaks[0].u - 20.3).abs() < 0.25, "{}", peaks[0].u);
+        assert!((peaks[0].v - 31.7).abs() < 0.25, "{}", peaks[0].v);
+        assert!(peaks[0].area >= 5);
+    }
+
+    #[test]
+    fn two_blobs_two_components() {
+        let n = 64;
+        let mut img = vec![0f32; n * n];
+        splat(&mut img, n, 10.0, 10.0, 500.0, 1.5);
+        splat(&mut img, n, 50.0, 50.0, 300.0, 1.5);
+        let mask = blob_mask(&img, 50.0);
+        let peaks = find_peaks(&mask, &img, n, 1);
+        assert_eq!(peaks.len(), 2);
+        // Sorted by integrated intensity: the brighter one first.
+        assert!(peaks[0].integrated > peaks[1].integrated);
+        assert!((peaks[0].u - 10.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn touching_blobs_merge() {
+        let n = 64;
+        let mut img = vec![0f32; n * n];
+        splat(&mut img, n, 30.0, 30.0, 500.0, 1.5);
+        splat(&mut img, n, 33.0, 30.0, 500.0, 1.5);
+        let mask = blob_mask(&img, 50.0);
+        let peaks = find_peaks(&mask, &img, n, 1);
+        assert_eq!(peaks.len(), 1);
+        assert!((peaks[0].u - 31.5).abs() < 0.5);
+    }
+
+    #[test]
+    fn min_area_drops_specks() {
+        let n = 32;
+        let mut img = vec![0f32; n * n];
+        img[5 * n + 5] = 1000.0; // single-pixel zinger
+        splat(&mut img, n, 20.0, 20.0, 500.0, 1.5);
+        let mask = blob_mask(&img, 50.0);
+        let all = find_peaks(&mask, &img, n, 1);
+        let filtered = find_peaks(&mask, &img, n, 3);
+        assert_eq!(all.len(), 2);
+        assert_eq!(filtered.len(), 1);
+    }
+
+    #[test]
+    fn u_shape_is_one_component() {
+        // Classic CCL equivalence-merging case.
+        let n = 8;
+        let mut mask = vec![0f32; n * n];
+        for y in 1..6 {
+            mask[y * n + 1] = 1.0;
+            mask[y * n + 5] = 1.0;
+        }
+        for x in 1..6 {
+            mask[5 * n + x] = 1.0;
+        }
+        let inten = mask.clone();
+        let peaks = find_peaks(&mask, &inten, n, 1);
+        assert_eq!(peaks.len(), 1);
+    }
+
+    #[test]
+    fn empty_mask_no_peaks() {
+        let mask = vec![0f32; 16];
+        let inten = vec![1f32; 16];
+        assert!(find_peaks(&mask, &inten, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let peaks = vec![
+            Peak { u: 1.25, v: 2.5, area: 9, integrated: 100.0, peak: 50.0 },
+            Peak { u: 10.0, v: 20.0, area: 4, integrated: 30.0, peak: 20.0 },
+        ];
+        let text = peaks_to_text(&peaks, -42.5);
+        let rows = parse_peaks_text(&text);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (1.25, 2.5, -42.5));
+    }
+}

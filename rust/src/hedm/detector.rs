@@ -1,0 +1,314 @@
+//! Synthetic beamline: polycrystal layers and their diffraction scans.
+//!
+//! The paper's raw data — proprietary rotation-series TIFF scans of
+//! gold wire / alloy samples — is unavailable, so we build the
+//! detector (DESIGN.md SSubstitutions): a layer is a set of grains
+//! with known ground-truth orientations arranged as a Voronoi map on
+//! the 2D cross-section; a scan renders, for each rotation step, the
+//! diffraction frame with Gaussian spots at the forward-modelled
+//! (u, v, omega) positions plus detector background, dark current and
+//! zingers (isolated hot pixels — what the median filter exists to
+//! kill). Frames are real pixel arrays written to the shared
+//! filesystem; the reduction and fitting pipeline runs on them
+//! unchanged, and because truth is known, recovery is *verified*, not
+//! eyeballed (stronger than the paper's qualitative Figs 2-3).
+
+use crate::hedm::geometry::{simulate_spots, Geom, Spot};
+use crate::pfs::{Blob, ParallelFs};
+use crate::util::prng::Pcg64;
+
+/// One grain: ground-truth orientation + seed position in the layer.
+#[derive(Clone, Debug)]
+pub struct Grain {
+    pub id: usize,
+    pub euler: [f64; 3],
+    /// Seed position in the cross-section, micrometres.
+    pub pos: (f64, f64),
+    /// Pre-computed spot list for this orientation.
+    pub spots: Vec<Spot>,
+}
+
+/// A 2D sample layer (one NF-HEDM cross-section / FF volume slice).
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub geom: Geom,
+    pub grains: Vec<Grain>,
+    /// Cross-section side length, micrometres.
+    pub extent: f64,
+}
+
+impl Layer {
+    /// Random layer with `n_grains` grains (deterministic in `seed`).
+    pub fn synthesize(n_grains: usize, geom: Geom, seed: u64) -> Layer {
+        assert!(n_grains >= 1);
+        let mut rng = Pcg64::new(seed);
+        let extent = 1000.0; // 1 mm section
+        let grains = (0..n_grains)
+            .map(|id| {
+                let euler = [
+                    rng.range_f64(0.0, 2.0 * std::f64::consts::PI),
+                    rng.range_f64(0.0, std::f64::consts::PI),
+                    rng.range_f64(0.0, 2.0 * std::f64::consts::PI),
+                ];
+                Grain {
+                    id,
+                    euler,
+                    pos: (rng.range_f64(0.0, extent), rng.range_f64(0.0, extent)),
+                    spots: simulate_spots(euler, &geom),
+                }
+            })
+            .collect();
+        Layer { geom, grains, extent }
+    }
+
+    /// Which grain owns point (x, y) (Voronoi by seed distance).
+    pub fn grain_at(&self, x: f64, y: f64) -> usize {
+        self.grains
+            .iter()
+            .map(|g| {
+                let d = (g.pos.0 - x).powi(2) + (g.pos.1 - y).powi(2);
+                (d, g.id)
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .unwrap()
+            .1
+    }
+
+    /// All spots of all grains (the FF per-volume observation).
+    pub fn all_spots(&self) -> Vec<Spot> {
+        self.grains.iter().flat_map(|g| g.spots.iter().copied()).collect()
+    }
+
+    /// A hexagonal measurement grid over the cross-section with
+    /// `pitch` micrometre spacing (the Fig 2 "grid" of NF-HEDM);
+    /// returns (x, y, owning grain) per point.
+    pub fn hex_grid(&self, pitch: f64) -> Vec<(f64, f64, usize)> {
+        let mut pts = Vec::new();
+        let dy = pitch * 3.0f64.sqrt() / 2.0;
+        let mut row = 0usize;
+        let mut y = pitch / 2.0;
+        while y < self.extent {
+            let x0 = if row % 2 == 0 { pitch / 2.0 } else { pitch };
+            let mut x = x0;
+            while x < self.extent {
+                pts.push((x, y, self.grain_at(x, y)));
+                x += pitch;
+            }
+            y += dy;
+            row += 1;
+        }
+        pts
+    }
+}
+
+/// Detector noise model.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    /// Mean dark level, counts.
+    pub dark_level: f32,
+    /// Background sigma.
+    pub bg_sigma: f32,
+    /// Spot peak amplitude, counts.
+    pub spot_amp: f32,
+    /// Spot width, pixels.
+    pub spot_sigma: f32,
+    /// Probability of a zinger per frame.
+    pub zingers_per_frame: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            dark_level: 40.0,
+            bg_sigma: 3.0,
+            spot_amp: 400.0,
+            spot_sigma: 1.5,
+            zingers_per_frame: 2.0,
+        }
+    }
+}
+
+/// Render the diffraction frame for rotation step `step` from `spots`.
+/// Omega bin: step covers [-180 + step*w, -180 + (step+1)*w) degrees.
+pub fn render_frame(
+    spots: &[Spot],
+    geom: &Geom,
+    noise: &NoiseModel,
+    step: usize,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let n = geom.frame;
+    let w = 360.0 / geom.omega_steps as f64;
+    let lo = -180.0 + step as f64 * w;
+    let hi = lo + w;
+    let mut img = vec![0f32; n * n];
+    // Background + dark current.
+    for px in img.iter_mut() {
+        *px = noise.dark_level + (rng.normal() as f32) * noise.bg_sigma;
+        if *px < 0.0 {
+            *px = 0.0;
+        }
+    }
+    // Spots in this omega bin.
+    for s in spots {
+        if s.omega_deg < lo || s.omega_deg >= hi {
+            continue;
+        }
+        splat(&mut img, n, s.u, s.v, noise.spot_amp, noise.spot_sigma);
+    }
+    // Zingers (isolated hot pixels).
+    let nz = noise.zingers_per_frame.floor() as usize
+        + usize::from(rng.f64() < noise.zingers_per_frame.fract());
+    for _ in 0..nz {
+        let idx = rng.below((n * n) as u64) as usize;
+        img[idx] = 1000.0;
+    }
+    img
+}
+
+/// Add a Gaussian spot (mirror of python tests' splat_gaussian).
+pub fn splat(img: &mut [f32], n: usize, u: f64, v: f64, amp: f32, sigma: f32) {
+    let r = (3.0 * sigma).ceil() as i64 + 1;
+    let cu = u.round() as i64;
+    let cv = v.round() as i64;
+    let s2 = (2.0 * sigma * sigma) as f64;
+    for y in (cv - r).max(0)..((cv + r + 1).min(n as i64)) {
+        for x in (cu - r).max(0)..((cu + r + 1).min(n as i64)) {
+            let d2 = (y as f64 - v).powi(2) + (x as f64 - u).powi(2);
+            img[y as usize * n + x as usize] += amp * (-d2 / s2).exp() as f32;
+        }
+    }
+}
+
+/// A rendered dark frame (no beam).
+pub fn render_dark(geom: &Geom, noise: &NoiseModel, rng: &mut Pcg64) -> Vec<f32> {
+    render_frame(&[], geom, noise, 0, rng)
+}
+
+/// f32 frame <-> little-endian bytes (the on-"disk" format).
+pub fn frame_to_bytes(frame: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame.len() * 4);
+    for v in frame {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_frame(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "frame bytes not f32-aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Render a full scan (`omega_steps` frames + `dark_count` darks) into
+/// the shared filesystem under `prefix`. Returns total bytes written.
+pub fn write_scan(
+    pfs: &mut ParallelFs,
+    layer: &Layer,
+    noise: &NoiseModel,
+    prefix: &str,
+    dark_count: usize,
+    seed: u64,
+) -> u64 {
+    let mut rng = Pcg64::new(seed);
+    let spots = layer.all_spots();
+    let mut total = 0u64;
+    for d in 0..dark_count {
+        let frame = render_dark(&layer.geom, noise, &mut rng);
+        let bytes = frame_to_bytes(&frame);
+        total += bytes.len() as u64;
+        pfs.write(format!("{prefix}/dark_{d:03}.bin"), Blob::real(bytes));
+    }
+    for step in 0..layer.geom.omega_steps {
+        let frame = render_frame(&spots, &layer.geom, noise, step, &mut rng);
+        let bytes = frame_to_bytes(&frame);
+        total += bytes.len() as u64;
+        pfs.write(format!("{prefix}/frame_{step:04}.bin"), Blob::real(bytes));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_geom() -> Geom {
+        Geom { frame: 128, det_dist: 0.625e5, omega_steps: 36, ..Geom::default() }
+    }
+
+    #[test]
+    fn layer_is_deterministic() {
+        let g = small_geom();
+        let a = Layer::synthesize(4, g, 7);
+        let b = Layer::synthesize(4, g, 7);
+        assert_eq!(a.grains[2].euler, b.grains[2].euler);
+        let c = Layer::synthesize(4, g, 8);
+        assert_ne!(a.grains[0].euler, c.grains[0].euler);
+    }
+
+    #[test]
+    fn grains_have_spots() {
+        let layer = Layer::synthesize(4, small_geom(), 1);
+        for g in &layer.grains {
+            assert!(!g.spots.is_empty(), "grain {} produced no spots", g.id);
+        }
+    }
+
+    #[test]
+    fn voronoi_owns_seeds() {
+        let layer = Layer::synthesize(6, small_geom(), 2);
+        for g in &layer.grains {
+            assert_eq!(layer.grain_at(g.pos.0, g.pos.1), g.id);
+        }
+    }
+
+    #[test]
+    fn hex_grid_covers_section() {
+        let layer = Layer::synthesize(4, small_geom(), 3);
+        let grid = layer.hex_grid(50.0);
+        // ~1000/50 x 1000/43 ~= 460 points.
+        assert!(grid.len() > 300 && grid.len() < 700, "{}", grid.len());
+        // Every grain should own at least one point at this pitch.
+        for g in &layer.grains {
+            assert!(grid.iter().any(|&(_, _, owner)| owner == g.id));
+        }
+    }
+
+    #[test]
+    fn frames_contain_their_bin_spots() {
+        let g = small_geom();
+        let layer = Layer::synthesize(3, g, 4);
+        let noise = NoiseModel { bg_sigma: 0.0, zingers_per_frame: 0.0, ..Default::default() };
+        let spots = layer.all_spots();
+        let mut rng = Pcg64::new(0);
+        let s = &spots[0];
+        let step = ((s.omega_deg + 180.0) / 10.0).floor() as usize;
+        let img = render_frame(&spots, &g, &noise, step, &mut rng);
+        let px = img[(s.v.round() as usize) * g.frame + s.u.round() as usize];
+        assert!(px > noise.dark_level + 0.5 * noise.spot_amp, "{px}");
+        // A frame from an empty bin has only background.
+        let empty = render_frame(&[], &g, &noise, 0, &mut rng);
+        let max = empty.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max <= noise.dark_level + 1.0);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let frame = vec![0.5f32, -1.25, 40.0, 1e6];
+        assert_eq!(bytes_to_frame(&frame_to_bytes(&frame)), frame);
+    }
+
+    #[test]
+    fn write_scan_populates_pfs() {
+        let g = small_geom();
+        let layer = Layer::synthesize(2, g, 5);
+        let mut pfs = ParallelFs::new();
+        let total = write_scan(&mut pfs, &layer, &NoiseModel::default(), "/aps/run1", 4, 9);
+        assert_eq!(pfs.glob("/aps/run1/frame_*.bin").len(), 36);
+        assert_eq!(pfs.glob("/aps/run1/dark_*.bin").len(), 4);
+        assert_eq!(total, (36 + 4) * (128 * 128 * 4) as u64);
+        assert_eq!(pfs.total_bytes(), total);
+    }
+}

@@ -1,0 +1,356 @@
+//! Diffraction geometry: the Rust mirror of `python/compile/geometry.py`.
+//!
+//! Both sides implement the same far-field rotating-crystal forward
+//! model from the same constants; `manifest_matches` cross-checks this
+//! module against the values baked into the AOT artifacts, so the
+//! detector simulator (Rust) and the fitting kernel (JAX) share one
+//! physics. See the Python module docstring for the derivation.
+
+use crate::runtime::manifest::GeomConfig;
+
+/// Geometry constants (defaults = python geometry.DEFAULT_CONFIG).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Geom {
+    /// X-ray wavelength, Angstrom (71.68 keV).
+    pub wavelength: f64,
+    /// Cubic lattice parameter, Angstrom (FCC gold).
+    pub lattice_a: f64,
+    /// Sample-detector distance, micrometres.
+    pub det_dist: f64,
+    /// Pixel pitch, micrometres.
+    pub pixel_size: f64,
+    /// Square panel size, pixels.
+    pub frame: usize,
+    /// Rotation steps per 360 degree scan.
+    pub omega_steps: usize,
+    /// Padded reciprocal-vector count.
+    pub s_max: usize,
+    /// Padded observed-spot count for the fit kernel.
+    pub o_max: usize,
+    /// Fit-kernel batch size.
+    pub b_batch: usize,
+    /// Omega weight in the spot metric, px/deg.
+    pub omega_weight: f64,
+    /// Match tolerance, px.
+    pub match_tol: f64,
+}
+
+impl Default for Geom {
+    fn default() -> Self {
+        Geom {
+            wavelength: 0.172979,
+            lattice_a: 4.0782,
+            det_dist: 2.5e5,
+            pixel_size: 200.0,
+            frame: 512,
+            omega_steps: 360,
+            s_max: 58,
+            o_max: 512,
+            b_batch: 256,
+            omega_weight: 4.0,
+            match_tol: 6.0,
+        }
+    }
+}
+
+impl Geom {
+    /// Incident wavevector magnitude, 1/Angstrom.
+    pub fn k_in(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.wavelength
+    }
+
+    /// Beam-centre pixel.
+    pub fn center(&self) -> f64 {
+        self.frame as f64 / 2.0
+    }
+
+    /// From the artifact manifest (the authoritative source once
+    /// artifacts exist).
+    pub fn from_manifest(c: &GeomConfig) -> Geom {
+        Geom {
+            wavelength: c.wavelength,
+            lattice_a: c.lattice_a,
+            det_dist: c.det_dist,
+            pixel_size: c.pixel_size,
+            frame: c.frame,
+            omega_steps: c.omega_steps,
+            s_max: c.s_max,
+            o_max: c.o_max,
+            b_batch: c.b_batch,
+            omega_weight: c.omega_weight,
+            match_tol: c.match_tol,
+        }
+    }
+}
+
+/// FCC selection rule: h, k, l all even or all odd.
+pub fn fcc_allowed(h: i32, k: i32, l: i32) -> bool {
+    let p = (h.rem_euclid(2), k.rem_euclid(2), l.rem_euclid(2));
+    p == (0, 0, 0) || p == (1, 1, 1)
+}
+
+/// Reciprocal-lattice vectors, complete-|G|-shell truncated and padded
+/// to `s_max` (mirror of python `gvectors`). Returns (vectors, mask).
+pub fn gvectors(g: &Geom) -> (Vec<[f64; 3]>, Vec<bool>) {
+    let hmax = 3i32;
+    let mut all: Vec<(i32, i32, i32, i32)> = Vec::new(); // (norm2, h, k, l)
+    for h in -hmax..=hmax {
+        for k in -hmax..=hmax {
+            for l in -hmax..=hmax {
+                if (h, k, l) == (0, 0, 0) || !fcc_allowed(h, k, l) {
+                    continue;
+                }
+                all.push((h * h + k * k + l * l, h, k, l));
+            }
+        }
+    }
+    all.sort();
+    let mut kept = Vec::new();
+    let mut i = 0;
+    while i < all.len() {
+        let mut j = i;
+        while j < all.len() && all[j].0 == all[i].0 {
+            j += 1;
+        }
+        if kept.len() + (j - i) > g.s_max {
+            break;
+        }
+        kept.extend_from_slice(&all[i..j]);
+        i = j;
+    }
+    let scale = 2.0 * std::f64::consts::PI / g.lattice_a;
+    let mut vecs: Vec<[f64; 3]> = kept
+        .iter()
+        .map(|&(_, h, k, l)| [h as f64 * scale, k as f64 * scale, l as f64 * scale])
+        .collect();
+    let mut mask = vec![true; vecs.len()];
+    while vecs.len() < g.s_max {
+        vecs.push([0.0; 3]);
+        mask.push(false);
+    }
+    (vecs, mask)
+}
+
+/// Bunge ZXZ Euler angles -> rotation matrix (row-major 3x3).
+pub fn euler_to_matrix(phi1: f64, capphi: f64, phi2: f64) -> [[f64; 3]; 3] {
+    let (c1, s1) = (phi1.cos(), phi1.sin());
+    let (cp, sp) = (capphi.cos(), capphi.sin());
+    let (c2, s2) = (phi2.cos(), phi2.sin());
+    [
+        [c1 * c2 - s1 * cp * s2, -c1 * s2 - s1 * cp * c2, s1 * sp],
+        [s1 * c2 + c1 * cp * s2, -s1 * s2 + c1 * cp * c2, -c1 * sp],
+        [sp * s2, sp * c2, cp],
+    ]
+}
+
+fn matvec(m: &[[f64; 3]; 3], v: &[f64; 3]) -> [f64; 3] {
+    [
+        m[0][0] * v[0] + m[0][1] * v[1] + m[0][2] * v[2],
+        m[1][0] * v[0] + m[1][1] * v[1] + m[1][2] * v[2],
+        m[2][0] * v[0] + m[2][1] * v[1] + m[2][2] * v[2],
+    ]
+}
+
+/// One diffraction spot: detector pixel coordinates + rotation angle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Spot {
+    pub u: f64,
+    pub v: f64,
+    pub omega_deg: f64,
+}
+
+impl Spot {
+    /// Weighted coordinates for the fit-kernel metric.
+    pub fn weighted(&self, g: &Geom) -> [f32; 3] {
+        [self.u as f32, self.v as f32, (self.omega_deg * g.omega_weight) as f32]
+    }
+}
+
+/// Forward-simulate all spots of one grain (mirror of python
+/// `simulate_spots`). Friedel pairs included; off-panel spots culled.
+pub fn simulate_spots(euler: [f64; 3], g: &Geom) -> Vec<Spot> {
+    let rot = euler_to_matrix(euler[0], euler[1], euler[2]);
+    let (gv, mask) = gvectors(g);
+    let lam = g.wavelength;
+    let k = g.k_in();
+    let four_pi = 4.0 * std::f64::consts::PI;
+    let mut out = Vec::new();
+    for (v0, keep) in gv.iter().zip(mask) {
+        if !keep {
+            continue;
+        }
+        let gr = matvec(&rot, v0);
+        let gsq = gr[0] * gr[0] + gr[1] * gr[1] + gr[2] * gr[2];
+        let a = (gr[0] * gr[0] + gr[1] * gr[1]).sqrt();
+        if a < 1e-12 {
+            continue;
+        }
+        let t = -lam * gsq / four_pi / a;
+        if t.abs() > 1.0 {
+            continue;
+        }
+        let phi = gr[1].atan2(gr[0]);
+        for sign in [1.0, -1.0] {
+            let mut omega = sign * t.acos() - phi;
+            // wrap to [-pi, pi)
+            omega = (omega + std::f64::consts::PI)
+                .rem_euclid(2.0 * std::f64::consts::PI)
+                - std::f64::consts::PI;
+            let (co, so) = (omega.cos(), omega.sin());
+            let gxr = gr[0] * co - gr[1] * so;
+            let gyr = gr[0] * so + gr[1] * co;
+            let kfx = k + gxr;
+            if kfx <= 0.0 {
+                continue;
+            }
+            let u = g.det_dist * gyr / kfx / g.pixel_size + g.center();
+            let v = g.det_dist * gr[2] / kfx / g.pixel_size + g.center();
+            if u >= 0.0 && u < g.frame as f64 && v >= 0.0 && v < g.frame as f64 {
+                out.push(Spot { u, v, omega_deg: omega.to_degrees() });
+            }
+        }
+    }
+    out
+}
+
+/// Misorientation-free distance between two spot sets: fraction of
+/// `a`'s spots with a match in `b` within `tol` (weighted metric).
+pub fn spot_overlap(a: &[Spot], b: &[Spot], g: &Geom) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let tol2 = g.match_tol * g.match_tol;
+    let mut hits = 0usize;
+    for s in a {
+        let sw = s.weighted(g);
+        let found = b.iter().any(|o| {
+            let ow = o.weighted(g);
+            let d = [sw[0] - ow[0], sw[1] - ow[1], sw[2] - ow[2]];
+            (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]) as f64 <= tol2
+        });
+        if found {
+            hits += 1;
+        }
+    }
+    hits as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcc_rule() {
+        assert!(fcc_allowed(1, 1, 1));
+        assert!(fcc_allowed(2, 0, 0));
+        assert!(fcc_allowed(-1, 1, -1));
+        assert!(!fcc_allowed(1, 0, 0));
+        assert!(!fcc_allowed(2, 1, 0));
+    }
+
+    #[test]
+    fn gvectors_complete_shells() {
+        let g = Geom::default();
+        let (gv, mask) = gvectors(&g);
+        assert_eq!(gv.len(), g.s_max);
+        let real: Vec<_> = gv.iter().zip(&mask).filter(|(_, m)| **m).collect();
+        assert_eq!(real.len(), 58); // {111}+{200}+{220}+{311}+{222}
+        // Inversion symmetry (Friedel).
+        for (v, _) in &real {
+            let neg = [-v[0], -v[1], -v[2]];
+            assert!(
+                real.iter().any(|(w, _)| w
+                    .iter()
+                    .zip(&neg)
+                    .all(|(a, b)| (a - b).abs() < 1e-9)),
+                "missing Friedel mate of {v:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let r = euler_to_matrix(0.3, 0.7, 1.1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let dot: f64 = (0..3).map(|k| r[i][k] * r[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn spots_on_panel_and_bragg_consistent() {
+        let g = Geom::default();
+        let spots = simulate_spots([0.3, 0.7, 1.1], &g);
+        assert!(spots.len() >= 8, "{}", spots.len());
+        let (gv, mask) = gvectors(&g);
+        let norms: Vec<f64> = gv
+            .iter()
+            .zip(&mask)
+            .filter(|(_, m)| **m)
+            .map(|(v, _)| (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt())
+            .collect();
+        for s in &spots {
+            assert!(s.u >= 0.0 && s.u < g.frame as f64);
+            assert!(s.v >= 0.0 && s.v < g.frame as f64);
+            // Reconstruct |g| from the detector position; must equal a
+            // lattice-vector norm (elastic scattering consistency).
+            let y = (s.u - g.center()) * g.pixel_size;
+            let z = (s.v - g.center()) * g.pixel_size;
+            let x = g.det_dist;
+            let n = (x * x + y * y + z * z).sqrt();
+            let k = g.k_in();
+            let kout = [k * x / n, k * y / n, k * z / n];
+            let gv = [kout[0] - k, kout[1], kout[2]];
+            let gn = (gv[0] * gv[0] + gv[1] * gv[1] + gv[2] * gv[2]).sqrt();
+            let best = norms
+                .iter()
+                .map(|m| (m - gn).abs())
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 1e-3, "spot {s:?}: |g|={gn}, nearest shell {best}");
+        }
+    }
+
+    #[test]
+    fn self_overlap_is_one() {
+        let g = Geom::default();
+        let spots = simulate_spots([1.9, 0.4, 0.8], &g);
+        assert_eq!(spot_overlap(&spots, &spots, &g), 1.0);
+    }
+
+    #[test]
+    fn different_orientations_do_not_overlap() {
+        let g = Geom::default();
+        let a = simulate_spots([0.3, 0.7, 1.1], &g);
+        let b = simulate_spots([2.0, 1.2, 0.1], &g);
+        assert!(spot_overlap(&a, &b, &g) < 0.3);
+    }
+
+    /// Cross-language consistency: Rust vs the Python-traced manifest.
+    #[test]
+    fn manifest_matches_rust_geometry() {
+        let dir = crate::runtime::Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let g = Geom::from_manifest(&m.config);
+        let (gv, mask) = gvectors(&g);
+        assert_eq!(gv.len(), m.gvectors.len());
+        for i in 0..gv.len() {
+            let pm = m.gvector_mask[i] > 0.5;
+            assert_eq!(mask[i], pm, "mask row {i}");
+            for c in 0..3 {
+                assert!(
+                    (gv[i][c] - m.gvectors[i][c] as f64).abs() < 1e-4,
+                    "gvector [{i}][{c}]: rust {} vs jax {}",
+                    gv[i][c],
+                    m.gvectors[i][c]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The HEDM application suite (SII, SV, SVI): the science the staging
+//! framework exists to serve.
+//!
+//! - [`geometry`] — the diffraction forward model (mirror of
+//!   `python/compile/geometry.py`; cross-checked against the artifact
+//!   manifest so Rust and JAX can never drift apart).
+//! - [`detector`] — synthetic beamline: builds a polycrystal layer
+//!   with known ground-truth grain orientations and renders its
+//!   rotation-series diffraction frames (real pixels, Gaussian spots,
+//!   noise, zingers) into the shared filesystem.
+//! - [`ccl`] — connected-component labeling + centroid extraction
+//!   (the stage-1 "characterise all peaks" step, and the flood-fill
+//!   analog of SVI-A).
+//! - [`reduce`] — stage-1 reduction drivers: dark median, per-frame
+//!   median/LoG/threshold via the AOT `reduce_frame` artifact (or the
+//!   pure-Rust fallback for artifact-less unit tests).
+//! - [`fit`] — stage-2 orientation fitting: multi-resolution scan over
+//!   SO(3) batched through the `fit_orientation` artifact; replaces
+//!   the paper's per-grid-point NLopt solve (DESIGN.md
+//!   SHardware-Adaptation).
+//! - [`ff`] — far-field indexing: assign observed spots to grains,
+//!   recover per-grain orientations/centers (Fig 3 analog).
+//! - [`workloads`] — the paper's workload constants (736 frames, 720
+//!   FF-1 jobs, 4,109 FF-2 tasks, runtimes) used by the benches.
+
+pub mod ccl;
+pub mod detector;
+pub mod ff;
+pub mod fit;
+pub mod geometry;
+pub mod reduce;
+pub mod symmetry;
+pub mod workloads;

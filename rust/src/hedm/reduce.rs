@@ -1,0 +1,443 @@
+//! Stage-1 reduction: raw frames -> binary diffraction-signal masks.
+//!
+//! "The data reduction step involves, first of all, a median
+//! calculation on each pixel of the detector, using all images. Then,
+//! independently on each image ... a median filter, followed by a
+//! Laplacian of Gaussian filter to determine the edges of the
+//! diffraction spots; a connected components labeling step; and a
+//! flood fill operation" (SVI-A). The 8 MB raw frame reduces to ~1 MB
+//! of signal — the sparsity that makes staging the reduced set cheap.
+//!
+//! Two interchangeable backends:
+//! - **Artifact**: the AOT-compiled JAX graph (`reduce_frame.hlo.txt`,
+//!   whose hot loop is the Pallas median kernel) on the PJRT client —
+//!   the production path.
+//! - **Native**: a pure-Rust mirror used by artifact-less unit tests
+//!   *and* as an independent cross-check: integration tests assert the
+//!   two backends agree pixel-for-pixel.
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, TensorF32};
+
+/// Reduction thresholds (mirror of python geometry constants).
+#[derive(Clone, Copy, Debug)]
+pub struct ReduceParams {
+    pub intensity_threshold: f32,
+    pub log_threshold: f32,
+    pub log_sigma: f64,
+    pub log_half: usize,
+}
+
+impl Default for ReduceParams {
+    fn default() -> Self {
+        ReduceParams {
+            intensity_threshold: 80.0,
+            log_threshold: 12.0,
+            log_sigma: 1.2,
+            log_half: 2,
+        }
+    }
+}
+
+/// Output of one frame reduction.
+#[derive(Clone, Debug)]
+pub struct Reduced {
+    /// Dark-subtracted, median-filtered frame.
+    pub sub: Vec<f32>,
+    /// Binary signal mask.
+    pub mask: Vec<f32>,
+    /// Signal pixel count.
+    pub count: u64,
+}
+
+/// Median over a stack of frames, per pixel (the dark frame).
+pub fn dark_median_native(frames: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!frames.is_empty());
+    let n = frames[0].len();
+    let k = frames.len();
+    let mut out = vec![0f32; n];
+    let mut buf = vec![0f32; k];
+    for i in 0..n {
+        for (j, f) in frames.iter().enumerate() {
+            buf[j] = f[i];
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[i] = if k % 2 == 1 {
+            buf[k / 2]
+        } else {
+            0.5 * (buf[k / 2 - 1] + buf[k / 2])
+        };
+    }
+    out
+}
+
+/// Median-of-9 via the 19-exchange min/max network (Paeth) — the same
+/// network the Pallas kernel uses; branch-free and ~5x faster than a
+/// per-pixel sort (EXPERIMENTS.md SPerf iteration 1).
+#[inline(always)]
+fn median9_network(mut p: [f32; 9]) -> f32 {
+    #[inline(always)]
+    fn ex(p: &mut [f32; 9], i: usize, j: usize) {
+        // f32::min/max compile to branchless minss/maxss.
+        let lo = p[i].min(p[j]);
+        let hi = p[i].max(p[j]);
+        p[i] = lo;
+        p[j] = hi;
+    }
+    const NET: [(usize, usize); 19] = [
+        (1, 2), (4, 5), (7, 8), (0, 1), (3, 4), (6, 7), (1, 2), (4, 5),
+        (7, 8), (0, 3), (5, 8), (4, 7), (3, 6), (1, 4), (2, 5), (4, 7),
+        (4, 2), (6, 4), (4, 2),
+    ];
+    for (i, j) in NET {
+        ex(&mut p, i, j);
+    }
+    p[4]
+}
+
+/// 3x3 median filter, edge-clamped (mirror of the Pallas kernel +
+/// shift_stack semantics). Interior pixels take the fast unclamped
+/// path; the 1-pixel border falls back to clamped gathers.
+pub fn median3x3(img: &[f32], w: usize) -> Vec<f32> {
+    let h = img.len() / w;
+    let mut out = vec![0f32; img.len()];
+    let clamped = |y: i64, x: i64| -> f32 {
+        let yy = y.clamp(0, h as i64 - 1) as usize;
+        let xx = x.clamp(0, w as i64 - 1) as usize;
+        img[yy * w + xx]
+    };
+    // Interior rows: run the exchange network *elementwise over row
+    // slices* — nine shifted-row buffers, 19 vectorised min/max passes
+    // (the SIMD form of the Pallas kernel's plane layout).
+    const NET: [(usize, usize); 19] = [
+        (1, 2), (4, 5), (7, 8), (0, 1), (3, 4), (6, 7), (1, 2), (4, 5),
+        (7, 8), (0, 3), (5, 8), (4, 7), (3, 6), (1, 4), (2, 5), (4, 7),
+        (4, 2), (6, 4), (4, 2),
+    ];
+    if h > 2 && w > 2 {
+        let iw = w - 2;
+        let mut planes: Vec<Vec<f32>> = (0..9).map(|_| vec![0f32; iw]).collect();
+        for y in 1..h - 1 {
+            for (k, plane) in planes.iter_mut().enumerate() {
+                let (dy, dx) = (k / 3, k % 3);
+                let start = (y - 1 + dy) * w + dx;
+                plane.copy_from_slice(&img[start..start + iw]);
+            }
+            for (i, j) in NET {
+                let (a, b) = if i < j {
+                    let (lo, hi) = planes.split_at_mut(j);
+                    (&mut lo[i], &mut hi[0])
+                } else {
+                    let (lo, hi) = planes.split_at_mut(i);
+                    (&mut hi[0], &mut lo[j])
+                };
+                for (x, y2) in a.iter_mut().zip(b.iter_mut()) {
+                    let lo = x.min(*y2);
+                    let hi = x.max(*y2);
+                    *x = lo;
+                    *y2 = hi;
+                }
+            }
+            out[y * w + 1..y * w + 1 + iw].copy_from_slice(&planes[4]);
+        }
+    }
+    // Border: clamped scalar gathers.
+    let border = |y: usize, x: usize, out: &mut Vec<f32>| {
+        let mut nb = [0f32; 9];
+        let mut k = 0;
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                nb[k] = clamped(y as i64 + dy, x as i64 + dx);
+                k += 1;
+            }
+        }
+        out[y * w + x] = median9_network(nb);
+    };
+    for x in 0..w {
+        border(0, x, &mut out);
+        if h > 1 {
+            border(h - 1, x, &mut out);
+        }
+    }
+    for y in 1..h.saturating_sub(1) {
+        border(y, 0, &mut out);
+        if w > 1 {
+            border(y, w - 1, &mut out);
+        }
+    }
+    out
+}
+
+/// Negated LoG kernel, zero-mean (mirror of python log_kernel_2d).
+pub fn log_kernel(sigma: f64, half: usize) -> Vec<f32> {
+    let n = 2 * half + 1;
+    let s2 = sigma * sigma;
+    let mut k = vec![0f64; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let dy = y as f64 - half as f64;
+            let dx = x as f64 - half as f64;
+            let r2 = dx * dx + dy * dy;
+            k[y * n + x] = (r2 - 2.0 * s2) / (s2 * s2) * (-r2 / (2.0 * s2)).exp();
+        }
+    }
+    let mean = k.iter().sum::<f64>() / k.len() as f64;
+    k.iter().map(|v| -(v - mean) as f32).collect()
+}
+
+/// SAME-padding 2D convolution with a small kernel. Interior pixels
+/// take a bounds-check-free row-slice path the compiler vectorises;
+/// the `half`-wide border falls back to checked gathers
+/// (EXPERIMENTS.md SPerf iteration 2).
+pub fn convolve_same(img: &[f32], w: usize, kernel: &[f32], half: usize) -> Vec<f32> {
+    let h = img.len() / w;
+    let n = 2 * half + 1;
+    let mut out = vec![0f32; img.len()];
+    // Interior: out[y][x] = sum_ky sum_kx k[ky][kx] * img[y+ky-half][x+kx-half].
+    // Iterate kernel-outer so each inner pass is a contiguous
+    // scaled-row addition (auto-vectorises to FMA loops).
+    if h > 2 * half && w > 2 * half {
+        for ky in 0..n {
+            for kx in 0..n {
+                let kv = kernel[ky * n + kx];
+                if kv == 0.0 {
+                    continue;
+                }
+                for y in half..h - half {
+                    // x in [half, w-half): src col = x + kx - half
+                    // starts at kx for the row (y + ky - half).
+                    let src_row = (y + ky - half) * w;
+                    let src = &img[src_row + kx..src_row + kx + (w - 2 * half)];
+                    let dst = &mut out[y * w + half..y * w + w - half];
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += kv * s;
+                    }
+                }
+            }
+        }
+    }
+    // Border: checked gathers.
+    let checked = |y: i64, x: i64| -> f32 {
+        if y < 0 || y >= h as i64 || x < 0 || x >= w as i64 {
+            0.0
+        } else {
+            img[y as usize * w + x as usize]
+        }
+    };
+    let mut border = |y: usize, x: usize| {
+        let mut acc = 0f32;
+        for ky in 0..n {
+            for kx in 0..n {
+                acc += kernel[ky * n + kx]
+                    * checked(y as i64 + ky as i64 - half as i64, x as i64 + kx as i64 - half as i64);
+            }
+        }
+        out[y * w + x] = acc;
+    };
+    for y in 0..h {
+        if y < half || y >= h - half {
+            for x in 0..w {
+                border(y, x);
+            }
+        } else {
+            for x in 0..half {
+                border(y, x);
+            }
+            for x in w - half..w {
+                border(y, x);
+            }
+        }
+    }
+    out
+}
+
+/// Pure-Rust frame reduction (mirror of L2 `model.reduce_frame`).
+pub fn reduce_frame_native(
+    frame: &[f32],
+    dark: &[f32],
+    w: usize,
+    p: &ReduceParams,
+) -> Reduced {
+    let med = median3x3(frame, w);
+    let sub: Vec<f32> = med
+        .iter()
+        .zip(dark)
+        .map(|(m, d)| (m - d).max(0.0))
+        .collect();
+    let k = log_kernel(p.log_sigma, p.log_half);
+    let logresp = convolve_same(&sub, w, &k, p.log_half);
+    let mask: Vec<f32> = sub
+        .iter()
+        .zip(&logresp)
+        .map(|(s, l)| {
+            if *s > p.intensity_threshold && *l > p.log_threshold {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let count = mask.iter().map(|&m| m as u64).sum();
+    Reduced { sub, mask, count }
+}
+
+/// Frame reduction through the AOT artifact (frame size must match the
+/// manifest's traced shape).
+pub fn reduce_frame_artifact(rt: &mut Runtime, frame: &[f32], dark: &[f32]) -> Result<Reduced> {
+    let n = rt.manifest.config.frame;
+    let shape = vec![n, n];
+    let outs = rt.call(
+        "reduce_frame",
+        &[
+            TensorF32::new(shape.clone(), frame.to_vec()),
+            TensorF32::new(shape, dark.to_vec()),
+        ],
+    )?;
+    // Outputs: sub, mask, logresp, count (see model.reduce_frame).
+    let count = outs[3].data[0] as u64;
+    Ok(Reduced { sub: outs[0].data.clone(), mask: outs[1].data.clone(), count })
+}
+
+/// Dark median through the AOT artifact.
+pub fn dark_median_artifact(rt: &mut Runtime, frames: &[Vec<f32>]) -> Result<Vec<f32>> {
+    let n = rt.manifest.config.frame;
+    let k = rt.manifest.config.dark_frames;
+    assert_eq!(frames.len(), k, "artifact traced for {k} dark frames");
+    let mut data = Vec::with_capacity(k * n * n);
+    for f in frames {
+        data.extend_from_slice(f);
+    }
+    let outs = rt.call("dark_median", &[TensorF32::new(vec![k, n, n], data)])?;
+    Ok(outs[0].data.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hedm::detector::splat;
+
+    #[test]
+    fn dark_median_robust_to_outlier() {
+        let mut frames = vec![vec![50.0f32; 16]; 7];
+        frames.push(vec![5000.0f32; 16]);
+        let dark = dark_median_native(&frames);
+        assert!(dark.iter().all(|&v| v == 50.0));
+    }
+
+    #[test]
+    fn median_kills_zinger_keeps_blob() {
+        let n = 32;
+        let mut img = vec![0f32; n * n];
+        img[5 * n + 5] = 1000.0;
+        for y in 10..13 {
+            for x in 10..13 {
+                img[y * n + x] = 500.0;
+            }
+        }
+        let med = median3x3(&img, n);
+        assert_eq!(med[5 * n + 5], 0.0);
+        assert_eq!(med[11 * n + 11], 500.0);
+    }
+
+    #[test]
+    fn log_kernel_zero_mean_positive_center() {
+        let k = log_kernel(1.2, 2);
+        let sum: f32 = k.iter().sum();
+        assert!(sum.abs() < 1e-4);
+        assert!(k[2 * 5 + 2] > 0.0);
+    }
+
+    #[test]
+    fn reduction_detects_spot_rejects_flat() {
+        let n = 64;
+        let mut frame = vec![40.0f32; n * n];
+        splat(&mut frame, n, 30.0, 20.0, 400.0, 1.5);
+        let dark = vec![40.0f32; n * n];
+        let r = reduce_frame_native(&frame, &dark, n, &ReduceParams::default());
+        assert!(r.mask[20 * n + 30] == 1.0);
+        assert!(r.count > 0 && r.count < 40, "{}", r.count);
+        // Flat frame: nothing.
+        let flat = reduce_frame_native(&dark, &dark, n, &ReduceParams::default());
+        assert_eq!(flat.count, 0);
+    }
+
+    #[test]
+    fn sparsity_matches_paper_ratio() {
+        // 8 MB raw -> ~1 MB binary: the signal mask must be sparse.
+        let n = 128;
+        let mut frame = vec![40.0f32; n * n];
+        for i in 0..12 {
+            splat(&mut frame, n, 10.0 + 9.0 * i as f64, 64.0, 400.0, 1.5);
+        }
+        let dark = vec![40.0f32; n * n];
+        let r = reduce_frame_native(&frame, &dark, n, &ReduceParams::default());
+        let fill = r.count as f64 / (n * n) as f64;
+        assert!(fill < 0.02, "mask fill {fill}");
+    }
+
+    /// Cross-language check: Rust native vs JAX artifact, same pixels.
+    #[test]
+    fn native_matches_artifact() {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+        let n = rt.manifest.config.frame;
+        let mut rng = crate::util::prng::Pcg64::new(11);
+        let mut frame = vec![0f32; n * n];
+        for px in frame.iter_mut() {
+            *px = 40.0 + rng.normal() as f32 * 3.0;
+        }
+        for i in 0..8 {
+            splat(&mut frame, n, 50.0 + 40.0 * i as f64, 100.0 + 30.0 * i as f64, 400.0, 1.5);
+        }
+        let dark = vec![40.0f32; n * n];
+        let params = ReduceParams {
+            intensity_threshold: rt.manifest.config.intensity_threshold as f32,
+            log_threshold: rt.manifest.config.log_threshold as f32,
+            ..Default::default()
+        };
+        let native = reduce_frame_native(&frame, &dark, n, &params);
+        let artifact = reduce_frame_artifact(&mut rt, &frame, &dark).unwrap();
+        assert_eq!(native.count, artifact.count, "signal counts differ");
+        let mask_diff = native
+            .mask
+            .iter()
+            .zip(&artifact.mask)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(mask_diff, 0, "masks differ at {mask_diff} pixels");
+        let max_sub_err = native
+            .sub
+            .iter()
+            .zip(&artifact.sub)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_sub_err < 1e-3, "max |sub| err {max_sub_err}");
+    }
+
+    #[test]
+    fn dark_median_native_matches_artifact() {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+        let n = rt.manifest.config.frame;
+        let k = rt.manifest.config.dark_frames;
+        let mut rng = crate::util::prng::Pcg64::new(12);
+        let frames: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n * n).map(|_| 40.0 + rng.normal() as f32 * 3.0).collect())
+            .collect();
+        let native = dark_median_native(&frames);
+        let artifact = dark_median_artifact(&mut rt, &frames).unwrap();
+        let max_err = native
+            .iter()
+            .zip(&artifact)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "{max_err}");
+    }
+}

@@ -1,0 +1,250 @@
+//! Cubic crystal symmetry: the 24 proper rotations and
+//! symmetry-reduced misorientation.
+//!
+//! A cubic crystal's diffraction pattern is invariant under the 24
+//! proper rotations of the cube, so orientation recovery can only be
+//! judged *modulo* that group: the misorientation between two
+//! orientations is the smallest rotation angle over all symmetric
+//! equivalents. This is the quantitative form of "sample points of
+//! the same color have the same crystallographic orientation" (Fig 2)
+//! — grain maps and indexing results are compared with
+//! [`misorientation_deg`], and grains are distinct when it exceeds a
+//! threshold (conventionally 5-15 degrees for grain boundaries).
+
+use crate::hedm::geometry::euler_to_matrix;
+
+type Mat3 = [[f64; 3]; 3];
+
+fn matmul(a: &Mat3, b: &Mat3) -> Mat3 {
+    let mut c = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            for (k, bk) in b.iter().enumerate() {
+                c[i][j] += a[i][k] * bk[j];
+            }
+        }
+    }
+    c
+}
+
+fn transpose(a: &Mat3) -> Mat3 {
+    let mut t = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            t[i][j] = a[j][i];
+        }
+    }
+    t
+}
+
+fn trace(a: &Mat3) -> f64 {
+    a[0][0] + a[1][1] + a[2][2]
+}
+
+/// The 24 proper rotation matrices of the cubic point group (O, 432).
+/// Generated as all signed permutation matrices with determinant +1.
+pub fn cubic_rotations() -> Vec<Mat3> {
+    let perms = [
+        [0usize, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0],
+    ];
+    let mut out = Vec::with_capacity(24);
+    for p in perms {
+        for signs in 0..8u32 {
+            let s = [
+                if signs & 1 == 0 { 1.0 } else { -1.0 },
+                if signs & 2 == 0 { 1.0 } else { -1.0 },
+                if signs & 4 == 0 { 1.0 } else { -1.0 },
+            ];
+            let mut m: Mat3 = [[0.0; 3]; 3];
+            for (row, (&col, &sign)) in p.iter().zip(&s).enumerate() {
+                m[row][col] = sign;
+            }
+            // determinant of a signed permutation: perm parity * sign product
+            let det = {
+                let a = &m;
+                a[0][0] * (a[1][1] * a[2][2] - a[1][2] * a[2][1])
+                    - a[0][1] * (a[1][0] * a[2][2] - a[1][2] * a[2][0])
+                    + a[0][2] * (a[1][0] * a[2][1] - a[1][1] * a[2][0])
+            };
+            if (det - 1.0).abs() < 1e-9 {
+                out.push(m);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), 24);
+    out
+}
+
+/// Rotation angle (radians) of a rotation matrix.
+fn rotation_angle(m: &Mat3) -> f64 {
+    ((trace(m) - 1.0) / 2.0).clamp(-1.0, 1.0).acos()
+}
+
+/// Symmetry-reduced misorientation angle between two orientations
+/// (Bunge Euler triples), in degrees. Zero iff they are cubic-
+/// symmetry equivalent.
+pub fn misorientation_deg(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let ra = euler_to_matrix(a[0], a[1], a[2]);
+    let rb = euler_to_matrix(b[0], b[1], b[2]);
+    let delta = matmul(&rb, &transpose(&ra)); // rotation taking a -> b
+    let mut best = f64::INFINITY;
+    for s in cubic_rotations() {
+        let m = matmul(&s, &delta);
+        best = best.min(rotation_angle(&m));
+    }
+    best.to_degrees()
+}
+
+/// Group orientations into grains: two orientations belong to the
+/// same grain when their misorientation is below `tol_deg`.
+/// Returns a grain id per input (ids are first-seen order).
+pub fn cluster_orientations(eulers: &[[f64; 3]], tol_deg: f64) -> Vec<usize> {
+    let mut reps: Vec<[f64; 3]> = Vec::new();
+    let mut ids = Vec::with_capacity(eulers.len());
+    for &e in eulers {
+        let found = reps
+            .iter()
+            .position(|&r| misorientation_deg(e, r) < tol_deg);
+        match found {
+            Some(i) => ids.push(i),
+            None => {
+                reps.push(e);
+                ids.push(reps.len() - 1);
+            }
+        }
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn exactly_24_proper_rotations() {
+        let rots = cubic_rotations();
+        assert_eq!(rots.len(), 24);
+        // All orthonormal with det +1, and pairwise distinct.
+        for (i, a) in rots.iter().enumerate() {
+            let at = transpose(a);
+            let id = matmul(a, &at);
+            for r in 0..3 {
+                for c in 0..3 {
+                    let want = if r == c { 1.0 } else { 0.0 };
+                    assert!((id[r][c] - want).abs() < 1e-12);
+                }
+            }
+            for b in rots.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn self_misorientation_is_zero() {
+        let e = [0.9, 1.3, 0.2];
+        assert!(misorientation_deg(e, e) < 1e-6);
+    }
+
+    #[test]
+    fn symmetry_equivalents_are_zero() {
+        // Rotating by 90 degrees about z (phi1 += pi/2) is a cubic
+        // symmetry operation: misorientation must vanish.
+        let e = [0.4, 0.9, 1.7];
+        let eq = [e[0] + std::f64::consts::FRAC_PI_2, e[1], e[2]];
+        assert!(misorientation_deg(e, eq) < 1e-6, "{}", misorientation_deg(e, eq));
+    }
+
+    #[test]
+    fn small_rotation_small_misorientation() {
+        let e = [0.4, 0.9, 1.7];
+        let perturbed = [e[0] + 0.01, e[1], e[2]];
+        let m = misorientation_deg(e, perturbed);
+        assert!(m > 0.01 && m < 1.5, "{m}");
+    }
+
+    #[test]
+    fn misorientation_is_symmetric_and_bounded() {
+        let mut rng = Pcg64::new(5);
+        for _ in 0..20 {
+            let a = [rng.range_f64(0.0, 6.28), rng.range_f64(0.0, 3.14), rng.range_f64(0.0, 6.28)];
+            let b = [rng.range_f64(0.0, 6.28), rng.range_f64(0.0, 3.14), rng.range_f64(0.0, 6.28)];
+            let ab = misorientation_deg(a, b);
+            let ba = misorientation_deg(b, a);
+            assert!((ab - ba).abs() < 1e-6);
+            // Cubic fundamental zone maximum ~= 62.8 degrees.
+            assert!(ab <= 62.9, "{ab}");
+        }
+    }
+
+    #[test]
+    fn clustering_recovers_grain_count() {
+        let mut rng = Pcg64::new(8);
+        let grains = [
+            [0.3, 0.7, 1.1],
+            [2.0, 1.2, 0.4],
+            [4.4, 2.2, 5.0],
+        ];
+        // 30 noisy measurements of 3 grains.
+        let mut eulers = Vec::new();
+        let mut truth = Vec::new();
+        for i in 0..30 {
+            let g = grains[i % 3];
+            eulers.push([
+                g[0] + rng.normal() * 0.005,
+                g[1] + rng.normal() * 0.005,
+                g[2] + rng.normal() * 0.005,
+            ]);
+            truth.push(i % 3);
+        }
+        let ids = cluster_orientations(&eulers, 5.0);
+        assert_eq!(ids.iter().max().unwrap() + 1, 3, "{ids:?}");
+        // Consistent labeling with truth (up to renaming).
+        for i in 0..30 {
+            for j in 0..30 {
+                assert_eq!(ids[i] == ids[j], truth[i] == truth[j], "{i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_results_judged_by_misorientation_or_pseudo_symmetry() {
+        // Tie the symmetry module to the fitter. A recovered
+        // orientation is correct when its misorientation vanishes mod
+        // the 24 proper cubic rotations — OR when it is a
+        // *pseudo-symmetric* solution: with a truncated reflection set
+        // (58 G-vectors), a finite match tolerance, and Friedel-paired
+        // spots, distinct orientations can produce near-identical
+        // patterns. Diffraction cannot distinguish those; the honest
+        // acceptance criterion is pattern equivalence, with
+        // misorientation as the stronger check when it holds.
+        use crate::hedm::fit::{fit_orientation, NativeScorer, ScanCfg};
+        use crate::hedm::geometry::{simulate_spots, spot_overlap, Geom};
+        let g = Geom { frame: 256, det_dist: 1.25e5, ..Geom::default() };
+        let truth = [0.9, 1.3, 0.2];
+        let obs = simulate_spots(truth, &g);
+        let mut scorer = NativeScorer::new(g, &obs);
+        let fit = fit_orientation(&mut scorer, &ScanCfg::default()).unwrap();
+        let m = misorientation_deg(fit.euler, truth);
+        let overlap = spot_overlap(
+            &simulate_spots(fit.euler, &g),
+            &simulate_spots(truth, &g),
+            &g,
+        );
+        assert!(
+            m < 1.0 || overlap > 0.9,
+            "misorientation {m} deg with pattern overlap {overlap}"
+        );
+        // And the diagnostic is meaningful: a deliberately wrong
+        // orientation fails both.
+        let wrong = [truth[0] + 0.8, truth[1] + 0.5, truth[2]];
+        let m_wrong = misorientation_deg(wrong, truth);
+        let o_wrong = spot_overlap(
+            &simulate_spots(wrong, &g),
+            &simulate_spots(truth, &g),
+            &g,
+        );
+        assert!(m_wrong > 5.0 && o_wrong < 0.5, "{m_wrong} {o_wrong}");
+    }
+}

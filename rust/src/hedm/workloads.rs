@@ -1,0 +1,176 @@
+//! The paper's workload constants and task-graph builders (SVI).
+//!
+//! Each evaluation subsection defines a workload; the experiment
+//! drivers and benches build the corresponding task graphs from here
+//! so every figure regenerates from one source of truth.
+
+use crate::dataflow::graph::{Task, TaskGraph};
+use crate::units::{Duration, MB};
+use crate::util::prng::Pcg64;
+
+/// SVI-A: NF-HEDM data reduction — "736 images from two detector
+/// distances" on 320 Orthros cores in 106 s.
+pub const NF_REDUCE_IMAGES: usize = 736;
+/// Per-image reduction cost on an Orthros core (calibrated so 736
+/// images on 320 cores = 3 scheduling waves + the shared dark-median
+/// prepass gives ~106 s, as measured in SVI-A).
+pub const NF_REDUCE_SECS_PER_IMAGE: f64 = 30.0;
+/// The shared "median calculation on each pixel ... using all images"
+/// prepass.
+pub const NF_REDUCE_DARK_PREPASS_SECS: f64 = 14.0;
+/// Raw frame size ("2D TIFF images, each 8 MB in size").
+pub const RAW_FRAME_BYTES: u64 = 8 * MB;
+/// Reduced binary size ("each 8 MB raw file can be reduced to an
+/// ~1 MB binary file").
+pub const REDUCED_FRAME_BYTES: u64 = 1 * MB;
+
+/// SVI-B: the staged dataset ("a 577 MB data set from GPFS").
+pub const NF_STAGE2_DATASET_BYTES: u64 = 577 * MB;
+/// NF stage 2 scale: "~10^5 points per layer".
+pub const NF_STAGE2_GRID_POINTS: usize = 100_000;
+/// "each task runs for about 10 minutes" (Fig 2 context) at cluster
+/// scale; ~30 s at BG/Q grid-point granularity (SV-B: "about 30 s for
+/// each grid point").
+pub const NF_STAGE2_SECS_PER_POINT: f64 = 30.0;
+
+/// SVI-C: FF stage 1 — "720 images, with each image being processed in
+/// parallel ... 5 s to 160 s" depending on diffraction spot count.
+pub const FF1_JOBS: usize = 720;
+pub const FF1_MIN_SECS: f64 = 5.0;
+pub const FF1_MAX_SECS: f64 = 160.0;
+/// Each job loads one 8 MB diffraction image and writes ~50 KB.
+pub const FF1_INPUT_BYTES: u64 = 8 * MB;
+pub const FF1_OUTPUT_BYTES: u64 = 50_000;
+
+/// SVI-D: FF stage 2 — "4,109 grains and thus tasks, with the run-time
+/// per task varying between 5 and 25 s".
+pub const FF2_TASKS: usize = 4_109;
+pub const FF2_MIN_SECS: f64 = 5.0;
+pub const FF2_MAX_SECS: f64 = 25.0;
+
+/// Fig 2: the NF gold-wire cross-section — 601-point hex grid, 4
+/// grains, ~10 min/task on the cluster.
+pub const FIG2_GRID_POINTS: usize = 601;
+pub const FIG2_GRAINS: usize = 4;
+
+/// Fig 3: the FF experimental-material section — 572 grain centers.
+pub const FIG3_GRAINS: usize = 572;
+
+/// Build the FF stage-1 task farm (Fig 12): log-uniform runtimes in
+/// [5, 160] s, one 8 MB input read + 50 KB output each.
+pub fn ff1_graph(seed: u64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let mut rng = Pcg64::new(seed);
+    g.foreach(FF1_JOBS, |i| {
+        Task::compute(
+            format!("ff1/peaks{i:03}"),
+            Duration::from_secs_f64(rng.log_uniform(FF1_MIN_SECS, FF1_MAX_SECS)),
+        )
+        .with_input(format!("/tmp/ff/frame_{i:04}.bin"), Some(FF1_INPUT_BYTES))
+        .with_output(FF1_OUTPUT_BYTES)
+    });
+    g
+}
+
+/// Build the FF stage-2 task farm (Fig 13): uniform [5, 25] s tasks.
+pub fn ff2_graph(seed: u64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let mut rng = Pcg64::new(seed);
+    g.foreach(FF2_TASKS, |i| {
+        Task::compute(
+            format!("ff2/grain{i:04}"),
+            Duration::from_secs_f64(rng.range_f64(FF2_MIN_SECS, FF2_MAX_SECS)),
+        )
+    });
+    g
+}
+
+/// Build the NF reduction workload (SVI-A): a dark-median prepass task
+/// followed by 736 per-image reductions that depend on it.
+pub fn nf_reduce_graph(seed: u64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let mut rng = Pcg64::new(seed);
+    let dark = g.add(Task::compute(
+        "nf1/dark-median",
+        Duration::from_secs_f64(NF_REDUCE_DARK_PREPASS_SECS),
+    ));
+    for i in 0..NF_REDUCE_IMAGES {
+        let jitter = rng.normal_ms(NF_REDUCE_SECS_PER_IMAGE, 3.0).max(5.0);
+        g.add(
+            Task::compute(format!("nf1/reduce{i:03}"), Duration::from_secs_f64(jitter))
+                .with_dep(dark)
+                .with_output(REDUCED_FRAME_BYTES),
+        );
+    }
+    g
+}
+
+/// Build the NF stage-2 grid fit (Fig 8 / SV-B): `points` independent
+/// FitOrientation tasks reading the staged dataset.
+pub fn nf_stage2_graph(points: usize, staged_path: &str, seed: u64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let mut rng = Pcg64::new(seed);
+    g.foreach(points, |i| {
+        let secs = rng.normal_ms(NF_STAGE2_SECS_PER_POINT, 5.0).clamp(10.0, 60.0);
+        Task::compute(format!("nf2/fit{i:06}"), Duration::from_secs_f64(secs))
+            .with_input(staged_path.to_string(), None)
+    });
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ff1_runtime_distribution() {
+        let g = ff1_graph(1);
+        assert_eq!(g.len(), 720);
+        for t in &g.tasks {
+            let s = t.runtime.secs_f64();
+            assert!((FF1_MIN_SECS..=FF1_MAX_SECS).contains(&s), "{s}");
+            assert_eq!(t.inputs.len(), 1);
+            assert_eq!(t.output_bytes, FF1_OUTPUT_BYTES);
+        }
+        // Log-uniform: median well below the midpoint.
+        let mut secs: Vec<f64> = g.tasks.iter().map(|t| t.runtime.secs_f64()).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(secs[360] < 60.0, "median {}", secs[360]);
+    }
+
+    #[test]
+    fn ff2_shape() {
+        let g = ff2_graph(2);
+        assert_eq!(g.len(), FF2_TASKS);
+        for t in &g.tasks {
+            let s = t.runtime.secs_f64();
+            assert!((FF2_MIN_SECS..=FF2_MAX_SECS).contains(&s));
+        }
+    }
+
+    #[test]
+    fn nf_reduce_depends_on_dark() {
+        let g = nf_reduce_graph(3);
+        assert_eq!(g.len(), 1 + NF_REDUCE_IMAGES);
+        assert_eq!(g.roots().len(), 1);
+        for t in &g.tasks[1..] {
+            assert_eq!(t.deps.len(), 1);
+        }
+    }
+
+    #[test]
+    fn nf_stage2_reads_staged_data() {
+        let g = nf_stage2_graph(100, "/tmp/hedm/ps.txt", 4);
+        assert_eq!(g.len(), 100);
+        assert!(g.tasks.iter().all(|t| t.inputs[0].path == "/tmp/hedm/ps.txt"));
+    }
+
+    #[test]
+    fn graphs_are_deterministic() {
+        let a = ff1_graph(7);
+        let b = ff1_graph(7);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.runtime, y.runtime);
+        }
+    }
+}

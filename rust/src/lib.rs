@@ -1,0 +1,61 @@
+//! # xstage — Big Data Staging with MPI-IO for Interactive X-ray Science
+//!
+//! A production-quality reproduction of Wozniak et al., *"Big Data
+//! Staging with MPI-IO for Interactive X-ray Science"*: the Swift/T
+//! **I/O hook** (collective MPI-IO staging of shared input data into
+//! compute-node-local storage) driving **HEDM** (high-energy
+//! diffraction microscopy) many-task analysis workflows.
+//!
+//! The paper's testbed — an 8,192-node IBM Blue Gene/Q with a 240 GB/s
+//! GPFS installation, the 320-core Orthros cluster at the APS, and a
+//! synchrotron beamline detector — is reproduced as a deterministic
+//! flow-level discrete-event simulation whose *data plane is real*:
+//! files hold actual bytes, the staging hook really replicates them
+//! into per-node stores, the reduction and orientation-fitting math
+//! really runs (through AOT-compiled JAX/Pallas artifacts on the PJRT
+//! CPU client), and ground-truth grain orientations are genuinely
+//! recovered. Only *time* and *scale* are modeled.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! - [`simtime`] — event heap, max-min fair-share flow network, plan DAGs
+//! - [`engine`] — the simulation core executing plans over a machine
+//! - [`pfs`] — GPFS-like parallel filesystem (striping, metadata server)
+//! - [`cluster`] — BG/Q and Orthros machine models (torus, I/O nodes,
+//!   node-local RAM disks)
+//! - [`mpisim`] — MPI substrate: communicators, broadcast, two-phase
+//!   collective file read (`MPI_File_read_all`)
+//! - [`staging`] — **the paper's contribution**: the Swift I/O hook and
+//!   the naive per-task baseline
+//! - [`dataflow`] — Swift/T-like engine: futures, `foreach`, ADLB-style
+//!   load balancing, the worker-local input cache
+//! - [`hedm`] — the science: detector simulator, stage-1 reduction,
+//!   connected components, NF/FF stage-2 orientation fitting/indexing
+//! - [`runtime`] — PJRT executor for the AOT artifacts
+//! - [`transfer`] / [`catalog`] — Globus-like transfer + metadata catalog
+//! - [`metrics`] — phase accounting and report tables
+//! - [`experiments`] — one driver per paper table/figure
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release -- fig11 --nodes 8192
+//! ```
+
+pub mod catalog;
+pub mod cli;
+pub mod cluster;
+pub mod dataflow;
+pub mod engine;
+pub mod experiments;
+pub mod hedm;
+pub mod metrics;
+pub mod mpisim;
+pub mod pfs;
+pub mod runtime;
+pub mod simtime;
+pub mod staging;
+pub mod transfer;
+pub mod units;
+pub mod util;

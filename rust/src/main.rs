@@ -1,0 +1,24 @@
+//! `xstage` — leader entrypoint for the staging framework.
+//!
+//! See `xstage --help` / [`xstage::cli::USAGE`].
+
+use xstage::cli;
+use xstage::util::args::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.command.as_deref() == Some("help") {
+        println!("{}", cli::USAGE);
+        return;
+    }
+    if let Err(e) = cli::dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,195 @@
+//! Phase accounting and report tables.
+//!
+//! The paper's evaluation reports *phase wall times* (Staging, Write,
+//! Read — Fig 9/10/11) and derived aggregate bandwidths. [`Metrics`]
+//! tracks, per label, the wall-clock *span* (earliest start to latest
+//! finish across all concurrent steps carrying the label) plus simple
+//! byte/op counters; [`Table`] renders the paper-vs-measured rows the
+//! experiment drivers print.
+
+use std::collections::BTreeMap;
+
+use crate::units::{Duration, SimTime};
+
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    first_start: SimTime,
+    last_end: SimTime,
+    open: u64,
+    started: u64,
+}
+
+/// Phase spans + counters for one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    spans: BTreeMap<&'static str, Span>,
+    bytes: BTreeMap<&'static str, u64>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn phase_start(&mut self, label: &'static str, now: SimTime) {
+        let s = self.spans.entry(label).or_insert(Span {
+            first_start: now,
+            last_end: now,
+            open: 0,
+            started: 0,
+        });
+        s.open += 1;
+        s.started += 1;
+        if now < s.first_start {
+            s.first_start = now;
+        }
+    }
+
+    pub fn phase_end(&mut self, label: &'static str, now: SimTime) {
+        let s = self.spans.get_mut(label).expect("end before start");
+        debug_assert!(s.open > 0);
+        s.open -= 1;
+        if now > s.last_end {
+            s.last_end = now;
+        }
+    }
+
+    /// Wall-clock span of a phase: first start to last finish.
+    pub fn phase_span(&self, label: &str) -> Option<Duration> {
+        self.spans.get(label).map(|s| s.last_end - s.first_start)
+    }
+
+    /// When the phase first started / last ended.
+    pub fn phase_window(&self, label: &str) -> Option<(SimTime, SimTime)> {
+        self.spans.get(label).map(|s| (s.first_start, s.last_end))
+    }
+
+    /// How many steps carried this label.
+    pub fn phase_count(&self, label: &str) -> u64 {
+        self.spans.get(label).map_or(0, |s| s.started)
+    }
+
+    pub fn add_bytes(&mut self, label: &'static str, n: u64) {
+        *self.bytes.entry(label).or_insert(0) += n;
+    }
+
+    pub fn bytes(&self, label: &str) -> u64 {
+        self.bytes.get(label).copied().unwrap_or(0)
+    }
+
+    pub fn incr(&mut self, label: &'static str) {
+        *self.counts.entry(label).or_insert(0) += 1;
+    }
+
+    pub fn add_count(&mut self, label: &'static str, n: u64) {
+        *self.counts.entry(label).or_insert(0) += n;
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.counts.get(label).copied().unwrap_or(0)
+    }
+
+    pub fn labels(&self) -> impl Iterator<Item = &&'static str> {
+        self.spans.keys()
+    }
+}
+
+/// A paper-vs-measured report table (fixed-width text, stable order —
+/// EXPERIMENTS.md embeds these verbatim).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged row");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_covers_concurrent_steps() {
+        let mut m = Metrics::new();
+        m.phase_start("stage", SimTime(1_000));
+        m.phase_start("stage", SimTime(2_000));
+        m.phase_end("stage", SimTime(5_000));
+        m.phase_end("stage", SimTime(9_000));
+        assert_eq!(m.phase_span("stage").unwrap(), Duration(8_000));
+        assert_eq!(m.phase_count("stage"), 2);
+        assert_eq!(m.phase_window("stage").unwrap(), (SimTime(1_000), SimTime(9_000)));
+    }
+
+    #[test]
+    fn counters() {
+        let mut m = Metrics::new();
+        m.add_bytes("pfs.write", 100);
+        m.add_bytes("pfs.write", 50);
+        m.incr("tasks");
+        m.add_count("tasks", 4);
+        assert_eq!(m.bytes("pfs.write"), 150);
+        assert_eq!(m.count("tasks"), 5);
+        assert_eq!(m.bytes("missing"), 0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["nodes", "GB/s"]);
+        t.row(&["512".into(), "16.4".into()]);
+        t.row(&["8192".into(), "134.0".into()]);
+        let s = t.render();
+        assert!(s.contains("== Fig X =="));
+        assert!(s.contains("8192"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged row")]
+    fn ragged_row_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

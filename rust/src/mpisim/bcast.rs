@@ -1,0 +1,118 @@
+//! Binomial-tree `MPI_Bcast` as a plan fragment.
+//!
+//! Round `k` (0-based) has `2^k` senders, each pushing the full
+//! payload to one new node over its torus injection port; after
+//! `ceil(log2 n)` rounds all `n` nodes hold the data. Each round is a
+//! flow bundle capped at the per-node injection bandwidth plus a fixed
+//! per-round software/link latency. This is the standard short-vector
+//! algorithm; for the staging hook's payloads (file lists, parameter
+//! files — KBs to a few MBs) it is within a small factor of the
+//! hardware-collective time and never the staging bottleneck.
+
+use crate::cluster::Topology;
+use crate::mpisim::{tree_rounds, Comm};
+use crate::simtime::plan::{Plan, StepId};
+use crate::units::Duration;
+
+/// Per-round software + torus latency (BG/Q PAMI broadcast class).
+pub const ROUND_LATENCY: Duration = Duration(5_000); // 5 us
+
+/// Append a broadcast of `bytes` from rank 0 of `comm` to all its
+/// nodes. Returns the final step (the broadcast completion barrier).
+pub fn bcast_plan(
+    plan: &mut Plan,
+    topo: &Topology,
+    comm: &Comm,
+    bytes: u64,
+    deps: Vec<StepId>,
+    label: &'static str,
+) -> StepId {
+    let n = comm.nodes() as u64;
+    let rounds = tree_rounds(n);
+    if rounds == 0 {
+        // Single node: nothing moves.
+        return plan.delay(Duration::ZERO, deps, label);
+    }
+    let mut prev = deps;
+    let mut covered: u64 = 1;
+    for k in 0..rounds {
+        // Senders this round: everyone already covered, but no more
+        // than the nodes still uncovered.
+        let senders = covered.min(n - covered);
+        let lat = plan.delay(ROUND_LATENCY, prev.clone(), label);
+        let xfer = plan.flow_capped(
+            topo.path_torus(),
+            senders,
+            bytes,
+            topo.spec.torus_link_bw,
+            vec![lat],
+            label,
+        );
+        prev = vec![xfer];
+        covered += senders;
+        debug_assert!(covered <= n || k == rounds - 1);
+    }
+    plan.delay(Duration::ZERO, prev, label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{bgq, Topology};
+    use crate::engine::SimCore;
+    use crate::pfs::GpfsParams;
+    use crate::units::GB;
+
+    fn sim_bcast(nodes: u32, bytes: u64) -> f64 {
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        bcast_plan(&mut p, &topo, &comm, bytes, vec![], "bcast");
+        core.submit(p);
+        core.run_to_completion();
+        core.now.secs_f64()
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        assert_eq!(sim_bcast(1, GB), 0.0);
+    }
+
+    #[test]
+    fn two_nodes_one_round() {
+        // 1 round: 1.8 GB at 1.8 GB/s = 1 s (+ 5 us latency).
+        let t = sim_bcast(2, (1.8 * GB as f64) as u64);
+        assert!((t - 1.0).abs() < 1e-3, "{t}");
+    }
+
+    #[test]
+    fn round_count_is_logarithmic() {
+        // Time grows with log2(nodes), not nodes.
+        let t8 = sim_bcast(8, 100_000_000);
+        let t64 = sim_bcast(64, 100_000_000);
+        let t512 = sim_bcast(512, 100_000_000);
+        // 3, 6, 9 rounds respectively.
+        assert!((t64 / t8 - 2.0).abs() < 0.05, "{t8} {t64}");
+        assert!((t512 / t8 - 3.0).abs() < 0.05, "{t8} {t512}");
+    }
+
+    #[test]
+    fn latency_dominates_tiny_messages() {
+        // A 100-byte list to 8192 nodes: 13 rounds of ~5 us.
+        let t = sim_bcast(8192, 100);
+        assert!(t < 0.001, "{t}");
+        assert!(t > 5e-6 * 13.0 * 0.9, "{t}");
+    }
+
+    #[test]
+    fn plan_shape_has_rounds() {
+        let mut net = crate::simtime::flownet::FlowNet::new();
+        let topo = Topology::build(bgq(8), GpfsParams::default(), &mut net);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        bcast_plan(&mut p, &topo, &comm, 1000, vec![], "b");
+        // 3 rounds x (latency + flow) + final barrier.
+        assert_eq!(p.len(), 7);
+    }
+}

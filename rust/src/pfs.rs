@@ -1,0 +1,331 @@
+//! GPFS-like shared parallel filesystem: data plane + parameters.
+//!
+//! The *data plane* is real: [`Blob`]s hold actual bytes (or a
+//! deterministic synthetic generator for multi-GB scale datasets whose
+//! content is irrelevant but whose *identity* must survive staging —
+//! checksums verify that the right bytes landed on the right node).
+//!
+//! The *timing plane* lives in the flow network: `cluster::Topology`
+//! materialises the filesystem as three links —
+//!
+//! - `pfs_backplane`: the installation's aggregate bandwidth. The
+//!   paper's ALCF GPFS peaks at 240 GB/s (Bui et al. [4]).
+//! - `pfs_disk`: a [`Capacity::Degrading`] stage traversed only by
+//!   *uncoordinated* reads, modelling server-side prefetch loss and
+//!   seek thrash when hundreds of thousands of independent streams hit
+//!   the same stripes (the mechanism behind Fig 11's naive curve).
+//!   Coordinated two-phase collective reads issue large aligned stripe
+//!   requests and bypass it.
+//! - `pfs_meta`: the metadata server, a link whose "bytes" are
+//!   metadata operations (opens, stats, globs, readdirs). A naive
+//!   implementation globbing on every rank congests this (SIV).
+//!
+//! [`GpfsParams`] carries the constants, calibrated in
+//! EXPERIMENTS.md against the paper's measured end-points.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::units::{GB, MB};
+
+/// File contents: real bytes or a deterministic synthetic stream.
+#[derive(Clone, Debug)]
+pub enum Blob {
+    /// Actual bytes (science-path files: frames, reductions, results).
+    Real(Arc<Vec<u8>>),
+    /// Pseudo-random stream defined by (len, seed) — used for the
+    /// multi-GB staging datasets so an 8,192-node experiment does not
+    /// allocate terabytes. Checksummable and materialisable.
+    Synthetic { len: u64, seed: u64 },
+}
+
+impl Blob {
+    pub fn real(data: Vec<u8>) -> Blob {
+        Blob::Real(Arc::new(data))
+    }
+
+    pub fn synthetic(len: u64, seed: u64) -> Blob {
+        Blob::Synthetic { len, seed }
+    }
+
+    pub fn len(&self) -> u64 {
+        match self {
+            Blob::Real(d) => d.len() as u64,
+            Blob::Synthetic { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// FNV-1a-64 over the logical byte stream. Cheap identity check for
+    /// "did staging deliver exactly these bytes".
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        match self {
+            Blob::Real(d) => {
+                for &b in d.iter() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(PRIME);
+                }
+            }
+            Blob::Synthetic { len, seed } => {
+                // Stream 8 bytes per splitmix64 step; cap work for huge
+                // blobs by hashing the generator state every 64 KiB page
+                // (identity-preserving and O(len/64KiB)).
+                let pages = (*len + 65535) / 65536;
+                let mut s = *seed;
+                for p in 0..pages {
+                    s = splitmix64(s ^ p);
+                    h ^= s;
+                    h = h.wrapping_mul(PRIME);
+                }
+                h ^= *len;
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        h
+    }
+
+    /// Materialise to owned bytes (tests / small synthetic files only).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            Blob::Real(d) => d.as_ref().clone(),
+            Blob::Synthetic { len, seed } => {
+                assert!(*len <= 64 * MB, "refusing to materialise {len} bytes");
+                let mut out = Vec::with_capacity(*len as usize);
+                let mut s = *seed;
+                while (out.len() as u64) < *len {
+                    s = splitmix64(s);
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                out.truncate(*len as usize);
+                out
+            }
+        }
+    }
+
+    /// Identity comparison (length + checksum).
+    pub fn same_content(&self, other: &Blob) -> bool {
+        self.len() == other.len() && self.checksum() == other.checksum()
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// GPFS installation parameters (defaults: the paper's ALCF system).
+#[derive(Clone, Copy, Debug)]
+pub struct GpfsParams {
+    /// Aggregate backplane bandwidth, bytes/s ("peak I/O performance
+    /// of 240 GB/s", SVI).
+    pub peak_bw: f64,
+    /// Uncoordinated-read efficiency knee: no degradation below
+    /// `degrade_pivot` concurrent streams.
+    pub degrade_pivot: f64,
+    /// Each additional `degrade_half` streams halve the excess
+    /// efficiency. Calibrated so ~131K independent readers (8,192
+    /// nodes x 16 ranks) deliver ~21 GB/s as measured in Fig 11.
+    pub degrade_half: f64,
+    /// Metadata server throughput, ops/s.
+    pub meta_ops_per_sec: f64,
+}
+
+impl Default for GpfsParams {
+    fn default() -> Self {
+        GpfsParams {
+            peak_bw: 240.0 * GB as f64,
+            degrade_pivot: 6_000.0,
+            degrade_half: 12_000.0,
+            meta_ops_per_sec: 50_000.0,
+        }
+    }
+}
+
+/// The shared filesystem's namespace and contents. Deterministic
+/// iteration (BTreeMap) keeps glob results and therefore simulations
+/// reproducible.
+#[derive(Debug, Default)]
+pub struct ParallelFs {
+    files: BTreeMap<String, Blob>,
+}
+
+impl ParallelFs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write(&mut self, path: impl Into<String>, data: Blob) {
+        self.files.insert(path.into(), data);
+    }
+
+    pub fn read(&self, path: &str) -> Option<&Blob> {
+        self.files.get(path)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.files.contains_key(path)
+    }
+
+    pub fn delete(&mut self, path: &str) -> bool {
+        self.files.remove(path).is_some()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.values().map(Blob::len).sum()
+    }
+
+    /// Glob with `*` (any run, not crossing `/`) and `**` (any run
+    /// including `/`) and `?` (one char, not `/`). Matches the subset
+    /// of glob the Swift I/O hook file lists use (Fig 6).
+    pub fn glob(&self, pattern: &str) -> Vec<String> {
+        self.files
+            .keys()
+            .filter(|k| glob_match(pattern, k))
+            .cloned()
+            .collect()
+    }
+
+    /// Sum of sizes of all files matching `pattern`.
+    pub fn glob_bytes(&self, pattern: &str) -> u64 {
+        self.glob(pattern)
+            .iter()
+            .map(|p| self.files[p].len())
+            .sum()
+    }
+
+    pub fn paths(&self) -> impl Iterator<Item = &String> {
+        self.files.keys()
+    }
+}
+
+/// Simple glob matcher: `*` (within a path segment), `**` (across
+/// segments), `?` (single non-`/` char). Backtracking, no allocation.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    fn inner(p: &[u8], t: &[u8]) -> bool {
+        if p.is_empty() {
+            return t.is_empty();
+        }
+        match p[0] {
+            b'*' => {
+                // "**" crosses '/', "*" does not.
+                let crossing = p.len() > 1 && p[1] == b'*';
+                let rest = if crossing { &p[2..] } else { &p[1..] };
+                let mut i = 0;
+                loop {
+                    if inner(rest, &t[i..]) {
+                        return true;
+                    }
+                    if i >= t.len() || (!crossing && t[i] == b'/') {
+                        return false;
+                    }
+                    i += 1;
+                }
+            }
+            b'?' => !t.is_empty() && t[0] != b'/' && inner(&p[1..], &t[1..]),
+            c => !t.is_empty() && t[0] == c && inner(&p[1..], &t[1..]),
+        }
+    }
+    inner(pattern.as_bytes(), text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_real_roundtrip() {
+        let b = Blob::real(vec![1, 2, 3, 4]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.to_bytes(), vec![1, 2, 3, 4]);
+        assert!(b.same_content(&Blob::real(vec![1, 2, 3, 4])));
+        assert!(!b.same_content(&Blob::real(vec![1, 2, 3, 5])));
+        assert!(!b.same_content(&Blob::real(vec![1, 2, 3])));
+    }
+
+    #[test]
+    fn blob_synthetic_deterministic() {
+        let a = Blob::synthetic(1 << 20, 42);
+        let b = Blob::synthetic(1 << 20, 42);
+        let c = Blob::synthetic(1 << 20, 43);
+        assert_eq!(a.checksum(), b.checksum());
+        assert_ne!(a.checksum(), c.checksum());
+        assert_eq!(a.to_bytes(), b.to_bytes());
+        assert_eq!(a.to_bytes().len(), 1 << 20);
+    }
+
+    #[test]
+    fn blob_synthetic_huge_checksum_is_cheap() {
+        // 2 TB: checksum must not materialise.
+        let b = Blob::synthetic(2_000 * GB, 7);
+        let _ = b.checksum();
+        assert_eq!(b.len(), 2_000 * GB);
+    }
+
+    #[test]
+    fn fs_write_read_delete() {
+        let mut fs = ParallelFs::new();
+        fs.write("/data/a.tif", Blob::real(vec![0; 100]));
+        assert!(fs.exists("/data/a.tif"));
+        assert_eq!(fs.read("/data/a.tif").unwrap().len(), 100);
+        assert_eq!(fs.total_bytes(), 100);
+        assert!(fs.delete("/data/a.tif"));
+        assert!(!fs.exists("/data/a.tif"));
+        assert!(!fs.delete("/data/a.tif"));
+    }
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("*.tif", "frame.tif"));
+        assert!(!glob_match("*.tif", "frame.bin"));
+        assert!(glob_match("data/??.bin", "data/01.bin"));
+        assert!(!glob_match("data/??.bin", "data/001.bin"));
+        assert!(glob_match("a*c", "abc"));
+        assert!(glob_match("a*c", "ac"));
+        assert!(!glob_match("a*c", "ab"));
+    }
+
+    #[test]
+    fn glob_does_not_cross_slash() {
+        assert!(!glob_match("data/*.tif", "data/sub/frame.tif"));
+        assert!(glob_match("data/**.tif", "data/sub/frame.tif"));
+        assert!(glob_match("**", "any/depth/of/path"));
+    }
+
+    #[test]
+    fn fs_glob_deterministic_order() {
+        let mut fs = ParallelFs::new();
+        for i in [3, 1, 2] {
+            fs.write(format!("/d/f{i}.bin"), Blob::real(vec![0; i]));
+        }
+        let hits = fs.glob("/d/f*.bin");
+        assert_eq!(hits, vec!["/d/f1.bin", "/d/f2.bin", "/d/f3.bin"]);
+        assert_eq!(fs.glob_bytes("/d/f*.bin"), 6);
+    }
+
+    #[test]
+    fn gpfs_defaults_match_paper() {
+        let p = GpfsParams::default();
+        assert_eq!(p.peak_bw, 240.0 * GB as f64);
+        // 8,192 nodes x 16 ranks of independent readers -> ~21 GB/s.
+        let streams = 8192.0 * 16.0;
+        let eff = crate::simtime::flownet::Capacity::Degrading {
+            peak: p.peak_bw,
+            pivot: p.degrade_pivot,
+            half: p.degrade_half,
+        }
+        .effective(streams);
+        assert!((eff - 21.0 * GB as f64).abs() < 1.0 * GB as f64, "{eff}");
+    }
+}

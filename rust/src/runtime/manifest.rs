@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `manifest.json` records, for every entry point, the artifact file,
+//! input/output shapes and dtypes, plus the full geometry configuration
+//! and the reciprocal-lattice vectors the kernels were traced with.
+//! The Rust HEDM geometry (`hedm::geometry`) mirrors those constants;
+//! an integration test cross-checks them so the detector simulator and
+//! the fitting kernel can never drift apart silently.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one tensor in an entry-point signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered callable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntryPoint {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The geometry configuration the artifacts were traced with
+/// (mirror of python `compile.geometry.Config`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GeomConfig {
+    pub wavelength: f64,
+    pub lattice_a: f64,
+    pub det_dist: f64,
+    pub pixel_size: f64,
+    pub frame: usize,
+    pub omega_steps: usize,
+    pub s_max: usize,
+    pub o_max: usize,
+    pub b_batch: usize,
+    pub omega_weight: f64,
+    pub match_tol: f64,
+    pub dark_frames: usize,
+    pub intensity_threshold: f64,
+    pub log_threshold: f64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: GeomConfig,
+    /// (s_max, 3) reciprocal-lattice vectors as traced.
+    pub gvectors: Vec<[f32; 3]>,
+    pub gvector_mask: Vec<f32>,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .expect("shape")?
+        .as_f64_vec()
+        .ok_or_else(|| anyhow!("bad shape"))?
+        .into_iter()
+        .map(|d| d as usize)
+        .collect();
+    let dtype = v
+        .expect("dtype")?
+        .as_str()
+        .ok_or_else(|| anyhow!("bad dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn num(v: &Json, key: &str) -> Result<f64> {
+    v.expect(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{key}: not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let c = v.expect("config")?;
+        let config = GeomConfig {
+            wavelength: num(c, "wavelength")?,
+            lattice_a: num(c, "lattice_a")?,
+            det_dist: num(c, "det_dist")?,
+            pixel_size: num(c, "pixel_size")?,
+            frame: num(c, "frame")? as usize,
+            omega_steps: num(c, "omega_steps")? as usize,
+            s_max: num(c, "s_max")? as usize,
+            o_max: num(c, "o_max")? as usize,
+            b_batch: num(c, "b_batch")? as usize,
+            omega_weight: num(c, "omega_weight")?,
+            match_tol: num(c, "match_tol")?,
+            dark_frames: num(c, "dark_frames")? as usize,
+            intensity_threshold: num(c, "intensity_threshold")?,
+            log_threshold: num(c, "log_threshold")?,
+        };
+        let gvectors = v
+            .expect("gvectors")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("gvectors: not an array"))?
+            .iter()
+            .map(|row| {
+                let r = row.as_f64_vec().ok_or_else(|| anyhow!("bad gvector row"))?;
+                if r.len() != 3 {
+                    return Err(anyhow!("gvector row len {}", r.len()));
+                }
+                Ok([r[0] as f32, r[1] as f32, r[2] as f32])
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let gvector_mask = v
+            .expect("gvector_mask")?
+            .as_f64_vec()
+            .ok_or_else(|| anyhow!("bad gvector_mask"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect();
+        let mut entry_points = BTreeMap::new();
+        for (name, ep) in v
+            .expect("entry_points")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("entry_points: not an object"))?
+        {
+            let inputs = ep
+                .expect("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ep
+                .expect("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad outputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            entry_points.insert(
+                name.clone(),
+                EntryPoint {
+                    file: ep
+                        .expect("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad file"))?
+                        .to_string(),
+                    sha256: ep
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        if config.s_max != gvectors.len() {
+            return Err(anyhow!(
+                "manifest inconsistent: s_max {} != gvectors {}",
+                config.s_max,
+                gvectors.len()
+            ));
+        }
+        Ok(Manifest { config, gvectors, gvector_mask, entry_points })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"wavelength": 0.172979, "lattice_a": 4.0782,
+                 "det_dist": 250000.0, "pixel_size": 200.0, "frame": 512,
+                 "omega_steps": 360, "s_max": 2, "o_max": 512,
+                 "b_batch": 256, "omega_weight": 4.0, "match_tol": 6.0,
+                 "dark_frames": 8, "intensity_threshold": 80.0,
+                 "log_threshold": 12.0, "log_sigma": 1.2, "log_half": 2},
+      "gvectors": [[1.0, 2.0, 3.0], [-1.0, -2.0, -3.0]],
+      "gvector_mask": [1.0, 1.0],
+      "entry_points": {
+        "f": {"file": "f.hlo.txt", "sha256": "ab",
+              "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+              "outputs": [{"shape": [2], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.frame, 512);
+        assert!((m.config.wavelength - 0.172979).abs() < 1e-12);
+        assert_eq!(m.gvectors.len(), 2);
+        assert_eq!(m.gvectors[1], [-1.0, -2.0, -3.0]);
+        let ep = &m.entry_points["f"];
+        assert_eq!(ep.inputs[0].shape, vec![2, 3]);
+        assert_eq!(ep.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn rejects_inconsistent_smax() {
+        let bad = MINI.replace(r#""s_max": 2"#, r#""s_max": 5"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("{}").is_err());
+        let noconf = MINI.replace(r#""config""#, r#""konfig""#);
+        assert!(Manifest::parse(&noconf).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entry_points.contains_key("fit_orientation"));
+        assert!(m.entry_points.contains_key("reduce_frame"));
+        assert_eq!(m.gvectors.len(), m.config.s_max);
+        let fit = &m.entry_points["fit_orientation"];
+        assert_eq!(fit.inputs[0].shape, vec![m.config.b_batch, 3]);
+    }
+}

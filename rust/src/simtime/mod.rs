@@ -1,0 +1,24 @@
+//! Discrete-event simulation substrate.
+//!
+//! Three building blocks, each independently tested:
+//!
+//! - [`heap`]: a deterministic event heap (ties broken by sequence
+//!   number, so identical runs replay identically).
+//! - [`flownet`]: a flow-level network model with **max-min fair
+//!   sharing** over capacity-constrained links. All bandwidth-shaped
+//!   behaviour in the simulation (GPFS servers, BG/Q I/O-node uplinks,
+//!   torus links, NFS, WAN) is expressed as links; concurrent
+//!   transfers are *flow bundles* (N identical members) so that
+//!   8,192-node collectives cost O(bundles), not O(nodes), per
+//!   recompute.
+//! - [`plan`]: static DAGs of primitive steps (flow / delay / effect)
+//!   used by the MPI collectives and the staging hook; the engine
+//!   executes them with dependency ordering under contention.
+
+pub mod flownet;
+pub mod heap;
+pub mod plan;
+
+pub use flownet::{FlowId, FlowNet, LinkId};
+pub use heap::EventHeap;
+pub use plan::{Effect, Plan, PlanId, Step, StepId};

@@ -1,0 +1,206 @@
+//! Plan DAGs: the unit of work the engine executes under contention.
+//!
+//! An MPI collective, a staging hook invocation, or a cross-lab
+//! transfer is expressed as a [`Plan`]: a DAG of primitive [`Step`]s
+//! (flow-network transfers, fixed delays, instantaneous data-plane
+//! effects). Plans are *pure data* built by plan-builder functions in
+//! `mpisim`/`staging`/`transfer`, which makes the collective algorithms
+//! unit-testable without running the clock: tests assert on the DAG
+//! shape (who reads which stripe, how many rounds the broadcast tree
+//! has) and then on the simulated durations.
+
+use std::sync::Arc;
+
+use crate::pfs::Blob;
+use crate::simtime::flownet::LinkId;
+use crate::units::Duration;
+
+/// Identifies a plan registered with the engine.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct PlanId(pub usize);
+
+/// Identifies a step within its plan.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct StepId(pub usize);
+
+/// Instantaneous data-plane side effect, applied when the step fires.
+#[derive(Clone, Debug)]
+pub enum Effect {
+    /// Create/overwrite a file in the shared parallel filesystem.
+    PfsWrite { path: String, data: Blob },
+    /// Replicate a file into the node-local stores of `nodes`
+    /// (inclusive range) — the RAM-disk write of the staging hook.
+    NodeWrite { nodes: (u32, u32), path: String, data: Blob },
+    /// Deliver an opaque tag to the director (progress notification).
+    Notify(u64),
+}
+
+/// A primitive unit of simulated work.
+#[derive(Clone, Debug)]
+pub enum Step {
+    /// A bundle of `members` identical transfers of `bytes_each` over
+    /// `path`, optionally rate-capped per member (e.g. a torus
+    /// injection port or a per-process RAM-disk stream).
+    Flow {
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        cap_each: f64,
+    },
+    /// A fixed virtual-time delay (compute, service latency).
+    Delay(Duration),
+    /// An instantaneous side effect.
+    Effect(Effect),
+}
+
+/// One node of the plan DAG.
+#[derive(Clone, Debug)]
+pub struct PlanStep {
+    pub step: Step,
+    pub deps: Vec<StepId>,
+    /// Label for metrics/phase attribution (e.g. "staging", "write").
+    pub label: &'static str,
+}
+
+/// A DAG of steps. Executed by `engine::SimCore`; completion is
+/// reported to the director with `tag`.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub steps: Vec<PlanStep>,
+    pub tag: u64,
+}
+
+impl Plan {
+    pub fn new(tag: u64) -> Self {
+        Plan { steps: Vec::new(), tag }
+    }
+
+    /// Append a step depending on `deps`; returns its id.
+    pub fn add(&mut self, step: Step, deps: Vec<StepId>, label: &'static str) -> StepId {
+        for d in &deps {
+            assert!(d.0 < self.steps.len(), "forward dep {d:?}");
+        }
+        self.steps.push(PlanStep { step, deps, label });
+        StepId(self.steps.len() - 1)
+    }
+
+    /// Convenience: uncapped flow step.
+    pub fn flow(
+        &mut self,
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        deps: Vec<StepId>,
+        label: &'static str,
+    ) -> StepId {
+        self.add(
+            Step::Flow { path, members, bytes_each, cap_each: f64::INFINITY },
+            deps,
+            label,
+        )
+    }
+
+    /// Convenience: per-member rate-capped flow step.
+    pub fn flow_capped(
+        &mut self,
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        cap_each: f64,
+        deps: Vec<StepId>,
+        label: &'static str,
+    ) -> StepId {
+        self.add(Step::Flow { path, members, bytes_each, cap_each }, deps, label)
+    }
+
+    pub fn delay(&mut self, dur: Duration, deps: Vec<StepId>, label: &'static str) -> StepId {
+        self.add(Step::Delay(dur), deps, label)
+    }
+
+    pub fn effect(&mut self, e: Effect, deps: Vec<StepId>, label: &'static str) -> StepId {
+        self.add(Step::Effect(e), deps, label)
+    }
+
+    /// A barrier step depending on everything currently in the plan.
+    pub fn barrier(&mut self, label: &'static str) -> StepId {
+        let deps: Vec<StepId> = (0..self.steps.len()).map(StepId).collect();
+        self.delay(Duration::ZERO, deps, label)
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Total bytes moved by all flow steps (members * bytes_each).
+    pub fn total_flow_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match &s.step {
+                Step::Flow { members, bytes_each, .. } => members * bytes_each,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Steps with a given label (for tests/metrics).
+    pub fn steps_labeled(&self, label: &str) -> Vec<StepId> {
+        self.steps
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.label == label)
+            .map(|(i, _)| StepId(i))
+            .collect()
+    }
+}
+
+/// Helper for building `Effect::NodeWrite` blobs.
+pub fn real_blob(data: Vec<u8>) -> Blob {
+    Blob::Real(Arc::new(data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_tracks_deps() {
+        let mut p = Plan::new(7);
+        let a = p.delay(Duration::from_secs(1), vec![], "a");
+        let b = p.delay(Duration::from_secs(2), vec![a], "b");
+        let c = p.barrier("c");
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.steps[b.0].deps, vec![a]);
+        assert_eq!(p.steps[c.0].deps, vec![a, b]);
+        assert_eq!(p.tag, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "forward dep")]
+    fn forward_dep_panics() {
+        let mut p = Plan::new(0);
+        p.delay(Duration::ZERO, vec![StepId(3)], "bad");
+    }
+
+    #[test]
+    fn total_flow_bytes_counts_members() {
+        let mut p = Plan::new(0);
+        p.flow(vec![], 8, 100, vec![], "x");
+        p.flow(vec![], 1, 42, vec![], "y");
+        p.delay(Duration::ZERO, vec![], "z");
+        assert_eq!(p.total_flow_bytes(), 842);
+    }
+
+    #[test]
+    fn steps_labeled_filters() {
+        let mut p = Plan::new(0);
+        p.delay(Duration::ZERO, vec![], "stage");
+        p.delay(Duration::ZERO, vec![], "write");
+        p.delay(Duration::ZERO, vec![], "stage");
+        assert_eq!(p.steps_labeled("stage").len(), 2);
+        assert_eq!(p.steps_labeled("write"), vec![StepId(1)]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Output gathering: the inverse collective of the I/O hook.
+//!
+//! SIV's *Future directions* notes that "the leader hook is a generic
+//! mechanism that may be generalized for more complex functionality";
+//! the obvious second operation — and the one the Related Work section
+//! observes other systems focus on — is the *write* direction:
+//! collecting per-node result files from node-local storage back into
+//! the shared filesystem. Without coordination, 8,192 nodes each
+//! creating result files produce a metadata storm and uncoordinated
+//! small writes; the gather collective mirrors the staged read:
+//!
+//! 1. each leader enumerates its node-local matches (no shared-FS
+//!    metadata touched),
+//! 2. results funnel over the torus to the I/O aggregators,
+//! 3. aggregators issue large coordinated writes and *one* rank
+//!    creates the (few) output files.
+//!
+//! Used by the NF stage-2 driver to collect the per-layer
+//! microstructure shards.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::Topology;
+use crate::mpisim::read_all::n_aggregators;
+use crate::mpisim::Comm;
+use crate::pfs::Blob;
+use crate::simtime::plan::{Effect, Plan, StepId};
+
+/// What a gather resolved and will deliver.
+#[derive(Clone, Debug, Default)]
+pub struct GatherManifest {
+    /// (node-local path, shared-FS destination) per collected file.
+    pub files: Vec<(String, String)>,
+    pub total_bytes: u64,
+}
+
+/// Build the gather plan: collect every node-local file matching
+/// `pattern` (on node `comm.node_lo`'s replica view — gathers follow a
+/// symmetric layout) into `dst_prefix` on the shared filesystem.
+///
+/// `per_node_bytes` is the data contributed by each node (the files
+/// are per-node shards; the data plane stores the canonical shard).
+pub fn gather_plan(
+    plan: &mut Plan,
+    core_nodes: &crate::cluster::NodeStores,
+    topo: &Topology,
+    comm: &Comm,
+    pattern: &str,
+    dst_prefix: &str,
+    deps: Vec<StepId>,
+) -> Result<(GatherManifest, StepId)> {
+    // Leaders enumerate locally (free of shared-FS metadata).
+    let probe_node = comm.node_lo;
+    let mut files = Vec::new();
+    let mut total = 0u64;
+    let mut blobs: Vec<(String, Blob)> = Vec::new();
+    // NodeStores has no glob; enumerate via the canonical replica list.
+    for path in crate::staging::spec_paths(core_nodes, probe_node, pattern) {
+        let blob = core_nodes
+            .read(probe_node, &path)
+            .ok_or_else(|| anyhow!("gather: {path} vanished"))?
+            .clone();
+        let base = path.rsplit('/').next().unwrap_or(&path).to_string();
+        let dst = format!("{}/{}", dst_prefix.trim_end_matches('/'), base);
+        total += blob.len();
+        files.push((path.clone(), dst.clone()));
+        blobs.push((dst, blob));
+    }
+    if files.is_empty() {
+        return Err(anyhow!("gather: no node-local files match {pattern:?}"));
+    }
+
+    let n = comm.nodes() as u64;
+    let per_node_bytes = total; // each node contributes its shard set
+    // Phase 1: funnel shards over the torus to the aggregators.
+    let funnel = plan.flow_capped(
+        topo.path_torus(),
+        n,
+        per_node_bytes,
+        topo.spec.torus_link_bw,
+        deps,
+        "gather-funnel",
+    );
+    // Phase 2: aggregators write large coordinated streams to GPFS.
+    let naggr = n_aggregators(topo, comm);
+    let write = plan.flow(
+        topo.path_coordinated_read(), // same links, write direction
+        naggr,
+        (per_node_bytes * n).div_ceil(naggr),
+        vec![funnel],
+        "gather-write",
+    );
+    // Phase 3: one rank creates the output files (few metadata ops).
+    let meta = plan.flow(topo.path_meta(), 1, files.len() as u64, vec![write], "gather-meta");
+    // Data plane: the shards land in the shared filesystem.
+    let mut last = meta;
+    for (dst, blob) in blobs {
+        last = plan.effect(
+            Effect::PfsWrite { path: dst, data: blob },
+            vec![meta],
+            "gather-write",
+        );
+    }
+    let done = plan.delay(crate::units::Duration::ZERO, vec![last], "gather-write");
+    Ok((GatherManifest { files, total_bytes: total }, done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{bgq, Topology};
+    use crate::engine::SimCore;
+    use crate::pfs::GpfsParams;
+    use crate::units::MB;
+
+    fn setup(nodes: u32) -> (SimCore, Topology) {
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+        let (lo, hi) = (0, nodes - 1);
+        for i in 0..8u64 {
+            core.nodes.write_range(
+                lo,
+                hi,
+                format!("/tmp/out/shard_{i}.bin"),
+                Blob::synthetic(MB, 0x007 + i),
+            );
+        }
+        (core, topo)
+    }
+
+    #[test]
+    fn gather_lands_in_pfs() {
+        let (mut core, topo) = setup(64);
+        let comm = Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        let nodes = std::mem::take(&mut core.nodes);
+        let (manifest, _) = gather_plan(
+            &mut p, &nodes, &topo, &comm, "/tmp/out/*.bin", "/projects/results", vec![],
+        )
+        .unwrap();
+        core.nodes = nodes;
+        core.submit(p);
+        core.run_to_completion();
+        assert_eq!(manifest.files.len(), 8);
+        for i in 0..8u64 {
+            let got = core.pfs.read(&format!("/projects/results/shard_{i}.bin")).unwrap();
+            let want = core.nodes.read(0, &format!("/tmp/out/shard_{i}.bin")).unwrap();
+            assert!(got.same_content(want));
+        }
+    }
+
+    #[test]
+    fn gather_no_match_errors() {
+        let (mut core, topo) = setup(4);
+        let comm = Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        let nodes = std::mem::take(&mut core.nodes);
+        assert!(gather_plan(&mut p, &nodes, &topo, &comm, "/none/*", "/r", vec![]).is_err());
+    }
+
+    #[test]
+    fn gather_time_scales_with_nodes() {
+        let t = |nodes: u32| {
+            let (mut core, topo) = setup(nodes);
+            let comm = Comm::leader(&topo.spec);
+            let mut p = Plan::new(0);
+            let nodes_store = std::mem::take(&mut core.nodes);
+            gather_plan(
+                &mut p, &nodes_store, &topo, &comm, "/tmp/out/*.bin", "/r", vec![],
+            )
+            .unwrap();
+            core.nodes = nodes_store;
+            core.submit(p);
+            core.run_to_completion();
+            core.now.secs_f64()
+        };
+        // More nodes => more total shard bytes through GPFS.
+        assert!(t(1024) > t(64), "gather must cost more at scale");
+    }
+}

@@ -1,0 +1,178 @@
+//! The baseline: uncoordinated per-task input I/O ("the original I/O
+//! approach, in which each task reads input data independently from
+//! GPFS, without the use of collectives" — SVI-B).
+//!
+//! Model, per the paper's measured behaviour:
+//!
+//! - Every worker rank opens the shared files itself and reads its
+//!   node's share of the dataset straight from GPFS. With
+//!   `nodes x ranks_per_node` independent streams the filesystem's
+//!   delivered bandwidth collapses along the degrading server stage
+//!   (21 GB/s at 8,192 x 16 streams, vs 240 GB/s peak).
+//! - There is no separate Write/Read phase: bytes land directly in
+//!   task memory (we still populate the node store so the science
+//!   tasks find their inputs — the data plane is identical, only the
+//!   timing differs).
+//! - Optionally ([`naive_plan_with_glob_storm`]) every rank also runs
+//!   the globs itself — the metadata anti-pattern SIV warns about;
+//!   kept separate because the paper's Fig 11 baseline charges only
+//!   the reads. Used by the ablation bench.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::Topology;
+use crate::mpisim::Comm;
+use crate::pfs::ParallelFs;
+use crate::simtime::plan::{Effect, Plan, StepId};
+use crate::staging::hook::StagedManifest;
+use crate::staging::spec::HookSpec;
+
+/// Build the naive-path plan: every rank of `comm` (the full worker
+/// communicator, not just leaders) pulls the dataset uncoordinated.
+pub fn naive_plan(
+    plan: &mut Plan,
+    pfs: &ParallelFs,
+    topo: &Topology,
+    comm: &Comm,
+    spec: &HookSpec,
+    deps: Vec<StepId>,
+) -> Result<(StagedManifest, StepId)> {
+    build(plan, pfs, topo, comm, spec, deps, false)
+}
+
+/// Naive path *plus* the glob-on-every-rank metadata storm.
+pub fn naive_plan_with_glob_storm(
+    plan: &mut Plan,
+    pfs: &ParallelFs,
+    topo: &Topology,
+    comm: &Comm,
+    spec: &HookSpec,
+    deps: Vec<StepId>,
+) -> Result<(StagedManifest, StepId)> {
+    build(plan, pfs, topo, comm, spec, deps, true)
+}
+
+fn build(
+    plan: &mut Plan,
+    pfs: &ParallelFs,
+    topo: &Topology,
+    comm: &Comm,
+    spec: &HookSpec,
+    deps: Vec<StepId>,
+    glob_storm: bool,
+) -> Result<(StagedManifest, StepId)> {
+    let (transfers, meta_ops) = spec.resolve(pfs);
+    if transfers.is_empty() {
+        return Err(anyhow!("spec matched no files"));
+    }
+    let mut total_bytes = 0u64;
+    let mut blobs = Vec::with_capacity(transfers.len());
+    for t in &transfers {
+        let blob = pfs
+            .read(&t.src)
+            .ok_or_else(|| anyhow!("resolved file vanished: {}", t.src))?
+            .clone();
+        total_bytes += blob.len();
+        blobs.push(blob);
+    }
+
+    let ranks = comm.size();
+
+    // Metadata: every rank opens (at least) its slice of the dataset.
+    // With the glob storm, every rank additionally re-runs the globs.
+    let meta_per_rank = if glob_storm { meta_ops + 1 } else { 1 };
+    let meta = plan.flow(topo.path_meta(), ranks, meta_per_rank, deps, "naive-meta");
+
+    // Uncoordinated reads: node dataset share striped across the
+    // node's ranks (the application-level memory cache means each node
+    // moves the dataset once), but the *stream count* the servers see
+    // is the full rank count — that is what degrades GPFS.
+    let bytes_per_rank = total_bytes.div_ceil(comm.ranks_per_node as u64);
+    let read = plan.flow(
+        topo.path_uncoordinated_read(),
+        ranks,
+        bytes_per_rank,
+        vec![meta],
+        "naive-read",
+    );
+
+    // Data plane: inputs end up accessible on every node (task memory).
+    let (lo, hi) = comm.node_range();
+    let mut last = read;
+    for (t, blob) in transfers.iter().zip(blobs) {
+        last = plan.effect(
+            Effect::NodeWrite { nodes: (lo, hi), path: t.dst.clone(), data: blob },
+            vec![read],
+            "naive-read",
+        );
+    }
+    let done = plan.delay(crate::units::Duration::ZERO, vec![last, read], "naive-read");
+    Ok((StagedManifest { transfers, total_bytes, meta_ops }, done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{bgq, Topology};
+    use crate::engine::SimCore;
+    use crate::pfs::{Blob, GpfsParams};
+    use crate::units::MB;
+
+    fn run_naive(nodes: u32, storm: bool) -> (f64, SimCore) {
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+        for i in 0..64 {
+            core.pfs.write(
+                format!("/data/f{i:03}.bin"),
+                Blob::synthetic(577 * MB / 64, i),
+            );
+        }
+        let spec = HookSpec::parse("broadcast to /tmp/d { /data/*.bin }").unwrap();
+        let comm = Comm::world(&topo.spec);
+        let mut p = Plan::new(0);
+        if storm {
+            naive_plan_with_glob_storm(&mut p, &core.pfs, &topo, &comm, &spec, vec![])
+                .unwrap();
+        } else {
+            naive_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        }
+        core.submit(p);
+        core.run_to_completion();
+        (core.now.secs_f64(), core)
+    }
+
+    #[test]
+    fn paper_number_210s_at_8192_nodes() {
+        // SVI-B: naive input takes ~210 s on 8,192 nodes (21 GB/s
+        // aggregate for 577 MB x 8192 nodes).
+        let (t, _) = run_naive(8192, false);
+        assert!((t - 210.0).abs() < 25.0, "naive@8192 = {t}");
+    }
+
+    #[test]
+    fn naive_is_fine_at_small_scale() {
+        // Below the contention knee the naive path is ION-limited and
+        // competitive — the crossover the paper's scaling implies.
+        let (t, _) = run_naive(64, false);
+        assert!(t < 25.0, "naive@64 = {t}");
+    }
+
+    #[test]
+    fn data_plane_matches_staged_path() {
+        let (_, core) = run_naive(16, false);
+        for i in [0usize, 31, 63] {
+            let orig = core.pfs.read(&format!("/data/f{i:03}.bin")).unwrap();
+            let got = core.nodes.read(7, &format!("/tmp/d/f{i:03}.bin")).unwrap();
+            assert!(got.same_content(orig));
+        }
+    }
+
+    #[test]
+    fn glob_storm_costs_more() {
+        let (plain, _) = run_naive(512, false);
+        let (storm, _) = run_naive(512, true);
+        // 512 x 16 ranks re-running the globs adds ~10 s of metadata
+        // serialisation on top of the bandwidth-bound read.
+        assert!(storm > plain + 8.0, "plain={plain} storm={storm}");
+    }
+}

@@ -1,0 +1,200 @@
+//! The I/O hook specification language (Fig 6).
+//!
+//! The paper's hook is a Tcl fragment evaluated inside the Swift/T
+//! runtime; users write *broadcast definitions* — glob lists targeting
+//! node-local directories — through a high-level wrapper syntax. We
+//! implement the same surface:
+//!
+//! ```text
+//! # stage parameter and layer data to the node-local RAM disk
+//! broadcast to /tmp/hedm {
+//!     /projects/HEDM/params/ps.txt
+//!     /projects/HEDM/layer0/*.bin
+//! }
+//! broadcast to /tmp/pylib {
+//!     /soft/pythonlibs/**.py
+//! }
+//! ```
+//!
+//! `parse` produces [`BroadcastDef`]s; `resolve` (on rank 0 only — the
+//! whole point of SIV's metadata design) expands the globs against
+//! the shared filesystem into a concrete transfer manifest.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::pfs::ParallelFs;
+
+/// One `broadcast to <dir> { patterns... }` block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BroadcastDef {
+    /// Node-local target directory (e.g. `/tmp/hedm`).
+    pub target: String,
+    /// Glob patterns over the shared filesystem.
+    pub patterns: Vec<String>,
+}
+
+/// A parsed hook specification.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HookSpec {
+    pub defs: Vec<BroadcastDef>,
+}
+
+/// A single resolved transfer: shared-FS source -> node-local dest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: String,
+    pub dst: String,
+}
+
+impl HookSpec {
+    /// Parse the Fig 6 surface syntax. Lines starting with `#` are
+    /// comments; whitespace is free-form.
+    pub fn parse(text: &str) -> Result<HookSpec> {
+        let mut defs = Vec::new();
+        let mut tokens = tokenize(text);
+        while let Some(tok) = tokens.next() {
+            match tok.as_str() {
+                "broadcast" => {
+                    let to = tokens.next().ok_or_else(|| anyhow!("expected 'to'"))?;
+                    if to != "to" {
+                        bail!("expected 'to' after 'broadcast', got {to:?}");
+                    }
+                    let target = tokens
+                        .next()
+                        .ok_or_else(|| anyhow!("expected target directory"))?;
+                    if target.starts_with('{') {
+                        bail!("missing target directory before '{{'");
+                    }
+                    let open = tokens.next().ok_or_else(|| anyhow!("expected '{{'"))?;
+                    if open != "{" {
+                        bail!("expected '{{' after target, got {open:?}");
+                    }
+                    let mut patterns = Vec::new();
+                    loop {
+                        let t = tokens.next().ok_or_else(|| anyhow!("unterminated block"))?;
+                        if t == "}" {
+                            break;
+                        }
+                        patterns.push(t);
+                    }
+                    if patterns.is_empty() {
+                        bail!("empty broadcast block for {target:?}");
+                    }
+                    defs.push(BroadcastDef { target, patterns });
+                }
+                other => bail!("unexpected token {other:?} (expected 'broadcast')"),
+            }
+        }
+        if defs.is_empty() {
+            bail!("hook spec contains no broadcast definitions");
+        }
+        Ok(HookSpec { defs })
+    }
+
+    /// Expand globs against the shared filesystem (rank 0 only!).
+    /// Returns the transfer manifest and the number of metadata
+    /// operations the expansion performed (globs + per-match stats),
+    /// which the plan builder charges to the metadata server.
+    pub fn resolve(&self, pfs: &ParallelFs) -> (Vec<Transfer>, u64) {
+        let mut transfers = Vec::new();
+        let mut meta_ops = 0u64;
+        for def in &self.defs {
+            for pat in &def.patterns {
+                meta_ops += 1; // the glob/readdir itself
+                let hits = pfs.glob(pat);
+                meta_ops += hits.len() as u64; // stat per match
+                for src in hits {
+                    let base = src.rsplit('/').next().unwrap_or(&src).to_string();
+                    let dst = format!("{}/{}", def.target.trim_end_matches('/'), base);
+                    transfers.push(Transfer { src, dst });
+                }
+            }
+        }
+        (transfers, meta_ops)
+    }
+
+    /// Total number of patterns across all defs.
+    pub fn pattern_count(&self) -> usize {
+        self.defs.iter().map(|d| d.patterns.len()).sum()
+    }
+}
+
+/// Whitespace tokenizer treating `{` and `}` as standalone tokens and
+/// `#` as a to-end-of-line comment.
+fn tokenize(text: &str) -> impl Iterator<Item = String> + '_ {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or(""))
+        .flat_map(|l| {
+            l.replace('{', " { ")
+                .replace('}', " } ")
+                .split_whitespace()
+                .map(str::to_string)
+                .collect::<Vec<_>>()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::Blob;
+
+    const SPEC: &str = r#"
+        # HEDM staging spec
+        broadcast to /tmp/hedm {
+            /projects/HEDM/params/ps.txt
+            /projects/HEDM/layer0/*.bin
+        }
+        broadcast to /tmp/pylib {
+            /soft/pythonlibs/**.py
+        }
+    "#;
+
+    #[test]
+    fn parses_fig6_style_spec() {
+        let spec = HookSpec::parse(SPEC).unwrap();
+        assert_eq!(spec.defs.len(), 2);
+        assert_eq!(spec.defs[0].target, "/tmp/hedm");
+        assert_eq!(spec.defs[0].patterns.len(), 2);
+        assert_eq!(spec.defs[1].patterns, vec!["/soft/pythonlibs/**.py"]);
+        assert_eq!(spec.pattern_count(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(HookSpec::parse("").is_err());
+        assert!(HookSpec::parse("broadcast /tmp {a}").is_err());
+        assert!(HookSpec::parse("broadcast to /tmp { }").is_err());
+        assert!(HookSpec::parse("broadcast to /tmp { a.txt ").is_err());
+        assert!(HookSpec::parse("stage to /tmp { a }").is_err());
+    }
+
+    #[test]
+    fn resolve_expands_globs_and_counts_meta_ops() {
+        let mut pfs = ParallelFs::new();
+        pfs.write("/projects/HEDM/params/ps.txt", Blob::real(vec![1; 10]));
+        pfs.write("/projects/HEDM/layer0/f0.bin", Blob::real(vec![2; 20]));
+        pfs.write("/projects/HEDM/layer0/f1.bin", Blob::real(vec![3; 20]));
+        pfs.write("/soft/pythonlibs/numpy/core.py", Blob::real(vec![4; 5]));
+        let spec = HookSpec::parse(SPEC).unwrap();
+        let (transfers, meta_ops) = spec.resolve(&pfs);
+        assert_eq!(transfers.len(), 4);
+        assert!(transfers
+            .iter()
+            .any(|t| t.src == "/projects/HEDM/layer0/f1.bin"
+                && t.dst == "/tmp/hedm/f1.bin"));
+        assert!(transfers
+            .iter()
+            .any(|t| t.dst == "/tmp/pylib/core.py"));
+        // 3 globs + 4 stats.
+        assert_eq!(meta_ops, 7);
+    }
+
+    #[test]
+    fn resolve_empty_matches_is_ok() {
+        let pfs = ParallelFs::new();
+        let spec = HookSpec::parse("broadcast to /tmp { /nope/*.bin }").unwrap();
+        let (transfers, meta_ops) = spec.resolve(&pfs);
+        assert!(transfers.is_empty());
+        assert_eq!(meta_ops, 1);
+    }
+}

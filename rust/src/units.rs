@@ -1,0 +1,176 @@
+//! Simulation units: virtual time, byte counts, bandwidths.
+//!
+//! Virtual time is a `u64` nanosecond counter ([`SimTime`]) so event
+//! ordering is exact and runs are bit-reproducible; bandwidth math is
+//! done in `f64` and rounded *up* to the next nanosecond when durations
+//! are materialised (a transfer never finishes early).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Virtual simulation time in nanoseconds since run start.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct SimTime(pub u64);
+
+/// A span of virtual time in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct Duration(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    pub fn from_secs_f64(s: f64) -> Duration {
+        assert!(s >= 0.0 && s.is_finite(), "bad duration {s}");
+        Duration((s * 1e9).ceil() as u64)
+    }
+
+    pub fn from_micros(us: u64) -> Duration {
+        Duration(us * 1_000)
+    }
+
+    pub fn from_millis(ms: u64) -> Duration {
+        Duration(ms * 1_000_000)
+    }
+
+    pub fn from_secs(s: u64) -> Duration {
+        Duration(s * 1_000_000_000)
+    }
+
+    pub fn secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+}
+
+impl Add<Duration> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: Duration) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl AddAssign<Duration> for SimTime {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 += d.0;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = Duration;
+    fn sub(self, rhs: SimTime) -> Duration {
+        Duration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add<Duration> for Duration {
+    type Output = Duration;
+    fn add(self, d: Duration) -> Duration {
+        Duration(self.0 + d.0)
+    }
+}
+
+impl AddAssign<Duration> for Duration {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 += d.0;
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.secs_f64())
+    }
+}
+
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.secs_f64())
+    }
+}
+
+/// Byte-count helpers (binary prefixes for capacities, decimal GB/s for
+/// bandwidth, matching the paper's conventions).
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+
+/// Time to move `bytes` at `bw` bytes/second, rounded up to the ns.
+pub fn transfer_time(bytes: u64, bw: f64) -> Duration {
+    assert!(bw > 0.0, "non-positive bandwidth");
+    Duration::from_secs_f64(bytes as f64 / bw)
+}
+
+/// Pretty-print a byte count ("577.0 MB", "1.5 GiB"-free: decimal units).
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GB {
+        format!("{:.2} GB", b as f64 / GB as f64)
+    } else if b >= MB {
+        format!("{:.1} MB", b as f64 / MB as f64)
+    } else if b >= 1000 {
+        format!("{:.1} KB", b as f64 / 1000.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Pretty-print a bandwidth in GB/s (paper convention).
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= GB as f64 {
+        format!("{:.1} GB/s", bytes_per_sec / GB as f64)
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / MB as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_arithmetic() {
+        let t = SimTime::ZERO + Duration::from_secs(2) + Duration::from_millis(500);
+        assert_eq!(t.0, 2_500_000_000);
+        assert_eq!((t - SimTime(500_000_000)).secs_f64(), 2.0);
+    }
+
+    #[test]
+    fn transfer_rounds_up() {
+        // 1 byte at 3 B/s = 333_333_333.33 ns -> must round UP.
+        let d = transfer_time(1, 3.0);
+        assert_eq!(d.0, 333_333_334);
+    }
+
+    #[test]
+    fn transfer_simple() {
+        assert_eq!(transfer_time(GB, GB as f64), Duration::from_secs(1));
+        assert_eq!(transfer_time(0, 1.0), Duration::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive bandwidth")]
+    fn transfer_zero_bw_panics() {
+        transfer_time(1, 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(577 * MB), "577.0 MB");
+        assert_eq!(fmt_bytes(2 * GB), "2.00 GB");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bw(240.0 * GB as f64), "240.0 GB/s");
+        assert_eq!(fmt_bw(53.4 * MB as f64), "53.4 MB/s");
+    }
+
+    #[test]
+    fn duration_display() {
+        assert_eq!(format!("{}", Duration::from_millis(10_800)), "10.800s");
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal CLI argument parser (offline build: no `clap`).
+//!
+//! Supports the `xstage <subcommand> --flag value --switch` shape the
+//! experiment drivers use. Unknown flags are errors; every flag has a
+//! typed accessor with a default.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch`
+/// flags and positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        Ok(self.u64_or(name, default as u64)? as u32)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated integer list, e.g. `--nodes 512,1024,8192`.
+    pub fn u32_list_or(&self, name: &str, default: &[u32]) -> Result<Vec<u32>> {
+        match self.flag(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig11 --nodes 8192 --verbose --out=path.txt extra");
+        assert_eq!(a.command.as_deref(), Some("fig11"));
+        assert_eq!(a.flag("nodes"), Some("8192"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag("out"), Some("path.txt"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42 --f 2.5 --list 1,2,3");
+        assert_eq!(a.u64_or("n", 0).unwrap(), 42);
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.u32_list_or("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.u32_list_or("nope", &[9]).unwrap(), vec![9]);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n abc");
+        assert!(a.u64_or("n", 0).is_err());
+        assert!(a.u32_list_or("n", &[]).is_err());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("x --dry-run --nodes 4");
+        assert!(a.has("dry-run"));
+        assert_eq!(a.u32_or("nodes", 0).unwrap(), 4);
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny benchmark harness (offline build: no `criterion`).
+//!
+//! Benches are `harness = false` binaries that call [`bench`] /
+//! [`bench_n`] and print a stable, grep-friendly report:
+//!
+//! ```text
+//! bench fig10/nodes=8192 ........ median 1.23 ms  (p10 1.20, p90 1.31, n=40)
+//! ```
+//!
+//! Wall-clock benches of *simulations* measure host time to run the
+//! virtual experiment; the virtual results themselves are printed by
+//! the experiment drivers as paper-vs-measured tables.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub n: usize,
+}
+
+/// Run `f` repeatedly for at least `min_runs` iterations and ~0.5 s,
+/// report median/percentiles of per-iteration seconds.
+pub fn bench_n<F: FnMut()>(name: &str, min_runs: usize, mut f: F) -> Sample {
+    // Warmup.
+    f();
+    let mut times = Vec::new();
+    let budget = std::time::Duration::from_millis(500);
+    let start = Instant::now();
+    while times.len() < min_runs || (start.elapsed() < budget && times.len() < 1000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    let s = Sample {
+        median: pick(0.5),
+        p10: pick(0.1),
+        p90: pick(0.9),
+        n: times.len(),
+    };
+    println!(
+        "bench {name} ... median {}  (p10 {}, p90 {}, n={})",
+        fmt_secs(s.median),
+        fmt_secs(s.p10),
+        fmt_secs(s.p90),
+        s.n
+    );
+    s
+}
+
+/// [`bench_n`] with the default 10 iterations minimum.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Sample {
+    bench_n(name, 10, f)
+}
+
+/// Human duration (s/ms/us/ns).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_sample() {
+        let s = bench_n("test/noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.n >= 5);
+        assert!(s.median >= 0.0 && s.p10 <= s.p90);
+    }
+
+    #[test]
+    fn fmt_covers_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+        assert_eq!(fmt_secs(3.1e-9), "3 ns");
+    }
+}

@@ -1,0 +1,5 @@
+//! In-tree utilities (offline build: no external crates).
+pub mod json;
+pub mod prng;
+pub mod bench;
+pub mod args;

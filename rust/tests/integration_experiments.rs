@@ -1,0 +1,72 @@
+//! Integration: the experiment drivers regenerate every paper result
+//! with the right *shape* (who wins, by what factor, where it
+//! flattens). The precise headline endpoints are asserted in the
+//! modules' own tests; here we check cross-experiment consistency and
+//! that the CLI surfaces behave.
+
+use xstage::experiments::{cache, fig10, fig11, fig12, fig13, reduction};
+use xstage::units::GB;
+
+#[test]
+fn fig10_and_fig11_are_consistent() {
+    // Fig 11's staged end-to-end bandwidth must be below Fig 10's
+    // staging+write bandwidth (it adds the read phase) but within 2x.
+    let (_, stage_bw) = fig10::run_point(8192);
+    let phases = fig11::run_staged(8192);
+    let e2e_bw = 8192.0 * xstage::experiments::DATASET_BYTES as f64 / phases.total_secs;
+    assert!(e2e_bw < stage_bw, "e2e {e2e_bw} must be < staging {stage_bw}");
+    assert!(e2e_bw > stage_bw / 2.0);
+    // And the phase arithmetic must add up.
+    assert!(
+        (phases.stage_write_secs + phases.read_secs - phases.total_secs).abs() < 0.5,
+        "{phases:?}"
+    );
+}
+
+#[test]
+fn headline_factor_between_4_and_6() {
+    let staged = fig11::run_staged(8192).total_secs;
+    let naive = fig11::run_naive(8192);
+    let factor = naive / staged;
+    assert!((4.0..6.0).contains(&factor), "input speedup {factor} (paper: 4.7x)");
+}
+
+#[test]
+fn figure_tables_render_with_all_rows() {
+    let r10 = fig10::run(&[512, 1024]);
+    assert_eq!(r10.table.rows.len(), 2);
+    assert!(r10.table.render().contains("1024"));
+    let r11 = fig11::run(&[512]);
+    assert_eq!(r11.table.rows.len(), 1);
+    let r12 = fig12::run(&[64, 128]);
+    assert_eq!(r12.table.rows.len(), 2);
+    let r13 = fig13::run(&[64, 128]);
+    assert_eq!(r13.table.rows.len(), 2);
+    let red = reduction::run();
+    assert_eq!(red.table.rows.len(), 5);
+    let c = cache::run();
+    assert_eq!(c.table.rows.len(), 2);
+}
+
+#[test]
+fn sweeps_are_deterministic() {
+    let a = fig12::run_point(320, 42);
+    let b = fig12::run_point(320, 42);
+    assert_eq!(a, b);
+    let c = fig12::run_point(320, 43);
+    assert_ne!(a, c, "different seeds must differ");
+}
+
+#[test]
+fn staging_beats_gpfs_peak_at_scale() {
+    // Sanity: no experiment reports more aggregate bandwidth than the
+    // hardware could deliver through its bottleneck layers.
+    let pts = fig10::run(&[8192]);
+    let bw = pts.series_named("staging+write GB/s").unwrap()[0].1;
+    // ION layer ceiling: 64 IONs x 2.1 GB/s = 134.4 GB/s.
+    assert!(bw <= 134.4 + 0.5, "{bw} exceeds the ION ceiling");
+    // Naive never exceeds GPFS peak.
+    let naive = fig11::run_naive(8192);
+    let naive_bw = 8192.0 * xstage::experiments::DATASET_BYTES as f64 / naive;
+    assert!(naive_bw <= 240.0 * GB as f64);
+}

@@ -1,0 +1,143 @@
+//! Integration: the full HEDM numeric pipeline through the AOT
+//! artifacts — detector frames in, verified grain orientations out.
+//! These are the paper's scientific workflows run end to end on real
+//! pixels (skipped gracefully before `make artifacts`; the native
+//! fallbacks are covered by unit tests).
+
+use xstage::hedm::ccl::{find_peaks, parse_peaks_text, peaks_to_text};
+use xstage::hedm::detector::{render_dark, render_frame, Layer, NoiseModel};
+use xstage::hedm::fit::{fit_orientation, ArtifactScorer, ScanCfg};
+use xstage::hedm::geometry::{simulate_spots, spot_overlap, Geom, Spot};
+use xstage::hedm::reduce::{dark_median_native, reduce_frame_artifact};
+use xstage::runtime::Runtime;
+use xstage::util::prng::Pcg64;
+
+macro_rules! require_artifacts {
+    () => {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+/// Render + reduce (PJRT) + CCL one grain's scan into observed spots.
+fn stage1_artifact(rt: &mut Runtime, geom: &Geom, spots: &[Spot], seed: u64) -> Vec<Spot> {
+    let noise = NoiseModel::default();
+    let mut rng = Pcg64::new(seed);
+    let darks: Vec<Vec<f32>> =
+        (0..4).map(|_| render_dark(geom, &noise, &mut rng)).collect();
+    let dark = dark_median_native(&darks);
+    let w = 360.0 / geom.omega_steps as f64;
+    let mut observed = Vec::new();
+    for step in 0..geom.omega_steps {
+        let frame = render_frame(spots, geom, &noise, step, &mut rng);
+        let red = reduce_frame_artifact(rt, &frame, &dark).unwrap();
+        if red.count == 0 {
+            continue;
+        }
+        let omega = -180.0 + (step as f64 + 0.5) * w;
+        for p in find_peaks(&red.mask, &red.sub, geom.frame, 2) {
+            observed.push(Spot { u: p.u, v: p.v, omega_deg: omega });
+        }
+    }
+    observed
+}
+
+#[test]
+fn frames_to_orientation_roundtrip() {
+    require_artifacts!();
+    let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+    let geom = Geom::from_manifest(&rt.manifest.config);
+    let layer = Layer::synthesize(1, geom, 77);
+    let truth = layer.grains[0].euler;
+
+    // Stage 1: frames -> spots. Centroids must track the forward model.
+    let obs = stage1_artifact(&mut rt, &geom, &layer.grains[0].spots, 7);
+    assert!(
+        obs.len() as f64 >= 0.85 * layer.grains[0].spots.len() as f64,
+        "stage 1 recovered {}/{} spots",
+        obs.len(),
+        layer.grains[0].spots.len()
+    );
+    for o in obs.iter().take(8) {
+        let nearest = layer.grains[0]
+            .spots
+            .iter()
+            .map(|s| ((s.u - o.u).powi(2) + (s.v - o.v).powi(2)).sqrt())
+            .fold(f64::INFINITY, f64::min);
+        assert!(nearest < 1.5, "centroid {nearest} px from truth");
+    }
+
+    // The stage-1 text artifact round-trips.
+    let peaks = find_peaks(
+        &vec![1.0; 4],
+        &vec![2.0; 4],
+        2,
+        1,
+    );
+    let text = peaks_to_text(&peaks, 0.0);
+    assert_eq!(parse_peaks_text(&text).len(), peaks.len());
+
+    // Stage 2: spots -> orientation, via the PJRT fit kernel.
+    let fit = {
+        let mut scorer = ArtifactScorer::new(&mut rt, &obs);
+        fit_orientation(&mut scorer, &ScanCfg::default()).unwrap()
+    };
+    assert!(fit.confidence > 0.8, "confidence {}", fit.confidence);
+    let overlap = spot_overlap(
+        &simulate_spots(fit.euler, &geom),
+        &simulate_spots(truth, &geom),
+        &geom,
+    );
+    assert!(overlap > 0.9, "recovered pattern overlap {overlap}");
+}
+
+#[test]
+fn peak_search_artifact_matches_ccl_peak_count() {
+    require_artifacts!();
+    let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+    let n = rt.manifest.config.frame;
+    // A mask+intensity with 5 well-separated blobs.
+    let mut inten = vec![0f32; n * n];
+    for i in 0..5 {
+        xstage::hedm::detector::splat(
+            &mut inten,
+            n,
+            60.0 + 80.0 * i as f64,
+            200.0 + 30.0 * i as f64,
+            500.0,
+            1.5,
+        );
+    }
+    let mask: Vec<f32> = inten.iter().map(|&v| if v > 50.0 { 1.0 } else { 0.0 }).collect();
+    let outs = rt
+        .call(
+            "peak_search",
+            &[
+                xstage::runtime::TensorF32::new(vec![n, n], mask.clone()),
+                xstage::runtime::TensorF32::new(vec![n, n], inten.clone()),
+            ],
+        )
+        .unwrap();
+    let artifact_peaks = outs[0].data.iter().filter(|&&v| v > 0.5).count();
+    let ccl_peaks = find_peaks(&mask, &inten, n, 2).len();
+    assert_eq!(ccl_peaks, 5);
+    assert_eq!(artifact_peaks, 5, "peak_search artifact found {artifact_peaks}");
+}
+
+#[test]
+fn two_grain_frames_index_both() {
+    require_artifacts!();
+    let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
+    let geom = Geom::from_manifest(&rt.manifest.config);
+    let layer = Layer::synthesize(2, geom, 88);
+    // FF mode: both grains' spots mixed on the detector.
+    let all: Vec<Spot> = layer.all_spots();
+    let obs = stage1_artifact(&mut rt, &geom, &all, 9);
+    let cfg = xstage::hedm::ff::IndexCfg { max_grains: 4, ..Default::default() };
+    let grains = xstage::hedm::ff::index_grains_artifact(&mut rt, &obs, &cfg).unwrap();
+    let truth: Vec<[f64; 3]> = layer.grains.iter().map(|g| g.euler).collect();
+    let recovered = xstage::hedm::ff::count_recovered(&grains, &truth, &geom);
+    assert_eq!(recovered, 2, "recovered {recovered}/2 grains from mixed frames");
+}

@@ -1,0 +1,154 @@
+//! Integration: the staging hook and the naive baseline against the
+//! full simulated machine — data-plane equivalence, timing shape, and
+//! bit-reproducibility.
+
+use xstage::cluster::{bgq, Topology};
+use xstage::engine::SimCore;
+use xstage::mpisim::Comm;
+use xstage::pfs::{Blob, GpfsParams};
+use xstage::simtime::plan::Plan;
+use xstage::staging::{naive_plan, read_phase, staged_plan, HookSpec};
+use xstage::units::MB;
+
+fn setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
+    let mut core = SimCore::new();
+    let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+    for i in 0..32u64 {
+        core.pfs.write(
+            format!("/projects/run/f{i:03}.bin"),
+            Blob::synthetic(4 * MB, 0xC0FFEE + i),
+        );
+    }
+    // Also a real-bytes file to checksum exactly.
+    core.pfs.write(
+        "/projects/run/params.txt",
+        Blob::real((0..=255u8).cycle().take(100_000).collect()),
+    );
+    let spec = HookSpec::parse("broadcast to /tmp/run { /projects/run/* }").unwrap();
+    (core, topo, spec)
+}
+
+#[test]
+fn staged_and_naive_deliver_identical_data() {
+    let run = |staged: bool| {
+        let (mut core, topo, spec) = setup(32);
+        let mut p = Plan::new(0);
+        if staged {
+            let comm = Comm::leader(&topo.spec);
+            staged_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        } else {
+            let comm = Comm::world(&topo.spec);
+            naive_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        }
+        core.submit(p);
+        core.run_to_completion();
+        core
+    };
+    let s = run(true);
+    let n = run(false);
+    // Every node holds identical content either way.
+    for node in [0u32, 15, 31] {
+        for i in 0..32 {
+            let path = format!("/tmp/run/f{i:03}.bin");
+            let a = s.nodes.read(node, &path).expect("staged replica");
+            let b = n.nodes.read(node, &path).expect("naive replica");
+            assert!(a.same_content(b), "{path} differs on node {node}");
+        }
+        let a = s.nodes.read(node, "/tmp/run/params.txt").unwrap();
+        assert_eq!(
+            a.to_bytes(),
+            (0..=255u8).cycle().take(100_000).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn simulation_is_bit_reproducible() {
+    let run = || {
+        let (mut core, topo, spec) = setup(256);
+        let leader = Comm::leader(&topo.spec);
+        let world = Comm::world(&topo.spec);
+        let mut p = Plan::new(0);
+        let (m, done) =
+            staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+        read_phase(&mut p, &topo, &world, m.total_bytes, vec![done]);
+        core.submit(p);
+        core.run_to_completion();
+        (core.now, core.events_processed)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "identical runs must produce identical clocks");
+}
+
+#[test]
+fn staged_beats_naive_at_scale_but_not_small() {
+    let time = |nodes: u32, staged: bool| {
+        let (mut core, topo, spec) = setup(nodes);
+        let mut p = Plan::new(0);
+        if staged {
+            let leader = Comm::leader(&topo.spec);
+            let world = Comm::world(&topo.spec);
+            let (m, done) =
+                staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+            read_phase(&mut p, &topo, &world, m.total_bytes, vec![done]);
+        } else {
+            let comm = Comm::world(&topo.spec);
+            naive_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        }
+        core.submit(p);
+        core.run_to_completion();
+        core.now.secs_f64()
+    };
+    // At 8K nodes the hook wins decisively.
+    let s8k = time(8192, true);
+    let n8k = time(8192, false);
+    assert!(n8k > 1.5 * s8k, "at 8K: staged {s8k}, naive {n8k}");
+    // At 64 nodes there is no contention to win against (naive may
+    // even be faster since it skips the write+read detour).
+    let s64 = time(64, true);
+    let n64 = time(64, false);
+    assert!(n64 < 2.0 * s64, "at 64: staged {s64}, naive {n64}");
+}
+
+#[test]
+fn hook_metadata_cost_is_constant_in_ranks() {
+    // The hook's glob runs once regardless of allocation size; naive
+    // metadata grows with ranks.
+    let meta_phase = |nodes: u32| {
+        let (mut core, topo, spec) = setup(nodes);
+        let leader = Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+        core.submit(p);
+        core.run_to_completion();
+        core.metrics.phase_span("glob").unwrap().secs_f64()
+    };
+    let small = meta_phase(64);
+    let large = meta_phase(4096);
+    assert!((small - large).abs() < 1e-9, "glob cost must not scale: {small} vs {large}");
+}
+
+#[test]
+fn restaging_overwrites_cleanly() {
+    let (mut core, topo, spec) = setup(16);
+    let leader = Comm::leader(&topo.spec);
+    let mut p = Plan::new(0);
+    staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    // New data arrives (next layer); restage the same paths.
+    for i in 0..32u64 {
+        core.pfs.write(
+            format!("/projects/run/f{i:03}.bin"),
+            Blob::synthetic(4 * MB, 0xBEEF00 + i),
+        );
+    }
+    let mut p = Plan::new(1);
+    staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    let orig = core.pfs.read("/projects/run/f007.bin").unwrap();
+    let replica = core.nodes.read(9, "/tmp/run/f007.bin").unwrap();
+    assert!(replica.same_content(orig), "restaged replica must be the new data");
+}
