@@ -9,6 +9,8 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 
+use std::collections::VecDeque;
+
 use xstage::cluster::{bgq, orthros, Topology};
 use xstage::dataflow::graph::{Task, TaskGraph};
 use xstage::dataflow::sched::{run_workflow, SchedulerCfg};
@@ -19,10 +21,10 @@ use xstage::hedm::fit::{ArtifactScorer, Scorer};
 use xstage::hedm::geometry::simulate_spots;
 use xstage::mpisim::Comm;
 use xstage::pfs::{Blob, GpfsParams, ParallelFs};
-use xstage::simtime::flownet::{Capacity, FlowNet};
+use xstage::simtime::flownet::{Capacity, FlowId, FlowNet, LinkId, ThroughputMode};
 use xstage::simtime::plan::Plan;
 use xstage::units::{Duration, GB, MB};
-use xstage::util::bench::{bench, bench_n, section};
+use xstage::util::bench::{bench, bench_n, section, smoke};
 use xstage::util::prng::Pcg64;
 
 fn bench_engine_events() {
@@ -53,9 +55,71 @@ fn bench_flownet() {
             let path = vec![links[i % 8], links[(i + 3) % 8]];
             net.start(path, 1 + rng.below(8192), GB);
         }
+        // force_recompute: a plain recompute() is dirty-gated and would
+        // no-op after the first iteration.
         bench_n(&format!("flownet/recompute-{bundles}-bundles"), 20, || {
-            net.recompute();
+            net.force_recompute();
         });
+    }
+}
+
+/// The high-churn scenario the incremental model exists for: many
+/// link-disjoint components (independent beamline pipelines, detector
+/// streams, task farms), with starts/completions landing in one
+/// component at a time. The slow model re-waterfills *everything* per
+/// change; the fast model touches only the dirty component, so the
+/// per-op cost is independent of how many other components exist.
+fn bench_flownet_churn() {
+    section("L3: flow-network churn — component-scoped vs global recompute");
+    let ncomps = 64usize;
+    let flows_per = 4usize;
+    let ops_per_iter = 100usize;
+
+    let run = |mode: ThroughputMode| {
+        let mut net = FlowNet::with_mode(mode);
+        let links: Vec<LinkId> = (0..ncomps)
+            .map(|i| net.add_link(format!("grp{i}"), Capacity::Fixed(10.0 * GB as f64)))
+            .collect();
+        let mut queue: VecDeque<(usize, FlowId)> = VecDeque::new();
+        for (c, &l) in links.iter().enumerate() {
+            for m in 0..flows_per {
+                queue.push_back((c, net.start(vec![l], 1 + m as u64, GB)));
+            }
+        }
+        net.recompute();
+        let name = format!(
+            "flownet/churn-{ncomps}x{flows_per}-{}",
+            match mode {
+                ThroughputMode::Slow => "slow",
+                ThroughputMode::Fast => "fast",
+            }
+        );
+        bench_n(&name, 10, || {
+            // Steady-state churn: complete the oldest flow, start a
+            // replacement in the same component, settle.
+            for _ in 0..ops_per_iter {
+                let (c, id) = queue.pop_front().unwrap();
+                net.complete(id);
+                let fresh = net.start(vec![links[c]], 1, GB);
+                net.recompute();
+                queue.push_back((c, fresh));
+            }
+        })
+    };
+
+    let slow = run(ThroughputMode::Slow);
+    let fast = run(ThroughputMode::Fast);
+    let speedup = slow.median / fast.median;
+    println!(
+        "  -> {ncomps} components x {flows_per} flows: fast is {speedup:.1}x \
+         the slow (global) model per churn op"
+    );
+    if !smoke() {
+        assert!(
+            speedup >= 5.0,
+            "component-scoped recompute must beat the global pass >=5x \
+             on {ncomps} independent components (got {speedup:.1}x)"
+        );
     }
 }
 
@@ -179,6 +243,7 @@ fn bench_cluster_farm() {
 fn main() {
     bench_engine_events();
     bench_flownet();
+    bench_flownet_churn();
     bench_scheduler();
     bench_staging_sim();
     bench_glob();

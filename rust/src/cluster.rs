@@ -24,7 +24,7 @@
 //!   allocation size; we model it as a per-process rate cap.
 
 use crate::pfs::{Blob, GpfsParams};
-use crate::simtime::flownet::{Capacity, FlowNet, LinkId};
+use crate::simtime::flownet::{Capacity, FlowNet, LinkClass, LinkId};
 use crate::units::{GB, MB};
 
 /// Hardware description of one machine.
@@ -132,29 +132,43 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Create links for `spec` + `gpfs` in `net`.
+    /// Create links for `spec` + `gpfs` in `net`. Each link declares
+    /// its machine layer ([`LinkClass`]) at construction, so the flow
+    /// network's component tracking and contention diagnostics can
+    /// attribute load without string-matching names.
     pub fn build(spec: MachineSpec, gpfs: GpfsParams, net: &mut FlowNet) -> Topology {
-        let pfs_backplane = net.add_link("pfs.backplane", Capacity::Fixed(gpfs.peak_bw));
-        let pfs_disk = net.add_link(
+        let pfs_backplane = net.add_link_classed(
+            "pfs.backplane",
+            Capacity::Fixed(gpfs.peak_bw),
+            LinkClass::Backplane,
+        );
+        let pfs_disk = net.add_link_classed(
             "pfs.disk",
             Capacity::Degrading {
                 peak: gpfs.peak_bw,
                 pivot: gpfs.degrade_pivot,
                 half: gpfs.degrade_half,
             },
+            LinkClass::Disk,
         );
-        let pfs_meta = net.add_link("pfs.meta", Capacity::Fixed(gpfs.meta_ops_per_sec));
+        let pfs_meta = net.add_link_classed(
+            "pfs.meta",
+            Capacity::Fixed(gpfs.meta_ops_per_sec),
+            LinkClass::Meta,
+        );
         let ion_layer = if spec.nodes_per_ion > 0 {
-            Some(net.add_link(
+            Some(net.add_link_classed(
                 "ion.layer",
                 Capacity::Fixed(spec.n_ions() as f64 * spec.ion_bw),
+                LinkClass::Ion,
             ))
         } else {
             None
         };
-        let torus = net.add_link(
+        let torus = net.add_link_classed(
             "torus.bisection",
             Capacity::Fixed(spec.nodes as f64 * spec.torus_link_bw),
+            LinkClass::Interconnect,
         );
         Topology { spec, gpfs, pfs_backplane, pfs_disk, pfs_meta, ion_layer, torus }
     }

@@ -451,6 +451,39 @@ mod tests {
     }
 
     #[test]
+    fn throughput_models_agree_on_makespan() {
+        // A contended workload (every task reads from the shared FS
+        // through the degrading uncoordinated path) must produce the
+        // same makespan under the global and the component-incremental
+        // throughput models.
+        let run = |mode: crate::simtime::flownet::ThroughputMode| {
+            let mut core = SimCore::with_mode(mode);
+            let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+            let comm = Comm::world(&topo.spec);
+            core.pfs.write("/data/shared.bin", Blob::synthetic(64 * MB, 9));
+            let mut g = TaskGraph::new();
+            let mut rng = crate::util::prng::Pcg64::new(11);
+            g.foreach(400, |i| {
+                Task::compute(
+                    format!("t{i}"),
+                    Duration::from_secs_f64(rng.log_uniform(1.0, 20.0)),
+                )
+                .with_input("/data/shared.bin", None)
+                .with_output(MB)
+            });
+            run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default())
+                .makespan
+                .secs_f64()
+        };
+        let slow = run(crate::simtime::flownet::ThroughputMode::Slow);
+        let fast = run(crate::simtime::flownet::ThroughputMode::Fast);
+        assert!(
+            (slow - fast).abs() < 1e-5,
+            "makespan diverged: slow {slow} vs fast {fast}"
+        );
+    }
+
+    #[test]
     fn bgq_scale_task_farm_is_tractable() {
         // 100K grid points on 512 BG/Q nodes (8,192 ranks): the engine
         // must handle this in well under a second of host time.

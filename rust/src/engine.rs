@@ -14,7 +14,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::cluster::NodeStores;
 use crate::metrics::Metrics;
 use crate::pfs::ParallelFs;
-use crate::simtime::flownet::{FlowId, FlowNet};
+use crate::simtime::flownet::{CompId, FlowId, FlowNet, ThroughputMode};
 use crate::simtime::heap::EventHeap;
 use crate::simtime::plan::{Effect, Plan, PlanId, Step};
 use crate::units::{Duration, SimTime};
@@ -44,8 +44,11 @@ impl Director for NullDirector {
 
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 enum Ev {
-    /// Re-examine flow completions; valid only if `epoch` is current.
-    FlowCheck { epoch: u64 },
+    /// Look for drained flows in one network component. Component ids
+    /// are never reused, so a check whose component has since been
+    /// invalidated is stale and ignored — unrelated components' checks
+    /// stay valid in the heap (no global epoch).
+    FlowCheck { comp: CompId },
     /// A `Step::Delay` finished.
     StepDone { plan: u32, step: u32 },
     /// Director timer.
@@ -80,16 +83,21 @@ pub struct SimCore {
     flow_owner: HashMap<FlowId, (u32, u32)>,
     pending: VecDeque<Notice>,
     last_net_update: SimTime,
-    net_dirty: bool,
     /// Total events processed (perf telemetry).
     pub events_processed: u64,
 }
 
 impl SimCore {
     pub fn new() -> Self {
+        SimCore::with_mode(ThroughputMode::Fast)
+    }
+
+    /// A core whose flow network runs the given throughput model
+    /// (`Slow` is the reference oracle for differential tests).
+    pub fn with_mode(mode: ThroughputMode) -> Self {
         SimCore {
             now: SimTime::ZERO,
-            net: FlowNet::new(),
+            net: FlowNet::with_mode(mode),
             pfs: ParallelFs::new(),
             nodes: NodeStores::new(),
             metrics: Metrics::new(),
@@ -98,7 +106,6 @@ impl SimCore {
             flow_owner: HashMap::new(),
             pending: VecDeque::new(),
             last_net_update: SimTime::ZERO,
-            net_dirty: false,
             events_processed: 0,
         }
     }
@@ -174,28 +181,19 @@ impl SimCore {
 
     fn handle(&mut self, ev: Ev) {
         match ev {
-            Ev::FlowCheck { epoch } => {
-                if epoch != self.net.epoch {
-                    return; // stale: rates changed since scheduling
-                }
+            Ev::FlowCheck { comp } => {
                 self.advance_net();
-                // Complete every flow that has drained (ties complete
-                // together at this timestamp).
-                let done: Vec<FlowId> = self
-                    .flow_owner
-                    .keys()
-                    .copied()
-                    .filter(|f| !self.net.is_done(*f) && self.net.remaining_each(*f) <= 0.5)
-                    .collect();
-                // Deterministic order.
-                let mut done = done;
-                done.sort();
-                for f in done {
+                // Drained flows of this component only (sorted; ties
+                // complete together at this timestamp). A stale check —
+                // the component was invalidated after scheduling —
+                // returns nothing and costs O(1). Eager completion here
+                // (including instantaneous infinite-rate flows) keeps
+                // every check bounded: nothing is ever re-reported.
+                for f in self.net.check(comp) {
                     self.net.complete(f);
                     let (p, s) = self.flow_owner.remove(&f).expect("unowned flow");
                     self.complete_step(p, s);
                 }
-                self.net_dirty = true;
             }
             Ev::StepDone { plan, step } => {
                 self.complete_step(plan, step);
@@ -215,17 +213,17 @@ impl SimCore {
         self.last_net_update = self.now;
     }
 
-    /// If the active flow set changed, recompute fair shares and
-    /// reschedule the completion check.
+    /// If the active flow set changed, recompute fair shares for the
+    /// dirty components and schedule their completion checks.
+    /// Untouched components keep their already-scheduled checks.
     fn settle_network(&mut self) {
-        if !self.net_dirty {
+        if !self.net.is_dirty() {
             return;
         }
         self.advance_net();
-        self.net.recompute();
-        self.net_dirty = false;
-        if let Some((t, _)) = self.net.next_completion(self.now) {
-            self.heap.push(t, Ev::FlowCheck { epoch: self.net.epoch });
+        for check in self.net.settle_checks() {
+            debug_assert!(check.at >= self.now, "check scheduled in the past");
+            self.heap.push(check.at, Ev::FlowCheck { comp: check.comp });
         }
     }
 
@@ -245,7 +243,6 @@ impl SimCore {
                     self.advance_net();
                     let f = self.net.start_capped(path, members, bytes_each, cap_each);
                     self.flow_owner.insert(f, (plan, step));
-                    self.net_dirty = true;
                 }
             }
             Step::Delay(d) => {

@@ -18,7 +18,9 @@
 //!
 //! ## Layer map (see DESIGN.md)
 //!
-//! - [`simtime`] — event heap, max-min fair-share flow network, plan DAGs
+//! - [`simtime`] — event heap, max-min fair-share flow network (slow
+//!   reference + fast component-incremental throughput models behind
+//!   `flownet::ThroughputModel`), plan DAGs
 //! - [`engine`] — the simulation core executing plans over a machine
 //! - [`pfs`] — GPFS-like parallel filesystem (striping, metadata server)
 //! - [`cluster`] — BG/Q and Orthros machine models (torus, I/O nodes,
@@ -31,7 +33,8 @@
 //!   load balancing, the worker-local input cache
 //! - [`hedm`] — the science: detector simulator, stage-1 reduction,
 //!   connected components, NF/FF stage-2 orientation fitting/indexing
-//! - [`runtime`] — PJRT executor for the AOT artifacts
+//! - [`runtime`] — PJRT executor for the AOT artifacts (behind the
+//!   `pjrt-artifacts` feature; a graceful stub otherwise)
 //! - [`transfer`] / [`catalog`] — Globus-like transfer + metadata catalog
 //! - [`metrics`] — phase accounting and report tables
 //! - [`experiments`] — one driver per paper table/figure

@@ -9,23 +9,32 @@
 //! the PJRT CPU client, cache the executables, and expose typed f32
 //! call helpers to the HEDM leaf tasks. Python never runs at request
 //! time.
+//!
+//! **Feature gating.** The PJRT execution path needs the `xla` FFI
+//! bindings and sits behind the `pjrt-artifacts` cargo feature. The
+//! default build substitutes [`stub::Runtime`], whose `load` fails
+//! with a clear message and whose `artifacts_available` is always
+//! false — every artifact-dependent test, bench, and example already
+//! guards on `Runtime::artifacts_available()` and skips gracefully, so
+//! `cargo test -q` passes on a fresh checkout with no AOT artifacts
+//! and no PJRT plugin. The manifest parser stays unconditional: it is
+//! pure JSON and the geometry cross-checks rely on it.
 
 pub mod manifest;
 
 pub use manifest::{EntryPoint, Manifest};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt-artifacts")]
+mod pjrt;
+#[cfg(feature = "pjrt-artifacts")]
+pub use pjrt::Runtime;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "pjrt-artifacts"))]
+mod stub;
+#[cfg(not(feature = "pjrt-artifacts"))]
+pub use stub::Runtime;
 
-/// A loaded artifact set + PJRT client with compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+use std::path::PathBuf;
 
 /// An f32 tensor (shape + row-major data) crossing the FFI boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -56,123 +65,16 @@ impl TensorF32 {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
 }
 
-impl Runtime {
-    /// Load the artifact directory (does not compile anything yet;
-    /// executables compile lazily on first call and are cached).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, executables: HashMap::new() })
-    }
-
-    /// The conventional artifact location relative to the repo root.
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from(
-            std::env::var("XSTAGE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
-        )
-    }
-
-    /// True if an artifact set exists at the default location (tests
-    /// use this to skip gracefully before `make artifacts`).
-    pub fn artifacts_available() -> bool {
-        Self::default_dir().join("manifest.json").exists()
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let ep = self
-                .manifest
-                .entry_points
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown entry point {name:?}"))?;
-            let path = self.dir.join(&ep.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.executables.insert(name.to_string(), exe);
-        }
-        Ok(&self.executables[name])
-    }
-
-    /// Execute entry point `name` with f32 inputs; returns the f32
-    /// outputs in manifest order. Shapes are validated against the
-    /// manifest before dispatch.
-    pub fn call(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let ep = self
-            .manifest
-            .entry_points
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown entry point {name:?}"))?
-            .clone();
-        if inputs.len() != ep.inputs.len() {
-            return Err(anyhow!(
-                "{name}: expected {} inputs, got {}",
-                ep.inputs.len(),
-                inputs.len()
-            ));
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&ep.inputs).enumerate() {
-            if t.shape != spec.shape {
-                return Err(anyhow!(
-                    "{name}: input {i} shape {:?} != manifest {:?}",
-                    t.shape,
-                    spec.shape
-                ));
-            }
-        }
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(TensorF32::to_literal)
-            .collect::<Result<_>>()?;
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != ep.outputs.len() {
-            return Err(anyhow!(
-                "{name}: got {} outputs, manifest says {}",
-                parts.len(),
-                ep.outputs.len()
-            ));
-        }
-        let mut outs = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&ep.outputs) {
-            let data = lit.to_vec::<f32>()?;
-            outs.push(TensorF32::new(spec.shape.clone(), data));
-        }
-        Ok(outs)
-    }
+/// The conventional artifact location relative to the repo root.
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(std::env::var("XSTAGE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Skip when `make artifacts` has not run (unit tests must pass on
-    /// a fresh checkout; integration coverage runs post-artifacts).
-    macro_rules! require_artifacts {
-        () => {
-            if !Runtime::artifacts_available() {
-                eprintln!("skipping: run `make artifacts` first");
-                return;
-            }
-        };
-    }
 
     #[test]
     fn tensor_shape_validation() {
@@ -187,45 +89,5 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn tensor_bad_shape_panics() {
         TensorF32::new(vec![2, 3], vec![0.0; 5]);
-    }
-
-    #[test]
-    fn smoke_addmul_roundtrip() {
-        require_artifacts!();
-        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
-        let x = TensorF32::scalar_vec(vec![1.0, 2.0, 3.0, 4.0]);
-        let y = TensorF32::scalar_vec(vec![10.0, 20.0, 30.0, 40.0]);
-        let outs = rt.call("smoke_addmul", &[x, y]).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].data, vec![11.0, 22.0, 33.0, 44.0]);
-        assert_eq!(outs[1].data, vec![10.0, 40.0, 90.0, 160.0]);
-    }
-
-    #[test]
-    fn call_rejects_wrong_arity_and_shape() {
-        require_artifacts!();
-        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
-        let x = TensorF32::scalar_vec(vec![1.0; 4]);
-        assert!(rt.call("smoke_addmul", &[x.clone()]).is_err());
-        let bad = TensorF32::scalar_vec(vec![1.0; 5]);
-        assert!(rt.call("smoke_addmul", &[x.clone(), bad]).is_err());
-        let y = TensorF32::scalar_vec(vec![1.0; 4]);
-        assert!(rt
-            .call("no_such_entry", &[x, y])
-            .unwrap_err()
-            .to_string()
-            .contains("unknown entry point"));
-    }
-
-    #[test]
-    fn executables_are_cached() {
-        require_artifacts!();
-        let mut rt = Runtime::load(Runtime::default_dir()).unwrap();
-        let x = TensorF32::scalar_vec(vec![0.0; 4]);
-        let y = TensorF32::scalar_vec(vec![0.0; 4]);
-        rt.call("smoke_addmul", &[x.clone(), y.clone()]).unwrap();
-        assert_eq!(rt.executables.len(), 1);
-        rt.call("smoke_addmul", &[x, y]).unwrap();
-        assert_eq!(rt.executables.len(), 1);
     }
 }

@@ -1,0 +1,73 @@
+//! Default (feature-off) runtime: the same API surface as
+//! [`super::pjrt::Runtime`], with every load refused up front.
+//!
+//! Built without `--features pjrt-artifacts` there is no PJRT client,
+//! so [`Runtime::artifacts_available`] is unconditionally false —
+//! which is the signal all artifact-dependent tests, benches, and
+//! examples already use to skip — and [`Runtime::load`] explains how
+//! to enable the real path instead of failing somewhere inside FFI.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+use super::TensorF32;
+
+/// Stub artifact runtime; see module docs. Never constructible
+/// (`load` always fails) — the `manifest` field exists because
+/// callers like `hedm::fit::ArtifactScorer` compile against it.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `pjrt-artifacts`
+    /// feature, so there is no PJRT client to execute artifacts with.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Err(anyhow!(
+            "cannot load artifacts from {}: xstage was built without the \
+             `pjrt-artifacts` feature (rebuild with `--features pjrt-artifacts` \
+             and a real `xla` dependency to execute AOT artifacts)",
+            dir.as_ref().display()
+        ))
+    }
+
+    /// The conventional artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifact_dir()
+    }
+
+    /// Always false without the `pjrt-artifacts` feature; tests and
+    /// benches guard on this and skip.
+    pub fn artifacts_available() -> bool {
+        false
+    }
+
+    pub fn platform(&self) -> String {
+        "none (pjrt-artifacts feature disabled)".to_string()
+    }
+
+    /// Unreachable in practice ([`Runtime::load`] never succeeds).
+    pub fn call(&mut self, name: &str, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        Err(anyhow!(
+            "cannot execute entry point {name:?}: built without `pjrt-artifacts`"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = Runtime::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("pjrt-artifacts"), "{err}");
+    }
+
+    #[test]
+    fn artifacts_never_available() {
+        assert!(!Runtime::artifacts_available());
+    }
+}

@@ -1,0 +1,224 @@
+//! The incremental throughput model: component-scoped recompute.
+//!
+//! Active flows partition into *connected components* of the
+//! flow/link sharing graph (two flows are adjacent when they traverse
+//! a common link). Max-min fairness decomposes exactly across
+//! components — no capacity or stream count crosses a component
+//! boundary — so a start or completion only perturbs the components
+//! it touches. This model maintains that partition and recomputes
+//! only dirty components:
+//!
+//! - **start**: the new flow may glue several components together;
+//!   every component overlapping its links is invalidated and its
+//!   members marked dirty, along with the new flow.
+//! - **complete**: the departing flow's component is invalidated (its
+//!   remainder may both change rates and split).
+//! - **settle**: flood-fill from each dirty flow over the link
+//!   membership lists rebuilds exact components for the dirty region
+//!   only; each gets a fresh never-reused id, synced members, rates
+//!   from the shared water-filling pass, and one completion check.
+//!
+//! Components never reached by the flood fill keep their ids, rates,
+//! and scheduled checks — the heap entries of untouched components
+//! are *never* invalidated, which is what turns the seed's
+//! O(total activity) cost per event into O(dirty component).
+//!
+//! Invariants (`DESIGN.md` §throughput-model):
+//!   I1 settled active flows are exactly partitioned by live comps;
+//!   I2 every link-neighbour of a dirty flow is dirty (kills are
+//!      transitive through overlap at invalidation time);
+//!   I3 comp ids are never reused; a check naming a dead id is stale;
+//!   I4 `remaining_each` is valid as of `synced_at` and linear in
+//!      between settles.
+
+use std::collections::BTreeMap;
+
+use crate::units::{Duration, SimTime};
+
+use super::model::{CompCheck, ThroughputModel};
+use super::state::NetState;
+use super::{CompId, FlowId, LinkId, ThroughputMode};
+
+#[derive(Debug)]
+struct Comp {
+    /// Sorted member list (canonical water-filling order).
+    members: Vec<FlowId>,
+    /// Earliest completion among members as of the building settle.
+    next: Option<(SimTime, FlowId)>,
+}
+
+#[derive(Debug)]
+pub(crate) struct FastModel {
+    /// Live components by id. BTreeMap: deterministic iteration for
+    /// the global next-completion query.
+    comps: BTreeMap<u64, Comp>,
+    /// Never-reused id source (0 is `CompId::NONE`).
+    next_comp: u64,
+    /// Flows awaiting recompute (their comps already invalidated).
+    dirty: Vec<FlowId>,
+    /// Flood-fill visit stamp, bumped once per settle.
+    round: u64,
+}
+
+impl FastModel {
+    pub(crate) fn new() -> FastModel {
+        FastModel { comps: BTreeMap::new(), next_comp: 1, dirty: Vec::new(), round: 0 }
+    }
+
+    fn mark_dirty(&mut self, st: &mut NetState, id: FlowId) {
+        if let Some(f) = st.flow_mut(id) {
+            if !f.dirty {
+                f.dirty = true;
+                self.dirty.push(id);
+            }
+        }
+    }
+
+    /// Remove `comp` and mark its members (minus `except`) dirty.
+    fn kill(&mut self, st: &mut NetState, comp: CompId, except: Option<FlowId>) {
+        let Some(c) = self.comps.remove(&comp.0) else { return };
+        for m in c.members {
+            if Some(m) == except {
+                continue;
+            }
+            if let Some(f) = st.flow_mut(m) {
+                f.comp = CompId::NONE;
+            } else {
+                continue;
+            }
+            self.mark_dirty(st, m);
+        }
+    }
+}
+
+impl ThroughputModel for FastModel {
+    fn mode(&self) -> ThroughputMode {
+        ThroughputMode::Fast
+    }
+
+    fn on_start(&mut self, st: &mut NetState, id: FlowId) {
+        // Invalidate every component sharing a link with the new flow:
+        // the start may merge them and changes their rates.
+        let mut kills: Vec<u64> = Vec::new();
+        {
+            let idx = id.idx();
+            for pi in 0..st.slots[idx].flow.path.len() {
+                let LinkId(l) = st.slots[idx].flow.path[pi];
+                for &(fid, _) in &st.links[l].members {
+                    if fid == id {
+                        continue;
+                    }
+                    let c = st.slots[fid.idx()].flow.comp;
+                    if c != CompId::NONE {
+                        kills.push(c.0);
+                    }
+                }
+            }
+        }
+        // One kill per unique component (a busy link lists every
+        // member flow, all sharing the same comp id).
+        kills.sort_unstable();
+        kills.dedup();
+        for c in kills {
+            self.kill(st, CompId(c), None);
+        }
+        self.mark_dirty(st, id);
+    }
+
+    fn on_complete(&mut self, st: &mut NetState, id: FlowId) {
+        let comp = match st.flow(id) {
+            Some(f) => f.comp,
+            None => return,
+        };
+        if comp != CompId::NONE {
+            // The remainder of the component changes rates (and may
+            // split into several); recompute all of it.
+            self.kill(st, comp, Some(id));
+        }
+        // If `id` was only dirty (never settled), the dirty entry goes
+        // stale with the slot generation — settle skips it.
+    }
+
+    fn dirty_comp(&mut self, st: &mut NetState, comp: CompId) {
+        self.kill(st, comp, None);
+    }
+
+    fn invalidate_all(&mut self, st: &mut NetState) {
+        let comps: Vec<u64> = self.comps.keys().copied().collect();
+        for c in comps {
+            self.kill(st, CompId(c), None);
+        }
+        // Flows started but never settled are already in the dirty list.
+    }
+
+    fn is_dirty(&self) -> bool {
+        !self.dirty.is_empty()
+    }
+
+    fn settle(&mut self, st: &mut NetState, out: &mut Vec<CompCheck>) {
+        if self.dirty.is_empty() {
+            return;
+        }
+        self.round += 1;
+        let round = self.round;
+        let seeds = std::mem::take(&mut self.dirty);
+        let mut stack: Vec<FlowId> = Vec::new();
+        for seed in seeds {
+            match st.flow(seed) {
+                // Completed before this settle, or already absorbed
+                // into a component rebuilt earlier this round.
+                None => continue,
+                Some(f) if !f.dirty => continue,
+                Some(_) => {}
+            }
+            // Flood-fill the connected component containing `seed`.
+            let mut members: Vec<FlowId> = Vec::new();
+            st.slots[seed.idx()].flow.visit = round;
+            stack.push(seed);
+            while let Some(fid) = stack.pop() {
+                members.push(fid);
+                let fidx = fid.idx();
+                for pi in 0..st.slots[fidx].flow.path.len() {
+                    let LinkId(l) = st.slots[fidx].flow.path[pi];
+                    for mi in 0..st.links[l].members.len() {
+                        let (nid, _) = st.links[l].members[mi];
+                        if st.slots[nid.idx()].flow.visit != round {
+                            st.slots[nid.idx()].flow.visit = round;
+                            stack.push(nid);
+                        }
+                    }
+                }
+            }
+            members.sort();
+            let cid = self.next_comp;
+            self.next_comp += 1;
+            for &m in &members {
+                let f = &mut st.slots[m.idx()].flow;
+                f.comp = CompId(cid);
+                f.dirty = false;
+            }
+            let next = super::model::settle_component(st, &members, CompId(cid), out);
+            self.comps.insert(cid, Comp { members, next });
+        }
+    }
+
+    fn comp_members(&self, comp: CompId) -> Option<&[FlowId]> {
+        self.comps.get(&comp.0).map(|c| &c.members[..])
+    }
+
+    fn comp_count(&self) -> usize {
+        self.comps.len()
+    }
+
+    fn next_completion(&self, st: &NetState) -> Option<(Duration, FlowId)> {
+        let mut best: Option<(SimTime, FlowId)> = None;
+        for c in self.comps.values() {
+            if let Some((at, id)) = c.next {
+                if best.map_or(true, |(t, _)| at < t) {
+                    best = Some((at, id));
+                }
+            }
+        }
+        best.map(|(at, id)| (at - st.now, id))
+    }
+}

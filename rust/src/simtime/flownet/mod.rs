@@ -1,0 +1,770 @@
+//! Flow-level network model with max-min fair bandwidth sharing.
+//!
+//! Every bandwidth-shaped resource in the simulated testbed is a link:
+//! a GPFS storage server, the filesystem's aggregate backplane
+//! (240 GB/s on the paper's installation), a BG/Q I/O-node uplink, a
+//! compute-node torus injection port, the APS↔ALCF WAN pipe.
+//! Concurrent transfers are flows traversing a *path* (an ordered set —
+//! order is irrelevant to the math) of links.
+//!
+//! **Flow bundles.** The paper's workloads are symmetric at enormous
+//! fan-out (8,192 nodes all staging the same 577 MB dataset). Modelling
+//! each per-node transfer as its own flow would make every rate
+//! recomputation O(nodes × links). Instead a flow has a `members`
+//! count: `members` identical transfers advancing in lockstep, each
+//! consuming one fair share on every link of the path. A collective
+//! over 8K nodes is then a handful of bundles and recomputation cost is
+//! independent of machine size (measured in the `hotpath` bench).
+//!
+//! **Max-min fairness** via progressive filling (water-filling): repeat
+//! { find the link whose remaining capacity divided by its unfrozen
+//! member count is smallest; freeze every unfrozen flow through it at
+//! that per-member share }. This is the classic fluid approximation of
+//! TCP/interconnect fair sharing used by flow-level simulators. The
+//! pass itself lives in [`waterfill`]; *when* it runs and *over which
+//! flows* is the [`ThroughputModel`] boundary:
+//!
+//! - [`ThroughputMode::Slow`] — the reference algorithm: every change
+//!   recomputes every active flow (the seed implementation; kept as
+//!   the differential-testing oracle).
+//! - [`ThroughputMode::Fast`] — the default: active flows are
+//!   partitioned into link-connected components and only the dirty
+//!   component is recomputed and rescheduled; unrelated components'
+//!   completion checks are never invalidated. Cost per network event
+//!   scales with what actually changed.
+//!
+//! **Degrading capacity.** GPFS's delivered bandwidth collapses under
+//! many uncoordinated readers (disk-head thrash and prefetch loss; the
+//! mechanism behind the paper's Fig 11 naive curve). A link may
+//! therefore declare [`Capacity::Degrading`], an efficiency that decays
+//! with the total number of concurrent streams:
+//!
+//! ```text
+//! effective(n) = peak / (1 + max(0, n - pivot) / half)
+//! ```
+//!
+//! With `pivot` streams or fewer there is no penalty; each additional
+//! `half` streams halve the *additional* efficiency. The constants for
+//! the GPFS model are calibrated in `pfs::GpfsParams` against the
+//! paper's measured 21 GB/s naive aggregate at 8K nodes.
+
+mod fast;
+pub mod model;
+mod slow;
+mod state;
+mod waterfill;
+
+pub use model::{CompCheck, ThroughputModel};
+pub use state::NetState;
+
+use crate::units::{Duration, SimTime};
+use state::DRAIN_EPS;
+
+/// Identifies a link within one [`FlowNet`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LinkId(pub usize);
+
+/// Identifies a flow within one [`FlowNet`].
+///
+/// Encodes a storage slot index plus a per-slot generation, so slots
+/// freed by completed flows are reused (bounded memory under churn)
+/// while stale ids remain detectable: queries against a completed
+/// flow's id keep answering "done / zero remaining" even after the
+/// slot hosts a newer flow.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct FlowId(pub u64);
+
+impl FlowId {
+    pub(crate) fn new(idx: u32, gen: u32) -> FlowId {
+        FlowId(((gen as u64) << 32) | idx as u64)
+    }
+
+    pub(crate) fn idx(self) -> usize {
+        (self.0 & 0xffff_ffff) as usize
+    }
+
+    pub(crate) fn gen(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
+
+/// Identifies a connected component of the active flow set. Ids are
+/// never reused; a scheduled completion check naming a dead component
+/// is stale and ignored (logical cancellation in the event heap).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct CompId(pub u64);
+
+impl CompId {
+    /// Sentinel: flow not (yet) assigned to a component.
+    pub const NONE: CompId = CompId(0);
+}
+
+/// What a link models, declared at construction so component and
+/// contention diagnostics can attribute load to a machine layer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LinkClass {
+    /// Filesystem aggregate backplane.
+    Backplane,
+    /// Degrading server-side disk stage (uncoordinated reads).
+    Disk,
+    /// Metadata server ("bytes" are metadata operations).
+    Meta,
+    /// I/O-node uplink layer.
+    Ion,
+    /// Torus / cluster interconnect bisection.
+    Interconnect,
+    /// Wide-area pipe between facilities.
+    Wan,
+    /// Anything else (tests, ad-hoc scenarios).
+    Other,
+}
+
+/// Which [`ThroughputModel`] a [`FlowNet`] runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ThroughputMode {
+    /// Global recompute on every change (reference oracle).
+    Slow,
+    /// Component-scoped incremental recompute (default).
+    Fast,
+}
+
+/// Link capacity model, bytes/second.
+#[derive(Clone, Copy, Debug)]
+pub enum Capacity {
+    /// Constant capacity regardless of stream count.
+    Fixed(f64),
+    /// Stream-count-dependent capacity (see module docs).
+    Degrading { peak: f64, pivot: f64, half: f64 },
+}
+
+impl Capacity {
+    /// Effective capacity when `streams` concurrent members traverse it.
+    pub fn effective(&self, streams: f64) -> f64 {
+        match *self {
+            Capacity::Fixed(c) => c,
+            Capacity::Degrading { peak, pivot, half } => {
+                let excess = (streams - pivot).max(0.0);
+                peak / (1.0 + excess / half)
+            }
+        }
+    }
+}
+
+/// The flow network. Owned by the simulation engine; rates are
+/// recomputed by the configured [`ThroughputModel`] whenever the
+/// active flow set changes.
+pub struct FlowNet {
+    st: NetState,
+    model: Box<dyn ThroughputModel>,
+}
+
+impl FlowNet {
+    /// A network running the default (fast, component-incremental)
+    /// throughput model.
+    pub fn new() -> Self {
+        FlowNet::with_mode(ThroughputMode::Fast)
+    }
+
+    pub fn with_mode(mode: ThroughputMode) -> Self {
+        let model: Box<dyn ThroughputModel> = match mode {
+            ThroughputMode::Slow => Box::new(slow::SlowModel::new()),
+            ThroughputMode::Fast => Box::new(fast::FastModel::new()),
+        };
+        FlowNet { st: NetState::default(), model }
+    }
+
+    pub fn mode(&self) -> ThroughputMode {
+        self.model.mode()
+    }
+
+    // ------------------------------------------------------------------
+    // topology
+    // ------------------------------------------------------------------
+
+    pub fn add_link(&mut self, name: impl Into<String>, cap: Capacity) -> LinkId {
+        self.add_link_classed(name, cap, LinkClass::Other)
+    }
+
+    /// [`FlowNet::add_link`] with the machine layer declared up front.
+    pub fn add_link_classed(
+        &mut self,
+        name: impl Into<String>,
+        cap: Capacity,
+        class: LinkClass,
+    ) -> LinkId {
+        self.st.add_link(name.into(), class, cap)
+    }
+
+    pub fn link_name(&self, id: LinkId) -> &str {
+        &self.st.links[id.0].name
+    }
+
+    pub fn link_class(&self, id: LinkId) -> LinkClass {
+        self.st.links[id.0].class
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.st.links.len()
+    }
+
+    // ------------------------------------------------------------------
+    // flow lifecycle
+    // ------------------------------------------------------------------
+
+    /// Begin a bundle of `members` identical transfers of `bytes_each`
+    /// bytes across `path`. Returns its id; rates become valid after
+    /// the next [`FlowNet::recompute`] / settle.
+    pub fn start(&mut self, path: Vec<LinkId>, members: u64, bytes_each: u64) -> FlowId {
+        self.start_capped(path, members, bytes_each, f64::INFINITY)
+    }
+
+    /// [`FlowNet::start`] with a per-member rate cap.
+    pub fn start_capped(
+        &mut self,
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        cap_each: f64,
+    ) -> FlowId {
+        let id = self.st.start_flow(path, members, bytes_each, cap_each);
+        self.model.on_start(&mut self.st, id);
+        id
+    }
+
+    /// Mark a flow complete and remove it from the active set.
+    pub fn complete(&mut self, id: FlowId) {
+        assert!(self.st.flow(id).is_some(), "double completion of {id:?}");
+        self.model.on_complete(&mut self.st, id);
+        self.st.remove_flow(id);
+    }
+
+    /// Advance virtual time by `dt`. O(1): flow progress is lazy —
+    /// materialised from rates on read or at the next settle.
+    pub fn advance(&mut self, dt: Duration) {
+        self.st.now += dt;
+    }
+
+    // ------------------------------------------------------------------
+    // settling & completion checks
+    // ------------------------------------------------------------------
+
+    /// Recompute whatever the model considers dirty (legacy entry
+    /// point for callers that poll [`FlowNet::next_completion`]
+    /// instead of scheduling the returned checks).
+    pub fn recompute(&mut self) {
+        let mut sink = Vec::new();
+        self.model.settle(&mut self.st, &mut sink);
+    }
+
+    /// Recompute everything dirty; returns the completion checks the
+    /// caller should schedule (one per rebuilt component).
+    pub fn settle_checks(&mut self) -> Vec<CompCheck> {
+        let mut out = Vec::new();
+        self.model.settle(&mut self.st, &mut out);
+        out
+    }
+
+    /// Invalidate all rates and recompute from scratch (benchmarks,
+    /// diagnostics; regular operation never needs this).
+    pub fn force_recompute(&mut self) {
+        self.model.invalidate_all(&mut self.st);
+        self.recompute()
+    }
+
+    /// True when a settle would do work.
+    pub fn is_dirty(&self) -> bool {
+        self.model.is_dirty()
+    }
+
+    /// Handle a fired completion check: the drained flows of `comp`
+    /// (sorted; empty when the check is stale). The caller completes
+    /// each returned flow and settles. A live component with nothing
+    /// drained (completion-time rounding residue) is re-dirtied so the
+    /// next settle reschedules its check.
+    pub fn check(&mut self, comp: CompId) -> Vec<FlowId> {
+        let members: Vec<FlowId> = match self.model.comp_members(comp) {
+            Some(m) => m.to_vec(),
+            None => return Vec::new(),
+        };
+        let mut drained = Vec::new();
+        let mut live = 0usize;
+        for id in members {
+            let Some(f) = self.st.flow(id) else { continue };
+            live += 1;
+            if f.rate_each == f64::INFINITY || self.st.remaining_at_now(id) <= DRAIN_EPS {
+                drained.push(id);
+            }
+        }
+        if drained.is_empty() && live > 0 {
+            self.model.dirty_comp(&mut self.st, comp);
+        }
+        drained.sort();
+        drained
+    }
+
+    /// The earliest (time-from-now, flow) completion at current rates,
+    /// across all components. Valid after a settle.
+    pub fn next_completion(&self, now: SimTime) -> Option<(SimTime, FlowId)> {
+        self.model
+            .next_completion(&self.st)
+            .map(|(eta, id)| (now + eta, id))
+    }
+
+    // ------------------------------------------------------------------
+    // queries
+    // ------------------------------------------------------------------
+
+    pub fn is_done(&self, id: FlowId) -> bool {
+        self.st.flow(id).is_none()
+    }
+
+    /// Bytes still to move per member, materialised to the current
+    /// virtual time.
+    pub fn remaining_each(&self, id: FlowId) -> f64 {
+        if self.st.flow(id).is_some() {
+            self.st.remaining_at_now(id)
+        } else {
+            0.0
+        }
+    }
+
+    /// Current per-member rate, bytes/sec (0.0 once completed).
+    pub fn rate_each(&self, id: FlowId) -> f64 {
+        self.st.flow(id).map_or(0.0, |f| f.rate_each)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.st.active.len()
+    }
+
+    /// Live components (1 global component in slow mode).
+    pub fn comp_count(&self) -> usize {
+        self.model.comp_count()
+    }
+
+    /// Flow slots ever allocated — stays bounded under churn because
+    /// completed slots are free-listed.
+    pub fn slots_allocated(&self) -> usize {
+        self.st.slots.len()
+    }
+}
+
+impl Default for FlowNet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for FlowNet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlowNet")
+            .field("mode", &self.mode())
+            .field("links", &self.link_count())
+            .field("active", &self.active_count())
+            .field("comps", &self.comp_count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    /// Run a scenario under both throughput models.
+    fn both(f: impl Fn(FlowNet)) {
+        f(FlowNet::with_mode(ThroughputMode::Slow));
+        f(FlowNet::with_mode(ThroughputMode::Fast));
+    }
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let f = net.start(vec![l], 1, 1_000_000_000);
+            net.recompute();
+            assert_eq!(net.rate_each(f), 10.0 * GB);
+            let (t, id) = net.next_completion(SimTime::ZERO).unwrap();
+            assert_eq!(id, f);
+            assert_eq!(t.secs_f64(), 0.1);
+        });
+    }
+
+    #[test]
+    fn two_flows_share_equally() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let a = net.start(vec![l], 1, 1_000_000_000);
+            let b = net.start(vec![l], 1, 2_000_000_000);
+            net.recompute();
+            assert_eq!(net.rate_each(a), 5.0 * GB);
+            assert_eq!(net.rate_each(b), 5.0 * GB);
+        });
+    }
+
+    #[test]
+    fn bundle_members_each_take_a_share() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let bundle = net.start(vec![l], 9, GB as u64);
+            let solo = net.start(vec![l], 1, GB as u64);
+            net.recompute();
+            // 10 members total: 1 GB/s each.
+            assert!((net.rate_each(bundle) - GB).abs() < 1.0);
+            assert!((net.rate_each(solo) - GB).abs() < 1.0);
+        });
+    }
+
+    #[test]
+    fn bundle_equivalent_to_individual_flows() {
+        // N individual flows and one N-member bundle finish at the same time.
+        both(|mut net1| {
+            let l1 = net1.add_link("l", Capacity::Fixed(8.0 * GB));
+            for _ in 0..16 {
+                net1.start(vec![l1], 1, GB as u64);
+            }
+            net1.recompute();
+            let t1 = net1.next_completion(SimTime::ZERO).unwrap().0;
+
+            let mut net2 = FlowNet::with_mode(net1.mode());
+            let l2 = net2.add_link("l", Capacity::Fixed(8.0 * GB));
+            net2.start(vec![l2], 16, GB as u64);
+            net2.recompute();
+            let t2 = net2.next_completion(SimTime::ZERO).unwrap().0;
+            assert_eq!(t1, t2);
+        });
+    }
+
+    #[test]
+    fn water_filling_classic() {
+        // Textbook max-min: flows A (link1), B (link1+link2), C (link2).
+        // cap1 = 10, cap2 = 4 -> B and C bottleneck on link2 at 2 each;
+        // A then gets the link1 remainder: 8.
+        both(|mut net| {
+            let l1 = net.add_link("1", Capacity::Fixed(10.0));
+            let l2 = net.add_link("2", Capacity::Fixed(4.0));
+            let a = net.start(vec![l1], 1, 100);
+            let b = net.start(vec![l1, l2], 1, 100);
+            let c = net.start(vec![l2], 1, 100);
+            net.recompute();
+            assert!((net.rate_each(b) - 2.0).abs() < 1e-9);
+            assert!((net.rate_each(c) - 2.0).abs() < 1e-9);
+            assert!((net.rate_each(a) - 8.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn completion_frees_capacity() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let a = net.start(vec![l], 1, GB as u64);
+            let b = net.start(vec![l], 1, 10 * GB as u64);
+            net.recompute();
+            let (t, first) = net.next_completion(SimTime::ZERO).unwrap();
+            assert_eq!(first, a);
+            net.advance(t - SimTime::ZERO);
+            net.complete(a);
+            net.recompute();
+            assert_eq!(net.rate_each(b), 10.0 * GB);
+            assert!(net.is_done(a));
+            assert_eq!(net.active_count(), 1);
+        });
+    }
+
+    #[test]
+    fn degrading_capacity_collapses_under_streams() {
+        let cap = Capacity::Degrading { peak: 240.0 * GB, pivot: 2048.0, half: 1024.0 };
+        assert_eq!(cap.effective(100.0), 240.0 * GB);
+        assert_eq!(cap.effective(2048.0), 240.0 * GB);
+        // 2048 excess streams = 2 halves -> a third of peak.
+        assert!((cap.effective(4096.0) - 80.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn degrading_link_in_network() {
+        both(|mut net| {
+            let l = net.add_link(
+                "gpfs",
+                Capacity::Degrading { peak: 100.0, pivot: 1.0, half: 1.0 },
+            );
+            let f = net.start(vec![l], 3, 100);
+            net.recompute();
+            // 3 streams: effective = 100/(1+2) = 33.33 total, /3 members.
+            assert!((net.rate_each(f) - 100.0 / 3.0 / 3.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn pathless_flow_is_instantaneous() {
+        both(|mut net| {
+            let f = net.start(vec![], 1, 1 << 40);
+            net.recompute();
+            let (t, id) = net.next_completion(SimTime::ZERO).unwrap();
+            assert_eq!(id, f);
+            assert_eq!(t, SimTime::ZERO);
+        });
+    }
+
+    #[test]
+    fn advance_conserves_bytes() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(100.0));
+            let f = net.start(vec![l], 1, 1000);
+            net.recompute();
+            net.advance(Duration::from_secs(3));
+            assert!((net.remaining_each(f) - 700.0).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn starved_flow_never_completes() {
+        both(|mut net| {
+            let dead = net.add_link("dead", Capacity::Fixed(0.0));
+            net.start(vec![dead], 1, 100);
+            net.recompute();
+            assert!(net.next_completion(SimTime::ZERO).is_none());
+        });
+    }
+
+    #[test]
+    fn per_member_cap_limits_rate() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let capped = net.start_capped(vec![l], 1, GB as u64, 2.0 * GB);
+            net.recompute();
+            assert_eq!(net.rate_each(capped), 2.0 * GB);
+        });
+    }
+
+    #[test]
+    fn cap_surplus_redistributed() {
+        // One capped flow (2 GB/s) + one uncapped on a 10 GB/s link:
+        // the uncapped flow takes the 8 GB/s remainder, not a 5/5 split.
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let capped = net.start_capped(vec![l], 1, GB as u64, 2.0 * GB);
+            let free = net.start(vec![l], 1, GB as u64);
+            net.recompute();
+            assert_eq!(net.rate_each(capped), 2.0 * GB);
+            assert!((net.rate_each(free) - 8.0 * GB).abs() < 1.0);
+        });
+    }
+
+    #[test]
+    fn cap_above_fair_share_is_inert() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let a = net.start_capped(vec![l], 1, GB as u64, 100.0 * GB);
+            let b = net.start(vec![l], 1, GB as u64);
+            net.recompute();
+            assert!((net.rate_each(a) - 5.0 * GB).abs() < 1.0);
+            assert!((net.rate_each(b) - 5.0 * GB).abs() < 1.0);
+        });
+    }
+
+    #[test]
+    fn pathless_capped_flow_runs_at_cap() {
+        both(|mut net| {
+            let f = net.start_capped(vec![], 16, 1_000, 100.0);
+            net.recompute();
+            assert_eq!(net.rate_each(f), 100.0);
+            let (t, _) = net.next_completion(SimTime::ZERO).unwrap();
+            assert_eq!(t.secs_f64(), 10.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "double completion")]
+    fn double_complete_panics() {
+        let mut net = FlowNet::new();
+        let l = net.add_link("l", Capacity::Fixed(1.0));
+        let f = net.start(vec![l], 1, 1);
+        net.recompute();
+        net.complete(f);
+        net.complete(f);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad link id")]
+    fn bad_link_id_panics() {
+        let mut net = FlowNet::new();
+        net.start(vec![LinkId(7)], 1, 1);
+    }
+
+    #[test]
+    fn link_classes_declared_at_construction() {
+        let mut net = FlowNet::new();
+        let bp = net.add_link_classed("pfs.backplane", Capacity::Fixed(1.0), LinkClass::Backplane);
+        let other = net.add_link("ad-hoc", Capacity::Fixed(1.0));
+        assert_eq!(net.link_class(bp), LinkClass::Backplane);
+        assert_eq!(net.link_class(other), LinkClass::Other);
+        assert_eq!(net.link_name(bp), "pfs.backplane");
+        assert_eq!(net.link_count(), 2);
+    }
+
+    #[test]
+    fn slots_are_reused_under_churn() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(GB));
+            let mut last = None;
+            for _ in 0..100 {
+                let f = net.start(vec![l], 1, GB as u64);
+                net.recompute();
+                net.complete(f);
+                net.recompute();
+                last = Some(f);
+            }
+            // The slab never grows past the peak concurrency (1 flow).
+            assert_eq!(net.slots_allocated(), 1);
+            assert_eq!(net.active_count(), 0);
+            // A completed id stays "done" even though its slot was reused.
+            assert!(net.is_done(last.unwrap()));
+            assert_eq!(net.remaining_each(last.unwrap()), 0.0);
+        });
+    }
+
+    #[test]
+    fn stale_flow_id_reads_as_done() {
+        let mut net = FlowNet::new();
+        let l = net.add_link("l", Capacity::Fixed(GB));
+        let old = net.start(vec![l], 1, GB as u64);
+        net.recompute();
+        net.complete(old);
+        // New flow reuses the slot; the old id must not alias it.
+        let new = net.start(vec![l], 1, 5 * GB as u64);
+        net.recompute();
+        assert_ne!(old, new);
+        assert!(net.is_done(old));
+        assert!(!net.is_done(new));
+        assert_eq!(net.rate_each(old), 0.0);
+        assert_eq!(net.rate_each(new), GB);
+    }
+
+    // ------------------------------------------------------------------
+    // component semantics (fast model)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn disjoint_flows_form_separate_components() {
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        let l1 = net.add_link("1", Capacity::Fixed(GB));
+        let l2 = net.add_link("2", Capacity::Fixed(GB));
+        net.start(vec![l1], 1, GB as u64);
+        net.start(vec![l2], 1, GB as u64);
+        let checks = net.settle_checks();
+        assert_eq!(net.comp_count(), 2);
+        assert_eq!(checks.len(), 2);
+        assert_ne!(checks[0].comp, checks[1].comp);
+    }
+
+    #[test]
+    fn start_merges_overlapping_components_only() {
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        let l1 = net.add_link("1", Capacity::Fixed(GB));
+        let l2 = net.add_link("2", Capacity::Fixed(GB));
+        let a = net.start(vec![l1], 1, GB as u64);
+        let b = net.start(vec![l2], 1, 2 * GB as u64);
+        let first = net.settle_checks();
+        assert_eq!(first.len(), 2);
+        let rate_b = net.rate_each(b);
+
+        // A third flow on l1 merges with `a` but must not touch `b`.
+        let c = net.start(vec![l1], 1, GB as u64);
+        let second = net.settle_checks();
+        assert_eq!(second.len(), 1, "only the touched component resettles");
+        assert_eq!(net.comp_count(), 2);
+        assert_eq!(net.rate_each(b), rate_b, "unrelated component keeps its rate");
+        assert_eq!(net.rate_each(a), 0.5 * GB);
+        assert_eq!(net.rate_each(c), 0.5 * GB);
+
+        // Drive to completion through the check API. a's pre-merge
+        // component died in the merge: its check is stale. b's is not.
+        net.advance(Duration::from_secs(2));
+        let (a_old, b_comp) = (first[0].comp, first[1].comp);
+        assert!(net.check(a_old).is_empty(), "pre-merge check must be stale");
+        let drained_b = net.check(b_comp);
+        assert_eq!(drained_b, vec![b]);
+        net.complete(b);
+        let merged = second[0].comp;
+        let drained_ac = net.check(merged);
+        assert_eq!(drained_ac, vec![a, c]);
+    }
+
+    #[test]
+    fn check_on_stale_component_is_empty() {
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        let l = net.add_link("l", Capacity::Fixed(GB));
+        let a = net.start(vec![l], 1, GB as u64);
+        let checks = net.settle_checks();
+        assert_eq!(checks.len(), 1);
+        // Another start on the same link invalidates the component.
+        net.start(vec![l], 1, GB as u64);
+        let _ = net.settle_checks();
+        net.advance(Duration::from_secs(10));
+        assert!(net.check(checks[0].comp).is_empty(), "stale check must be ignored");
+        assert!(!net.is_done(a), "stale check completed nothing");
+    }
+
+    #[test]
+    fn premature_check_reschedules() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(GB));
+            net.start(vec![l], 1, 10 * GB as u64);
+            let checks = net.settle_checks();
+            assert_eq!(checks.len(), 1);
+            // Fire the check well before the flow drains.
+            net.advance(Duration::from_secs(1));
+            assert!(net.check(checks[0].comp).is_empty());
+            // The component was re-dirtied: a settle produces a fresh
+            // check with a fresh id.
+            assert!(net.is_dirty());
+            let again = net.settle_checks();
+            assert_eq!(again.len(), 1);
+            assert_ne!(again[0].comp, checks[0].comp);
+        });
+    }
+
+    #[test]
+    fn slow_mode_has_single_global_component() {
+        let mut net = FlowNet::with_mode(ThroughputMode::Slow);
+        let l1 = net.add_link("1", Capacity::Fixed(GB));
+        let l2 = net.add_link("2", Capacity::Fixed(GB));
+        net.start(vec![l1], 1, GB as u64);
+        net.start(vec![l2], 1, GB as u64);
+        let checks = net.settle_checks();
+        assert_eq!(net.comp_count(), 1);
+        assert_eq!(checks.len(), 1);
+    }
+
+    #[test]
+    fn force_recompute_preserves_rates() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let a = net.start(vec![l], 1, GB as u64);
+            let b = net.start(vec![l], 1, GB as u64);
+            net.recompute();
+            let (ra, rb) = (net.rate_each(a), net.rate_each(b));
+            net.force_recompute();
+            assert_eq!(net.rate_each(a), ra);
+            assert_eq!(net.rate_each(b), rb);
+        });
+    }
+
+    #[test]
+    fn instantaneous_flows_drain_via_check() {
+        both(|mut net| {
+            // Infinite-rate pathless flow: its component's check fires
+            // immediately and reports it drained — no repeated zero-ETA
+            // polling (the seed's FlowCheck re-report bug).
+            let f = net.start(vec![], 4, 1 << 30);
+            let checks = net.settle_checks();
+            assert_eq!(checks.len(), 1);
+            assert_eq!(checks[0].at, SimTime::ZERO);
+            let drained = net.check(checks[0].comp);
+            assert_eq!(drained, vec![f]);
+            net.complete(f);
+            assert_eq!(net.active_count(), 0);
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! The throughput-model boundary.
+//!
+//! A [`ThroughputModel`] decides *when and for whom* fair-share rates
+//! are recomputed and *which completion checks* the engine should
+//! schedule; the arithmetic itself is the shared water-filling pass in
+//! [`super::waterfill`]. Two implementations:
+//!
+//! - [`super::slow::SlowModel`] — the reference algorithm: every
+//!   change invalidates everything; one global component is rebuilt
+//!   per settle. O(active) per network event, provably simple. Kept as
+//!   the differential-testing oracle.
+//! - [`super::fast::FastModel`] — the incremental algorithm: active
+//!   flows are partitioned into link-connected components; a change
+//!   dirties only the components it touches, and only those are
+//!   recomputed and rescheduled. Cost per event scales with the dirty
+//!   component, not the machine.
+//!
+//! **Check staleness.** Component ids are allocated from a
+//! never-reused counter, so a [`CompCheck`] whose component has since
+//! been invalidated simply names a dead id — the engine's event can
+//! stay in the heap and is ignored when it fires (logical
+//! cancellation, replacing the old single global epoch).
+
+use crate::units::{Duration, SimTime};
+
+use super::state::{eta_secs, NetState};
+use super::{CompId, FlowId, ThroughputMode};
+
+/// A completion check the engine should schedule: "at `at`, look at
+/// component `comp` for drained flows".
+#[derive(Clone, Copy, Debug)]
+pub struct CompCheck {
+    pub comp: CompId,
+    pub at: SimTime,
+}
+
+/// The shared settle epilogue both models run per rebuilt component:
+/// materialise member progress at the *old* rates, assign new
+/// fair-share rates, fold the earliest completion (ties to the first
+/// member in the given order), and emit the component's check.
+/// Returns the earliest (time, flow) for the component's record.
+pub(crate) fn settle_component(
+    st: &mut NetState,
+    members: &[FlowId],
+    comp: CompId,
+    out: &mut Vec<CompCheck>,
+) -> Option<(SimTime, FlowId)> {
+    for &m in members {
+        st.sync_flow(m);
+    }
+    super::waterfill::assign_rates(st, members);
+    let now = st.now;
+    let mut next: Option<(SimTime, FlowId)> = None;
+    for &m in members {
+        let f = &st.slots[m.idx()].flow;
+        if let Some(e) = eta_secs(f) {
+            let at = now + Duration::from_secs_f64(e);
+            if next.map_or(true, |(t, _)| at < t) {
+                next = Some((at, m));
+            }
+        }
+    }
+    if let Some((at, _)) = next {
+        out.push(CompCheck { comp, at });
+    }
+    next
+}
+
+/// Strategy for recomputing fair-share rates and scheduling
+/// completion checks. See module docs for the contract; invariants are
+/// documented in `DESIGN.md`.
+pub trait ThroughputModel {
+    fn mode(&self) -> ThroughputMode;
+
+    /// `id` just became active (already registered in `st`).
+    fn on_start(&mut self, st: &mut NetState, id: FlowId);
+
+    /// `id` is about to leave the active set (still registered).
+    fn on_complete(&mut self, st: &mut NetState, id: FlowId);
+
+    /// Invalidate `comp` so the next settle recomputes its members.
+    /// No-op when `comp` is already stale.
+    fn dirty_comp(&mut self, st: &mut NetState, comp: CompId);
+
+    /// Invalidate everything (benchmarks / diagnostics).
+    fn invalidate_all(&mut self, st: &mut NetState);
+
+    /// True when a settle would do work.
+    fn is_dirty(&self) -> bool;
+
+    /// Recompute rates for everything dirty; push one [`CompCheck`]
+    /// per rebuilt component that has a finite next completion.
+    fn settle(&mut self, st: &mut NetState, out: &mut Vec<CompCheck>);
+
+    /// Members of `comp`, or `None` when the id is stale.
+    fn comp_members(&self, comp: CompId) -> Option<&[FlowId]>;
+
+    /// Number of live components (diagnostics/benchmarks).
+    fn comp_count(&self) -> usize;
+
+    /// Earliest scheduled completion over all live components,
+    /// relative to `st.now`.
+    fn next_completion(&self, st: &NetState) -> Option<(Duration, FlowId)>;
+}

@@ -1,0 +1,96 @@
+//! The reference throughput model: global recompute on every change.
+//!
+//! This is the seed implementation's behaviour, restated against the
+//! [`ThroughputModel`] boundary: any start or completion marks the
+//! whole network dirty; a settle syncs and re-waterfills *every*
+//! active flow and produces a single component covering all of them,
+//! whose fresh id invalidates the previously scheduled check (the old
+//! global-epoch scheme, expressed as never-reused component ids).
+//!
+//! O(active) per network event — quadratic over a churny run — but
+//! small, obviously correct, and therefore the differential-testing
+//! oracle for [`super::fast::FastModel`].
+
+use crate::units::{Duration, SimTime};
+
+use super::model::{CompCheck, ThroughputModel};
+use super::state::NetState;
+use super::{CompId, FlowId, ThroughputMode};
+
+#[derive(Debug, Default)]
+pub(crate) struct SlowModel {
+    /// The single live component: (id, members, earliest completion).
+    comp: Option<GlobalComp>,
+    next_comp: u64,
+    dirty: bool,
+}
+
+#[derive(Debug)]
+struct GlobalComp {
+    id: u64,
+    members: Vec<FlowId>,
+    next: Option<(SimTime, FlowId)>,
+}
+
+impl SlowModel {
+    pub(crate) fn new() -> SlowModel {
+        SlowModel { comp: None, next_comp: 1, dirty: false }
+    }
+}
+
+impl ThroughputModel for SlowModel {
+    fn mode(&self) -> ThroughputMode {
+        ThroughputMode::Slow
+    }
+
+    fn on_start(&mut self, _st: &mut NetState, _id: FlowId) {
+        self.dirty = true;
+    }
+
+    fn on_complete(&mut self, _st: &mut NetState, _id: FlowId) {
+        self.dirty = true;
+    }
+
+    fn dirty_comp(&mut self, _st: &mut NetState, comp: CompId) {
+        if self.comp.as_ref().map_or(false, |c| c.id == comp.0) {
+            self.dirty = true;
+        }
+    }
+
+    fn invalidate_all(&mut self, _st: &mut NetState) {
+        self.dirty = true;
+    }
+
+    fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    fn settle(&mut self, st: &mut NetState, out: &mut Vec<CompCheck>) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        let members = st.active.clone();
+        let id = self.next_comp;
+        self.next_comp += 1;
+        let next = super::model::settle_component(st, &members, CompId(id), out);
+        self.comp = Some(GlobalComp { id, members, next });
+    }
+
+    fn comp_members(&self, comp: CompId) -> Option<&[FlowId]> {
+        match &self.comp {
+            Some(c) if c.id == comp.0 => Some(&c.members),
+            _ => None,
+        }
+    }
+
+    fn comp_count(&self) -> usize {
+        usize::from(self.comp.is_some())
+    }
+
+    fn next_completion(&self, st: &NetState) -> Option<(Duration, FlowId)> {
+        let c = self.comp.as_ref()?;
+        let (at, id) = c.next?;
+        Some((at - st.now, id))
+    }
+}

@@ -1,0 +1,238 @@
+//! Shared flow/link storage for the throughput models.
+//!
+//! [`NetState`] owns what both the slow and fast models operate on:
+//!
+//! - the link table, each link carrying its *active membership list*
+//!   (which flows traverse it) with O(1) swap-remove bookkeeping;
+//! - a slab of flow slots with a free list, so a long-running
+//!   simulation that starts and completes millions of flows keeps a
+//!   bounded footprint (generation counters make stale [`FlowId`]s
+//!   detectable instead of aliasing a reused slot);
+//! - the active-flow list, also swap-removed in O(1);
+//! - the network-local virtual clock for *lazy* progress accounting:
+//!   a flow's `remaining_each` is stored as of its `synced_at`
+//!   timestamp and materialised linearly at the current rate on read,
+//!   so advancing time is O(1) instead of O(active flows).
+
+use crate::units::SimTime;
+
+use super::{Capacity, CompId, FlowId, LinkClass, LinkId};
+
+/// Bytes of residue below which a flow counts as drained (absorbs the
+/// nanosecond-ceiling rounding of completion times).
+pub(crate) const DRAIN_EPS: f64 = 0.5;
+
+#[derive(Debug)]
+pub(crate) struct Link {
+    pub(crate) name: String,
+    pub(crate) class: LinkClass,
+    pub(crate) cap: Capacity,
+    /// Active flows through this link as `(flow, index of this link in
+    /// that flow's path)`. Unordered; removal is swap-remove with the
+    /// back-pointer fixed up via `Flow::link_pos`.
+    pub(crate) members: Vec<(FlowId, u32)>,
+}
+
+#[derive(Debug)]
+pub(crate) struct Flow {
+    pub(crate) path: Vec<LinkId>,
+    /// `link_pos[i]` = index of this flow's entry in
+    /// `links[path[i]].members`.
+    pub(crate) link_pos: Vec<u32>,
+    pub(crate) members: u64,
+    /// Bytes still to move per member, valid as of `synced_at`.
+    pub(crate) remaining_each: f64,
+    /// Current fair-share rate, bytes/sec per member.
+    pub(crate) rate_each: f64,
+    /// Per-member rate cap; INFINITY when uncapped.
+    pub(crate) cap_each: f64,
+    /// Time `remaining_each` was last materialised at.
+    pub(crate) synced_at: SimTime,
+    /// Position in `NetState::active` (valid while live).
+    pub(crate) active_pos: u32,
+    /// Owning component (fast model; `CompId::NONE` when unassigned).
+    pub(crate) comp: CompId,
+    /// Queued for recompute (fast model).
+    pub(crate) dirty: bool,
+    /// Flood-fill visit stamp (fast model).
+    pub(crate) visit: u64,
+}
+
+/// Expected completion delay of a synced flow at its current rate.
+/// `Some(0.0)`: drained or instantaneous; `None`: starved.
+pub(crate) fn eta_secs(f: &Flow) -> Option<f64> {
+    if f.rate_each == f64::INFINITY || f.remaining_each <= DRAIN_EPS {
+        Some(0.0)
+    } else if f.rate_each > 0.0 {
+        Some(f.remaining_each / f.rate_each)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct Slot {
+    pub(crate) gen: u32,
+    pub(crate) live: bool,
+    pub(crate) flow: Flow,
+}
+
+/// Storage shared by every [`super::ThroughputModel`]; see module docs.
+#[derive(Debug, Default)]
+pub struct NetState {
+    pub(crate) links: Vec<Link>,
+    pub(crate) slots: Vec<Slot>,
+    pub(crate) free: Vec<u32>,
+    pub(crate) active: Vec<FlowId>,
+    /// Network-local virtual clock (sum of `advance` deltas).
+    pub(crate) now: SimTime,
+    // Waterfill scratch, stamped so reuse costs O(touched links), not
+    // O(all links), per recompute.
+    pub(crate) link_stamp: Vec<u64>,
+    pub(crate) link_slot: Vec<u32>,
+    pub(crate) stamp: u64,
+}
+
+impl NetState {
+    pub(crate) fn add_link(&mut self, name: String, class: LinkClass, cap: Capacity) -> LinkId {
+        self.links.push(Link { name, class, cap, members: Vec::new() });
+        self.link_stamp.push(0);
+        self.link_slot.push(0);
+        LinkId(self.links.len() - 1)
+    }
+
+    /// Allocate a slot (reusing the free list), register the flow on
+    /// its links and the active list, and return its id.
+    pub(crate) fn start_flow(
+        &mut self,
+        path: Vec<LinkId>,
+        members: u64,
+        bytes_each: u64,
+        cap_each: f64,
+    ) -> FlowId {
+        assert!(members > 0, "empty bundle");
+        assert!(cap_each > 0.0, "non-positive rate cap");
+        for l in &path {
+            assert!(l.0 < self.links.len(), "bad link id {l:?}");
+        }
+        let link_pos = vec![0u32; path.len()];
+        let flow = Flow {
+            path,
+            link_pos,
+            members,
+            remaining_each: bytes_each as f64,
+            rate_each: 0.0,
+            cap_each,
+            synced_at: self.now,
+            active_pos: self.active.len() as u32,
+            comp: CompId::NONE,
+            dirty: false,
+            visit: 0,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                let slot = &mut self.slots[i as usize];
+                debug_assert!(!slot.live);
+                slot.live = true;
+                slot.flow = flow;
+                i as usize
+            }
+            None => {
+                self.slots.push(Slot { gen: 0, live: true, flow });
+                self.slots.len() - 1
+            }
+        };
+        let id = FlowId::new(idx as u32, self.slots[idx].gen);
+        self.active.push(id);
+        // Register on each path link, recording the back-pointer.
+        let npath = self.slots[idx].flow.path.len();
+        for pi in 0..npath {
+            let LinkId(l) = self.slots[idx].flow.path[pi];
+            self.links[l].members.push((id, pi as u32));
+            self.slots[idx].flow.link_pos[pi] = (self.links[l].members.len() - 1) as u32;
+        }
+        id
+    }
+
+    /// Unregister `id` everywhere and release its slot. The caller must
+    /// have validated liveness.
+    pub(crate) fn remove_flow(&mut self, id: FlowId) {
+        let idx = id.idx();
+        debug_assert!(self.slots[idx].live && self.slots[idx].gen == id.gen());
+        // Links: swap-remove each membership entry, fixing the moved
+        // entry's back-pointer.
+        let npath = self.slots[idx].flow.path.len();
+        for pi in 0..npath {
+            let LinkId(l) = self.slots[idx].flow.path[pi];
+            let pos = self.slots[idx].flow.link_pos[pi] as usize;
+            self.links[l].members.swap_remove(pos);
+            if pos < self.links[l].members.len() {
+                let (moved, moved_pi) = self.links[l].members[pos];
+                self.slots[moved.idx()].flow.link_pos[moved_pi as usize] = pos as u32;
+            }
+        }
+        // Active list: swap-remove, fixing the moved flow's position.
+        let apos = self.slots[idx].flow.active_pos as usize;
+        debug_assert_eq!(self.active[apos], id);
+        self.active.swap_remove(apos);
+        if apos < self.active.len() {
+            let moved = self.active[apos];
+            self.slots[moved.idx()].flow.active_pos = apos as u32;
+        }
+        // Release: bump the generation so stale ids are detectable.
+        let slot = &mut self.slots[idx];
+        slot.live = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        slot.flow.remaining_each = 0.0;
+        self.free.push(idx as u32);
+    }
+
+    /// The flow for `id` if it is still live (generation-checked).
+    pub(crate) fn flow(&self, id: FlowId) -> Option<&Flow> {
+        let slot = self.slots.get(id.idx())?;
+        if slot.live && slot.gen == id.gen() {
+            Some(&slot.flow)
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn flow_mut(&mut self, id: FlowId) -> Option<&mut Flow> {
+        let slot = self.slots.get_mut(id.idx())?;
+        if slot.live && slot.gen == id.gen() {
+            Some(&mut slot.flow)
+        } else {
+            None
+        }
+    }
+
+    /// Materialise a live flow's `remaining_each` to `self.now`.
+    pub(crate) fn sync_flow(&mut self, id: FlowId) {
+        let now = self.now;
+        let f = &mut self.slots[id.idx()].flow;
+        let dt = now - f.synced_at;
+        if dt.0 > 0 {
+            if f.rate_each.is_finite() {
+                f.remaining_each = (f.remaining_each - f.rate_each * dt.secs_f64()).max(0.0);
+            } else {
+                // Instantaneous flow: any positive elapsed time drains it.
+                f.remaining_each = 0.0;
+            }
+        }
+        f.synced_at = now;
+    }
+
+    /// Pure read of a live flow's remaining bytes as of `self.now`.
+    pub(crate) fn remaining_at_now(&self, id: FlowId) -> f64 {
+        let f = &self.slots[id.idx()].flow;
+        let dt = self.now - f.synced_at;
+        if dt.0 == 0 {
+            return f.remaining_each;
+        }
+        if f.rate_each.is_finite() {
+            (f.remaining_each - f.rate_each * dt.secs_f64()).max(0.0)
+        } else {
+            0.0
+        }
+    }
+}

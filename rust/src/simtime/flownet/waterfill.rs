@@ -1,0 +1,150 @@
+//! The max-min fair-share rate assigner (progressive filling), shared
+//! by both throughput models.
+//!
+//! [`assign_rates`] runs the classic water-filling loop — repeat
+//! { freeze either the flows whose per-member cap is below every
+//! link's fair share, or every flow through the bottleneck link } —
+//! restricted to an explicit set of flows. The restriction is exact
+//! when the set is closed under link-sharing (a union of connected
+//! components): no flow outside the set can contend for any link the
+//! set touches, so capacities and stream counts computed from the set
+//! alone equal their global values. The slow model passes the whole
+//! active set; the fast model passes one dirty component at a time.
+//!
+//! Cost is O(touched links × freeze rounds + Σ path lengths); the
+//! per-link scratch in [`NetState`] is stamped, so nothing is ever
+//! cleared at O(total links).
+
+use super::state::NetState;
+use super::{FlowId, LinkId};
+
+/// Per-touched-link accumulator for one assignment pass.
+struct Acc {
+    link: u32,
+    cap_left: f64,
+    members_left: f64,
+    streams: f64,
+}
+
+/// Assign max-min fair rates to `flows` (which must be a union of
+/// link-connected components of the active set). Flows must be synced
+/// before rates are overwritten; pathless flows get their cap.
+pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
+    st.stamp += 1;
+    let stamp = st.stamp;
+    // Split-borrow the state so link scratch and slot reads don't alias.
+    let NetState { links, slots, link_stamp, link_slot, .. } = st;
+
+    // Collect the touched links, in ascending link order so bottleneck
+    // selection is deterministic and identical to a whole-network scan.
+    let mut accs: Vec<Acc> = Vec::new();
+    for &id in flows {
+        for &LinkId(l) in &slots[id.idx()].flow.path {
+            if link_stamp[l] != stamp {
+                link_stamp[l] = stamp;
+                accs.push(Acc { link: l as u32, cap_left: 0.0, members_left: 0.0, streams: 0.0 });
+            }
+        }
+    }
+    accs.sort_by_key(|a| a.link);
+    for (i, a) in accs.iter().enumerate() {
+        link_slot[a.link as usize] = i as u32;
+    }
+
+    // Stream counts (for degrading capacities), then effective capacity.
+    for &id in flows {
+        let f = &slots[id.idx()].flow;
+        for &LinkId(l) in &f.path {
+            accs[link_slot[l] as usize].streams += f.members as f64;
+        }
+    }
+    for a in accs.iter_mut() {
+        a.cap_left = links[a.link as usize].cap.effective(a.streams);
+    }
+
+    // Seed: pathless flows run at their cap; the rest enter unfrozen.
+    let mut unfrozen: Vec<FlowId> = Vec::with_capacity(flows.len());
+    for &id in flows {
+        let f = &mut slots[id.idx()].flow;
+        if f.path.is_empty() {
+            // An in-RAM copy or per-process local stream; rate is its
+            // cap (INFINITY = instantaneous).
+            f.rate_each = f.cap_each;
+            continue;
+        }
+        f.rate_each = 0.0;
+        unfrozen.push(id);
+        let members = f.members as f64;
+        for &LinkId(l) in &f.path {
+            accs[link_slot[l] as usize].members_left += members;
+        }
+    }
+
+    while !unfrozen.is_empty() {
+        // Candidate A: bottleneck link share.
+        let mut link_best: Option<(f64, usize)> = None;
+        for (ai, a) in accs.iter().enumerate() {
+            if a.members_left > 0.0 {
+                let share = a.cap_left / a.members_left;
+                if link_best.map_or(true, |(s, _)| share < s) {
+                    link_best = Some((share, ai));
+                }
+            }
+        }
+        // Candidate B: smallest per-member rate cap among unfrozen.
+        let cap_best = unfrozen
+            .iter()
+            .map(|id| slots[id.idx()].flow.cap_each)
+            .fold(f64::INFINITY, f64::min);
+
+        let freeze_at_cap = match link_best {
+            Some((s, _)) => cap_best < s,
+            None => cap_best.is_finite(),
+        };
+        if freeze_at_cap {
+            // Freeze the cap-limited flows at their cap.
+            let mut still = Vec::with_capacity(unfrozen.len());
+            for id in unfrozen.drain(..) {
+                let cap = slots[id.idx()].flow.cap_each;
+                if cap <= cap_best {
+                    slots[id.idx()].flow.rate_each = cap;
+                    let members = slots[id.idx()].flow.members as f64;
+                    for &LinkId(l) in &slots[id.idx()].flow.path {
+                        let a = &mut accs[link_slot[l] as usize];
+                        a.cap_left -= cap * members;
+                        a.members_left -= members;
+                    }
+                } else {
+                    still.push(id);
+                }
+            }
+            unfrozen = still;
+        } else {
+            let Some((share, bott_ai)) = link_best else { break };
+            let bott = accs[bott_ai].link as usize;
+            // Freeze every unfrozen flow through the bottleneck.
+            let mut still = Vec::with_capacity(unfrozen.len());
+            for id in unfrozen.drain(..) {
+                let through = slots[id.idx()].flow.path.iter().any(|l| l.0 == bott);
+                if through {
+                    slots[id.idx()].flow.rate_each = share;
+                    let members = slots[id.idx()].flow.members as f64;
+                    for &LinkId(l) in &slots[id.idx()].flow.path {
+                        let a = &mut accs[link_slot[l] as usize];
+                        a.cap_left -= share * members;
+                        a.members_left -= members;
+                    }
+                } else {
+                    still.push(id);
+                }
+            }
+            unfrozen = still;
+        }
+        // Guard against FP drift leaving tiny negative capacity.
+        for a in accs.iter_mut() {
+            if a.cap_left < 0.0 {
+                a.cap_left = 0.0;
+            }
+        }
+    }
+}

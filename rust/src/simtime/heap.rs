@@ -3,9 +3,11 @@
 //! A thin wrapper over `BinaryHeap` that (a) orders by time, (b) breaks
 //! ties by insertion sequence, so simulation runs are bit-reproducible
 //! regardless of hash-map iteration order upstream, and (c) supports
-//! *logical cancellation* via epochs (re-scheduling a flow-completion
-//! after a rate change invalidates the stale event rather than
-//! removing it from the heap).
+//! *logical cancellation*: events carry an identity that is checked
+//! against current state when they fire (the engine's flow-completion
+//! checks name a network component whose id is never reused — a check
+//! for an invalidated component is simply ignored on pop, so nothing
+//! is ever removed from the middle of the heap).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

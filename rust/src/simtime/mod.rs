@@ -10,7 +10,10 @@
 //!   torus links, NFS, WAN) is expressed as links; concurrent
 //!   transfers are *flow bundles* (N identical members) so that
 //!   8,192-node collectives cost O(bundles), not O(nodes), per
-//!   recompute.
+//!   recompute. Rate maintenance is pluggable behind the
+//!   [`flownet::ThroughputModel`] boundary: a slow global reference
+//!   pass and the default fast component-incremental pass (see
+//!   `DESIGN.md`).
 //! - [`plan`]: static DAGs of primitive steps (flow / delay / effect)
 //!   used by the MPI collectives and the staging hook; the engine
 //!   executes them with dependency ordering under contention.
@@ -19,6 +22,6 @@ pub mod flownet;
 pub mod heap;
 pub mod plan;
 
-pub use flownet::{FlowId, FlowNet, LinkId};
+pub use flownet::{Capacity, CompId, FlowId, FlowNet, LinkClass, LinkId, ThroughputMode};
 pub use heap::EventHeap;
 pub use plan::{Effect, Plan, PlanId, Step, StepId};

@@ -12,7 +12,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::SimCore;
 use crate::pfs::ParallelFs;
-use crate::simtime::flownet::{Capacity, LinkId};
+use crate::simtime::flownet::{Capacity, LinkClass, LinkId};
 use crate::simtime::plan::{Effect, Plan};
 use crate::units::{Duration, GB};
 use crate::util::prng::Pcg64;
@@ -46,7 +46,9 @@ pub struct TransferReport {
 impl TransferService {
     /// Create the WAN link and service (call once per experiment).
     pub fn new(core: &mut SimCore, wan_bw: f64, seed: u64) -> TransferService {
-        let wan = core.net.add_link("wan.aps-alcf", Capacity::Fixed(wan_bw));
+        let wan =
+            core.net
+                .add_link_classed("wan.aps-alcf", Capacity::Fixed(wan_bw), LinkClass::Wan);
         TransferService {
             wan,
             streams: 8,

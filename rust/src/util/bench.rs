@@ -10,7 +10,17 @@
 //! Wall-clock benches of *simulations* measure host time to run the
 //! virtual experiment; the virtual results themselves are printed by
 //! the experiment drivers as paper-vs-measured tables.
+//!
+//! Two environment knobs:
+//!
+//! - `XSTAGE_BENCH_JSON=<path>`: append one machine-readable JSON line
+//!   per measurement (`{"name":…,"iters":…,"ns_per_iter":…,…}`), so CI
+//!   and future PRs can accumulate `BENCH_*.json` trajectory points
+//!   without scraping the human report.
+//! - `XSTAGE_BENCH_SMOKE=1`: shrink the iteration budget to a fast
+//!   correctness pass (CI smoke runs every bench binary this way).
 
+use std::io::Write as _;
 use std::time::Instant;
 
 /// One benchmark measurement.
@@ -22,13 +32,24 @@ pub struct Sample {
     pub n: usize,
 }
 
-/// Run `f` repeatedly for at least `min_runs` iterations and ~0.5 s,
-/// report median/percentiles of per-iteration seconds.
+/// True when `XSTAGE_BENCH_SMOKE` is set: benches run a minimal
+/// iteration budget (CI smoke mode).
+pub fn smoke() -> bool {
+    std::env::var_os("XSTAGE_BENCH_SMOKE").is_some()
+}
+
+/// Run `f` repeatedly for at least `min_runs` iterations and ~0.5 s
+/// (one warmup + one timed run in smoke mode), report
+/// median/percentiles of per-iteration seconds.
 pub fn bench_n<F: FnMut()>(name: &str, min_runs: usize, mut f: F) -> Sample {
     // Warmup.
     f();
+    let (min_runs, budget) = if smoke() {
+        (1, std::time::Duration::from_millis(1))
+    } else {
+        (min_runs, std::time::Duration::from_millis(500))
+    };
     let mut times = Vec::new();
-    let budget = std::time::Duration::from_millis(500);
     let start = Instant::now();
     while times.len() < min_runs || (start.elapsed() < budget && times.len() < 1000) {
         let t0 = Instant::now();
@@ -50,12 +71,53 @@ pub fn bench_n<F: FnMut()>(name: &str, min_runs: usize, mut f: F) -> Sample {
         fmt_secs(s.p90),
         s.n
     );
+    emit_json(name, &s);
     s
 }
 
 /// [`bench_n`] with the default 10 iterations minimum.
 pub fn bench<F: FnMut()>(name: &str, f: F) -> Sample {
     bench_n(name, 10, f)
+}
+
+/// One measurement as a JSON object line (stable key order).
+pub fn json_line(name: &str, s: &Sample) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\"p10_ns\":{:.1},\"p90_ns\":{:.1}}}",
+        escape_json(name),
+        s.n,
+        s.median * 1e9,
+        s.p10 * 1e9,
+        s.p90 * 1e9,
+    )
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Append the JSON line to `$XSTAGE_BENCH_JSON`, if set. Errors are
+/// reported to stderr, never fatal to the bench.
+fn emit_json(name: &str, s: &Sample) {
+    let Some(path) = std::env::var_os("XSTAGE_BENCH_JSON") else { return };
+    let line = json_line(name, s);
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        eprintln!("warning: XSTAGE_BENCH_JSON append failed: {e}");
+    }
 }
 
 /// Human duration (s/ms/us/ns).
@@ -85,7 +147,7 @@ mod tests {
         let s = bench_n("test/noop", 5, || {
             std::hint::black_box(1 + 1);
         });
-        assert!(s.n >= 5);
+        assert!(s.n >= 1);
         assert!(s.median >= 0.0 && s.p10 <= s.p90);
     }
 
@@ -95,5 +157,26 @@ mod tests {
         assert_eq!(fmt_secs(0.0025), "2.500 ms");
         assert_eq!(fmt_secs(2.5e-6), "2.500 us");
         assert_eq!(fmt_secs(3.1e-9), "3 ns");
+    }
+
+    #[test]
+    fn json_line_is_parseable() {
+        let s = Sample { median: 1.5e-6, p10: 1.0e-6, p90: 2.0e-6, n: 42 };
+        let line = json_line("flownet/churn-64", &s);
+        assert_eq!(
+            line,
+            "{\"name\":\"flownet/churn-64\",\"iters\":42,\
+             \"ns_per_iter\":1500.0,\"p10_ns\":1000.0,\"p90_ns\":2000.0}"
+        );
+        // Round-trips through the in-tree JSON parser.
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get("iters").and_then(|j| j.as_f64()), Some(42.0));
+    }
+
+    #[test]
+    fn json_escapes_quotes_and_controls() {
+        let s = Sample { median: 0.0, p10: 0.0, p90: 0.0, n: 1 };
+        let line = json_line("we\"ird\\name\n", &s);
+        assert!(line.contains("we\\\"ird\\\\name\\u000a"));
     }
 }

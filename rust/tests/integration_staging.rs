@@ -6,12 +6,17 @@ use xstage::cluster::{bgq, Topology};
 use xstage::engine::SimCore;
 use xstage::mpisim::Comm;
 use xstage::pfs::{Blob, GpfsParams};
+use xstage::simtime::flownet::ThroughputMode;
 use xstage::simtime::plan::Plan;
 use xstage::staging::{naive_plan, read_phase, staged_plan, HookSpec};
 use xstage::units::MB;
 
 fn setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
-    let mut core = SimCore::new();
+    setup_mode(nodes, ThroughputMode::Fast)
+}
+
+fn setup_mode(nodes: u32, mode: ThroughputMode) -> (SimCore, Topology, HookSpec) {
+    let mut core = SimCore::with_mode(mode);
     let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
     for i in 0..32u64 {
         core.pfs.write(
@@ -127,6 +132,39 @@ fn hook_metadata_cost_is_constant_in_ranks() {
     let small = meta_phase(64);
     let large = meta_phase(4096);
     assert!((small - large).abs() < 1e-9, "glob cost must not scale: {small} vs {large}");
+}
+
+#[test]
+fn throughput_models_agree_end_to_end() {
+    // The component-incremental throughput model must reproduce the
+    // reference (global-recompute) timings through the whole staging
+    // stack: hook plan construction, MPI collectives, engine event
+    // scheduling. Staged and naive pipelines, contended at 512 nodes.
+    let time = |mode: ThroughputMode, staged: bool| {
+        let (mut core, topo, spec) = setup_mode(512, mode);
+        let mut p = Plan::new(0);
+        if staged {
+            let leader = Comm::leader(&topo.spec);
+            let world = Comm::world(&topo.spec);
+            let (m, done) =
+                staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+            read_phase(&mut p, &topo, &world, m.total_bytes, vec![done]);
+        } else {
+            let comm = Comm::world(&topo.spec);
+            naive_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        }
+        core.submit(p);
+        core.run_to_completion();
+        core.now.secs_f64()
+    };
+    for staged in [true, false] {
+        let slow = time(ThroughputMode::Slow, staged);
+        let fast = time(ThroughputMode::Fast, staged);
+        assert!(
+            (slow - fast).abs() < 1e-5,
+            "staged={staged}: slow model {slow} s vs fast model {fast} s"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,183 @@
+//! Offline shim for the subset of the `anyhow` crate this workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros, and the [`Context`] extension trait.
+//!
+//! The build environment has no crate registry, so the workspace
+//! vendors this API-compatible stand-in as a path dependency. It keeps
+//! the ergonomics (`?` on any `std::error::Error`, context chaining,
+//! format-style construction) while storing errors as a rendered
+//! message chain. Swap in the real crate by editing the workspace
+//! `Cargo.toml` if a registry becomes available — no source changes
+//! needed.
+
+use std::fmt::{self, Display};
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A rendered error: message plus optional context chain.
+///
+/// Deliberately does **not** implement `std::error::Error`, mirroring
+/// the real crate, so the blanket `From<E: std::error::Error>` impl
+/// does not overlap the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line, `context: original`.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to an error, like `anyhow::Context`.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($rest)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<u64> {
+        let n: u64 = s.parse()?; // ParseIntError -> Error via blanket From
+        ensure!(n < 100, "too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parses("42").unwrap(), 42);
+        assert!(parses("xyz").is_err());
+        assert!(parses("200").unwrap_err().to_string().contains("too big: 200"));
+    }
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let x = 7;
+        let inline = anyhow!("x = {x}");
+        assert_eq!(inline.to_string(), "x = 7");
+        let positional = anyhow!("{} {}", "a", 1);
+        assert_eq!(positional.to_string(), "a 1");
+        let from_value = anyhow!(String::from("owned"));
+        assert_eq!(from_value.to_string(), "owned");
+    }
+
+    fn bails() -> Result<()> {
+        bail!("nope: {}", 3);
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 3");
+    }
+
+    #[test]
+    fn context_chains() {
+        let base: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = base.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let again: Result<()> = Err(e);
+        let e2 = again.with_context(|| format!("loading {}", "dir")).unwrap_err();
+        assert!(e2.to_string().starts_with("loading dir: reading manifest: "));
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:?}"), format!("{e}"));
+    }
+}
