@@ -1,0 +1,56 @@
+//! Bench: the multi-campaign residency session under node-memory
+//! pressure — the capacity era of the paper's "extended period"
+//! staging claim.
+//!
+//! Prints the virtual-session comparison (full restage vs residency),
+//! asserts the residency acceptance bar (>= 2x fewer staged bytes,
+//! zero checksum mismatches), and measures host time for both
+//! policies. With `XSTAGE_BENCH_JSON` set the measurements emit one
+//! JSON point each — CI uploads them per run, and the cross-PR
+//! `BENCH_residency.json` trajectory accumulates those points.
+//!
+//! Run: `cargo bench --bench campaign`
+
+use xstage::experiments::campaign;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::units::fmt_bytes;
+use xstage::util::bench::{bench_n, section};
+
+fn main() {
+    section("residency — multi-campaign interactive session");
+    let result = campaign::run();
+    result.print();
+
+    let full = campaign::run_session(64, false, ThroughputMode::Fast);
+    let resi = campaign::run_session(64, true, ThroughputMode::Fast);
+    assert_eq!(full.checksum_mismatches, 0, "full-restage data plane corrupt");
+    assert_eq!(resi.checksum_mismatches, 0, "residency data plane corrupt");
+    assert!(
+        full.staged_bytes >= 2 * resi.staged_bytes,
+        "residency must stage >=2x fewer bytes: {} vs {}",
+        fmt_bytes(full.staged_bytes),
+        fmt_bytes(resi.staged_bytes),
+    );
+    println!(
+        "\nstaged {} (full) vs {} (residency): {:.2}x fewer; hit rate {:.0}%, evicted {}",
+        fmt_bytes(full.staged_bytes),
+        fmt_bytes(resi.staged_bytes),
+        full.staged_bytes as f64 / resi.staged_bytes as f64,
+        100.0 * resi.hit_rate,
+        fmt_bytes(resi.evicted_bytes),
+    );
+
+    section("host-time: session simulation throughput");
+    bench_n("campaign/residency-session-64", 3, || {
+        let out = campaign::run_session(64, true, ThroughputMode::Fast);
+        assert_eq!(out.checksum_mismatches, 0);
+    });
+    bench_n("campaign/full-restage-session-64", 3, || {
+        let out = campaign::run_session(64, false, ThroughputMode::Fast);
+        assert_eq!(out.checksum_mismatches, 0);
+    });
+    bench_n("campaign/residency-session-64-slow-model", 3, || {
+        let out = campaign::run_session(64, true, ThroughputMode::Slow);
+        assert_eq!(out.checksum_mismatches, 0);
+    });
+}

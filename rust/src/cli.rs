@@ -28,6 +28,7 @@ commands:
   reduction   NF-HEDM data reduction on the cluster (SVI-A)
   cache       Worker input-cache experiment (SVI-B)
   reuse       Staged-data reuse across interactive cycles (SI)
+  campaign    Multi-campaign residency session under memory pressure
   all         Run every experiment table in order
   runtime-check  Load AOT artifacts and smoke-execute on PJRT
 ";
@@ -54,6 +55,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("reduction") => experiments::reduction::run().print(),
         Some("reuse") => experiments::reuse::run().print(),
         Some("cache") => experiments::cache::run().print(),
+        Some("campaign") => experiments::campaign::run().print(),
         Some("all") => {
             experiments::fig10::default().print();
             println!();
@@ -68,6 +70,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
             experiments::cache::run().print();
             println!();
             experiments::reuse::run().print();
+            println!();
+            experiments::campaign::run().print();
         }
         Some("runtime-check") => runtime_check()?,
         Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
@@ -117,5 +121,10 @@ mod tests {
     #[test]
     fn cache_runs() {
         dispatch(&parse("cache")).unwrap();
+    }
+
+    #[test]
+    fn campaign_runs() {
+        dispatch(&parse("campaign")).unwrap();
     }
 }

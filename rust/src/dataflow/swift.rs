@@ -588,8 +588,7 @@ mod tests {
         let mut core = SimCore::new();
         let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
         let comm = Comm::world(&topo.spec);
-        core.nodes
-            .write_range(0, 4, "/tmp/hedm/ps.txt", Blob::synthetic(1 << 20, 1));
+        core.node_write_range(0, 4, "/tmp/hedm/ps.txt", Blob::synthetic(1 << 20, 1));
         let stats = run_workflow(&mut core, &topo, &comm, g, SchedulerCfg::default());
         // 601 x 30 s on 320 cores ~= 2 waves -> ~60 s.
         let m = stats.makespan.secs_f64();

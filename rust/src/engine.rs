@@ -11,7 +11,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::cluster::NodeStores;
+use crate::cluster::{Eviction, NodeStores, ResidencyTable, StoreWrite};
 use crate::metrics::Metrics;
 use crate::pfs::ParallelFs;
 use crate::simtime::flownet::{CompId, FlowId, FlowNet, ThroughputMode};
@@ -77,6 +77,10 @@ pub struct SimCore {
     pub net: FlowNet,
     pub pfs: ParallelFs,
     pub nodes: NodeStores,
+    /// Residency mirror of `nodes`, kept in sync by every
+    /// engine-applied node write ([`SimCore::node_write_range`]) and
+    /// eviction ([`SimCore::evict_path`]).
+    pub residency: ResidencyTable,
     pub metrics: Metrics,
     heap: EventHeap<Ev>,
     plans: Vec<PlanRun>,
@@ -100,6 +104,7 @@ impl SimCore {
             net: FlowNet::with_mode(mode),
             pfs: ParallelFs::new(),
             nodes: NodeStores::new(),
+            residency: ResidencyTable::new(),
             metrics: Metrics::new(),
             heap: EventHeap::new(),
             plans: Vec::new(),
@@ -146,6 +151,61 @@ impl SimCore {
     pub fn timer(&mut self, at: SimTime, tag: u64) {
         assert!(at >= self.now, "timer in the past");
         self.heap.push(at, Ev::Timer { tag });
+    }
+
+    /// Capacity-checked node-local write keeping metrics and the
+    /// residency mirror in sync. All engine-applied
+    /// [`Effect::NodeWrite`]s route through here; direct data-plane
+    /// writes should use it too whenever residency accounting matters.
+    /// A rejected write (pinned residents alone exceed the node
+    /// budget) leaves the store untouched and counts under
+    /// `node.write.rejected`.
+    pub fn node_write_range(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        data: crate::pfs::Blob,
+    ) -> StoreWrite {
+        let per_node = data.len();
+        let outcome = self.nodes.write_range_evicting(lo, hi, path, data);
+        match &outcome {
+            StoreWrite::Stored { evicted } => {
+                self.metrics.add_bytes("node.write", per_node * (hi - lo + 1) as u64);
+                for ev in evicted {
+                    self.metrics
+                        .add_bytes("node.evict", ev.bytes * (ev.hi - ev.lo + 1) as u64);
+                    self.metrics.incr("node.evictions");
+                }
+                self.residency.on_stored(lo, hi, path, evicted);
+            }
+            StoreWrite::Rejected { .. } => {
+                self.metrics.incr("node.write.rejected");
+            }
+        }
+        outcome
+    }
+
+    /// Node-local writes rejected under memory pressure so far. A
+    /// plain `staged_plan` keeps running after a rejected
+    /// [`Effect::NodeWrite`] — only this counter records that its
+    /// manifest over-promises. Harnesses that stage while paths are
+    /// pinned should either go through `staging::Residency` (which
+    /// verifies delivery and returns `Err`) or assert this stays zero.
+    pub fn node_write_rejections(&self) -> u64 {
+        self.metrics.count("node.write.rejected")
+    }
+
+    /// Forcibly evict `path` from every node (no-op when pinned),
+    /// keeping metrics and the residency mirror in sync.
+    pub fn evict_path(&mut self, path: &str) -> Vec<Eviction> {
+        let evicted = self.nodes.evict_path(path);
+        for ev in &evicted {
+            self.metrics.add_bytes("node.evict", ev.bytes * (ev.hi - ev.lo + 1) as u64);
+            self.metrics.incr("node.evictions");
+        }
+        self.residency.on_evicted(&evicted);
+        evicted
     }
 
     /// Run until the event queue drains. The director receives every
@@ -266,9 +326,7 @@ impl SimCore {
                 self.pfs.write(path, data);
             }
             Effect::NodeWrite { nodes: (lo, hi), path, data } => {
-                self.metrics
-                    .add_bytes("node.write", data.len() * (hi - lo + 1) as u64);
-                self.nodes.write_range(lo, hi, path, data);
+                self.node_write_range(lo, hi, &path, data);
             }
             Effect::Notify(tag) => {
                 self.pending.push_back(Notice::Step { tag });
@@ -406,6 +464,35 @@ mod tests {
         assert!(core.pfs.read("/d/x").unwrap().same_content(&blob));
         assert!(core.nodes.read(3, "/tmp/x").unwrap().same_content(&blob));
         assert!(core.nodes.read(8, "/tmp/x").is_none());
+    }
+
+    #[test]
+    fn node_writes_keep_residency_mirror_and_evict_metrics() {
+        let mut core = SimCore::new();
+        core.nodes.set_capacity(Some(50));
+        let mut p = Plan::new(0);
+        let write = |path: &str, fill: u8| Effect::NodeWrite {
+            nodes: (0, 3),
+            path: path.into(),
+            data: Blob::real(vec![fill; 30]),
+        };
+        let a = p.effect(write("/tmp/a", 1), vec![], "w");
+        p.effect(write("/tmp/b", 2), vec![a], "w");
+        core.submit(p);
+        core.run_to_completion();
+        // `a` was the LRU victim admitting `b`.
+        assert!(!core.nodes.exists_on(1, "/tmp/a"));
+        assert!(core.nodes.exists_on(1, "/tmp/b"));
+        assert_eq!(core.metrics.bytes("node.evict"), 30 * 4);
+        assert_eq!(core.metrics.count("node.evictions"), 1);
+        assert!(core.residency.mirrors(&core.nodes));
+        assert!(core.residency.resident(2, "/tmp/b"));
+        assert!(!core.residency.resident(2, "/tmp/a"));
+        // Forced eviction keeps the mirror in sync too.
+        core.evict_path("/tmp/b");
+        assert!(core.residency.mirrors(&core.nodes));
+        assert_eq!(core.residency.evicted_bytes, 30 * 4 * 2);
+        assert_eq!(core.nodes.path_count(), 0);
     }
 
     struct Chainer {

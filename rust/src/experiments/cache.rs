@@ -27,8 +27,7 @@ pub fn run_point(nodes: u32, cache: bool) -> WorkflowStats {
     let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
     let comm = Comm::world(&topo.spec);
     let (lo, hi) = comm.node_range();
-    core.nodes
-        .write_range(lo, hi, "/tmp/hedm/inputs.bin", Blob::synthetic(INPUT_BYTES, 5));
+    core.node_write_range(lo, hi, "/tmp/hedm/inputs.bin", Blob::synthetic(INPUT_BYTES, 5));
     let mut g = TaskGraph::new();
     let n_tasks = comm.size() as usize * WAVES;
     g.foreach(n_tasks, |i| {

@@ -27,10 +27,10 @@ pub fn run_point(cores: u32, seed: u64) -> f64 {
     // Inputs staged node-locally (the cluster has node-local scratch).
     let (lo, hi) = comm.node_range();
     for i in 0..workloads::FF1_JOBS {
-        core.nodes.write_range(
+        core.node_write_range(
             lo,
             hi,
-            format!("/tmp/ff/frame_{i:04}.bin"),
+            &format!("/tmp/ff/frame_{i:04}.bin"),
             Blob::synthetic(workloads::FF1_INPUT_BYTES, i as u64),
         );
     }

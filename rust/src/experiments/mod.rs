@@ -4,6 +4,7 @@
 //! these, so there is exactly one implementation of every experiment.
 
 pub mod cache;
+pub mod campaign;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -45,9 +46,12 @@ pub const DATASET_FILES: usize = 64;
 pub const DATASET_GLOB: &str = "/projects/HEDM/layer0/*.bin";
 
 /// Standard BG/Q experiment harness: core + topology + dataset + spec.
+/// The machine's RAM-disk budget (8 GB/node on BG/Q) is live — the
+/// 577 MB dataset fits comfortably, but the store is never unbounded.
 pub fn bgq_setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
     let mut core = SimCore::new();
     let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+    topo.apply_ramdisk_budget(&mut core.nodes);
     let per_file = DATASET_BYTES / DATASET_FILES as u64;
     for i in 0..DATASET_FILES {
         core.pfs.write(

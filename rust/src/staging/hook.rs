@@ -79,18 +79,28 @@ pub fn staged_plan(
     let list_bytes = transfers.len() as u64 * LIST_ENTRY_BYTES;
     let list = bcast_plan(plan, topo, comm, list_bytes, vec![glob], "list-bcast");
 
-    // Phase 3: collective read of the batch (opens = one per file).
-    let staged = read_all_plan(
-        plan,
-        topo,
-        comm,
-        total_bytes,
-        transfers.len() as u64,
-        vec![list],
-        "staging",
-    );
+    // Phases 3+4: collective read + node-local write of the batch.
+    let batch = transfers.iter().cloned().zip(blobs).collect();
+    let done = bulk_stage_phases(plan, topo, comm, batch, total_bytes, vec![list]);
 
-    // Phase 4: write replicas to node-local storage.
+    Ok((StagedManifest { transfers, total_bytes, meta_ops }, done))
+}
+
+/// Phases 3+4 of the hook, shared by the full stager above and the
+/// incremental re-stager (`staging::residency::incremental_plan`):
+/// `MPI_File_read_all` of `total_bytes` across the batch (one open per
+/// file), the node-local write (ION-routed on BG/Q, local-disk capped
+/// on clusters), and the data-plane replication effects.
+pub(crate) fn bulk_stage_phases(
+    plan: &mut Plan,
+    topo: &Topology,
+    comm: &Comm,
+    batch: Vec<(Transfer, crate::pfs::Blob)>,
+    total_bytes: u64,
+    deps: Vec<StepId>,
+) -> StepId {
+    let staged = read_all_plan(plan, topo, comm, total_bytes, batch.len() as u64, deps, "staging");
+
     let write_path = topo.path_local_write();
     let cap = if write_path.is_empty() { LOCAL_DISK_WRITE_BW } else { f64::INFINITY };
     let write = plan.flow_capped(
@@ -105,16 +115,14 @@ pub fn staged_plan(
     // Data plane: the replicas land on every node of the communicator.
     let (lo, hi) = comm.node_range();
     let mut last = write;
-    for (t, blob) in transfers.iter().zip(blobs) {
+    for (t, blob) in batch {
         last = plan.effect(
-            Effect::NodeWrite { nodes: (lo, hi), path: t.dst.clone(), data: blob },
+            Effect::NodeWrite { nodes: (lo, hi), path: t.dst, data: blob },
             vec![write],
             "write",
         );
     }
-    let done = plan.delay(crate::units::Duration::ZERO, vec![last, write], "write");
-
-    Ok((StagedManifest { transfers, total_bytes, meta_ops }, done))
+    plan.delay(crate::units::Duration::ZERO, vec![last, write], "write")
 }
 
 #[cfg(test)]

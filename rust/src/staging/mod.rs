@@ -15,15 +15,23 @@
 //!   out as the naive implementation hazard.
 //! - [`read_phase`]: tasks reading their staged replica from /tmp, the
 //!   flat 53.4 MB/s-per-process phase of Fig 9.
+//! - [`residency`]: the capacity era of the hook — the residency
+//!   table mirroring node-local contents, the incremental re-stage
+//!   plan (move only missing/stale files), and the session manager
+//!   binding catalog datasets to hook specs.
 
 pub mod gather;
 pub mod hook;
 pub mod naive;
+pub mod residency;
 pub mod spec;
 
 pub use gather::{gather_plan, GatherManifest};
 pub use hook::{staged_plan, StagedManifest};
 pub use naive::naive_plan;
+pub use residency::{
+    incremental_plan, IncrementalManifest, Residency, ResidencyStats, ResidencyTable,
+};
 pub use spec::{BroadcastDef, HookSpec};
 
 /// Node-local paths on `node` matching `pattern` (the gather
@@ -72,6 +80,26 @@ mod tests {
     use crate::engine::SimCore;
     use crate::pfs::GpfsParams;
     use crate::units::MB;
+
+    #[test]
+    fn spec_paths_sorted_and_reproducible() {
+        // Hook transfer lists must be identical across runs: the local
+        // glob enumerates the BTreeMap-backed store in sorted order.
+        let build = || {
+            let mut ns = crate::cluster::NodeStores::new();
+            for name in ["/tmp/out/9.bin", "/tmp/out/1.bin", "/tmp/out/5.bin"] {
+                ns.write_range(0, 3, name, crate::pfs::Blob::real(vec![0; 2]));
+            }
+            ns
+        };
+        let a = spec_paths(&build(), 2, "/tmp/out/*.bin");
+        let b = spec_paths(&build(), 2, "/tmp/out/*.bin");
+        assert_eq!(a, b);
+        assert_eq!(a, vec!["/tmp/out/1.bin", "/tmp/out/5.bin", "/tmp/out/9.bin"]);
+        let mut sorted = a.clone();
+        sorted.sort();
+        assert_eq!(a, sorted);
+    }
 
     #[test]
     fn read_phase_is_flat_in_node_count() {

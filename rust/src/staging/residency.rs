@@ -1,0 +1,440 @@
+//! Node-memory residency: which datasets live on which nodes, and the
+//! incremental re-stage path that exploits it.
+//!
+//! The paper's premise is that staged data is "cached in compute node
+//! memory for *extended periods*, during which time various processing
+//! tasks may efficiently access it". Once node memory is finite that
+//! regime needs management:
+//!
+//! - [`ResidencyTable`] — the bookkeeping mirror of
+//!   [`crate::cluster::NodeStores`]: path -> resident node ranges,
+//!   plus eviction telemetry. `SimCore` owns one and keeps it exactly
+//!   in sync with every engine-applied node write and eviction, so
+//!   experiments can report hit rates and evicted bytes without
+//!   rescanning the data plane.
+//! - [`incremental_plan`] — the hook's re-stage path: rank 0 still
+//!   globs the full spec (discovering what exists costs the same
+//!   either way), but only files *not already resident with matching
+//!   content on every node of the communicator* are broadcast and
+//!   transferred. A replica whose shared-FS original changed since
+//!   staging fails the content check and is restaged — staleness
+//!   against the catalog's view of the dataset is detected by
+//!   checksum, not by trust.
+//! - [`Residency`] — the session-level manager binding catalog
+//!   [`DatasetId`]s to hook specs: stages datasets incrementally,
+//!   refreshes LRU recency for hits, pins the active dataset so the
+//!   workflow computing on it can never have its inputs evicted
+//!   mid-run, and accumulates hit/miss statistics across a whole
+//!   interactive session.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::catalog::DatasetId;
+use crate::cluster::{NodeStores, Topology};
+use crate::engine::SimCore;
+use crate::mpisim::{bcast::bcast_plan, Comm};
+use crate::pfs::ParallelFs;
+use crate::simtime::plan::{Plan, StepId};
+use crate::staging::hook::{bulk_stage_phases, LIST_ENTRY_BYTES};
+use crate::staging::spec::{HookSpec, Transfer};
+use crate::units::Duration;
+
+/// The bookkeeping mirror lives beside the store it mirrors
+/// ([`crate::cluster::ResidencyTable`], owned by `SimCore`);
+/// re-exported here as part of the residency surface.
+pub use crate::cluster::ResidencyTable;
+
+/// What an incremental stage resolved: the delta it moved and the
+/// resident files it skipped.
+#[derive(Clone, Debug, Default)]
+pub struct IncrementalManifest {
+    /// Files transferred this invocation (missing or stale).
+    pub staged: Vec<Transfer>,
+    /// Files already resident with matching content on every node.
+    pub hits: Vec<Transfer>,
+    pub staged_bytes: u64,
+    pub hit_bytes: u64,
+    pub meta_ops: u64,
+}
+
+impl IncrementalManifest {
+    pub fn total_files(&self) -> usize {
+        self.staged.len() + self.hits.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.staged_bytes + self.hit_bytes
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.total_files() == 0 {
+            0.0
+        } else {
+            self.hits.len() as f64 / self.total_files() as f64
+        }
+    }
+}
+
+/// Build the incremental re-stage plan for `spec` over the leader
+/// communicator `comm`: glob everything, transfer only what is missing
+/// or stale on `comm`'s nodes. Appends to `plan`; returns the manifest
+/// and the final step. With every file resident the plan reduces to
+/// the metadata pass (a few ms), which is what makes sub-10-minute
+/// interactive cycles survive memory pressure.
+pub fn incremental_plan(
+    plan: &mut Plan,
+    pfs: &ParallelFs,
+    nodes: &NodeStores,
+    topo: &Topology,
+    comm: &Comm,
+    spec: &HookSpec,
+    deps: Vec<StepId>,
+) -> Result<(IncrementalManifest, StepId)> {
+    let (transfers, meta_ops) = spec.resolve(pfs);
+    if transfers.is_empty() {
+        return Err(anyhow!("hook spec matched no files"));
+    }
+    let (lo, hi) = comm.node_range();
+    let mut staged = Vec::new();
+    let mut hits = Vec::new();
+    let mut blobs = Vec::new();
+    let (mut staged_bytes, mut hit_bytes) = (0u64, 0u64);
+    for t in &transfers {
+        let blob = pfs
+            .read(&t.src)
+            .ok_or_else(|| anyhow!("resolved file vanished: {}", t.src))?
+            .clone();
+        if nodes.resident_matches(lo, hi, &t.dst, &blob) {
+            hit_bytes += blob.len();
+            hits.push(t.clone());
+        } else {
+            staged_bytes += blob.len();
+            staged.push(t.clone());
+            blobs.push(blob);
+        }
+    }
+
+    // Phase 1: rank-0 glob — discovering what exists costs the full
+    // metadata pass whether or not bytes then move.
+    let glob = plan.flow(topo.path_meta(), 1, meta_ops, deps, "glob");
+    let manifest =
+        IncrementalManifest { staged: staged.clone(), hits, staged_bytes, hit_bytes, meta_ops };
+    if staged.is_empty() {
+        let done = plan.delay(Duration::ZERO, vec![glob], "stage-skip");
+        return Ok((manifest, done));
+    }
+    // Phase 2: broadcast only the *delta* transfer list.
+    let list_bytes = staged.len() as u64 * LIST_ENTRY_BYTES;
+    let list = bcast_plan(plan, topo, comm, list_bytes, vec![glob], "list-bcast");
+    // Phases 3+4: collective read + node-local write of the delta only.
+    let done = bulk_stage_phases(
+        plan,
+        topo,
+        comm,
+        staged.into_iter().zip(blobs).collect(),
+        staged_bytes,
+        vec![list],
+    );
+    Ok((manifest, done))
+}
+
+/// Cumulative residency telemetry across a session.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResidencyStats {
+    pub stages: u64,
+    pub file_hits: u64,
+    pub file_misses: u64,
+    pub hit_bytes: u64,
+    pub staged_bytes: u64,
+}
+
+impl ResidencyStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.file_hits + self.file_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.file_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Session-level residency manager: binds catalog datasets to hook
+/// specs and drives incremental staging with pinning and LRU upkeep.
+#[derive(Debug, Default)]
+pub struct Residency {
+    bindings: BTreeMap<DatasetId, HookSpec>,
+    /// Node-local paths each dataset last delivered.
+    delivered: BTreeMap<DatasetId, Vec<String>>,
+    /// Pins this manager currently holds, keyed by owning dataset —
+    /// released exactly once (NodeStores pins are refcounted, so a
+    /// path shared by two datasets stays protected until both let go).
+    pinned_paths: BTreeMap<DatasetId, Vec<String>>,
+    pub stats: ResidencyStats,
+}
+
+impl Residency {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind a catalogued dataset to the hook spec that stages it.
+    pub fn bind(&mut self, id: DatasetId, spec: HookSpec) {
+        self.bindings.insert(id, spec);
+    }
+
+    pub fn spec_of(&self, id: DatasetId) -> Option<&HookSpec> {
+        self.bindings.get(&id)
+    }
+
+    /// Node-local paths the dataset delivered on its last stage.
+    pub fn paths_of(&self, id: DatasetId) -> &[String] {
+        self.delivered.get(&id).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Incrementally stage dataset `id` onto `comm`'s nodes and run
+    /// the transfer to completion. Hits refresh the LRU clock; every
+    /// delivered path is left **pinned** — call
+    /// [`Residency::unpin_dataset`] once the analysis cycle using it
+    /// finishes. If memory pressure rejects any of the writes (pinned
+    /// residents exceed the node budget), the call returns `Err` with
+    /// this dataset's pins released, rather than a manifest for data
+    /// that never landed.
+    pub fn stage_dataset(
+        &mut self,
+        core: &mut SimCore,
+        topo: &Topology,
+        comm: &Comm,
+        id: DatasetId,
+    ) -> Result<IncrementalManifest> {
+        let spec = self
+            .bindings
+            .get(&id)
+            .ok_or_else(|| anyhow!("dataset {id:?} has no bound hook spec"))?
+            .clone();
+        let mut plan = Plan::new(0);
+        let (m, _done) =
+            incremental_plan(&mut plan, &core.pfs, &core.nodes, topo, comm, &spec, vec![])?;
+        let (lo, hi) = comm.node_range();
+        // Refresh this dataset's pins atomically: release whatever it
+        // still holds from a previous stage (a path the spec no longer
+        // resolves must not keep a stale pin forever), then take the
+        // fresh set. Nothing simulates in between, so no eviction can
+        // strike in the gap.
+        for p in self.pinned_paths.remove(&id).unwrap_or_default() {
+            core.nodes.unpin(&p);
+        }
+        // Reuse refreshes recency on every replica of the hit path —
+        // a range-wide hit must not leave split replicas LRU-stale.
+        for t in &m.hits {
+            core.nodes.touch_range(lo, hi, &t.dst);
+        }
+        // Pin before the transfer lands so staging file k can never
+        // evict file k-1 of its own dataset.
+        for t in m.hits.iter().chain(m.staged.iter()) {
+            core.nodes.pin(t.dst.clone());
+        }
+        core.submit(plan);
+        core.run_to_completion();
+        // The engine rejects a write that cannot fit beside pinned
+        // residents (metric `node.write.rejected`) without failing the
+        // plan; surface that here instead of returning a manifest for
+        // data that never landed.
+        for t in m.hits.iter().chain(m.staged.iter()) {
+            let landed = core
+                .pfs
+                .read(&t.src)
+                .is_some_and(|want| core.nodes.resident_matches(lo, hi, &t.dst, want));
+            if !landed {
+                for t2 in m.hits.iter().chain(m.staged.iter()) {
+                    core.nodes.unpin(&t2.dst);
+                }
+                // The delivery record must not outlive a failed stage:
+                // paths_of()/dataset_resident_on() reporting unpinned,
+                // possibly-stale replicas would misplace work.
+                self.delivered.remove(&id);
+                return Err(anyhow!(
+                    "staging {} -> {} was rejected under memory pressure \
+                     (pinned residents exceed the node budget)",
+                    t.src,
+                    t.dst
+                ));
+            }
+        }
+        self.stats.stages += 1;
+        self.stats.file_hits += m.hits.len() as u64;
+        self.stats.file_misses += m.staged.len() as u64;
+        self.stats.hit_bytes += m.hit_bytes;
+        self.stats.staged_bytes += m.staged_bytes;
+        let fresh: Vec<String> =
+            m.hits.iter().chain(m.staged.iter()).map(|t| t.dst.clone()).collect();
+        self.pinned_paths.insert(id, fresh.clone());
+        self.delivered.insert(id, fresh);
+        Ok(m)
+    }
+
+    /// Release the pins [`Residency::stage_dataset`] took. Idempotent:
+    /// each stage's pins are released exactly once, so a double unpin
+    /// can never strip a pin another dataset holds on a shared path.
+    pub fn unpin_dataset(&mut self, core: &mut SimCore, id: DatasetId) {
+        for p in self.pinned_paths.remove(&id).unwrap_or_default() {
+            core.nodes.unpin(&p);
+        }
+    }
+
+    /// True when every path the dataset delivered is resident on
+    /// `node` (locality query for placement decisions).
+    pub fn dataset_resident_on(&self, core: &SimCore, id: DatasetId, node: u32) -> bool {
+        let paths = self.paths_of(id);
+        !paths.is_empty() && paths.iter().all(|p| core.nodes.exists_on(node, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::Catalog;
+    use crate::cluster::{bgq, Topology};
+    use crate::pfs::{Blob, GpfsParams};
+    use crate::units::MB;
+
+    fn setup(nodes: u32, files: usize) -> (SimCore, Topology, HookSpec) {
+        let mut core = SimCore::new();
+        let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+        for i in 0..files {
+            core.pfs
+                .write(format!("/projects/ds/f{i:03}.bin"), Blob::synthetic(MB, 100 + i as u64));
+        }
+        let spec = HookSpec::parse("broadcast to /tmp/ds { /projects/ds/*.bin }").unwrap();
+        (core, topo, spec)
+    }
+
+    #[test]
+    fn first_stage_moves_everything_second_nothing() {
+        let (mut core, topo, spec) = setup(8, 10);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        let (m1, _) =
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+                .unwrap();
+        assert_eq!(m1.staged.len(), 10);
+        assert_eq!(m1.hits.len(), 0);
+        core.submit(p);
+        core.run_to_completion();
+        let t_first = core.now;
+
+        let mut p = Plan::new(1);
+        let (m2, _) =
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+                .unwrap();
+        assert_eq!(m2.staged.len(), 0);
+        assert_eq!(m2.hits.len(), 10);
+        assert_eq!(m2.hit_rate(), 1.0);
+        core.submit(p);
+        core.run_to_completion();
+        // All-hit restage is metadata-only: far under a second.
+        assert!((core.now - t_first).secs_f64() < 0.1, "{}", core.now - t_first);
+    }
+
+    #[test]
+    fn stale_pfs_content_forces_restage() {
+        let (mut core, topo, spec) = setup(4, 4);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+            .unwrap();
+        core.submit(p);
+        core.run_to_completion();
+        // The detector writes a new f001 (same path, new bytes).
+        core.pfs.write("/projects/ds/f001.bin", Blob::synthetic(MB, 999));
+        let mut p = Plan::new(1);
+        let (m, _) =
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+                .unwrap();
+        assert_eq!(m.staged.len(), 1, "only the stale file restages");
+        assert_eq!(m.staged[0].src, "/projects/ds/f001.bin");
+        core.submit(p);
+        core.run_to_completion();
+        let want = core.pfs.read("/projects/ds/f001.bin").unwrap();
+        assert!(core.nodes.read(2, "/tmp/ds/f001.bin").unwrap().same_content(want));
+    }
+
+    #[test]
+    fn residency_manager_tracks_hits_and_pins() {
+        let (mut core, topo, spec) = setup(4, 6);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut catalog = Catalog::new();
+        let id = catalog.register("ds", "/projects/ds", 6, 6 * MB);
+        let mut res = Residency::new();
+        res.bind(id, spec);
+        let m = res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        assert_eq!(m.staged.len(), 6);
+        assert!(core.nodes.is_pinned("/tmp/ds/f000.bin"));
+        assert!(res.dataset_resident_on(&core, id, 3));
+        let m = res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        assert_eq!(m.hits.len(), 6);
+        assert_eq!(res.stats.file_hits, 6);
+        assert_eq!(res.stats.file_misses, 6);
+        assert_eq!(res.stats.hit_rate(), 0.5);
+        res.unpin_dataset(&mut core, id);
+        assert!(!core.nodes.is_pinned("/tmp/ds/f000.bin"));
+        // The engine kept the residency mirror in sync throughout.
+        assert!(core.residency.mirrors(&core.nodes));
+    }
+
+    #[test]
+    fn over_pinned_budget_surfaces_as_error() {
+        let (mut core, topo, spec) = setup(2, 4);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        // A pinned blocker leaves room for less than one file.
+        core.nodes.set_capacity(Some(2 * MB));
+        core.nodes.write_range(0, 1, "/tmp/blocker", Blob::synthetic(MB + MB / 2, 9));
+        core.nodes.pin("/tmp/blocker");
+        let mut catalog = Catalog::new();
+        let id = catalog.register("ds", "/projects/ds", 4, 4 * MB);
+        let mut res = Residency::new();
+        res.bind(id, spec);
+        let out = res.stage_dataset(&mut core, &topo, &comm, id);
+        assert!(out.is_err(), "rejected staging must surface as an error");
+        assert!(core.node_write_rejections() > 0);
+        // This dataset's pins were released; the blocker keeps its pin
+        // and the store stayed within budget throughout.
+        assert!(!core.nodes.is_pinned("/tmp/ds/f000.bin"));
+        assert!(core.nodes.is_pinned("/tmp/blocker"));
+        assert!(core.nodes.bytes_on(0) <= 2 * MB);
+        assert_eq!(res.stats.stages, 0, "failed stages must not book stats");
+    }
+
+    #[test]
+    fn deleted_file_releases_its_stale_pin() {
+        let (mut core, topo, spec) = setup(4, 3);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut catalog = Catalog::new();
+        let id = catalog.register("ds", "/projects/ds", 3, 3 * MB);
+        let mut res = Residency::new();
+        res.bind(id, spec);
+        res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        assert!(core.nodes.is_pinned("/tmp/ds/f002.bin"));
+        // The file disappears from the shared FS; the next stage
+        // resolves two files and must drop the stale third pin.
+        core.pfs.delete("/projects/ds/f002.bin");
+        let m = res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        assert_eq!(m.total_files(), 2);
+        assert!(!core.nodes.is_pinned("/tmp/ds/f002.bin"));
+        assert!(core.nodes.is_pinned("/tmp/ds/f001.bin"));
+        // The orphaned replica is now evictable.
+        assert_eq!(core.evict_path("/tmp/ds/f002.bin").len(), 1);
+    }
+
+    #[test]
+    fn unbound_dataset_errors() {
+        let (mut core, topo, _) = setup(2, 1);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut res = Residency::new();
+        assert!(res
+            .stage_dataset(&mut core, &topo, &comm, crate::catalog::DatasetId(9))
+            .is_err());
+    }
+}

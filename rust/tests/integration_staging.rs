@@ -8,7 +8,7 @@ use xstage::mpisim::Comm;
 use xstage::pfs::{Blob, GpfsParams};
 use xstage::simtime::flownet::ThroughputMode;
 use xstage::simtime::plan::Plan;
-use xstage::staging::{naive_plan, read_phase, staged_plan, HookSpec};
+use xstage::staging::{incremental_plan, naive_plan, read_phase, staged_plan, HookSpec};
 use xstage::units::MB;
 
 fn setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
@@ -165,6 +165,134 @@ fn throughput_models_agree_end_to_end() {
             "staged={staged}: slow model {slow} s vs fast model {fast} s"
         );
     }
+}
+
+#[test]
+fn evicted_files_restage_byte_identical() {
+    // The evict -> incremental re-stage path must leave every node
+    // replica byte-identical to the PFS original. Dataset A (~128 MB)
+    // is staged, then dataset B (~128 MB) under a 200 MB/node budget
+    // forcibly displaces part of A; the incremental re-stage moves
+    // only the displaced files and restores exact bytes.
+    let (mut core, topo, spec_a) = setup(16);
+    core.nodes.set_capacity(Some(200 * MB));
+    let leader = Comm::leader(&topo.spec);
+    let mut p = Plan::new(0);
+    let (ma, _) = staged_plan(&mut p, &core.pfs, &topo, &leader, &spec_a, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    assert_eq!(core.residency.evicted_bytes, 0, "A alone fits");
+
+    for i in 0..32u64 {
+        core.pfs.write(
+            format!("/projects/other/g{i:03}.bin"),
+            Blob::synthetic(4 * MB, 0xB00 + i),
+        );
+    }
+    let spec_b = HookSpec::parse("broadcast to /tmp/other { /projects/other/*.bin }").unwrap();
+    let mut p = Plan::new(1);
+    let (mb, _) = staged_plan(&mut p, &core.pfs, &topo, &leader, &spec_b, vec![]).unwrap();
+    core.submit(p);
+    core.run_to_completion();
+    assert!(core.residency.evicted_bytes > 0, "B must displace part of A");
+    assert!(core.residency.mirrors(&core.nodes));
+    let missing: Vec<_> = ma
+        .transfers
+        .iter()
+        .filter(|t| !core.nodes.exists_on(0, &t.dst))
+        .collect();
+    assert!(!missing.is_empty(), "no A files were displaced");
+    // B itself landed whole.
+    for t in &mb.transfers {
+        assert!(core.nodes.exists_on(5, &t.dst), "{} missing", t.dst);
+    }
+
+    // Incremental re-stage of A through the residency manager:
+    // exactly the displaced delta moves, and the manager pins A's
+    // surviving files so the re-stage cannot displace its own dataset.
+    let mut catalog = xstage::catalog::Catalog::new();
+    let id = catalog.register("run", "/projects/run", ma.transfers.len() as u64, ma.total_bytes);
+    let mut res = xstage::staging::Residency::new();
+    res.bind(id, spec_a.clone());
+    let inc = res.stage_dataset(&mut core, &topo, &leader, id).unwrap();
+    assert_eq!(inc.staged.len(), missing.len());
+    assert_eq!(inc.total_files(), ma.transfers.len());
+    assert!(inc.staged_bytes < ma.total_bytes);
+    for t in &ma.transfers {
+        let want = core.pfs.read(&t.src).unwrap();
+        for node in [0u32, 7, 15] {
+            let got = core
+                .nodes
+                .read(node, &t.dst)
+                .unwrap_or_else(|| panic!("{} absent on node {node} after re-stage", t.dst));
+            assert!(got.same_content(want), "{} differs on node {node}", t.dst);
+        }
+    }
+    assert!(core.residency.mirrors(&core.nodes));
+    // With A whole again, a further incremental plan moves nothing.
+    let mut p = Plan::new(3);
+    let (again, _) =
+        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &leader, &spec_a, vec![])
+            .unwrap();
+    assert!(again.staged.is_empty());
+    assert_eq!(again.hit_rate(), 1.0);
+}
+
+#[test]
+fn cache_aware_workflow_matches_baseline_after_staging() {
+    // End-to-end differential: stage the dataset, run a task farm over
+    // it. When the staged inputs are resident on every node the
+    // locality-aware scheduler must reproduce the baseline exactly.
+    use xstage::dataflow::graph::{Task, TaskGraph};
+    use xstage::dataflow::sched::{run_workflow, SchedulerCfg};
+    use xstage::units::Duration;
+    let run = |locality: bool| {
+        let (mut core, topo, spec) = setup(32);
+        let leader = Comm::leader(&topo.spec);
+        let world = Comm::world(&topo.spec);
+        let mut p = Plan::new(0);
+        let (m, _) = staged_plan(&mut p, &core.pfs, &topo, &leader, &spec, vec![]).unwrap();
+        core.submit(p);
+        core.run_to_completion();
+        let mut g = TaskGraph::new();
+        let files: Vec<String> = m.transfers.iter().map(|t| t.dst.clone()).collect();
+        g.foreach(1024, |i| {
+            Task::compute(format!("t{i}"), Duration::from_secs(3))
+                .with_input(files[i % files.len()].clone(), None)
+        });
+        let cfg = SchedulerCfg { locality_aware: locality, ..Default::default() };
+        run_workflow(&mut core, &topo, &world, g, cfg)
+    };
+    let base = run(false);
+    let loc = run(true);
+    assert_eq!(base.makespan, loc.makespan);
+    assert_eq!(base.completion, loc.completion);
+    assert_eq!(base.staged_read_bytes, loc.staged_read_bytes);
+    assert_eq!(base.unstaged_read_bytes, 0);
+    assert_eq!(loc.unstaged_read_bytes, 0);
+}
+
+#[test]
+fn transfer_lists_are_deterministic_across_runs() {
+    // Hook transfer lists (and therefore everything downstream of
+    // them) must be reproducible: two identically-built simulations
+    // resolve identical manifests, in sorted order.
+    let manifest = || {
+        let (core, topo, spec) = setup(8);
+        let comm = Comm::leader(&topo.spec);
+        let mut p = Plan::new(0);
+        let (m, _) = staged_plan(&mut p, &core.pfs, &topo, &comm, &spec, vec![]).unwrap();
+        m.transfers
+            .iter()
+            .map(|t| (t.src.clone(), t.dst.clone()))
+            .collect::<Vec<_>>()
+    };
+    let a = manifest();
+    let b = manifest();
+    assert_eq!(a, b);
+    let mut sorted = a.clone();
+    sorted.sort();
+    assert_eq!(a, sorted, "manifest must come out in sorted (glob) order");
 }
 
 #[test]

@@ -1,0 +1,345 @@
+//! Property suite for the node-memory residency manager.
+//!
+//! Drives randomized stage/read(touch)/evict/pin schedules against
+//! [`xstage::cluster::NodeStores`] through the engine's synchronized
+//! entry points (`SimCore::node_write_range` / `SimCore::evict_path`)
+//! and, in lockstep, against an independent naive shadow model of the
+//! documented semantics. After **every** step it asserts the residency
+//! invariants:
+//!
+//! - per-node resident bytes never exceed the capacity;
+//! - pinned replicas are never evicted (capacity pressure or forced);
+//! - LRU victim ordering is respected: every eviction the store
+//!   performs matches the shadow's least-(last_use, seq) choice, in
+//!   order, and rejected writes leave the store untouched;
+//! - the engine's residency table exactly mirrors `NodeStores`
+//!   contents.
+//!
+//! The schedules run under both throughput models (the store must be
+//! oblivious to the flow network, and the acceptance bar demands it).
+
+use std::collections::BTreeMap;
+
+use xstage::cluster::StoreWrite;
+use xstage::engine::SimCore;
+use xstage::pfs::Blob;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::util::prng::Pcg64;
+
+const NODES: u32 = 6;
+const PATHS: &[&str] = &[
+    "/tmp/a.bin",
+    "/tmp/b.bin",
+    "/tmp/c.bin",
+    "/tmp/d.bin",
+    "/tmp/e.bin",
+    "/tmp/f.bin",
+    "/tmp/g.bin",
+    "/tmp/h.bin",
+];
+const STEPS: usize = 30;
+const SCHEDULES: u64 = 500;
+
+/// One shadow replica (same semantics as the store's internal one).
+#[derive(Clone, Debug)]
+struct Rep {
+    path: String,
+    lo: u32,
+    hi: u32,
+    len: u64,
+    seed: u64,
+    last_use: u64,
+    seq: u64,
+}
+
+/// Victims of one shadow write: (path, lo, hi, per-node bytes), in
+/// eviction order.
+type Victims = Vec<(String, u32, u32, u64)>;
+
+impl Rep {
+    fn covers(&self, n: u32) -> bool {
+        (self.lo..=self.hi).contains(&n)
+    }
+
+    fn overlaps(&self, lo: u32, hi: u32) -> bool {
+        self.lo <= hi && self.hi >= lo
+    }
+}
+
+/// Naive reimplementation of the documented NodeStores semantics.
+#[derive(Default)]
+struct Shadow {
+    cap: u64,
+    reps: Vec<Rep>,
+    /// Refcounted pins, like the store's.
+    pinned: BTreeMap<String, u32>,
+    clock: u64,
+    seq: u64,
+}
+
+impl Shadow {
+    fn used(&self, n: u32) -> u64 {
+        self.reps.iter().filter(|r| r.covers(n)).map(|r| r.len).sum()
+    }
+
+    fn pin(&mut self, path: &str) {
+        *self.pinned.entry(path.to_string()).or_insert(0) += 1;
+    }
+
+    fn unpin(&mut self, path: &str) {
+        if let Some(n) = self.pinned.get_mut(path) {
+            *n -= 1;
+            if *n == 0 {
+                self.pinned.remove(path);
+            }
+        }
+    }
+
+    /// Keep (path, lo) iteration order identical to the store's
+    /// BTreeMap-of-sorted-vecs enumeration.
+    fn sort(&mut self) {
+        self.reps.sort_by(|a, b| (a.path.as_str(), a.lo).cmp(&(b.path.as_str(), b.lo)));
+    }
+
+    /// The documented write spec. Some(victims in eviction order) when
+    /// stored; None when rejected (state untouched).
+    fn write(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        len: u64,
+        seed: u64,
+    ) -> Option<Victims> {
+        if len > self.cap {
+            return None;
+        }
+        // Feasibility: with every evictable victim gone, only pinned
+        // other-path replicas remain.
+        for n in lo..=hi {
+            let kept: u64 = self
+                .reps
+                .iter()
+                .filter(|r| r.covers(n) && r.path != path && self.pinned.contains_key(&r.path))
+                .map(|r| r.len)
+                .sum();
+            if kept + len > self.cap {
+                return None;
+            }
+        }
+        // Evict least-(last_use, seq) victims covering an over-budget
+        // node of the range.
+        let mut victims = Vec::new();
+        loop {
+            let post = |sh: &Self, n: u32| {
+                let mut u = sh.used(n);
+                if let Some(r) = sh.reps.iter().find(|r| r.path == path && r.covers(n)) {
+                    u -= r.len;
+                }
+                u
+            };
+            let over: Vec<u32> =
+                (lo..=hi).filter(|&n| post(self, n) + len > self.cap).collect();
+            if over.is_empty() {
+                break;
+            }
+            self.sort();
+            let idx = self
+                .reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| {
+                    r.path != path
+                        && !self.pinned.contains_key(&r.path)
+                        && over.iter().any(|&n| r.covers(n))
+                })
+                .min_by_key(|(_, r)| (r.last_use, r.seq))
+                .map(|(i, _)| i)
+                .expect("feasibility check promised an evictable victim");
+            let r = self.reps.remove(idx);
+            victims.push((r.path, r.lo, r.hi, r.len));
+        }
+        // Replace same-path overlap, then insert.
+        self.clock += 1;
+        self.seq += 1;
+        let (now, seq) = (self.clock, self.seq);
+        let mut next = Vec::with_capacity(self.reps.len() + 1);
+        for r in self.reps.drain(..) {
+            if r.path != path || !r.overlaps(lo, hi) {
+                next.push(r);
+                continue;
+            }
+            if r.lo < lo {
+                next.push(Rep { hi: lo - 1, ..r.clone() });
+            }
+            if r.hi > hi {
+                next.push(Rep { lo: hi + 1, ..r });
+            }
+        }
+        next.push(Rep { path: path.to_string(), lo, hi, len, seed, last_use: now, seq });
+        self.reps = next;
+        Some(victims)
+    }
+
+    fn touch(&mut self, node: u32, path: &str) {
+        self.clock += 1;
+        let now = self.clock;
+        if let Some(r) = self.reps.iter_mut().find(|r| r.path == path && r.covers(node)) {
+            r.last_use = now;
+        }
+    }
+
+    fn touch_range(&mut self, lo: u32, hi: u32, path: &str) {
+        self.clock += 1;
+        let now = self.clock;
+        for r in self.reps.iter_mut().filter(|r| r.path == path && r.overlaps(lo, hi)) {
+            r.last_use = now;
+        }
+    }
+
+    /// Forced eviction; returns the removed replicas sorted by lo.
+    fn evict_path(&mut self, path: &str) -> Vec<(u32, u32, u64)> {
+        if self.pinned.contains_key(path) {
+            return Vec::new();
+        }
+        let mut out: Vec<(u32, u32, u64)> = self
+            .reps
+            .iter()
+            .filter(|r| r.path == path)
+            .map(|r| (r.lo, r.hi, r.len))
+            .collect();
+        out.sort_unstable();
+        self.reps.retain(|r| r.path != path);
+        out
+    }
+}
+
+/// Assert every invariant, comparing the store against the shadow.
+fn check(core: &SimCore, sh: &Shadow, cap: u64) {
+    for n in 0..NODES {
+        let got = core.nodes.bytes_on(n);
+        assert!(got <= cap, "node {n}: {got} B resident > capacity {cap}");
+        assert_eq!(got, sh.used(n), "node {n}: usage diverged from shadow");
+    }
+    for n in 0..NODES {
+        let mut want: Vec<String> = sh
+            .reps
+            .iter()
+            .filter(|r| r.covers(n))
+            .map(|r| r.path.clone())
+            .collect();
+        want.sort();
+        want.dedup();
+        assert_eq!(core.nodes.paths_on(n), want, "paths on node {n} diverged");
+        for r in sh.reps.iter().filter(|r| r.covers(n)) {
+            let got = core.nodes.read(n, &r.path).expect("shadow replica missing in store");
+            assert!(
+                got.same_content(&Blob::synthetic(r.len, r.seed)),
+                "content of {} diverged on node {n}",
+                r.path
+            );
+        }
+    }
+    assert!(
+        core.residency.mirrors(&core.nodes),
+        "residency table no longer mirrors NodeStores"
+    );
+}
+
+fn drive(mode: ThroughputMode, schedule_seed: u64) {
+    let mut rng = Pcg64::new(schedule_seed);
+    let cap = rng.range_u64(60, 160);
+    let mut core = SimCore::with_mode(mode);
+    core.nodes.set_capacity(Some(cap));
+    let mut sh = Shadow { cap, ..Default::default() };
+
+    for step in 0..STEPS {
+        match rng.below(10) {
+            // Stage: a capacity-checked replicated write.
+            0..=4 => {
+                let lo = rng.below(NODES as u64) as u32;
+                let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                let len = rng.range_u64(1, 80);
+                let seed = rng.next_u64() | 1;
+                let got = core.node_write_range(lo, hi, path, Blob::synthetic(len, seed));
+                let want = sh.write(lo, hi, path, len, seed);
+                match (&got, &want) {
+                    (StoreWrite::Stored { evicted }, Some(victims)) => {
+                        assert_eq!(
+                            evicted.len(),
+                            victims.len(),
+                            "step {step}: eviction count diverged"
+                        );
+                        for (e, (vp, vlo, vhi, vlen)) in evicted.iter().zip(victims) {
+                            assert_eq!(
+                                (&e.path, e.lo, e.hi, e.bytes),
+                                (vp, *vlo, *vhi, *vlen),
+                                "step {step}: LRU victim order diverged"
+                            );
+                            assert!(
+                                !sh.pinned.contains_key(&e.path),
+                                "step {step}: pinned replica {} evicted",
+                                e.path
+                            );
+                        }
+                    }
+                    (StoreWrite::Rejected { .. }, None) => {}
+                    (g, w) => panic!("step {step}: outcome diverged: {g:?} vs shadow {w:?}"),
+                }
+            }
+            // Read: refreshes LRU recency (single node or whole range).
+            5..=6 => {
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                if rng.below(2) == 0 {
+                    let node = rng.below(NODES as u64) as u32;
+                    core.nodes.touch(node, path);
+                    sh.touch(node, path);
+                } else {
+                    let lo = rng.below(NODES as u64) as u32;
+                    let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+                    core.nodes.touch_range(lo, hi, path);
+                    sh.touch_range(lo, hi, path);
+                }
+            }
+            // Pin / unpin.
+            7 => {
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                if rng.below(2) == 0 {
+                    core.nodes.pin(path.to_string());
+                    sh.pin(path);
+                } else {
+                    core.nodes.unpin(path);
+                    sh.unpin(path);
+                }
+            }
+            // Forced eviction (no-op on pinned paths).
+            _ => {
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                let got = core.evict_path(path);
+                let want = sh.evict_path(path);
+                let got_ranges: Vec<(u32, u32, u64)> =
+                    got.iter().map(|e| (e.lo, e.hi, e.bytes)).collect();
+                assert_eq!(got_ranges, want, "step {step}: forced eviction diverged");
+                for e in &got {
+                    assert!(!sh.pinned.contains_key(&e.path), "pinned replica force-evicted");
+                }
+            }
+        }
+        check(&core, &sh, cap);
+    }
+}
+
+#[test]
+fn residency_invariants_hold_fast_model() {
+    for s in 0..SCHEDULES {
+        drive(ThroughputMode::Fast, 0x5EED_0000 + s);
+    }
+}
+
+#[test]
+fn residency_invariants_hold_slow_model() {
+    for s in 0..SCHEDULES {
+        drive(ThroughputMode::Slow, 0xA5EED_000 + s);
+    }
+}
