@@ -1,0 +1,74 @@
+//! Bench: the interactive serving matrix — staged-resident serving vs
+//! naive GPFS re-reads.
+//!
+//! Prints the scenario-matrix comparison table, asserts the
+//! acceptance bar (staged P99 turnaround strictly beats the naive
+//! baseline at **every** matrix point, deterministically reproduced
+//! across two same-seed runs), and measures host time for a serve
+//! run under both throughput models. With `XSTAGE_BENCH_JSON` set the
+//! measurements emit one JSON point each — CI uploads them per run as
+//! the `BENCH_serve.json` artifact.
+//!
+//! Run: `cargo bench --bench serve`
+
+use xstage::experiments::serve;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::service::{run_serve, ServeMode};
+use xstage::util::bench::{bench_n, section, smoke};
+
+fn main() {
+    section("serve — interactive sessions over staged data");
+    let sessions = if smoke() { 8 } else { serve::SESSIONS };
+    let result = serve::run_with(sessions, 42);
+    result.print();
+
+    // Acceptance: staged beats naive on P99 at every matrix point,
+    // and the turnaround tables are bit-identical across same-seed
+    // runs.
+    for pt in serve::matrix() {
+        let (s1, n1) = serve::run_point(&pt, sessions, 42);
+        let (s2, _) = serve::run_point(&pt, sessions, 42);
+        assert!(
+            s1.percentiles.p99 < n1.percentiles.p99,
+            "staged P99 {} must beat naive P99 {} at {pt:?}",
+            s1.percentiles.p99,
+            n1.percentiles.p99
+        );
+        assert_eq!(
+            s1.turnaround_secs, s2.turnaround_secs,
+            "same-seed serve runs diverged at {pt:?}"
+        );
+        assert_eq!(s1.reads.unstaged_bytes, 0, "staged serving re-read the shared FS");
+    }
+    println!(
+        "\nall {} matrix points: staged P99 < naive P99, deterministic",
+        serve::matrix().len()
+    );
+
+    section("host-time: serve simulation throughput");
+    let pt = serve::matrix()[0];
+    bench_n("serve/staged-session-matrix-point", 3, || {
+        let out = run_serve(
+            pt.nodes,
+            &pt.cfg(ServeMode::Staged, sessions, 42),
+            ThroughputMode::Fast,
+        );
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("serve/naive-session-matrix-point", 3, || {
+        let out = run_serve(
+            pt.nodes,
+            &pt.cfg(ServeMode::Naive, sessions, 42),
+            ThroughputMode::Fast,
+        );
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("serve/staged-session-slow-model", 3, || {
+        let out = run_serve(
+            pt.nodes,
+            &pt.cfg(ServeMode::Staged, sessions, 42),
+            ThroughputMode::Slow,
+        );
+        assert_eq!(out.sessions, sessions);
+    });
+}

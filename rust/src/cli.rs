@@ -1,62 +1,130 @@
 //! The `xstage` command-line interface.
 //!
-//! One subcommand per paper experiment plus utility commands:
-//!
-//! ```text
-//! xstage fig10 [--nodes 512,1024,...]   staging+write bandwidth sweep
-//! xstage fig11 [--nodes ...]            staged vs naive end-to-end
-//! xstage fig12 [--cores 64,128,...]     FF stage-1 makespan scaling
-//! xstage fig13 [--cores ...]            FF stage-2 makespan scaling
-//! xstage reduction                      SVI-A cluster reduction
-//! xstage cache                          SVI-B worker-cache experiment
-//! xstage all                            every table, in order
-//! xstage runtime-check                  load artifacts + smoke-execute
-//! ```
+//! One subcommand per paper experiment plus utility commands, all
+//! declared in one dispatch table ([`commands`]) from which the help
+//! text ([`usage`]) is generated — the two cannot drift apart (a test
+//! asserts every command appears exactly once in the help). Run
+//! `xstage --help` (or read the [`commands`] table below) for the
+//! full list; this comment deliberately does not repeat it.
 
 use anyhow::{bail, Result};
 
 use crate::experiments;
 use crate::util::args::Args;
 
-pub const USAGE: &str = "usage: xstage <command> [flags]
+/// One dispatchable subcommand: its name, a flags hint, a one-line
+/// summary (both rendered into [`usage`]), and its entry point.
+pub struct Command {
+    pub name: &'static str,
+    pub flags: &'static str,
+    pub summary: &'static str,
+    run: fn(&Args) -> Result<()>,
+}
 
-commands:
-  fig10       Staging+Write aggregate bandwidth vs nodes   [--nodes a,b,c]
-  fig11       End-to-end input: I/O hook vs naive          [--nodes a,b,c]
-  fig12       FF-HEDM stage 1 makespan scaling             [--cores a,b,c]
-  fig13       FF-HEDM stage 2 makespan scaling             [--cores a,b,c]
-  reduction   NF-HEDM data reduction on the cluster (SVI-A)
-  cache       Worker input-cache experiment (SVI-B)
-  reuse       Staged-data reuse across interactive cycles (SI)
-  campaign    Multi-campaign residency session under memory pressure
-  all         Run every experiment table in order
-  runtime-check  Load AOT artifacts and smoke-execute on PJRT
-";
+/// The dispatch table. [`usage`] renders from this, so help text and
+/// dispatchable commands stay in sync by construction.
+pub fn commands() -> &'static [Command] {
+    &COMMANDS
+}
 
-/// Dispatch a parsed command line; returns the process exit code.
-pub fn dispatch(args: &Args) -> Result<()> {
-    match args.command.as_deref() {
-        Some("fig10") => {
+static COMMANDS: [Command; 11] = [
+    Command {
+        name: "fig10",
+        flags: "[--nodes a,b,c]",
+        summary: "Staging+Write aggregate bandwidth vs nodes",
+        run: |args| {
             let sweep = args.u32_list_or("nodes", experiments::BGQ_SWEEP)?;
             experiments::fig10::run(&sweep).print();
-        }
-        Some("fig11") => {
+            Ok(())
+        },
+    },
+    Command {
+        name: "fig11",
+        flags: "[--nodes a,b,c]",
+        summary: "End-to-end input: I/O hook vs naive",
+        run: |args| {
             let sweep = args.u32_list_or("nodes", experiments::BGQ_SWEEP)?;
             experiments::fig11::run(&sweep).print();
-        }
-        Some("fig12") => {
+            Ok(())
+        },
+    },
+    Command {
+        name: "fig12",
+        flags: "[--cores a,b,c]",
+        summary: "FF-HEDM stage 1 makespan scaling",
+        run: |args| {
             let sweep = args.u32_list_or("cores", experiments::ORTHROS_SWEEP)?;
             experiments::fig12::run(&sweep).print();
-        }
-        Some("fig13") => {
+            Ok(())
+        },
+    },
+    Command {
+        name: "fig13",
+        flags: "[--cores a,b,c]",
+        summary: "FF-HEDM stage 2 makespan scaling",
+        run: |args| {
             let sweep = args.u32_list_or("cores", experiments::ORTHROS_SWEEP)?;
             experiments::fig13::run(&sweep).print();
-        }
-        Some("reduction") => experiments::reduction::run().print(),
-        Some("reuse") => experiments::reuse::run().print(),
-        Some("cache") => experiments::cache::run().print(),
-        Some("campaign") => experiments::campaign::run().print(),
-        Some("all") => {
+            Ok(())
+        },
+    },
+    Command {
+        name: "reduction",
+        flags: "",
+        summary: "NF-HEDM data reduction on the cluster (SVI-A)",
+        run: |_| {
+            experiments::reduction::run().print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "cache",
+        flags: "",
+        summary: "Worker input-cache experiment (SVI-B)",
+        run: |_| {
+            experiments::cache::run().print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "reuse",
+        flags: "",
+        summary: "Staged-data reuse across interactive cycles (SI)",
+        run: |_| {
+            experiments::reuse::run().print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "campaign",
+        flags: "",
+        summary: "Multi-campaign residency session under memory pressure",
+        run: |_| {
+            experiments::campaign::run().print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "serve",
+        flags: "[--sessions N] [--seed S]",
+        summary: "Interactive serving matrix: staged-resident vs naive re-read",
+        run: |args| {
+            let sessions = args.u64_or("sessions", experiments::serve::SESSIONS as u64)?;
+            anyhow::ensure!(
+                (1..=65536).contains(&sessions),
+                "--sessions must be in 1..=65536, got {sessions}"
+            );
+            let seed =
+                args.u64_or("seed", crate::staging::service::ServiceCfg::default().seed)?;
+            experiments::serve::run_with(sessions as usize, seed).print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "all",
+        flags: "",
+        summary: "Run every experiment table in order",
+        run: |_| {
             experiments::fig10::default().print();
             println!();
             experiments::fig11::default().print();
@@ -72,12 +140,41 @@ pub fn dispatch(args: &Args) -> Result<()> {
             experiments::reuse::run().print();
             println!();
             experiments::campaign::run().print();
-        }
-        Some("runtime-check") => runtime_check()?,
-        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
-        None => bail!("{USAGE}"),
+            println!();
+            experiments::serve::run().print();
+            Ok(())
+        },
+    },
+    Command {
+        name: "runtime-check",
+        flags: "",
+        summary: "Load AOT artifacts and smoke-execute on PJRT",
+        run: |_| runtime_check(),
+    },
+];
+
+/// Render the help text from the dispatch table.
+pub fn usage() -> String {
+    let name_w = COMMANDS.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    let sum_w = COMMANDS.iter().map(|c| c.summary.len()).max().unwrap_or(0);
+    let mut out = String::from("usage: xstage <command> [flags]\n\ncommands:\n");
+    for c in &COMMANDS {
+        let line = format!("  {:<name_w$}  {:<sum_w$}  {}", c.name, c.summary, c.flags);
+        out.push_str(line.trim_end());
+        out.push('\n');
     }
-    Ok(())
+    out
+}
+
+/// Dispatch a parsed command line.
+pub fn dispatch(args: &Args) -> Result<()> {
+    let Some(cmd) = args.command.as_deref() else {
+        bail!("{}", usage());
+    };
+    match COMMANDS.iter().find(|c| c.name == cmd) {
+        Some(c) => (c.run)(args),
+        None => bail!("unknown command {cmd:?}\n{}", usage()),
+    }
 }
 
 fn runtime_check() -> Result<()> {
@@ -114,6 +211,50 @@ mod tests {
     }
 
     #[test]
+    fn help_text_stays_in_sync_with_dispatch_table() {
+        // Every dispatchable command appears exactly once as a help
+        // line, and every help line names a dispatchable command —
+        // the property that rotted when `campaign` and `serve`
+        // predated the old hand-maintained USAGE string.
+        let help = usage();
+        let listed: Vec<&str> = help
+            .lines()
+            .skip_while(|l| *l != "commands:")
+            .skip(1)
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.split_whitespace().next().unwrap())
+            .collect();
+        let names: Vec<&str> = commands().iter().map(|c| c.name).collect();
+        assert_eq!(listed, names, "help lines != dispatch table");
+        for c in commands() {
+            assert_eq!(
+                help.matches(&format!("  {} ", c.name)).count()
+                    + help.matches(&format!("  {}\n", c.name)).count(),
+                1,
+                "{} must appear exactly once in help",
+                c.name
+            );
+        }
+        // The newer subcommands are really there.
+        assert!(names.contains(&"campaign") && names.contains(&"serve"));
+        // Unknown-command errors carry the generated help.
+        let err = dispatch(&parse("nonsense")).unwrap_err().to_string();
+        assert!(err.contains("commands:") && err.contains("serve"));
+    }
+
+    #[test]
+    fn every_command_dispatches_to_its_table_entry() {
+        // Resolution only (running every experiment here would be a
+        // full evaluation pass): an unknown name misses the table, a
+        // known name resolves to the entry whose name matches.
+        for c in commands() {
+            let found = commands().iter().find(|k| k.name == c.name).unwrap();
+            assert!(std::ptr::eq(found, c));
+        }
+        assert!(commands().iter().all(|c| !c.summary.is_empty()));
+    }
+
+    #[test]
     fn fig12_small_sweep_runs() {
         dispatch(&parse("fig12 --cores 64,128")).unwrap();
     }
@@ -126,5 +267,10 @@ mod tests {
     #[test]
     fn campaign_runs() {
         dispatch(&parse("campaign")).unwrap();
+    }
+
+    #[test]
+    fn serve_small_matrix_runs() {
+        dispatch(&parse("serve --sessions 6 --seed 9")).unwrap();
     }
 }

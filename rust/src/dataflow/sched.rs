@@ -17,6 +17,18 @@
 //!
 //! Determinism: slot pool and ready queue are strictly ordered; equal
 //! event times break by insertion sequence in the engine's heap.
+//!
+//! Two schedulers share one set of placement/plan-building internals:
+//!
+//! - [`Scheduler`] — the original single-workflow form ([`run_workflow`]):
+//!   one task graph, run to completion.
+//! - [`SessionScheduler`] — the interactive serving form: many
+//!   independently-submitted session graphs share the worker pool
+//!   concurrently, with **session-fair** dispatch (the next free slot
+//!   goes to the admitted session with the least compute dispatched so
+//!   far) and per-session accounting. With exactly one session the
+//!   fair policy degenerates to the FIFO baseline and the two are
+//!   bit-identical (tested).
 
 use std::collections::HashSet;
 use std::collections::VecDeque;
@@ -32,6 +44,24 @@ use super::graph::{TaskGraph, TaskId};
 /// Tag namespace for scheduler-owned plans (avoids collision with
 /// staging/transfer plans sharing the engine).
 pub const TASK_TAG_BASE: u64 = 1 << 48;
+
+/// Identifies an analysis session inside a [`SessionScheduler`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct SessionId(pub u32);
+
+/// Engine tag of a session task:
+/// `TASK_TAG_BASE + (session << 32) + task`.
+pub fn session_task_tag(sid: SessionId, tid: TaskId) -> u64 {
+    assert!((tid.0 as u64) < (1 << 32), "task index overflows tag");
+    assert!((sid.0 as u64) < (1 << 16), "session index overflows tag");
+    TASK_TAG_BASE + ((sid.0 as u64) << 32) + tid.0 as u64
+}
+
+/// Inverse of [`session_task_tag`]; `None` for non-task tags.
+pub fn decode_task_tag(tag: u64) -> Option<(SessionId, TaskId)> {
+    let rel = tag.checked_sub(TASK_TAG_BASE)?;
+    Some((SessionId((rel >> 32) as u32), TaskId((rel & 0xffff_ffff) as usize)))
+}
 
 /// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
@@ -79,11 +109,153 @@ pub struct WorkflowStats {
     pub cache_hits: u64,
 }
 
-/// The scheduler; implements [`Director`] so the engine drives it.
-pub struct Scheduler {
-    topo: Topology,
-    comm: Comm,
-    cfg: SchedulerCfg,
+/// Input-read accounting shared by [`Scheduler`] and each session of a
+/// [`SessionScheduler`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReadStats {
+    /// Bytes read from node-local staged replicas.
+    pub staged_bytes: u64,
+    /// Bytes read (or re-read) from the shared FS.
+    pub unstaged_bytes: u64,
+    /// Reads skipped by the worker input cache.
+    pub cache_hits: u64,
+}
+
+/// Index into `free_slots` of the slot `tid` should occupy.
+/// Baseline: the top of the LIFO pool. Locality-aware: the topmost
+/// slot whose node already holds every staged input; top-of-pool
+/// fallback when none (or when the task reads nothing).
+fn pick_slot_in(
+    core: &SimCore,
+    cfg: &SchedulerCfg,
+    graph: &TaskGraph,
+    tid: TaskId,
+    free_slots: &[u32],
+) -> usize {
+    let top = free_slots.len() - 1;
+    if !cfg.locality_aware {
+        return top;
+    }
+    let task = &graph.tasks[tid.0];
+    if task.inputs.is_empty() {
+        return top;
+    }
+    // Resolve each input's resident coverage once per task, not
+    // once per free slot: the slot scan then tests plain ranges.
+    let coverage: Vec<Vec<(u32, u32)>> =
+        task.inputs.iter().map(|i| core.nodes.coverage_of(&i.path)).collect();
+    if coverage.iter().any(Vec::is_empty) {
+        // Some input is resident nowhere: no slot can qualify.
+        return top;
+    }
+    let holds = |node: u32| {
+        coverage
+            .iter()
+            .all(|c| c.iter().any(|&(a, b)| (a..=b).contains(&node)))
+    };
+    for (idx, &node) in free_slots.iter().enumerate().rev() {
+        if holds(node) {
+            return idx;
+        }
+    }
+    top
+}
+
+/// Build the per-task plan: dispatch overhead -> input reads ->
+/// compute -> output write. `cache` and `reads` carry the caller's
+/// (per-workflow or per-session) input-cache and byte accounting.
+#[allow(clippy::too_many_arguments)]
+fn build_task_plan(
+    core: &mut SimCore,
+    topo: &Topology,
+    cfg: &SchedulerCfg,
+    graph: &TaskGraph,
+    tid: TaskId,
+    node: u32,
+    tag: u64,
+    cache: &mut HashSet<(u32, String)>,
+    reads: &mut ReadStats,
+) -> Plan {
+    let task = &graph.tasks[tid.0];
+    let mut p = Plan::new(tag);
+    let mut prev = p.delay(cfg.dispatch_overhead, vec![], "dispatch");
+
+    // Input reads.
+    let mut local_bytes = 0u64;
+    for input in &task.inputs {
+        // (node, path) worker cache: insert returns false when the
+        // path is already warm on this node. The key String is only
+        // allocated when caching is on — the serve hot path runs with
+        // it off.
+        if cfg.cache_inputs && !cache.insert((node, input.path.clone())) {
+            reads.cache_hits += 1;
+            continue;
+        }
+        if let Some(blob) = core.nodes.read(node, &input.path) {
+            // Staged: node-local stream, perfectly scalable -> a
+            // pure delay at the per-process RAM-disk rate (not a
+            // flownet flow; it contends with nothing).
+            let bytes = input.bytes.unwrap_or(blob.len());
+            local_bytes += bytes;
+            reads.staged_bytes += bytes;
+            // The read refreshes the replica's LRU recency.
+            core.nodes.touch(node, &input.path);
+        } else if let Some(blob) = core.pfs.read(&input.path) {
+            // Not staged: fall back to an uncoordinated GPFS read —
+            // this IS the per-task naive I/O pattern.
+            let bytes = input.bytes.unwrap_or(blob.len());
+            reads.unstaged_bytes += bytes;
+            prev = p.flow(
+                topo.path_uncoordinated_read(),
+                1,
+                bytes,
+                vec![prev],
+                "read",
+            );
+        } else if let Some(bytes) = input.bytes {
+            // Size-only input (pure timing model, no data plane).
+            reads.unstaged_bytes += bytes;
+            prev = p.flow(
+                topo.path_uncoordinated_read(),
+                1,
+                bytes,
+                vec![prev],
+                "read",
+            );
+        } else {
+            panic!(
+                "task {:?} input {:?} not found on node {node} nor shared FS",
+                task.name, input.path
+            );
+        }
+    }
+    if local_bytes > 0 {
+        let dur = crate::units::transfer_time(local_bytes, topo.spec.ramdisk_proc_read_bw);
+        prev = p.delay(dur, vec![prev], "read");
+    }
+
+    // Compute.
+    prev = p.delay(task.runtime, vec![prev], "compute");
+
+    // Output write to the shared FS (small results, coordinated).
+    if task.output_bytes > 0 {
+        p.flow(
+            topo.path_coordinated_read(), // same links, reverse dir
+            1,
+            task.output_bytes,
+            vec![prev],
+            "output",
+        );
+    }
+    p
+}
+
+/// Dataflow bookkeeping for one task graph: the ready queue released
+/// by dependencies and per-task completion state. Both schedulers run
+/// their graphs through this one implementation, so the
+/// single-session [`SessionScheduler`] == [`Scheduler`] bit-identity
+/// is structural, not hand-synced.
+struct GraphRun {
     graph: TaskGraph,
     /// Tasks whose deps are satisfied, FIFO.
     ready: VecDeque<TaskId>,
@@ -91,22 +263,14 @@ pub struct Scheduler {
     missing: Vec<u32>,
     /// Dependents adjacency.
     dependents: Vec<Vec<u32>>,
-    /// Free worker slots (node ids, one entry per free rank), LIFO.
-    free_slots: Vec<u32>,
     /// Node a running task occupies.
     running_node: Vec<u32>,
-    /// (node, path) pairs already read by some worker on that node.
-    cache: HashSet<(u32, String)>,
-    start: Option<SimTime>,
     completion: Vec<SimTime>,
     remaining: usize,
-    staged_read_bytes: u64,
-    unstaged_read_bytes: u64,
-    cache_hits: u64,
 }
 
-impl Scheduler {
-    pub fn new(topo: Topology, comm: Comm, graph: TaskGraph, cfg: SchedulerCfg) -> Scheduler {
+impl GraphRun {
+    fn new(graph: TaskGraph) -> GraphRun {
         let n = graph.len();
         assert!(n > 0, "empty task graph");
         graph.topo_order().expect("task graph has a cycle");
@@ -122,31 +286,81 @@ impl Scheduler {
                 ready.push_back(TaskId(i));
             }
         }
-        // Slot pool: highest node pushed first so pop() hands out node 0
-        // first — deterministic and friendly to small debug traces.
-        let mut free_slots = Vec::with_capacity(comm.size() as usize);
-        for node in (comm.node_lo..=comm.node_hi).rev() {
-            for _ in 0..comm.ranks_per_node {
-                free_slots.push(node);
+        GraphRun {
+            ready,
+            missing,
+            dependents,
+            running_node: vec![u32::MAX; n],
+            completion: vec![SimTime::ZERO; n],
+            remaining: n,
+            graph,
+        }
+    }
+
+    /// Record `tid` as dispatched onto `node`.
+    fn launch(&mut self, tid: TaskId, node: u32) {
+        self.running_node[tid.0] = node;
+    }
+
+    /// Mark `tid` complete at `now`, release newly-ready dependents
+    /// into the queue, and return the node it occupied.
+    fn complete(&mut self, tid: TaskId, now: SimTime) -> u32 {
+        self.completion[tid.0] = now;
+        self.remaining -= 1;
+        let node = std::mem::replace(&mut self.running_node[tid.0], u32::MAX);
+        debug_assert_ne!(node, u32::MAX, "completion of non-running task");
+        for d in std::mem::take(&mut self.dependents[tid.0]) {
+            self.missing[d as usize] -= 1;
+            if self.missing[d as usize] == 0 {
+                self.ready.push_back(TaskId(d as usize));
             }
         }
+        node
+    }
+
+    fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+/// The worker slot pool: node ids, one entry per free rank, LIFO.
+/// Highest node pushed first so pop() hands out node 0 first —
+/// deterministic and friendly to small debug traces.
+fn build_slot_pool(comm: &Comm) -> Vec<u32> {
+    let mut free_slots = Vec::with_capacity(comm.size() as usize);
+    for node in (comm.node_lo..=comm.node_hi).rev() {
+        for _ in 0..comm.ranks_per_node {
+            free_slots.push(node);
+        }
+    }
+    free_slots
+}
+
+/// The scheduler; implements [`Director`] so the engine drives it.
+pub struct Scheduler {
+    topo: Topology,
+    comm: Comm,
+    cfg: SchedulerCfg,
+    run: GraphRun,
+    /// Free worker slots (see [`build_slot_pool`]).
+    free_slots: Vec<u32>,
+    /// (node, path) pairs already read by some worker on that node.
+    cache: HashSet<(u32, String)>,
+    start: Option<SimTime>,
+    reads: ReadStats,
+}
+
+impl Scheduler {
+    pub fn new(topo: Topology, comm: Comm, graph: TaskGraph, cfg: SchedulerCfg) -> Scheduler {
         Scheduler {
             topo,
             comm,
             cfg,
-            ready,
-            missing,
-            dependents,
-            free_slots,
-            running_node: vec![u32::MAX; n],
+            run: GraphRun::new(graph),
+            free_slots: build_slot_pool(&comm),
             cache: HashSet::new(),
             start: None,
-            completion: vec![SimTime::ZERO; n],
-            remaining: n,
-            graph,
-            staged_read_bytes: 0,
-            unstaged_read_bytes: 0,
-            cache_hits: 0,
+            reads: ReadStats::default(),
         }
     }
 
@@ -155,157 +369,44 @@ impl Scheduler {
         if self.start.is_none() {
             self.start = Some(core.now);
         }
-        while !self.ready.is_empty() && !self.free_slots.is_empty() {
-            let tid = self.ready.pop_front().unwrap();
-            let idx = self.pick_slot(core, tid);
+        while !self.run.ready.is_empty() && !self.free_slots.is_empty() {
+            let tid = self.run.ready.pop_front().unwrap();
+            let idx = pick_slot_in(core, &self.cfg, &self.run.graph, tid, &self.free_slots);
             // swap_remove of the top index == pop: the baseline path
             // and a satisfied locality preference at the top slot are
             // byte-identical in slot-pool evolution.
             let node = self.free_slots.swap_remove(idx);
-            self.running_node[tid.0] = node;
-            let plan = self.task_plan(core, tid, node);
+            self.run.launch(tid, node);
+            let plan = build_task_plan(
+                core,
+                &self.topo,
+                &self.cfg,
+                &self.run.graph,
+                tid,
+                node,
+                TASK_TAG_BASE + tid.0 as u64,
+                &mut self.cache,
+                &mut self.reads,
+            );
             core.submit(plan);
         }
     }
 
-    /// Index into `free_slots` of the slot `tid` should occupy.
-    /// Baseline: the top of the LIFO pool. Locality-aware: the topmost
-    /// slot whose node already holds every staged input; top-of-pool
-    /// fallback when none (or when the task reads nothing).
-    fn pick_slot(&self, core: &SimCore, tid: TaskId) -> usize {
-        let top = self.free_slots.len() - 1;
-        if !self.cfg.locality_aware {
-            return top;
-        }
-        let task = &self.graph.tasks[tid.0];
-        if task.inputs.is_empty() {
-            return top;
-        }
-        // Resolve each input's resident coverage once per task, not
-        // once per free slot: the slot scan then tests plain ranges.
-        let coverage: Vec<Vec<(u32, u32)>> =
-            task.inputs.iter().map(|i| core.nodes.coverage_of(&i.path)).collect();
-        if coverage.iter().any(Vec::is_empty) {
-            // Some input is resident nowhere: no slot can qualify.
-            return top;
-        }
-        let holds = |node: u32| {
-            coverage
-                .iter()
-                .all(|c| c.iter().any(|&(a, b)| (a..=b).contains(&node)))
-        };
-        for (idx, &node) in self.free_slots.iter().enumerate().rev() {
-            if holds(node) {
-                return idx;
-            }
-        }
-        top
-    }
-
-    /// Build the per-task plan: dispatch overhead -> input reads ->
-    /// compute -> output write.
-    fn task_plan(&mut self, core: &mut SimCore, tid: TaskId, node: u32) -> Plan {
-        let task = &self.graph.tasks[tid.0];
-        let mut p = Plan::new(TASK_TAG_BASE + tid.0 as u64);
-        let mut prev = p.delay(self.cfg.dispatch_overhead, vec![], "dispatch");
-
-        // Input reads.
-        let mut local_bytes = 0u64;
-        for input in &task.inputs {
-            let key = (node, input.path.clone());
-            if self.cfg.cache_inputs && self.cache.contains(&key) {
-                self.cache_hits += 1;
-                continue;
-            }
-            if let Some(blob) = core.nodes.read(node, &input.path) {
-                // Staged: node-local stream, perfectly scalable -> a
-                // pure delay at the per-process RAM-disk rate (not a
-                // flownet flow; it contends with nothing).
-                let bytes = input.bytes.unwrap_or(blob.len());
-                local_bytes += bytes;
-                self.staged_read_bytes += bytes;
-                // The read refreshes the replica's LRU recency.
-                core.nodes.touch(node, &input.path);
-            } else if let Some(blob) = core.pfs.read(&input.path) {
-                // Not staged: fall back to an uncoordinated GPFS read —
-                // this IS the per-task naive I/O pattern.
-                let bytes = input.bytes.unwrap_or(blob.len());
-                self.unstaged_read_bytes += bytes;
-                prev = p.flow(
-                    self.topo.path_uncoordinated_read(),
-                    1,
-                    bytes,
-                    vec![prev],
-                    "read",
-                );
-            } else if let Some(bytes) = input.bytes {
-                // Size-only input (pure timing model, no data plane).
-                self.unstaged_read_bytes += bytes;
-                prev = p.flow(
-                    self.topo.path_uncoordinated_read(),
-                    1,
-                    bytes,
-                    vec![prev],
-                    "read",
-                );
-            } else {
-                panic!(
-                    "task {:?} input {:?} not found on node {node} nor shared FS",
-                    task.name, input.path
-                );
-            }
-            if self.cfg.cache_inputs {
-                self.cache.insert(key);
-            }
-        }
-        if local_bytes > 0 {
-            let dur = crate::units::transfer_time(
-                local_bytes,
-                self.topo.spec.ramdisk_proc_read_bw,
-            );
-            prev = p.delay(dur, vec![prev], "read");
-        }
-
-        // Compute.
-        prev = p.delay(task.runtime, vec![prev], "compute");
-
-        // Output write to the shared FS (small results, coordinated).
-        if task.output_bytes > 0 {
-            p.flow(
-                self.topo.path_coordinated_read(), // same links, reverse dir
-                1,
-                task.output_bytes,
-                vec![prev],
-                "output",
-            );
-        }
-        p
-    }
-
     fn on_task_done(&mut self, core: &mut SimCore, tid: TaskId) {
-        self.completion[tid.0] = core.now;
-        self.remaining -= 1;
-        let node = std::mem::replace(&mut self.running_node[tid.0], u32::MAX);
-        debug_assert_ne!(node, u32::MAX, "completion of non-running task");
+        let node = self.run.complete(tid, core.now);
         self.free_slots.push(node);
-        for d in std::mem::take(&mut self.dependents[tid.0]) {
-            self.missing[d as usize] -= 1;
-            if self.missing[d as usize] == 0 {
-                self.ready.push_back(TaskId(d as usize));
-            }
-        }
         self.dispatch(core);
     }
 
     pub fn is_done(&self) -> bool {
-        self.remaining == 0
+        self.run.is_done()
     }
 
     pub fn stats(&self, end: SimTime) -> WorkflowStats {
         assert!(self.is_done(), "workflow incomplete");
         let start = self.start.unwrap_or(SimTime::ZERO);
         let makespan = end - start;
-        let total_work = self.graph.total_work();
+        let total_work = self.run.graph.total_work();
         let workers = self.comm.size() as f64;
         let util = if makespan.0 == 0 {
             0.0
@@ -314,13 +415,13 @@ impl Scheduler {
         };
         WorkflowStats {
             makespan,
-            tasks_run: self.graph.len(),
+            tasks_run: self.run.graph.len(),
             total_work,
             utilization: util,
-            completion: self.completion.clone(),
-            staged_read_bytes: self.staged_read_bytes,
-            unstaged_read_bytes: self.unstaged_read_bytes,
-            cache_hits: self.cache_hits,
+            completion: self.run.completion.clone(),
+            staged_read_bytes: self.reads.staged_bytes,
+            unstaged_read_bytes: self.reads.unstaged_bytes,
+            cache_hits: self.reads.cache_hits,
         }
     }
 }
@@ -352,6 +453,226 @@ pub fn run_workflow(
     core.run(&mut sched);
     assert!(sched.is_done(), "workflow did not complete");
     sched.stats(core.now)
+}
+
+// ----------------------------------------------------------------------
+// Session-fair multi-graph scheduling (interactive serving)
+// ----------------------------------------------------------------------
+
+/// Per-session outcome of a [`SessionScheduler`] run.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// When the session's graph was handed to the scheduler.
+    pub submitted: SimTime,
+    /// When its last task completed.
+    pub finished: SimTime,
+    pub tasks_run: usize,
+    /// Worker-seconds of pure compute in the session's graph.
+    pub total_work: Duration,
+    pub reads: ReadStats,
+    /// Completion time of every task, by TaskId index.
+    pub completion: Vec<SimTime>,
+}
+
+impl SessionStats {
+    /// Execution span inside the scheduler (excludes admission
+    /// queueing and staging, which the serving layer accounts).
+    pub fn makespan(&self) -> Duration {
+        self.finished - self.submitted
+    }
+}
+
+/// One admitted session's state: the shared [`GraphRun`] dataflow
+/// bookkeeping plus the per-tenant accounting the fair policy needs.
+struct SessionRun {
+    run: GraphRun,
+    /// Per-session worker input cache (sessions are independent
+    /// tenants; one session's reads must not warm another's cache).
+    cache: HashSet<(u32, String)>,
+    reads: ReadStats,
+    submitted: SimTime,
+    finished: SimTime,
+    /// Pure compute dispatched so far — the fair-share key.
+    dispatched_work: Duration,
+    /// Graph shape captured at admission, so `stats` still answers
+    /// after the completed session's storage is released.
+    tasks_run: usize,
+    total_work: Duration,
+}
+
+impl SessionRun {
+    /// Drop the completed session's heavyweight state — the task
+    /// graph (name + input-path strings per task) and the worker
+    /// cache — mirroring the engine's plan-storage release: a serving
+    /// core's memory tracks live sessions, not total sessions served.
+    /// Completion times and read stats stay for `stats()`.
+    fn release_storage(&mut self) {
+        debug_assert!(self.run.is_done());
+        self.run.graph.tasks = Vec::new();
+        self.run.missing = Vec::new();
+        self.run.dependents = Vec::new();
+        self.run.running_node = Vec::new();
+        self.cache = HashSet::new();
+    }
+}
+
+/// Many concurrent session graphs over one worker pool, session-fair.
+///
+/// Dispatch policy: whenever a slot frees, the next task comes from
+/// the session with the least compute **dispatched** so far (ties to
+/// the lower [`SessionId`]), FIFO within the session. Non-preemptive,
+/// deterministic, and with a single session bit-identical to
+/// [`Scheduler`] — same slot-pool evolution, same plans, same
+/// completion times (the fair pick always selects the only session,
+/// and dataflow/placement/plan-building are the same [`GraphRun`] /
+/// [`pick_slot_in`] / [`build_task_plan`] code, not a copy).
+pub struct SessionScheduler {
+    topo: Topology,
+    cfg: SchedulerCfg,
+    /// Free worker slots (see [`build_slot_pool`]).
+    free_slots: Vec<u32>,
+    sessions: Vec<SessionRun>,
+    /// Incomplete sessions, unordered (completion swap-removes). The
+    /// fair pick scans only these, so dispatch cost tracks live
+    /// sessions, not total sessions ever served.
+    live: Vec<u32>,
+}
+
+impl SessionScheduler {
+    pub fn new(topo: Topology, comm: Comm, cfg: SchedulerCfg) -> SessionScheduler {
+        SessionScheduler {
+            topo,
+            cfg,
+            free_slots: build_slot_pool(&comm),
+            sessions: Vec::new(),
+            live: Vec::new(),
+        }
+    }
+
+    /// Admit a session's task graph; its ready tasks compete for free
+    /// slots immediately. Returns the session's id.
+    pub fn add_session(&mut self, core: &mut SimCore, graph: TaskGraph) -> SessionId {
+        // Fail at admission, not mid-dispatch deep into a run: the tag
+        // encoding carries the session index in 16 bits.
+        assert!(
+            self.sessions.len() < (1 << 16),
+            "session count exceeds the task-tag namespace (65536)"
+        );
+        let sid = SessionId(self.sessions.len() as u32);
+        let (tasks_run, total_work) = (graph.len(), graph.total_work());
+        self.sessions.push(SessionRun {
+            run: GraphRun::new(graph),
+            cache: HashSet::new(),
+            reads: ReadStats::default(),
+            submitted: core.now,
+            finished: core.now,
+            dispatched_work: Duration::ZERO,
+            tasks_run,
+            total_work,
+        });
+        self.live.push(sid.0);
+        self.dispatch(core);
+        sid
+    }
+
+    /// The session the next free slot should serve: least dispatched
+    /// compute, ties to the lower id; `None` when nothing is ready.
+    /// The `live` list is unordered, but the (work, id) key makes the
+    /// minimum — and therefore the schedule — order-independent.
+    fn next_session(&self) -> Option<usize> {
+        self.live
+            .iter()
+            .map(|&i| i as usize)
+            .filter(|&i| !self.sessions[i].run.ready.is_empty())
+            .min_by_key(|&i| (self.sessions[i].dispatched_work, i))
+    }
+
+    /// Hand out free slots session-fairly until slots or work run out.
+    fn dispatch(&mut self, core: &mut SimCore) {
+        while !self.free_slots.is_empty() {
+            let Some(s) = self.next_session() else { break };
+            let tid = self.sessions[s].run.ready.pop_front().unwrap();
+            let idx = pick_slot_in(
+                core,
+                &self.cfg,
+                &self.sessions[s].run.graph,
+                tid,
+                &self.free_slots,
+            );
+            // swap_remove of the top index == pop, matching the
+            // baseline scheduler byte-for-byte.
+            let node = self.free_slots.swap_remove(idx);
+            let sess = &mut self.sessions[s];
+            sess.run.launch(tid, node);
+            sess.dispatched_work += sess.run.graph.tasks[tid.0].runtime;
+            let plan = build_task_plan(
+                core,
+                &self.topo,
+                &self.cfg,
+                &sess.run.graph,
+                tid,
+                node,
+                session_task_tag(SessionId(s as u32), tid),
+                &mut sess.cache,
+                &mut sess.reads,
+            );
+            core.submit(plan);
+        }
+    }
+
+    /// Route a task-plan completion. Returns the session that became
+    /// fully complete on this event, if any.
+    pub fn on_plan_done(&mut self, core: &mut SimCore, tag: u64) -> Option<SessionId> {
+        let (sid, tid) = decode_task_tag(tag)?;
+        let sess = &mut self.sessions[sid.0 as usize];
+        let node = sess.run.complete(tid, core.now);
+        self.free_slots.push(node);
+        let just_done = sess.run.is_done();
+        if just_done {
+            sess.finished = core.now;
+            sess.release_storage();
+            let pos = self.live.iter().position(|&i| i == sid.0).expect("not live");
+            self.live.swap_remove(pos);
+        }
+        self.dispatch(core);
+        just_done.then_some(sid)
+    }
+
+    /// True when every admitted session has completed.
+    pub fn all_done(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn session_done(&self, sid: SessionId) -> bool {
+        self.sessions[sid.0 as usize].run.is_done()
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn stats(&self, sid: SessionId) -> SessionStats {
+        let s = &self.sessions[sid.0 as usize];
+        assert!(s.run.is_done(), "session {sid:?} incomplete");
+        SessionStats {
+            submitted: s.submitted,
+            finished: s.finished,
+            tasks_run: s.tasks_run,
+            total_work: s.total_work,
+            reads: s.reads,
+            completion: s.run.completion.clone(),
+        }
+    }
+}
+
+/// Standalone use (no serving layer on top): the scheduler consumes
+/// task completions directly.
+impl Director for SessionScheduler {
+    fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
+        if let Notice::PlanDone { tag, .. } = notice {
+            self.on_plan_done(core, tag);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -570,6 +891,138 @@ mod tests {
             "locality makespan {:?} vs baseline {:?}",
             loc.makespan,
             base.makespan
+        );
+    }
+
+    fn random_graph(seed: u64, n: usize, input: Option<&str>) -> TaskGraph {
+        let mut g = TaskGraph::new();
+        let mut rng = crate::util::prng::Pcg64::new(seed);
+        g.foreach(n, |i| {
+            let mut t = Task::compute(
+                format!("t{i}"),
+                Duration::from_secs_f64(rng.log_uniform(1.0, 30.0)),
+            );
+            if let Some(p) = input {
+                t = t.with_input(p, None).with_output(MB / 10);
+            }
+            t
+        });
+        g
+    }
+
+    #[test]
+    fn single_session_bit_identical_to_workflow_scheduler() {
+        // The session-fair property: with exactly one session the fair
+        // policy always picks it, so placement, plan construction, and
+        // completion times must match the baseline scheduler
+        // bit-for-bit — including under locality-aware placement,
+        // input caching, and partial residency.
+        for (locality, cache) in [(false, false), (true, false), (true, true)] {
+            let build = || {
+                let mut core = SimCore::new();
+                let topo = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+                let comm = Comm::world(&topo.spec);
+                core.pfs.write("/data/in.bin", Blob::synthetic(50 * MB, 4));
+                core.node_write_range(0, 2, "/data/in.bin", Blob::synthetic(50 * MB, 4));
+                (core, topo, comm)
+            };
+            let cfg = SchedulerCfg {
+                locality_aware: locality,
+                cache_inputs: cache,
+                ..Default::default()
+            };
+            let (mut core_a, topo_a, comm_a) = build();
+            let base = run_workflow(
+                &mut core_a,
+                &topo_a,
+                &comm_a,
+                random_graph(13, 500, Some("/data/in.bin")),
+                cfg,
+            );
+            let (mut core_b, topo_b, comm_b) = build();
+            let mut ss = SessionScheduler::new(topo_b.clone(), comm_b, cfg);
+            let sid = ss.add_session(&mut core_b, random_graph(13, 500, Some("/data/in.bin")));
+            core_b.run(&mut ss);
+            assert!(ss.all_done());
+            let s = ss.stats(sid);
+            assert_eq!(base.completion, s.completion, "locality={locality} cache={cache}");
+            assert_eq!(core_a.now, core_b.now);
+            assert_eq!(base.staged_read_bytes, s.reads.staged_bytes);
+            assert_eq!(base.unstaged_read_bytes, s.reads.unstaged_bytes);
+            assert_eq!(base.cache_hits, s.reads.cache_hits);
+        }
+    }
+
+    #[test]
+    fn sessions_share_the_machine_fairly() {
+        // Two equal sessions submitted together on a tiny machine must
+        // interleave: both finish well before a serial schedule would,
+        // and neither is starved (finish times are close).
+        let mut core = SimCore::new();
+        let mut spec = orthros();
+        spec.nodes = 1; // 64 slots
+        let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let mut ss = SessionScheduler::new(topo, comm, SchedulerCfg::default());
+        let a = ss.add_session(&mut core, random_graph(1, 256, None));
+        let b = ss.add_session(&mut core, random_graph(2, 256, None));
+        core.run(&mut ss);
+        let (sa, sb) = (ss.stats(a), ss.stats(b));
+        let (fa, fb) = (sa.finished.secs_f64(), sb.finished.secs_f64());
+        // Fair sharing: both sessions run concurrently, so the later
+        // finisher is within ~35% of the earlier one — a FIFO
+        // (session-unfair) schedule would finish A near t/2.
+        assert!((fa - fb).abs() / fa.max(fb) < 0.35, "fa={fa} fb={fb}");
+    }
+
+    #[test]
+    fn fair_pick_prefers_least_dispatched_session() {
+        // A 1-slot machine alternates two sessions of equal-cost
+        // tasks: after each completion the other session has less
+        // dispatched work and must win the slot.
+        let mut core = SimCore::new();
+        let mut spec = orthros();
+        spec.nodes = 1;
+        spec.ranks_per_node = 1;
+        let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        let mut ss = SessionScheduler::new(topo, comm, SchedulerCfg::default());
+        let mk = |tag: &str| {
+            let mut g = TaskGraph::new();
+            g.foreach(4, |i| Task::compute(format!("{tag}{i}"), Duration::from_secs(10)));
+            g
+        };
+        let a = ss.add_session(&mut core, mk("a"));
+        let b = ss.add_session(&mut core, mk("b"));
+        core.run(&mut ss);
+        let (sa, sb) = (ss.stats(a), ss.stats(b));
+        // Strict alternation: a0 b0 a1 b1 ... so every A task k
+        // completes before B task k, and B task k before A task k+1.
+        for k in 0..4 {
+            assert!(sa.completion[k] < sb.completion[k]);
+            if k + 1 < 4 {
+                assert!(sb.completion[k] < sa.completion[k + 1]);
+            }
+        }
+        // Completed sessions released their graph + cache storage
+        // (stats above still answered from the captured shape).
+        assert!(ss
+            .sessions
+            .iter()
+            .all(|s| s.run.graph.tasks.is_empty() && s.cache.is_empty()));
+        assert_eq!(sa.tasks_run, 4);
+        assert_eq!(sa.total_work, Duration::from_secs(40));
+    }
+
+    #[test]
+    fn session_tags_round_trip() {
+        let tag = session_task_tag(SessionId(7), TaskId(123));
+        assert_eq!(decode_task_tag(tag), Some((SessionId(7), TaskId(123))));
+        assert_eq!(decode_task_tag(5), None);
+        // The baseline scheduler's tags decode as session 0.
+        assert_eq!(
+            decode_task_tag(TASK_TAG_BASE + 9),
+            Some((SessionId(0), TaskId(9)))
         );
     }
 

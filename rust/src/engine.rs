@@ -89,6 +89,10 @@ pub struct SimCore {
     last_net_update: SimTime,
     /// Total events processed (perf telemetry).
     pub events_processed: u64,
+    /// Incomplete submitted plans (kept O(1) for serving loops).
+    live_plan_count: usize,
+    /// Step descriptors still held across submitted plans.
+    retained_step_count: usize,
 }
 
 impl SimCore {
@@ -112,6 +116,8 @@ impl SimCore {
             pending: VecDeque::new(),
             last_net_update: SimTime::ZERO,
             events_processed: 0,
+            live_plan_count: 0,
+            retained_step_count: 0,
         }
     }
 
@@ -135,11 +141,18 @@ impl SimCore {
             state: vec![StepState::Blocked; n],
             remaining: n,
         });
+        self.live_plan_count += 1;
+        self.retained_step_count += n;
         for i in 0..n {
             // An earlier instantaneous step may have already cascaded
             // into this one via complete_step; only start steps still
-            // Blocked with no outstanding deps.
+            // Blocked with no outstanding deps. A fully-instantaneous
+            // plan can even finish mid-scan — whereupon its step
+            // storage was released — so stop once nothing remains.
             let run = &self.plans[id.0];
+            if run.remaining == 0 {
+                break;
+            }
             if run.missing[i] == 0 && run.state[i] == StepState::Blocked {
                 self.start_step(id.0 as u32, i as u32);
             }
@@ -355,6 +368,20 @@ impl SimCore {
             }
         }
         if finished {
+            // Release the finished plan's step storage: a long-lived
+            // serving core submits one plan per task across thousands
+            // of sessions, and memory must track *live* work, not the
+            // total submitted history. The slot itself stays (PlanId
+            // is an index and `plan_done` still answers), but steps,
+            // dependency arrays, and state shrink to nothing.
+            let run = &mut self.plans[plan as usize];
+            let released = run.plan.steps.len();
+            run.plan.steps = Vec::new();
+            run.state = Vec::new();
+            run.missing = Vec::new();
+            run.dependents = Vec::new();
+            self.live_plan_count -= 1;
+            self.retained_step_count -= released;
             self.pending.push_back(Notice::PlanDone {
                 plan: PlanId(plan as usize),
                 tag: self.plans[plan as usize].plan.tag,
@@ -365,6 +392,20 @@ impl SimCore {
     /// True when a submitted plan has fully completed.
     pub fn plan_done(&self, id: PlanId) -> bool {
         self.plans[id.0].remaining == 0
+    }
+
+    /// Submitted plans still incomplete. O(1): maintained at submit
+    /// and completion, so serving loops can poll it freely.
+    pub fn live_plans(&self) -> usize {
+        self.live_plan_count
+    }
+
+    /// Step descriptors still held across all submitted plans. Only
+    /// live plans retain steps — completed plans release theirs — so a
+    /// multi-session serving run's footprint is bounded by concurrent
+    /// work, not by session count. O(1) like [`SimCore::live_plans`].
+    pub fn retained_steps(&self) -> usize {
+        self.retained_step_count
     }
 }
 
@@ -549,6 +590,41 @@ mod tests {
         let mut c = Catcher(vec![]);
         core.run(&mut c);
         assert_eq!(c.0, vec![5]);
+    }
+
+    #[test]
+    fn finished_plans_release_step_storage() {
+        let mut core = SimCore::new();
+        for tag in 0..10 {
+            let mut p = Plan::new(tag);
+            let a = p.delay(Duration::from_secs(1), vec![], "a");
+            p.delay(Duration::from_secs(1), vec![a], "b");
+            core.submit(p);
+        }
+        assert_eq!(core.live_plans(), 10);
+        assert_eq!(core.retained_steps(), 20);
+        core.run_to_completion();
+        assert_eq!(core.live_plans(), 0);
+        assert_eq!(core.retained_steps(), 0);
+        // Completion queries still answer after reclamation.
+        assert!(core.plan_done(PlanId(3)));
+    }
+
+    #[test]
+    fn fully_instantaneous_plan_completes_inside_submit() {
+        // A plan of zero-duration steps cascades to completion while
+        // submit() is still scanning for ready steps; the scan must
+        // stop at the released storage instead of indexing it.
+        let mut core = SimCore::new();
+        let mut p = Plan::new(5);
+        let a = p.delay(Duration::ZERO, vec![], "a");
+        let b = p.delay(Duration::ZERO, vec![a], "b");
+        p.delay(Duration::ZERO, vec![b], "c");
+        let id = core.submit(p);
+        assert!(core.plan_done(id));
+        assert_eq!(core.retained_steps(), 0);
+        core.run_to_completion();
+        assert_eq!(core.now.secs_f64(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! The interactive serving experiment: staged-resident serving vs
+//! naive GPFS re-reads across a scenario matrix.
+//!
+//! Each matrix point runs the same seeded session workload twice —
+//! [`ServeMode::Staged`] and [`ServeMode::Naive`] — on an
+//! Orthros-class cluster (1.25 GB/s shared NFS backplane, 500 MB/s
+//! per-process node-local reads), and reports per-session turnaround
+//! P50/P95/P99. The matrix sweeps session arrival rate (mean
+//! inter-arrival gap), dataset working-set size, and node count.
+//! Staged serving must beat the naive baseline on P99 at every point
+//! (asserted by `benches/serve.rs` and the integration tests).
+
+use crate::metrics::Table;
+use crate::simtime::flownet::ThroughputMode;
+use crate::staging::service::{run_serve, ServeMode, ServeOutcome, ServiceCfg};
+use crate::units::{fmt_bytes, MB};
+
+use super::ExpResult;
+
+/// Node counts swept (Orthros-class fat nodes, 64 ranks each).
+pub const NODE_SWEEP: &[u32] = &[2, 4];
+/// Mean inter-arrival gaps swept (seconds): bursty vs relaxed.
+pub const GAP_SWEEP: &[f64] = &[15.0, 45.0];
+/// Working sets swept: (files per dataset, bytes per file).
+pub const WS_SWEEP: &[(usize, u64)] = &[(4, 12 * MB), (8, 24 * MB)];
+/// Sessions per scenario run.
+pub const SESSIONS: usize = 18;
+
+/// One matrix point's scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioPoint {
+    pub nodes: u32,
+    pub mean_gap_secs: f64,
+    pub files_per_dataset: usize,
+    pub file_bytes: u64,
+}
+
+impl ScenarioPoint {
+    pub fn cfg(&self, mode: ServeMode, sessions: usize, seed: u64) -> ServiceCfg {
+        ServiceCfg {
+            seed,
+            sessions,
+            mean_gap_secs: self.mean_gap_secs,
+            files_per_dataset: self.files_per_dataset,
+            file_bytes: self.file_bytes,
+            mode,
+            ..Default::default()
+        }
+    }
+
+    pub fn working_set(&self) -> u64 {
+        self.files_per_dataset as u64 * self.file_bytes
+    }
+}
+
+/// The full scenario matrix (node count x arrival rate x working set).
+pub fn matrix() -> Vec<ScenarioPoint> {
+    let mut pts = Vec::new();
+    for &nodes in NODE_SWEEP {
+        for &mean_gap_secs in GAP_SWEEP {
+            for &(files_per_dataset, file_bytes) in WS_SWEEP {
+                pts.push(ScenarioPoint { nodes, mean_gap_secs, files_per_dataset, file_bytes });
+            }
+        }
+    }
+    pts
+}
+
+/// Run one matrix point under both serving modes with the same seed.
+pub fn run_point(
+    pt: &ScenarioPoint,
+    sessions: usize,
+    seed: u64,
+) -> (ServeOutcome, ServeOutcome) {
+    let staged = run_serve(
+        pt.nodes,
+        &pt.cfg(ServeMode::Staged, sessions, seed),
+        ThroughputMode::Fast,
+    );
+    let naive = run_serve(
+        pt.nodes,
+        &pt.cfg(ServeMode::Naive, sessions, seed),
+        ThroughputMode::Fast,
+    );
+    (staged, naive)
+}
+
+/// Run the whole matrix and render the comparison table.
+pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    let mut table = Table::new(
+        format!(
+            "Serve — staged-resident vs naive GPFS re-read, {sessions} sessions/point \
+             (turnaround seconds)"
+        ),
+        &[
+            "nodes",
+            "gap (s)",
+            "working set",
+            "staged P50",
+            "staged P95",
+            "staged P99",
+            "naive P50",
+            "naive P95",
+            "naive P99",
+            "P99 win",
+        ],
+    );
+    let mut staged_pts = Vec::new();
+    let mut naive_pts = Vec::new();
+    for (i, pt) in matrix().iter().enumerate() {
+        let (s, n) = run_point(pt, sessions, seed);
+        table.row(&[
+            pt.nodes.to_string(),
+            format!("{:.0}", pt.mean_gap_secs),
+            fmt_bytes(pt.working_set()),
+            format!("{:.1}", s.percentiles.p50),
+            format!("{:.1}", s.percentiles.p95),
+            format!("{:.1}", s.percentiles.p99),
+            format!("{:.1}", n.percentiles.p50),
+            format!("{:.1}", n.percentiles.p95),
+            format!("{:.1}", n.percentiles.p99),
+            format!("{:.2}x", n.percentiles.p99 / s.percentiles.p99),
+        ]);
+        staged_pts.push((i as f64, s.percentiles.p99));
+        naive_pts.push((i as f64, n.percentiles.p99));
+    }
+    ExpResult {
+        table,
+        series: vec![
+            ("staged p99".into(), staged_pts),
+            ("naive p99".into(), naive_pts),
+        ],
+    }
+}
+
+pub fn run() -> ExpResult {
+    run_with(SESSIONS, ServiceCfg::default().seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_covers_all_dimensions() {
+        let pts = matrix();
+        assert_eq!(pts.len(), NODE_SWEEP.len() * GAP_SWEEP.len() * WS_SWEEP.len());
+        assert!(pts.iter().any(|p| p.nodes != pts[0].nodes));
+        assert!(pts.iter().any(|p| p.working_set() != pts[0].working_set()));
+    }
+
+    #[test]
+    fn staged_wins_p99_at_a_bursty_and_a_relaxed_point() {
+        // The full matrix is the bench's job; here the two extreme
+        // arrival-rate points must both show the staged P99 win.
+        let pts = matrix();
+        let bursty = pts.iter().find(|p| p.mean_gap_secs == GAP_SWEEP[0]).unwrap();
+        let relaxed = pts.iter().find(|p| p.mean_gap_secs == GAP_SWEEP[1]).unwrap();
+        for pt in [bursty, relaxed] {
+            let (s, n) = run_point(pt, 12, 42);
+            assert!(
+                s.percentiles.p99 < n.percentiles.p99,
+                "staged {} vs naive {} at {pt:?}",
+                s.percentiles.p99,
+                n.percentiles.p99
+            );
+        }
+    }
+
+    #[test]
+    fn serve_experiment_table_renders() {
+        let r = run_with(8, 7);
+        assert_eq!(r.table.rows.len(), matrix().len());
+        let p99s = r.series_named("staged p99").unwrap();
+        assert_eq!(p99s.len(), matrix().len());
+        assert!(p99s.iter().all(|&(_, y)| y > 0.0));
+    }
+}

@@ -27,8 +27,9 @@
 //!   node-local RAM disks)
 //! - [`mpisim`] — MPI substrate: communicators, broadcast, two-phase
 //!   collective file read (`MPI_File_read_all`)
-//! - [`staging`] — **the paper's contribution**: the Swift I/O hook and
-//!   the naive per-task baseline
+//! - [`staging`] — **the paper's contribution**: the Swift I/O hook,
+//!   the naive per-task baseline, residency-managed re-staging, and
+//!   the interactive multi-session serving layer (`staging::service`)
 //! - [`dataflow`] — Swift/T-like engine: futures, `foreach`, ADLB-style
 //!   load balancing, the worker-local input cache
 //! - [`hedm`] — the science: detector simulator, stage-1 reduction,
@@ -44,6 +45,7 @@
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! cargo run --release -- fig11 --nodes 8192
+//! cargo run --release -- serve --sessions 18
 //! ```
 
 pub mod catalog;

@@ -1,6 +1,6 @@
 //! `xstage` — leader entrypoint for the staging framework.
 //!
-//! See `xstage --help` / [`xstage::cli::USAGE`].
+//! See `xstage --help` / [`xstage::cli::usage`].
 
 use xstage::cli;
 use xstage::util::args::Args;
@@ -14,7 +14,7 @@ fn main() {
         }
     };
     if args.has("help") || args.command.as_deref() == Some("help") {
-        println!("{}", cli::USAGE);
+        println!("{}", cli::usage());
         return;
     }
     if let Err(e) = cli::dispatch(&args) {

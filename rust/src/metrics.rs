@@ -1,10 +1,12 @@
-//! Phase accounting and report tables.
+//! Phase accounting, sample distributions, and report tables.
 //!
 //! The paper's evaluation reports *phase wall times* (Staging, Write,
 //! Read — Fig 9/10/11) and derived aggregate bandwidths. [`Metrics`]
 //! tracks, per label, the wall-clock *span* (earliest start to latest
 //! finish across all concurrent steps carrying the label) plus simple
-//! byte/op counters; [`Table`] renders the paper-vs-measured rows the
+//! byte/op counters and observed sample series (per-session
+//! turnarounds in the serve experiment report as P50/P95/P99 via
+//! [`Percentiles`]); [`Table`] renders the paper-vs-measured rows the
 //! experiment drivers print.
 
 use std::collections::BTreeMap;
@@ -19,12 +21,37 @@ struct Span {
     started: u64,
 }
 
-/// Phase spans + counters for one simulation run.
+/// P50/P95/P99 of an observed sample series (nearest-rank).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Nearest-rank percentile of an **ascending-sorted** sample slice:
+/// the smallest sample such that at least `q`% of the set is <= it.
+/// Deterministic (no interpolation), so percentile tables are
+/// bit-reproducible across runs.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample set");
+    assert!((0.0..=100.0).contains(&q), "bad percentile {q}");
+    let n = sorted.len();
+    // q*n first, one division last: whenever q*n/100 is mathematically
+    // an integer the quotient is exact in IEEE, so ceil never rounds a
+    // representation error up to the next rank (q/100 first would,
+    // e.g. q=7, n=100).
+    let rank = (q * n as f64 / 100.0).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Phase spans + counters + sample series for one simulation run.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     spans: BTreeMap<&'static str, Span>,
     bytes: BTreeMap<&'static str, u64>,
     counts: BTreeMap<&'static str, u64>,
+    samples: BTreeMap<&'static str, Vec<f64>>,
 }
 
 impl Metrics {
@@ -92,6 +119,33 @@ impl Metrics {
 
     pub fn labels(&self) -> impl Iterator<Item = &&'static str> {
         self.spans.keys()
+    }
+
+    /// Record one observation of a sample series (e.g. a session's
+    /// turnaround in seconds). Insertion order is preserved.
+    pub fn observe(&mut self, label: &'static str, v: f64) {
+        assert!(v.is_finite(), "non-finite observation for {label}: {v}");
+        self.samples.entry(label).or_default().push(v);
+    }
+
+    /// The raw observations of a series, in insertion order.
+    pub fn samples(&self, label: &str) -> &[f64] {
+        self.samples.get(label).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Nearest-rank P50/P95/P99 of a series; `None` with no samples.
+    pub fn percentiles(&self, label: &str) -> Option<Percentiles> {
+        let raw = self.samples.get(label)?;
+        if raw.is_empty() {
+            return None;
+        }
+        let mut sorted = raw.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Percentiles {
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
+        })
     }
 }
 
@@ -191,5 +245,39 @@ mod tests {
     fn ragged_row_panics() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // Small sets: P99 of 4 samples is the max.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 99.0), 4.0);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+    }
+
+    #[test]
+    fn observed_series_report_percentiles() {
+        let mut m = Metrics::new();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            m.observe("session.turnaround", v);
+        }
+        assert_eq!(m.samples("session.turnaround"), &[5.0, 1.0, 3.0, 2.0, 4.0]);
+        let p = m.percentiles("session.turnaround").unwrap();
+        assert_eq!(p.p50, 3.0);
+        assert_eq!(p.p95, 5.0);
+        assert_eq!(p.p99, 5.0);
+        assert!(m.percentiles("missing").is_none());
+        assert!(m.samples("missing").is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn percentile_of_empty_panics() {
+        percentile(&[], 50.0);
     }
 }

@@ -10,7 +10,8 @@
 //!
 //! - `pfs_backplane`: the installation's aggregate bandwidth. The
 //!   paper's ALCF GPFS peaks at 240 GB/s (Bui et al. [4]).
-//! - `pfs_disk`: a [`Capacity::Degrading`] stage traversed only by
+//! - `pfs_disk`: a [`Degrading`](crate::simtime::flownet::Capacity::Degrading)
+//!   stage traversed only by
 //!   *uncoordinated* reads, modelling server-side prefetch loss and
 //!   seek thrash when hundreds of thousands of independent streams hit
 //!   the same stripes (the mechanism behind Fig 11's naive curve).

@@ -12,7 +12,7 @@
 //!
 //! **Feature gating.** The PJRT execution path needs the `xla` FFI
 //! bindings and sits behind the `pjrt-artifacts` cargo feature. The
-//! default build substitutes [`stub::Runtime`], whose `load` fails
+//! default build substitutes the stub [`Runtime`], whose `load` fails
 //! with a clear message and whose `artifacts_available` is always
 //! false — every artifact-dependent test, bench, and example already
 //! guards on `Runtime::artifacts_available()` and skips gracefully, so

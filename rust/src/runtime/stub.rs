@@ -1,5 +1,6 @@
-//! Default (feature-off) runtime: the same API surface as
-//! [`super::pjrt::Runtime`], with every load refused up front.
+//! Default (feature-off) runtime: the same API surface as the real
+//! `pjrt::Runtime` (compiled under `--features pjrt-artifacts`), with
+//! every load refused up front.
 //!
 //! Built without `--features pjrt-artifacts` there is no PJRT client,
 //! so [`Runtime::artifacts_available`] is unconditionally false —

@@ -21,8 +21,8 @@
 //! member count is smallest; freeze every unfrozen flow through it at
 //! that per-member share }. This is the classic fluid approximation of
 //! TCP/interconnect fair sharing used by flow-level simulators. The
-//! pass itself lives in [`waterfill`]; *when* it runs and *over which
-//! flows* is the [`ThroughputModel`] boundary:
+//! pass itself lives in the private `waterfill` module; *when* it runs
+//! and *over which flows* is the [`ThroughputModel`] boundary:
 //!
 //! - [`ThroughputMode::Slow`] — the reference algorithm: every change
 //!   recomputes every active flow (the seed implementation; kept as

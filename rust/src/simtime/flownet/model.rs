@@ -3,13 +3,13 @@
 //! A [`ThroughputModel`] decides *when and for whom* fair-share rates
 //! are recomputed and *which completion checks* the engine should
 //! schedule; the arithmetic itself is the shared water-filling pass in
-//! [`super::waterfill`]. Two implementations:
+//! the private `waterfill` module. Two implementations:
 //!
-//! - [`super::slow::SlowModel`] — the reference algorithm: every
+//! - `slow::SlowModel` — the reference algorithm: every
 //!   change invalidates everything; one global component is rebuilt
 //!   per settle. O(active) per network event, provably simple. Kept as
 //!   the differential-testing oracle.
-//! - [`super::fast::FastModel`] — the incremental algorithm: active
+//! - `fast::FastModel` — the incremental algorithm: active
 //!   flows are partitioned into link-connected components; a change
 //!   dirties only the components it touches, and only those are
 //!   recomputed and rescheduled. Cost per event scales with the dirty

@@ -16,7 +16,7 @@
 //!    ION uplink — the phase that dominates at 8,192 nodes and caps
 //!    Fig 10 at ~134 GB/s.
 //!
-//! The data plane is real: every resolved file's [`Blob`] is
+//! The data plane is real: every resolved file's [`crate::pfs::Blob`] is
 //! replicated into [`crate::cluster::NodeStores`] under the target
 //! directory, and integration tests checksum-verify node replicas
 //! against the filesystem originals.

@@ -19,11 +19,15 @@
 //!   table mirroring node-local contents, the incremental re-stage
 //!   plan (move only missing/stale files), and the session manager
 //!   binding catalog datasets to hook specs.
+//! - [`service`]: the interactive serving layer — seeded multi-session
+//!   workloads over staged, pinned, node-resident datasets, with
+//!   capacity admission and session-fair scheduling.
 
 pub mod gather;
 pub mod hook;
 pub mod naive;
 pub mod residency;
+pub mod service;
 pub mod spec;
 
 pub use gather::{gather_plan, GatherManifest};
@@ -31,6 +35,9 @@ pub use hook::{staged_plan, StagedManifest};
 pub use naive::naive_plan;
 pub use residency::{
     incremental_plan, IncrementalManifest, Residency, ResidencyStats, ResidencyTable,
+};
+pub use service::{
+    generate_workload, run_serve, ServeMode, ServeOutcome, ServiceCfg, SessionSpec,
 };
 pub use spec::{BroadcastDef, HookSpec};
 

@@ -163,6 +163,19 @@ impl ResidencyStats {
 
 /// Session-level residency manager: binds catalog datasets to hook
 /// specs and drives incremental staging with pinning and LRU upkeep.
+///
+/// Two staging shapes share one implementation:
+///
+/// - [`Residency::stage_dataset`] — synchronous: submit, run the core
+///   to completion, verify. For single-tenant harnesses that own the
+///   event loop.
+/// - [`Residency::begin_stage`] / [`Residency::commit_stage`] — the
+///   serving form: `begin_stage` pins and submits the transfer plan
+///   under a caller-chosen engine tag *without running the core* (it
+///   is safe inside a [`crate::engine::Director`] callback, where
+///   re-entering the run loop would steal other tenants' events);
+///   when the plan's `PlanDone` arrives, `commit_stage` verifies
+///   delivery and books the stats.
 #[derive(Debug, Default)]
 pub struct Residency {
     bindings: BTreeMap<DatasetId, HookSpec>,
@@ -172,6 +185,8 @@ pub struct Residency {
     /// released exactly once (NodeStores pins are refcounted, so a
     /// path shared by two datasets stays protected until both let go).
     pinned_paths: BTreeMap<DatasetId, Vec<String>>,
+    /// Stages submitted by `begin_stage` awaiting `commit_stage`.
+    in_flight: BTreeMap<DatasetId, IncrementalManifest>,
     pub stats: ResidencyStats,
 }
 
@@ -209,12 +224,35 @@ impl Residency {
         comm: &Comm,
         id: DatasetId,
     ) -> Result<IncrementalManifest> {
+        self.begin_stage(core, topo, comm, id, 0)?;
+        core.run_to_completion();
+        self.commit_stage(core, comm, id)
+    }
+
+    /// Build, pin, and **submit** the incremental stage of dataset
+    /// `id` as a plan tagged `tag`, without running the core: the
+    /// serving half of [`Residency::stage_dataset`], safe inside a
+    /// director callback. The caller must invoke
+    /// [`Residency::commit_stage`] once the plan's `PlanDone { tag }`
+    /// notice arrives; until then the dataset counts as in flight and
+    /// a second `begin_stage` for it errors.
+    pub fn begin_stage(
+        &mut self,
+        core: &mut SimCore,
+        topo: &Topology,
+        comm: &Comm,
+        id: DatasetId,
+        tag: u64,
+    ) -> Result<IncrementalManifest> {
+        if self.in_flight.contains_key(&id) {
+            return Err(anyhow!("dataset {id:?} already has a stage in flight"));
+        }
         let spec = self
             .bindings
             .get(&id)
             .ok_or_else(|| anyhow!("dataset {id:?} has no bound hook spec"))?
             .clone();
-        let mut plan = Plan::new(0);
+        let mut plan = Plan::new(tag);
         let (m, _done) =
             incremental_plan(&mut plan, &core.pfs, &core.nodes, topo, comm, &spec, vec![])?;
         let (lo, hi) = comm.node_range();
@@ -237,11 +275,28 @@ impl Residency {
             core.nodes.pin(t.dst.clone());
         }
         core.submit(plan);
-        core.run_to_completion();
-        // The engine rejects a write that cannot fit beside pinned
-        // residents (metric `node.write.rejected`) without failing the
-        // plan; surface that here instead of returning a manifest for
-        // data that never landed.
+        self.in_flight.insert(id, m.clone());
+        Ok(m)
+    }
+
+    /// Verify a stage submitted by [`Residency::begin_stage`] after
+    /// its plan completed: every promised replica must be resident
+    /// with content matching the shared-FS original. On success books
+    /// stats and the delivery record; on failure (the engine rejected
+    /// a write under memory pressure — metric `node.write.rejected`)
+    /// releases this dataset's pins and returns `Err` rather than a
+    /// manifest for data that never landed.
+    pub fn commit_stage(
+        &mut self,
+        core: &mut SimCore,
+        comm: &Comm,
+        id: DatasetId,
+    ) -> Result<IncrementalManifest> {
+        let m = self
+            .in_flight
+            .remove(&id)
+            .ok_or_else(|| anyhow!("dataset {id:?} has no stage in flight"))?;
+        let (lo, hi) = comm.node_range();
         for t in m.hits.iter().chain(m.staged.iter()) {
             let landed = core
                 .pfs
@@ -426,6 +481,40 @@ mod tests {
         assert!(core.nodes.is_pinned("/tmp/ds/f001.bin"));
         // The orphaned replica is now evictable.
         assert_eq!(core.evict_path("/tmp/ds/f002.bin").len(), 1);
+    }
+
+    #[test]
+    fn begin_commit_split_matches_sync_stage() {
+        // The serving-shaped begin/commit pair must land exactly what
+        // the synchronous call lands: same manifest, same pins, same
+        // stats — and the in-flight guard rejects a double begin.
+        let (mut core, topo, spec) = setup(4, 5);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut catalog = Catalog::new();
+        let id = catalog.register("ds", "/projects/ds", 5, 5 * MB);
+        let mut res = Residency::new();
+        res.bind(id, spec);
+        let m = res.begin_stage(&mut core, &topo, &comm, id, 77).unwrap();
+        assert_eq!(m.staged.len(), 5);
+        assert!(
+            res.begin_stage(&mut core, &topo, &comm, id, 78).is_err(),
+            "double begin must error"
+        );
+        // Commit before the transfer lands must fail verification...
+        // (nothing has simulated yet, so no bytes are resident).
+        assert!(res.commit_stage(&mut core, &comm, id).is_err());
+        // ...so re-begin and drive the plan properly this time.
+        let _ = res.begin_stage(&mut core, &topo, &comm, id, 79).unwrap();
+        core.run_to_completion();
+        let m = res.commit_stage(&mut core, &comm, id).unwrap();
+        assert_eq!(m.total_files(), 5);
+        assert_eq!(res.stats.stages, 1);
+        assert!(core.nodes.is_pinned("/tmp/ds/f000.bin"));
+        assert!(res.dataset_resident_on(&core, id, 2));
+        // Commit without a begin errors.
+        assert!(res.commit_stage(&mut core, &comm, id).is_err());
+        res.unpin_dataset(&mut core, id);
+        assert!(core.residency.mirrors(&core.nodes));
     }
 
     #[test]
