@@ -123,6 +123,50 @@ fn bench_flownet_churn() {
     }
 }
 
+/// The storage residency queries the serve/campaign dispatch inner
+/// loops hammer: `coverage_of` per task input (locality placement) and
+/// `paths_on` per node (gather's local glob). Coverage is memoized
+/// beside each path's replica list, so queries must be borrows —
+/// never a rescan of every replica.
+fn bench_storage_queries() {
+    use xstage::cluster::NodeStores;
+    section("L3: storage residency queries (memoized coverage)");
+    let paths = 256usize;
+    let mut ns = NodeStores::new();
+    for p in 0..paths {
+        // Split every path into several replicas (the worst case the
+        // old scan-per-query code degraded on).
+        for seg in 0..4u32 {
+            ns.write_range(seg * 16, seg * 16 + 7, format!("/tmp/ds/f{p:04}.bin"),
+                           Blob::synthetic(MB, p as u64));
+        }
+    }
+    // Micro-assert: repeated coverage queries return the *same* memoized
+    // slice (a borrow, not a fresh allocation or replica walk).
+    let probe = "/tmp/ds/f0007.bin";
+    assert_eq!(ns.coverage_of(probe).len(), 4);
+    assert_eq!(
+        ns.coverage_of(probe).as_ptr(),
+        ns.coverage_of(probe).as_ptr(),
+        "coverage_of must return the memoized slice, not a rebuild"
+    );
+    // Keys prebuilt outside the timed loop: the bench measures the
+    // memoized lookup, not String formatting.
+    let keys: Vec<String> = (0..paths).map(|p| format!("/tmp/ds/f{p:04}.bin")).collect();
+    let s = bench_n("storage/coverage_of-256paths", 10, || {
+        let mut hits = 0usize;
+        for k in &keys {
+            let c = ns.coverage_of(k);
+            hits += c.iter().filter(|&&(a, b)| (a..=b).contains(&33)).count();
+        }
+        std::hint::black_box(hits);
+    });
+    println!("  -> {:.1}M coverage queries/s", paths as f64 / s.median / 1e6);
+    bench_n("storage/paths_on-node33", 10, || {
+        std::hint::black_box(ns.paths_on(33).len());
+    });
+}
+
 fn bench_scheduler() {
     section("L3: ADLB scheduler dispatch");
     let s = bench_n("sched/100k-tasks-8192-ranks", 3, || {
@@ -244,6 +288,7 @@ fn main() {
     bench_engine_events();
     bench_flownet();
     bench_flownet_churn();
+    bench_storage_queries();
     bench_scheduler();
     bench_staging_sim();
     bench_glob();

@@ -27,7 +27,7 @@ pub fn commands() -> &'static [Command] {
     &COMMANDS
 }
 
-static COMMANDS: [Command; 11] = [
+static COMMANDS: [Command; 12] = [
     Command {
         name: "fig10",
         flags: "[--nodes a,b,c]",
@@ -121,6 +121,22 @@ static COMMANDS: [Command; 11] = [
         },
     },
     Command {
+        name: "tiers",
+        flags: "[--sessions N] [--seed S]",
+        summary: "Tiered-storage matrix: demote-to-SSD vs discard eviction",
+        run: |args| {
+            let sessions = args.u64_or("sessions", experiments::tiers::SESSIONS as u64)?;
+            anyhow::ensure!(
+                (1..=65536).contains(&sessions),
+                "--sessions must be in 1..=65536, got {sessions}"
+            );
+            let seed =
+                args.u64_or("seed", crate::staging::service::ServiceCfg::default().seed)?;
+            experiments::tiers::run_with(sessions as usize, seed).print();
+            Ok(())
+        },
+    },
+    Command {
         name: "all",
         flags: "",
         summary: "Run every experiment table in order",
@@ -142,6 +158,8 @@ static COMMANDS: [Command; 11] = [
             experiments::campaign::run().print();
             println!();
             experiments::serve::run().print();
+            println!();
+            experiments::tiers::run().print();
             Ok(())
         },
     },

@@ -1,5 +1,5 @@
 //! Machine models: the ALCF Blue Gene/Q systems and the APS Orthros
-//! cluster, plus the node-local storage data plane.
+//! cluster.
 //!
 //! A [`MachineSpec`] carries the published hardware constants; a
 //! [`Topology`] materialises the machine's bandwidth structure as
@@ -7,6 +7,11 @@
 //! identical links with uniformly spread load are modelled as one link
 //! of capacity `g x link_bw` — exact for fair-shared symmetric bundles
 //! and what keeps recomputation O(1) in machine size.
+//!
+//! The node-local storage *data plane* lives in [`crate::storage`]
+//! (re-exported below for pre-extraction imports); this module owns
+//! only what the machine dictates about it: per-tier capacities and
+//! the SSD link class demotion/promotion traffic rides.
 //!
 //! BG/Q specifics that shape the paper's results:
 //!
@@ -22,10 +27,21 @@
 //! - Reading staged data back from /tmp was measured at a flat
 //!   53.4 MB/s per process (10.8 +/- 0.1 s for 577 MB) independent of
 //!   allocation size; we model it as a per-process rate cap.
+//! - BG/Q nodes carry **no local disk** — there is no SSD tier to
+//!   demote to ([`MachineSpec::ssd_cap`] is `None`), preserving paper
+//!   fidelity: eviction there really does destroy the replica.
 
-use crate::pfs::{Blob, GpfsParams};
+use crate::engine::{DemoteRoute, SimCore};
+use crate::pfs::GpfsParams;
 use crate::simtime::flownet::{Capacity, FlowNet, LinkClass, LinkId};
-use crate::units::{GB, MB};
+use crate::units::{GB, MB, TB};
+
+// Backward-compatible surface: the storage subsystem was extracted
+// from this module; everything that used to live here keeps resolving.
+pub use crate::storage::{
+    Eviction, NodeStores, PromoteOutcome, ReplicaSnapshot, ResidencyTable, StorageTier,
+    StoreWrite, TierBudgets,
+};
 
 /// Hardware description of one machine.
 #[derive(Clone, Copy, Debug)]
@@ -55,6 +71,13 @@ pub struct MachineSpec {
     /// this is finite; experiments apply it with
     /// [`NodeStores::set_capacity`].
     pub ramdisk_capacity: u64,
+    /// Per-node SSD / burst-buffer capacity in bytes (0 = no SSD
+    /// tier). When present, RAM eviction demotes replicas here instead
+    /// of discarding them ([`crate::storage::NodeStores`]).
+    pub ssd_capacity: u64,
+    /// Per-node SSD streaming bandwidth, bytes/s — the rate demotion
+    /// and promotion transfers ride on the aggregated SSD link.
+    pub ssd_bw: f64,
 }
 
 impl MachineSpec {
@@ -79,6 +102,20 @@ impl MachineSpec {
         }
     }
 
+    /// The SSD-tier byte budget per node, if the machine has one.
+    pub fn ssd_cap(&self) -> Option<u64> {
+        if self.ssd_capacity == 0 {
+            None
+        } else {
+            Some(self.ssd_capacity)
+        }
+    }
+
+    /// Both managed tier budgets together.
+    pub fn tier_budgets(&self) -> TierBudgets {
+        TierBudgets { ram: self.ramdisk_cap(), ssd: self.ssd_cap() }
+    }
+
     /// I/O nodes serving this allocation (at least one).
     pub fn n_ions(&self) -> u32 {
         if self.nodes_per_ion == 0 {
@@ -94,7 +131,8 @@ impl MachineSpec {
 /// Constants: 16 PowerPC A2 cores @ 1.6 GHz / 64 HW threads per node
 /// (SVI); 128 nodes per ION with ~2.1 GB/s usable uplink (calibrated
 /// against Fig 10's 134 GB/s at 8,192 nodes = 64 IONs); 1.8 GB/s torus
-/// injection; 53.4 MB/s per-process /tmp read (SVI-B).
+/// injection; 53.4 MB/s per-process /tmp read (SVI-B). No node-local
+/// disk: the SSD tier is absent, as on the real machine.
 pub fn bgq(nodes: u32) -> MachineSpec {
     MachineSpec {
         name: "bgq",
@@ -110,6 +148,9 @@ pub fn bgq(nodes: u32) -> MachineSpec {
         // BG/Q nodes carry 16 GB; /tmp must share it with the
         // application image, so roughly half is usable for staging.
         ramdisk_capacity: 8 * GB,
+        // Paper fidelity: BG/Q compute nodes are diskless.
+        ssd_capacity: 0,
+        ssd_bw: 0.0,
     }
 }
 
@@ -117,6 +158,8 @@ pub fn bgq(nodes: u32) -> MachineSpec {
 /// an Orthros node has 64 AMD cores running at 2.2 GHz" (SVI). Five
 /// fat nodes, direct-attached NFS (modelled as a 1.25 GB/s backplane
 /// via `GpfsParams` overrides in the experiment drivers), local disks.
+/// The local disks are the SSD tier: 1 TB per node at a calibrated
+/// 1.5 GB/s streaming rate (see EXPERIMENTS.md "SSD link").
 pub fn orthros() -> MachineSpec {
     MachineSpec {
         name: "orthros",
@@ -129,8 +172,11 @@ pub fn orthros() -> MachineSpec {
         torus_link_bw: 1.25 * GB as f64, // 10 GbE
         ramdisk_proc_read_bw: 500.0 * MB as f64,
         local_write_via_ion: false,
-        // Fat nodes with local disks: a generous staging budget.
+        // Fat nodes: a generous in-memory staging budget.
         ramdisk_capacity: 256 * GB,
+        // The node-local disks become the demotion tier.
+        ssd_capacity: TB,
+        ssd_bw: 1.5 * GB as f64,
     }
 }
 
@@ -149,6 +195,9 @@ pub struct Topology {
     pub ion_layer: Option<LinkId>,
     /// Aggregated torus/interconnect bisection.
     pub torus: LinkId,
+    /// Aggregated node-local SSD layer (None when the machine has no
+    /// SSD tier). Demotion and promotion transfers ride this link.
+    pub ssd_layer: Option<LinkId>,
 }
 
 impl Topology {
@@ -190,7 +239,25 @@ impl Topology {
             Capacity::Fixed(spec.nodes as f64 * spec.torus_link_bw),
             LinkClass::Interconnect,
         );
-        Topology { spec, gpfs, pfs_backplane, pfs_disk, pfs_meta, ion_layer, torus }
+        let ssd_layer = if spec.ssd_cap().is_some() {
+            Some(net.add_link_classed(
+                "ssd.layer",
+                Capacity::Fixed(spec.nodes as f64 * spec.ssd_bw),
+                LinkClass::Ssd,
+            ))
+        } else {
+            None
+        };
+        Topology {
+            spec,
+            gpfs,
+            pfs_backplane,
+            pfs_disk,
+            pfs_meta,
+            ion_layer,
+            torus,
+            ssd_layer,
+        }
     }
 
     /// Path of a *coordinated* (collective, large-aligned) GPFS read
@@ -219,6 +286,15 @@ impl Topology {
         }
     }
 
+    /// Path of SSD-tier traffic (demotion and promotion transfers):
+    /// the aggregated node-local SSD layer. Empty when the machine has
+    /// no SSD tier — but the engine only routes demotions when
+    /// [`Topology::apply_storage_budgets`] installed the route, so a
+    /// pathless (instantaneous) tier transfer cannot arise by accident.
+    pub fn path_ssd(&self) -> Vec<LinkId> {
+        self.ssd_layer.into_iter().collect()
+    }
+
     /// Path of metadata operations.
     pub fn path_meta(&self) -> Vec<LinkId> {
         vec![self.pfs_meta]
@@ -229,532 +305,29 @@ impl Topology {
         vec![self.torus]
     }
 
-    /// Apply this machine's node-local storage budget
-    /// ([`MachineSpec::ramdisk_capacity`]) to the data plane. The
-    /// experiment harnesses call this right after `Topology::build`;
-    /// scenarios that want tighter pressure may override with
-    /// [`NodeStores::set_capacity`] afterwards.
+    /// Apply this machine's node-local **RAM** budget to the data
+    /// plane. Superseded by [`Topology::apply_storage_budgets`], which
+    /// also arms the SSD tier; kept for callers that only hold the
+    /// store.
     pub fn apply_ramdisk_budget(&self, nodes: &mut NodeStores) {
         nodes.set_capacity(self.spec.ramdisk_cap());
     }
-}
 
-/// Bookkeeping mirror of [`NodeStores`]: which paths are resident on
-/// which node ranges, plus eviction telemetry. `engine::SimCore` owns
-/// one and keeps it exactly in sync with every engine-applied node
-/// write (`SimCore::node_write_range`) and eviction
-/// (`SimCore::evict_path`), so experiments can report hit rates and
-/// evicted bytes without rescanning the data plane.
-#[derive(Clone, Debug, Default)]
-pub struct ResidencyTable {
-    /// path -> disjoint, sorted, coalesced node ranges.
-    by_path: std::collections::BTreeMap<String, Vec<(u32, u32)>>,
-    /// Replicas evicted under capacity pressure (count).
-    pub evictions: u64,
-    /// Total bytes freed by evictions (per-node bytes x node span).
-    pub evicted_bytes: u64,
-}
-
-impl ResidencyTable {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Record a stored write of `path` on `lo..=hi` that evicted
-    /// `evicted` first.
-    pub fn on_stored(&mut self, lo: u32, hi: u32, path: &str, evicted: &[Eviction]) {
-        self.on_evicted(evicted);
-        add_range(self.by_path.entry(path.to_string()).or_default(), lo, hi);
-    }
-
-    /// Record evictions (capacity pressure or forced).
-    pub fn on_evicted(&mut self, evicted: &[Eviction]) {
-        for ev in evicted {
-            self.evictions += 1;
-            self.evicted_bytes += ev.bytes * (ev.hi - ev.lo + 1) as u64;
-            if let Some(ranges) = self.by_path.get_mut(&ev.path) {
-                sub_range(ranges, ev.lo, ev.hi);
-                if ranges.is_empty() {
-                    self.by_path.remove(&ev.path);
-                }
-            }
-        }
-    }
-
-    /// True when `path` is resident on `node`.
-    pub fn resident(&self, node: u32, path: &str) -> bool {
-        self.by_path
-            .get(path)
-            .is_some_and(|rs| rs.iter().any(|&(a, b)| (a..=b).contains(&node)))
-    }
-
-    /// Resident node ranges of `path` (sorted, coalesced).
-    pub fn coverage(&self, path: &str) -> &[(u32, u32)] {
-        self.by_path.get(path).map(Vec::as_slice).unwrap_or(&[])
-    }
-
-    /// All resident paths, sorted.
-    pub fn resident_paths(&self) -> impl Iterator<Item = &String> {
-        self.by_path.keys()
-    }
-
-    /// Exact-mirror check against the data plane: the table and the
-    /// store must agree on every path's resident node set.
-    pub fn mirrors(&self, stores: &NodeStores) -> bool {
-        let mut want: std::collections::BTreeMap<String, Vec<(u32, u32)>> =
-            std::collections::BTreeMap::new();
-        for (path, reps) in stores.dump() {
-            let ranges = want.entry(path).or_default();
-            for (lo, hi, _) in reps {
-                add_range(ranges, lo, hi);
-            }
-        }
-        want == self.by_path
-    }
-}
-
-/// Merge `[lo, hi]` into a sorted, disjoint, coalesced range set.
-fn add_range(ranges: &mut Vec<(u32, u32)>, lo: u32, hi: u32) {
-    ranges.push((lo, hi));
-    ranges.sort_unstable();
-    let mut out: Vec<(u32, u32)> = Vec::with_capacity(ranges.len());
-    for &(a, b) in ranges.iter() {
-        match out.last_mut() {
-            Some((_, pb)) if a <= pb.saturating_add(1) => *pb = (*pb).max(b),
-            _ => out.push((a, b)),
-        }
-    }
-    *ranges = out;
-}
-
-/// Remove `[lo, hi]` from a sorted, disjoint range set.
-fn sub_range(ranges: &mut Vec<(u32, u32)>, lo: u32, hi: u32) {
-    let mut out: Vec<(u32, u32)> = Vec::with_capacity(ranges.len() + 1);
-    for &(a, b) in ranges.iter() {
-        if b < lo || a > hi {
-            out.push((a, b));
-            continue;
-        }
-        if a < lo {
-            out.push((a, lo - 1));
-        }
-        if b > hi {
-            out.push((hi + 1, b));
-        }
-    }
-    *ranges = out;
-}
-
-/// A replica removed from a node range to make room for a write (or by
-/// a forced [`NodeStores::evict_path`]).
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Eviction {
-    pub path: String,
-    pub lo: u32,
-    pub hi: u32,
-    /// Per-node bytes the eviction freed.
-    pub bytes: u64,
-}
-
-/// Outcome of a capacity-checked node-local write.
-#[derive(Clone, Debug)]
-pub enum StoreWrite {
-    /// Replica stored on every node of the range; `evicted` lists the
-    /// LRU victims removed to make room, in eviction order.
-    Stored { evicted: Vec<Eviction> },
-    /// Write refused and the store left untouched: even after evicting
-    /// every unpinned replica, some node of the range would still be
-    /// `short_bytes` over capacity.
-    Rejected { short_bytes: u64 },
-}
-
-/// One path's replicas in a [`NodeStores::dump`] snapshot:
-/// (lo, hi, per-node bytes) per replica.
-pub type ReplicaSnapshot = Vec<(u32, u32, u64)>;
-
-/// One resident replica: `blob` present on every node in `lo..=hi`.
-#[derive(Clone, Debug)]
-struct Replica {
-    lo: u32,
-    hi: u32,
-    blob: Blob,
-    /// LRU clock value of the last write or touch.
-    last_use: u64,
-    /// Monotone insertion sequence (deterministic LRU tie-break;
-    /// residuals of a split replica keep their original seq).
-    seq: u64,
-}
-
-impl Replica {
-    fn covers(&self, node: u32) -> bool {
-        (self.lo..=self.hi).contains(&node)
-    }
-
-    fn overlaps(&self, lo: u32, hi: u32) -> bool {
-        self.lo <= hi && self.hi >= lo
-    }
-}
-
-/// Node-local storage data plane ("/tmp" on every node), with the
-/// residency semantics of a real RAM disk:
-///
-/// - Replicas are stored once per *node range* (the staging hook
-///   writes the same blob to every node), so memory is O(files), not
-///   O(files x nodes). Replicas of one path are node-disjoint: a write
-///   replaces the overlapped portion of any older same-path replica.
-/// - An optional uniform per-node **capacity** is enforced on every
-///   write: least-recently-used unpinned replicas of other paths
-///   covering a still-over-budget node of the write range are evicted
-///   (whole replicas, LRU order, ties broken by insertion sequence
-///   then path/lo order) until the write fits on every node of its
-///   range. An infeasible write — pinned residents alone exceed the
-///   budget — is rejected with the store untouched.
-/// - **Pinned** paths are never evicted (the dataset a campaign is
-///   actively computing on).
-///
-/// Enumeration is deterministic (BTreeMap): glob results, transfer
-/// lists, and LRU victim order are reproducible across runs.
-#[derive(Debug, Default)]
-pub struct NodeStores {
-    /// path -> node-disjoint replicas, sorted by `lo`.
-    entries: std::collections::BTreeMap<String, Vec<Replica>>,
-    /// Paths exempt from eviction, refcounted: several owners (e.g.
-    /// two datasets delivering the same node-local path) may hold a
-    /// pin independently and the path stays protected until every one
-    /// releases it.
-    pinned: std::collections::BTreeMap<String, u32>,
-    /// Uniform per-node byte budget; None = unbounded.
-    capacity: Option<u64>,
-    /// Resident bytes per node (only nodes holding data appear).
-    used: std::collections::BTreeMap<u32, u64>,
-    /// LRU clock, bumped by writes and touches.
-    clock: u64,
-    /// Insertion sequence counter.
-    seq: u64,
-}
-
-impl NodeStores {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Set or clear the uniform per-node capacity. Enforced on
-    /// subsequent writes; existing contents are left as they are.
-    pub fn set_capacity(&mut self, cap: Option<u64>) {
-        self.capacity = cap;
-    }
-
-    pub fn capacity(&self) -> Option<u64> {
-        self.capacity
-    }
-
-    /// Exempt `path` from eviction until a matching
-    /// [`NodeStores::unpin`]. Refcounted: pin twice, unpin twice.
-    pub fn pin(&mut self, path: impl Into<String>) {
-        *self.pinned.entry(path.into()).or_insert(0) += 1;
-    }
-
-    /// Release one pin of `path` (no-op when not pinned).
-    pub fn unpin(&mut self, path: &str) {
-        if let Some(n) = self.pinned.get_mut(path) {
-            *n -= 1;
-            if *n == 0 {
-                self.pinned.remove(path);
-            }
-        }
-    }
-
-    pub fn is_pinned(&self, path: &str) -> bool {
-        self.pinned.contains_key(path)
-    }
-
-    /// Refresh the LRU clock of the replica covering (`node`, `path`).
-    /// No-op when nothing covers it (the clock still advances).
-    pub fn touch(&mut self, node: u32, path: &str) {
-        self.clock += 1;
-        let now = self.clock;
-        if let Some(reps) = self.entries.get_mut(path) {
-            if let Some(r) = reps.iter_mut().find(|r| r.covers(node)) {
-                r.last_use = now;
-            }
-        }
-    }
-
-    /// Refresh the LRU clock of *every* replica of `path` overlapping
-    /// `lo..=hi` (one clock bump shared by all). A range-wide hit must
-    /// not leave split replicas of the reused path LRU-stale.
-    pub fn touch_range(&mut self, lo: u32, hi: u32, path: &str) {
-        self.clock += 1;
-        let now = self.clock;
-        if let Some(reps) = self.entries.get_mut(path) {
-            for r in reps.iter_mut().filter(|r| r.overlaps(lo, hi)) {
-                r.last_use = now;
-            }
-        }
-    }
-
-    /// Node ranges holding `path`: disjoint, sorted by `lo`.
-    pub fn coverage_of(&self, path: &str) -> Vec<(u32, u32)> {
-        self.entries
-            .get(path)
-            .map(|reps| reps.iter().map(|r| (r.lo, r.hi)).collect())
-            .unwrap_or_default()
-    }
-
-    /// Write `data` at `path` on every node in `lo..=hi`, panicking if
-    /// the capacity-checked write is rejected (legacy entry point for
-    /// unbounded stores; capacity-aware callers use
-    /// [`NodeStores::write_range_evicting`] or route through
-    /// `SimCore::node_write_range` to keep metrics and the residency
-    /// mirror in sync).
-    pub fn write_range(&mut self, lo: u32, hi: u32, path: impl Into<String>, data: Blob) {
-        let path = path.into();
-        match self.write_range_evicting(lo, hi, &path, data) {
-            StoreWrite::Stored { .. } => {}
-            StoreWrite::Rejected { short_bytes } => panic!(
-                "node store write of {path} on {lo}..={hi} exceeds capacity by {short_bytes} B"
-            ),
-        }
-    }
-
-    /// Write on a single node.
-    pub fn write(&mut self, node: u32, path: impl Into<String>, data: Blob) {
-        self.write_range(node, node, path, data);
-    }
-
-    /// Capacity-checked write of `data` at `path` on every node in
-    /// `lo..=hi`. Evicts LRU unpinned replicas of *other* paths
-    /// covering a still-over-budget node of the range until the write
-    /// fits on every node (the overlapped portion of an older
-    /// same-path replica is replaced, never counted). Rejection leaves
-    /// the store byte-for-byte untouched.
-    pub fn write_range_evicting(
-        &mut self,
-        lo: u32,
-        hi: u32,
-        path: &str,
-        data: Blob,
-    ) -> StoreWrite {
-        assert!(lo <= hi, "bad node range");
-        let need = data.len();
-        let mut evicted = Vec::new();
-        if let Some(cap) = self.capacity {
-            if need > cap {
-                return StoreWrite::Rejected { short_bytes: need - cap };
-            }
-            // Feasibility first, so rejection is a no-op: with every
-            // eligible victim gone, only pinned other-path replicas
-            // remain on the range's nodes. (Nothing pinned -> always
-            // feasible, since `need <= cap` held above.)
-            if !self.pinned.is_empty() {
-                for n in lo..=hi {
-                    let kept: u64 = self
-                        .entries
-                        .iter()
-                        .filter(|(p, _)| {
-                            p.as_str() != path && self.pinned.contains_key(p.as_str())
-                        })
-                        .flat_map(|(_, reps)| reps.iter())
-                        .filter(|r| r.covers(n))
-                        .map(|r| r.blob.len())
-                        .sum();
-                    if kept + need > cap {
-                        return StoreWrite::Rejected { short_bytes: kept + need - cap };
-                    }
-                }
-            }
-            // Evict LRU victims until every node of the range fits.
-            // Victims must cover at least one currently-over-budget
-            // node: a merely range-overlapping replica on a node that
-            // already fits would be destroyed without freeing anything
-            // where it matters.
-            loop {
-                let over: Vec<u32> = (lo..=hi)
-                    .filter(|&n| self.used_after_overwrite(n, path) + need > cap)
-                    .collect();
-                if over.is_empty() {
-                    break;
-                }
-                let victim = self
-                    .entries
-                    .iter()
-                    .filter(|(p, _)| {
-                        p.as_str() != path && !self.pinned.contains_key(p.as_str())
-                    })
-                    .flat_map(|(p, reps)| reps.iter().map(move |r| (p, r)))
-                    .filter(|(_, r)| over.iter().any(|&n| r.covers(n)))
-                    .min_by_key(|(_, r)| (r.last_use, r.seq))
-                    .map(|(p, r)| (p.clone(), r.lo));
-                let (vpath, vlo) =
-                    victim.expect("feasibility check guaranteed an evictable victim");
-                let ev = self.remove_replica(&vpath, vlo);
-                evicted.push(ev);
-            }
-        }
-        // Replace the overlapped portion of older same-path replicas
-        // and store the new one.
-        self.clock += 1;
-        self.seq += 1;
-        let (now, seq) = (self.clock, self.seq);
-        let mut reps = self.entries.remove(path).unwrap_or_default();
-        let mut out: Vec<Replica> = Vec::with_capacity(reps.len() + 1);
-        for r in reps.drain(..) {
-            if !r.overlaps(lo, hi) {
-                out.push(r);
-                continue;
-            }
-            let (olo, ohi) = (r.lo.max(lo), r.hi.min(hi));
-            let b = r.blob.len();
-            if b > 0 {
-                for n in olo..=ohi {
-                    self.sub_used(n, b);
-                }
-            }
-            if r.lo < lo {
-                out.push(Replica { lo: r.lo, hi: lo - 1, ..r.clone() });
-            }
-            if r.hi > hi {
-                out.push(Replica { lo: hi + 1, hi: r.hi, ..r });
-            }
-        }
-        if need > 0 {
-            for n in lo..=hi {
-                *self.used.entry(n).or_insert(0) += need;
-            }
-        }
-        out.push(Replica { lo, hi, blob: data, last_use: now, seq });
-        out.sort_by_key(|r| r.lo);
-        self.entries.insert(path.to_string(), out);
-        StoreWrite::Stored { evicted }
-    }
-
-    /// Forcibly evict every replica of `path`. No-op when pinned.
-    pub fn evict_path(&mut self, path: &str) -> Vec<Eviction> {
-        if self.pinned.contains_key(path) {
-            return Vec::new();
-        }
-        let Some(reps) = self.entries.remove(path) else {
-            return Vec::new();
-        };
-        let mut out = Vec::new();
-        for r in reps {
-            let b = r.blob.len();
-            if b > 0 {
-                for n in r.lo..=r.hi {
-                    self.sub_used(n, b);
-                }
-            }
-            out.push(Eviction { path: path.to_string(), lo: r.lo, hi: r.hi, bytes: b });
-        }
-        out
-    }
-
-    /// Usage of `n` once the same-path replica covering it (if any) is
-    /// replaced by the pending write.
-    fn used_after_overwrite(&self, n: u32, path: &str) -> u64 {
-        let mut u = self.used.get(&n).copied().unwrap_or(0);
-        if let Some(reps) = self.entries.get(path) {
-            if let Some(r) = reps.iter().find(|r| r.covers(n)) {
-                u -= r.blob.len();
-            }
-        }
-        u
-    }
-
-    /// Remove the replica of `path` starting at node `lo` (unique:
-    /// replicas of one path are node-disjoint).
-    fn remove_replica(&mut self, path: &str, lo: u32) -> Eviction {
-        let reps = self.entries.get_mut(path).expect("victim path present");
-        let idx = reps.iter().position(|r| r.lo == lo).expect("victim replica present");
-        let r = reps.remove(idx);
-        if reps.is_empty() {
-            self.entries.remove(path);
-        }
-        let b = r.blob.len();
-        if b > 0 {
-            for n in r.lo..=r.hi {
-                self.sub_used(n, b);
-            }
-        }
-        Eviction { path: path.to_string(), lo: r.lo, hi: r.hi, bytes: b }
-    }
-
-    fn sub_used(&mut self, n: u32, b: u64) {
-        let e = self.used.get_mut(&n).expect("usage accounting out of sync");
-        *e -= b;
-        if *e == 0 {
-            self.used.remove(&n);
-        }
-    }
-
-    /// Read `path` as seen by `node`.
-    pub fn read(&self, node: u32, path: &str) -> Option<&Blob> {
-        self.entries.get(path)?.iter().find(|r| r.covers(node)).map(|r| &r.blob)
-    }
-
-    pub fn exists_on(&self, node: u32, path: &str) -> bool {
-        self.read(node, path).is_some()
-    }
-
-    /// Bytes resident on one node (O(1): incrementally accounted).
-    pub fn bytes_on(&self, node: u32) -> u64 {
-        self.used.get(&node).copied().unwrap_or(0)
-    }
-
-    /// True when every node of `lo..=hi` holds `path` with content
-    /// identical to `want` — the incremental re-stage hit test (a
-    /// stale replica, updated on the shared FS since staging, fails
-    /// the checksum and is restaged).
-    pub fn resident_matches(&self, lo: u32, hi: u32, path: &str, want: &Blob) -> bool {
-        let Some(reps) = self.entries.get(path) else {
-            return false;
-        };
-        let mut covered = 0u64;
-        for r in reps {
-            if !r.overlaps(lo, hi) {
-                continue;
-            }
-            if !r.blob.same_content(want) {
-                return false;
-            }
-            covered += (r.hi.min(hi) - r.lo.max(lo) + 1) as u64;
-        }
-        covered == (hi - lo + 1) as u64
-    }
-
-    /// Number of distinct paths stored anywhere.
-    pub fn path_count(&self) -> usize {
-        self.entries.len()
-    }
-
-    /// Paths visible to `node`, in sorted order by construction
-    /// (deterministic enumeration for the gather collective's local
-    /// directory listing and the hook's transfer lists).
-    pub fn paths_on(&self, node: u32) -> Vec<String> {
-        self.entries
-            .iter()
-            .filter(|(_, reps)| reps.iter().any(|r| r.covers(node)))
-            .map(|(k, _)| k.clone())
-            .collect()
-    }
-
-    /// Deterministic snapshot: (path, [(lo, hi, per-node bytes)]),
-    /// paths sorted, replicas sorted by `lo`. Test/mirror support.
-    pub fn dump(&self) -> Vec<(String, ReplicaSnapshot)> {
-        self.entries
-            .iter()
-            .map(|(p, reps)| {
-                (p.clone(), reps.iter().map(|r| (r.lo, r.hi, r.blob.len())).collect())
-            })
-            .collect()
-    }
-
-    /// Wipe all replicas, usage accounting, and pins (capacity and
-    /// the LRU clock survive).
-    pub fn clear(&mut self) {
-        self.entries.clear();
-        self.used.clear();
-        self.pinned.clear();
+    /// Apply this machine's storage budgets ([`MachineSpec::ramdisk_cap`]
+    /// + [`MachineSpec::ssd_cap`]) to the core's data plane and install
+    /// the demotion route (the SSD link + per-node rate cap) so
+    /// engine-applied evictions demote through the flow network. The
+    /// experiment harnesses call this right after [`Topology::build`];
+    /// scenarios that want tighter pressure may override with
+    /// [`NodeStores::set_capacity`] / [`NodeStores::set_ssd_capacity`]
+    /// afterwards.
+    pub fn apply_storage_budgets(&self, core: &mut SimCore) {
+        core.nodes.set_capacity(self.spec.ramdisk_cap());
+        core.nodes.set_ssd_capacity(self.spec.ssd_cap());
+        core.set_demote_route(
+            self.ssd_layer
+                .map(|l| DemoteRoute { path: vec![l], cap_each: self.spec.ssd_bw }),
+        );
     }
 }
 
@@ -792,6 +365,9 @@ mod tests {
         assert_eq!(t.path_uncoordinated_read().len(), 3);
         assert_eq!(t.path_local_write().len(), 1); // via ION
         assert_eq!(t.path_meta().len(), 1);
+        // BG/Q is diskless: no SSD layer, paper fidelity.
+        assert!(t.ssd_layer.is_none());
+        assert!(t.path_ssd().is_empty());
     }
 
     #[test]
@@ -813,38 +389,21 @@ mod tests {
     }
 
     #[test]
-    fn node_store_replicas() {
-        let mut ns = NodeStores::new();
-        let blob = Blob::real(vec![9; 64]);
-        ns.write_range(0, 511, "/tmp/param.txt", blob.clone());
-        assert!(ns.exists_on(0, "/tmp/param.txt"));
-        assert!(ns.exists_on(511, "/tmp/param.txt"));
-        assert!(!ns.exists_on(512, "/tmp/param.txt"));
-        assert!(ns.read(100, "/tmp/param.txt").unwrap().same_content(&blob));
-        assert_eq!(ns.bytes_on(77), 64);
-        assert_eq!(ns.bytes_on(1000), 0);
-        assert_eq!(ns.path_count(), 1);
-    }
-
-    #[test]
-    fn node_store_newest_wins() {
-        let mut ns = NodeStores::new();
-        ns.write_range(0, 10, "/tmp/x", Blob::real(vec![1]));
-        ns.write(5, "/tmp/x", Blob::real(vec![2, 2]));
-        assert_eq!(ns.read(5, "/tmp/x").unwrap().len(), 2);
-        assert_eq!(ns.read(4, "/tmp/x").unwrap().len(), 1);
-        // The overwrite replaced (not shadowed) the middle node.
-        assert_eq!(ns.bytes_on(5), 2);
-        assert_eq!(ns.bytes_on(4), 1);
-    }
-
-    #[test]
-    fn machine_ramdisk_capacities() {
+    fn machine_storage_capacities() {
         assert_eq!(bgq(512).ramdisk_cap(), Some(8 * GB));
         assert_eq!(orthros().ramdisk_cap(), Some(256 * GB));
+        // BG/Q has no SSD tier (paper fidelity); Orthros models its
+        // local disks as one.
+        assert_eq!(bgq(512).ssd_cap(), None);
+        assert_eq!(orthros().ssd_cap(), Some(TB));
+        assert_eq!(
+            orthros().tier_budgets(),
+            TierBudgets { ram: Some(256 * GB), ssd: Some(TB) }
+        );
         let mut m = bgq(4);
         m.ramdisk_capacity = 0;
         assert_eq!(m.ramdisk_cap(), None);
+        assert_eq!(m.tier_budgets().total(), None);
     }
 
     #[test]
@@ -858,254 +417,27 @@ mod tests {
     }
 
     #[test]
-    fn capacity_evicts_lru_first() {
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(100));
-        ns.write_range(0, 3, "/tmp/a", Blob::real(vec![1; 40]));
-        ns.write_range(0, 3, "/tmp/b", Blob::real(vec![2; 40]));
-        // Refresh a: b becomes the LRU victim.
-        ns.touch(1, "/tmp/a");
-        let out = ns.write_range_evicting(0, 3, "/tmp/c", Blob::real(vec![3; 40]));
-        match out {
-            StoreWrite::Stored { evicted } => {
-                assert_eq!(evicted.len(), 1);
-                assert_eq!(evicted[0].path, "/tmp/b");
-                assert_eq!(evicted[0].bytes, 40);
-                assert_eq!((evicted[0].lo, evicted[0].hi), (0, 3));
-            }
-            other => panic!("expected Stored, got {other:?}"),
-        }
-        assert!(ns.exists_on(2, "/tmp/a"));
-        assert!(!ns.exists_on(2, "/tmp/b"));
-        assert!(ns.exists_on(2, "/tmp/c"));
-        assert_eq!(ns.bytes_on(2), 80);
-    }
+    fn storage_budgets_arm_both_tiers_and_the_demote_route() {
+        // Orthros: RAM + SSD budgets land on the store, and the engine
+        // gets the demotion route over the SSD link.
+        let mut core = SimCore::new();
+        let t = Topology::build(orthros(), GpfsParams::default(), &mut core.net);
+        t.apply_storage_budgets(&mut core);
+        assert_eq!(core.nodes.capacity(), Some(256 * GB));
+        assert_eq!(core.nodes.ssd_capacity(), Some(1 * TB));
+        assert!(core.demote_route().is_some());
+        let l = t.ssd_layer.unwrap();
+        assert_eq!(core.net.link_class(l), LinkClass::Ssd);
+        // 5 nodes x 1.5 GB/s aggregated.
+        let f = core.net.start(vec![l], 1, GB);
+        core.net.recompute();
+        assert!((core.net.rate_each(f) - 7.5 * GB as f64).abs() < 1.0);
 
-    #[test]
-    fn pinned_replicas_survive_pressure() {
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(100));
-        ns.write_range(0, 1, "/tmp/keep", Blob::real(vec![1; 60]));
-        ns.pin("/tmp/keep");
-        ns.write_range(0, 1, "/tmp/x", Blob::real(vec![2; 30]));
-        // 60 pinned + 30 + 30 > 100: x is evicted, keep survives.
-        let out = ns.write_range_evicting(0, 1, "/tmp/y", Blob::real(vec![3; 30]));
-        assert!(matches!(out, StoreWrite::Stored { ref evicted } if evicted.len() == 1
-            && evicted[0].path == "/tmp/x"));
-        assert!(ns.exists_on(0, "/tmp/keep"));
-        // A write that cannot fit beside the pinned resident is
-        // rejected with the store untouched.
-        let before = ns.dump();
-        let out = ns.write_range_evicting(0, 1, "/tmp/z", Blob::real(vec![4; 50]));
-        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 10 }));
-        assert_eq!(ns.dump(), before);
-        // Unpinning makes the same write admissible again.
-        ns.unpin("/tmp/keep");
-        assert!(matches!(
-            ns.write_range_evicting(0, 1, "/tmp/z", Blob::real(vec![4; 50])),
-            StoreWrite::Stored { .. }
-        ));
-        assert!(ns.bytes_on(0) <= 100 && ns.bytes_on(1) <= 100);
-    }
-
-    #[test]
-    fn oversized_blob_rejected_outright() {
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(10));
-        let out = ns.write_range_evicting(0, 0, "/tmp/big", Blob::real(vec![0; 25]));
-        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 15 }));
-        assert_eq!(ns.path_count(), 0);
-    }
-
-    #[test]
-    fn eviction_scoped_to_overlapping_ranges() {
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(100));
-        ns.write_range(0, 1, "/tmp/left", Blob::real(vec![1; 80]));
-        ns.write_range(4, 5, "/tmp/right", Blob::real(vec![2; 80]));
-        // Pressure on nodes 4-5 must not evict the disjoint left range.
-        let out = ns.write_range_evicting(4, 5, "/tmp/new", Blob::real(vec![3; 60]));
-        assert!(matches!(out, StoreWrite::Stored { ref evicted } if evicted.len() == 1
-            && evicted[0].path == "/tmp/right"));
-        assert!(ns.exists_on(0, "/tmp/left"));
-        assert!(!ns.exists_on(4, "/tmp/right"));
-    }
-
-    #[test]
-    fn residency_range_set_algebra() {
-        let mut rs = Vec::new();
-        add_range(&mut rs, 4, 7);
-        add_range(&mut rs, 0, 1);
-        assert_eq!(rs, vec![(0, 1), (4, 7)]);
-        add_range(&mut rs, 2, 3); // bridges and coalesces
-        assert_eq!(rs, vec![(0, 7)]);
-        sub_range(&mut rs, 3, 5);
-        assert_eq!(rs, vec![(0, 2), (6, 7)]);
-        sub_range(&mut rs, 0, 7);
-        assert!(rs.is_empty());
-    }
-
-    #[test]
-    fn residency_table_mirrors_store() {
-        let mut ns = NodeStores::new();
-        let mut table = ResidencyTable::new();
-        let w = |ns: &mut NodeStores, t: &mut ResidencyTable, lo, hi, p: &str| {
-            match ns.write_range_evicting(lo, hi, p, Blob::real(vec![0; 4])) {
-                StoreWrite::Stored { evicted } => t.on_stored(lo, hi, p, &evicted),
-                StoreWrite::Rejected { .. } => {}
-            }
-        };
-        w(&mut ns, &mut table, 0, 3, "/tmp/a");
-        w(&mut ns, &mut table, 4, 7, "/tmp/a"); // coalesces to (0,7)
-        w(&mut ns, &mut table, 2, 5, "/tmp/b");
-        assert!(table.mirrors(&ns));
-        assert!(table.resident(5, "/tmp/a"));
-        assert_eq!(table.coverage("/tmp/a"), &[(0, 7)]);
-        assert_eq!(table.resident_paths().count(), 2);
-        table.on_evicted(&ns.evict_path("/tmp/b"));
-        assert!(table.mirrors(&ns));
-        assert!(!table.resident(3, "/tmp/b"));
-        assert_eq!(table.evictions, 1);
-        assert_eq!(table.evicted_bytes, 4 * 4);
-    }
-
-    #[test]
-    fn touch_range_refreshes_split_replicas() {
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(100));
-        // Split /tmp/hot into three replicas via a same-content patch.
-        ns.write_range(0, 5, "/tmp/hot", Blob::real(vec![1; 30]));
-        ns.write_range(2, 3, "/tmp/hot", Blob::real(vec![1; 30]));
-        ns.write_range(0, 5, "/tmp/cold", Blob::real(vec![2; 30]));
-        assert_eq!(ns.coverage_of("/tmp/hot"), vec![(0, 1), (2, 3), (4, 5)]);
-        assert!(ns.coverage_of("/tmp/none").is_empty());
-        // A range-wide hit refreshes ALL hot replicas (not just the
-        // one covering the probe node); cold is then the LRU victim.
-        ns.touch_range(0, 5, "/tmp/hot");
-        let out = ns.write_range_evicting(0, 5, "/tmp/new", Blob::real(vec![3; 60]));
-        match out {
-            StoreWrite::Stored { evicted } => {
-                assert!(!evicted.is_empty());
-                assert!(
-                    evicted.iter().all(|e| e.path == "/tmp/cold"),
-                    "hot replicas evicted despite the range-wide hit: {evicted:?}"
-                );
-            }
-            other => panic!("expected Stored, got {other:?}"),
-        }
-        for n in 0..6u32 {
-            assert!(ns.exists_on(n, "/tmp/hot"));
-        }
-    }
-
-    #[test]
-    fn victims_must_cover_an_over_budget_node() {
-        // /tmp/old (LRU-oldest) lives only on node 0, which still fits
-        // the incoming write; /tmp/busy fills node 5. The eviction must
-        // take /tmp/busy (covering the over-budget node), not destroy
-        // /tmp/old needlessly.
-        let mut ns = NodeStores::new();
-        ns.set_capacity(Some(100));
-        ns.write_range(0, 0, "/tmp/old", Blob::real(vec![1; 40]));
-        ns.write_range(5, 5, "/tmp/busy", Blob::real(vec![2; 80]));
-        let out = ns.write_range_evicting(0, 5, "/tmp/new", Blob::real(vec![3; 60]));
-        match out {
-            StoreWrite::Stored { evicted } => {
-                assert_eq!(evicted.len(), 1);
-                assert_eq!(evicted[0].path, "/tmp/busy");
-            }
-            other => panic!("expected Stored, got {other:?}"),
-        }
-        assert!(ns.exists_on(0, "/tmp/old"), "node-0 replica destroyed needlessly");
-        assert!(ns.exists_on(3, "/tmp/new"));
-        assert_eq!(ns.bytes_on(0), 100);
-        assert_eq!(ns.bytes_on(5), 60);
-    }
-
-    #[test]
-    fn overwrite_splits_replicas_and_keeps_accounting() {
-        let mut ns = NodeStores::new();
-        ns.write_range(0, 9, "/tmp/x", Blob::real(vec![1; 10]));
-        ns.write_range(3, 6, "/tmp/x", Blob::real(vec![2; 20]));
-        assert_eq!(ns.dump(), vec![(
-            "/tmp/x".to_string(),
-            vec![(0, 2, 10), (3, 6, 20), (7, 9, 10)],
-        )]);
-        for n in 0..10u32 {
-            let want = if (3..=6).contains(&n) { 20 } else { 10 };
-            assert_eq!(ns.bytes_on(n), want, "node {n}");
-        }
-        assert_eq!(ns.bytes_on(10), 0);
-    }
-
-    #[test]
-    fn paths_on_is_sorted_and_deterministic() {
-        let build = || {
-            let mut ns = NodeStores::new();
-            for name in ["/tmp/z.bin", "/tmp/a.bin", "/tmp/m.bin", "/tmp/k.bin"] {
-                ns.write_range(0, 7, name, Blob::real(vec![0; 4]));
-            }
-            ns.write_range(2, 3, "/tmp/partial.bin", Blob::real(vec![0; 4]));
-            ns
-        };
-        let a = build();
-        let b = build();
-        let paths = a.paths_on(2);
-        let mut sorted = paths.clone();
-        sorted.sort();
-        assert_eq!(paths, sorted, "paths_on must return sorted order");
-        assert_eq!(paths.len(), 5);
-        assert_eq!(a.paths_on(5).len(), 4);
-        // Identical construction -> identical enumeration (no
-        // HashMap iteration-order dependence).
-        assert_eq!(a.paths_on(2), b.paths_on(2));
-        assert_eq!(a.dump(), b.dump());
-    }
-
-    #[test]
-    fn resident_matches_checks_coverage_and_content() {
-        let mut ns = NodeStores::new();
-        let blob = Blob::synthetic(1000, 7);
-        ns.write_range(0, 3, "/tmp/d", blob.clone());
-        assert!(ns.resident_matches(0, 3, "/tmp/d", &blob));
-        assert!(ns.resident_matches(1, 2, "/tmp/d", &blob));
-        // Partial coverage fails.
-        assert!(!ns.resident_matches(0, 4, "/tmp/d", &blob));
-        // Stale content fails.
-        assert!(!ns.resident_matches(0, 3, "/tmp/d", &Blob::synthetic(1000, 8)));
-        // A same-content patch over a sub-range still matches.
-        ns.write_range(1, 2, "/tmp/d", blob.clone());
-        assert!(ns.resident_matches(0, 3, "/tmp/d", &blob));
-    }
-
-    #[test]
-    fn pins_are_refcounted_across_owners() {
-        let mut ns = NodeStores::new();
-        ns.write_range(0, 1, "/tmp/shared", Blob::real(vec![1; 8]));
-        ns.pin("/tmp/shared"); // owner X
-        ns.pin("/tmp/shared"); // owner Y
-        ns.unpin("/tmp/shared"); // Y releases; X still holds it
-        assert!(ns.is_pinned("/tmp/shared"));
-        assert!(ns.evict_path("/tmp/shared").is_empty());
-        ns.unpin("/tmp/shared");
-        assert!(!ns.is_pinned("/tmp/shared"));
-        // Unbalanced extra unpins are harmless no-ops.
-        ns.unpin("/tmp/shared");
-        assert_eq!(ns.evict_path("/tmp/shared").len(), 1);
-    }
-
-    #[test]
-    fn forced_evict_path_respects_pins() {
-        let mut ns = NodeStores::new();
-        ns.write_range(0, 3, "/tmp/a", Blob::real(vec![1; 8]));
-        ns.pin("/tmp/a");
-        assert!(ns.evict_path("/tmp/a").is_empty());
-        assert!(ns.exists_on(0, "/tmp/a"));
-        ns.unpin("/tmp/a");
-        let ev = ns.evict_path("/tmp/a");
-        assert_eq!(ev.len(), 1);
-        assert_eq!(ev[0].bytes, 8);
-        assert!(!ns.exists_on(0, "/tmp/a"));
-        assert_eq!(ns.bytes_on(0), 0);
+        // BG/Q: no SSD tier, no route — eviction stays a discard.
+        let mut core = SimCore::new();
+        let t = Topology::build(bgq(16), GpfsParams::default(), &mut core.net);
+        t.apply_storage_budgets(&mut core);
+        assert_eq!(core.nodes.ssd_capacity(), None);
+        assert!(core.demote_route().is_none());
     }
 }

@@ -102,8 +102,10 @@ pub struct WorkflowStats {
     pub utilization: f64,
     /// Completion time of every task, by TaskId index.
     pub completion: Vec<SimTime>,
-    /// Bytes read from node-local staged replicas / from shared FS.
+    /// Bytes read from node-local staged replicas / the node SSD tier
+    /// / the shared FS.
     pub staged_read_bytes: u64,
+    pub ssd_read_bytes: u64,
     pub unstaged_read_bytes: u64,
     /// Reads skipped by the worker input cache.
     pub cache_hits: u64,
@@ -113,8 +115,11 @@ pub struct WorkflowStats {
 /// [`SessionScheduler`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ReadStats {
-    /// Bytes read from node-local staged replicas.
+    /// Bytes read from node-local staged RAM replicas.
     pub staged_bytes: u64,
+    /// Bytes streamed from the node-local SSD tier (demoted replicas
+    /// read in place, still never touching the shared FS).
+    pub ssd_bytes: u64,
     /// Bytes read (or re-read) from the shared FS.
     pub unstaged_bytes: u64,
     /// Reads skipped by the worker input cache.
@@ -123,8 +128,11 @@ pub struct ReadStats {
 
 /// Index into `free_slots` of the slot `tid` should occupy.
 /// Baseline: the top of the LIFO pool. Locality-aware: the topmost
-/// slot whose node already holds every staged input; top-of-pool
-/// fallback when none (or when the task reads nothing).
+/// slot whose node already holds every staged input in RAM; failing
+/// that, the topmost slot where every input is at least node-local
+/// (RAM or the SSD tier — a local stream still beats a shared-FS
+/// re-read); top-of-pool fallback when none (or when the task reads
+/// nothing).
 fn pick_slot_in(
     core: &SimCore,
     cfg: &SchedulerCfg,
@@ -140,25 +148,58 @@ fn pick_slot_in(
     if task.inputs.is_empty() {
         return top;
     }
-    // Resolve each input's resident coverage once per task, not
-    // once per free slot: the slot scan then tests plain ranges.
-    let coverage: Vec<Vec<(u32, u32)>> =
+    // Resolve each input's resident coverage once per task, not once
+    // per free slot: the slot scan then tests plain ranges. Each
+    // resolution is a borrow of the store's memoized coverage (no
+    // replica rescan, no allocation) — the serve/campaign dispatch
+    // inner loop runs this per task.
+    let ram_cov: Vec<&[(u32, u32)]> =
         task.inputs.iter().map(|i| core.nodes.coverage_of(&i.path)).collect();
-    if coverage.iter().any(Vec::is_empty) {
-        // Some input is resident nowhere: no slot can qualify.
-        return top;
+    let in_cov = |c: &[(u32, u32)], node: u32| c.iter().any(|&(a, b)| (a..=b).contains(&node));
+    if ram_cov.iter().all(|c| !c.is_empty()) {
+        for (idx, &node) in free_slots.iter().enumerate().rev() {
+            if ram_cov.iter().all(|c| in_cov(c, node)) {
+                return idx;
+            }
+        }
     }
-    let holds = |node: u32| {
-        coverage
-            .iter()
-            .all(|c| c.iter().any(|&(a, b)| (a..=b).contains(&node)))
-    };
-    for (idx, &node) in free_slots.iter().enumerate().rev() {
-        if holds(node) {
-            return idx;
+    // RAM placement failed; try nodes where every input is at least
+    // node-local counting the SSD tier (only on machines that model
+    // one — coverage is empty otherwise, costing nothing extra).
+    let ssd_cov: Vec<&[(u32, u32)]> = task
+        .inputs
+        .iter()
+        .map(|i| core.nodes.coverage_of_tier(crate::storage::StorageTier::Ssd, &i.path))
+        .collect();
+    if ram_cov
+        .iter()
+        .zip(&ssd_cov)
+        .all(|(r, s)| !r.is_empty() || !s.is_empty())
+    {
+        for (idx, &node) in free_slots.iter().enumerate().rev() {
+            if ram_cov
+                .iter()
+                .zip(&ssd_cov)
+                .all(|(r, s)| in_cov(r, node) || in_cov(s, node))
+            {
+                return idx;
+            }
         }
     }
     top
+}
+
+/// Per-node length of `path` in the SSD tier, when the machine times
+/// SSD streams (one lookup for the dispatch hot path; None on a
+/// machine without an SSD layer, so a pathless infinite-rate flow can
+/// never arise).
+fn ssd_stream_len(core: &SimCore, topo: &Topology, node: u32, path: &str) -> Option<u64> {
+    if topo.ssd_layer.is_none() {
+        return None;
+    }
+    core.nodes
+        .read_tier(crate::storage::StorageTier::Ssd, node, path)
+        .map(crate::pfs::Blob::len)
 }
 
 /// Build the per-task plan: dispatch overhead -> input reads ->
@@ -200,6 +241,22 @@ fn build_task_plan(
             reads.staged_bytes += bytes;
             // The read refreshes the replica's LRU recency.
             core.nodes.touch(node, &input.path);
+        } else if let Some(blob_len) = ssd_stream_len(core, topo, node, &input.path) {
+            // Demoted to the node's SSD tier: stream it in place over
+            // the machine's SSD layer — slower than RAM, but still
+            // off the shared FS. The read refreshes the SSD replica's
+            // recency, like the RAM branch's touch.
+            let bytes = input.bytes.unwrap_or(blob_len);
+            reads.ssd_bytes += bytes;
+            core.nodes.touch_tier(crate::storage::StorageTier::Ssd, node, &input.path);
+            prev = p.flow_capped(
+                topo.path_ssd(),
+                1,
+                bytes,
+                topo.spec.ssd_bw,
+                vec![prev],
+                "read",
+            );
         } else if let Some(blob) = core.pfs.read(&input.path) {
             // Not staged: fall back to an uncoordinated GPFS read —
             // this IS the per-task naive I/O pattern.
@@ -420,6 +477,7 @@ impl Scheduler {
             utilization: util,
             completion: self.run.completion.clone(),
             staged_read_bytes: self.reads.staged_bytes,
+            ssd_read_bytes: self.reads.ssd_bytes,
             unstaged_read_bytes: self.reads.unstaged_bytes,
             cache_hits: self.reads.cache_hits,
         }

@@ -11,13 +11,29 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::cluster::{Eviction, NodeStores, ResidencyTable, StoreWrite};
 use crate::metrics::Metrics;
 use crate::pfs::ParallelFs;
-use crate::simtime::flownet::{CompId, FlowId, FlowNet, ThroughputMode};
+use crate::simtime::flownet::{CompId, FlowId, FlowNet, LinkId, ThroughputMode};
 use crate::simtime::heap::EventHeap;
 use crate::simtime::plan::{Effect, Plan, PlanId, Step};
+use crate::storage::{Eviction, NodeStores, PromoteOutcome, ResidencyTable, StoreWrite};
 use crate::units::{Duration, SimTime};
+
+/// Tag of the engine's internal demotion plans (RAM -> SSD transfers
+/// spun off evictions). Below every director-owned tag namespace
+/// (`dataflow::sched::TASK_TAG_BASE` = 1<<48,
+/// `staging::service::STAGE_TAG_BASE` = 1<<47), so directors ignore
+/// their completions.
+pub const DEMOTE_TAG: u64 = 1 << 46;
+
+/// How engine-applied demotions reach the SSD tier: the flownet path
+/// (the machine's aggregated SSD layer) and the per-node rate cap.
+/// Installed by `cluster::Topology::apply_storage_budgets`.
+#[derive(Clone, Debug)]
+pub struct DemoteRoute {
+    pub path: Vec<LinkId>,
+    pub cap_each: f64,
+}
 
 /// Notification delivered to the [`Director`].
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -78,10 +94,14 @@ pub struct SimCore {
     pub pfs: ParallelFs,
     pub nodes: NodeStores,
     /// Residency mirror of `nodes`, kept in sync by every
-    /// engine-applied node write ([`SimCore::node_write_range`]) and
-    /// eviction ([`SimCore::evict_path`]).
+    /// engine-applied node write ([`SimCore::node_write_range`]),
+    /// promotion ([`SimCore::promote_range`]) and eviction
+    /// ([`SimCore::evict_path`]).
     pub residency: ResidencyTable,
     pub metrics: Metrics,
+    /// Route demotion transfers take through the flow network (None =
+    /// demotions, if any, are untimed data-plane moves).
+    demote_route: Option<DemoteRoute>,
     heap: EventHeap<Ev>,
     plans: Vec<PlanRun>,
     flow_owner: HashMap<FlowId, (u32, u32)>,
@@ -110,6 +130,7 @@ impl SimCore {
             nodes: NodeStores::new(),
             residency: ResidencyTable::new(),
             metrics: Metrics::new(),
+            demote_route: None,
             heap: EventHeap::new(),
             plans: Vec::new(),
             flow_owner: HashMap::new(),
@@ -166,6 +187,19 @@ impl SimCore {
         self.heap.push(at, Ev::Timer { tag });
     }
 
+    /// Install (or clear) the route demotion transfers take through
+    /// the flow network. With a route set, every engine-applied
+    /// eviction that demotes RAM -> SSD also submits a timed transfer
+    /// over it (tagged [`DEMOTE_TAG`]), so tier traffic contends like
+    /// any other machine layer.
+    pub fn set_demote_route(&mut self, route: Option<DemoteRoute>) {
+        self.demote_route = route;
+    }
+
+    pub fn demote_route(&self) -> Option<&DemoteRoute> {
+        self.demote_route.as_ref()
+    }
+
     /// Capacity-checked node-local write keeping metrics and the
     /// residency mirror in sync. All engine-applied
     /// [`Effect::NodeWrite`]s route through here; direct data-plane
@@ -185,15 +219,79 @@ impl SimCore {
         match &outcome {
             StoreWrite::Stored { evicted } => {
                 self.metrics.add_bytes("node.write", per_node * (hi - lo + 1) as u64);
-                for ev in evicted {
-                    self.metrics
-                        .add_bytes("node.evict", ev.bytes * (ev.hi - ev.lo + 1) as u64);
-                    self.metrics.incr("node.evictions");
-                }
                 self.residency.on_stored(lo, hi, path, evicted);
+                self.book_evictions(evicted);
             }
             StoreWrite::Rejected { .. } => {
                 self.metrics.incr("node.write.rejected");
+            }
+        }
+        outcome
+    }
+
+    /// Account displacement telemetry with tier provenance and submit
+    /// the timed demotion transfers. `node.evict`/`node.evictions`
+    /// keep their original meaning — replicas displaced from RAM —
+    /// whether or not the replica survived by demotion.
+    fn book_evictions(&mut self, evicted: &[Eviction]) {
+        let mut demote = self
+            .demote_route
+            .as_ref()
+            .map(|route| (route.clone(), Plan::new(DEMOTE_TAG)));
+        for ev in evicted {
+            match ev.tier {
+                crate::storage::StorageTier::Ram => {
+                    self.metrics.add_bytes("node.evict", ev.span_bytes());
+                    self.metrics.incr("node.evictions");
+                    if ev.demoted {
+                        self.metrics.add_bytes("node.demote", ev.span_bytes());
+                        self.metrics.incr("node.demotions");
+                        if let Some((route, plan)) = demote.as_mut() {
+                            plan.flow_capped(
+                                route.path.clone(),
+                                (ev.hi - ev.lo + 1) as u64,
+                                ev.bytes,
+                                route.cap_each,
+                                vec![],
+                                "demote",
+                            );
+                        }
+                    }
+                }
+                crate::storage::StorageTier::Ssd => {
+                    self.metrics.add_bytes("node.evict.ssd", ev.span_bytes());
+                    self.metrics.incr("node.evictions.ssd");
+                }
+                crate::storage::StorageTier::Gpfs => unreachable!(),
+            }
+        }
+        if let Some((_, plan)) = demote {
+            if !plan.is_empty() {
+                self.submit(plan);
+            }
+        }
+    }
+
+    /// Promote `path` from the SSD tier into RAM across `lo..=hi`,
+    /// keeping metrics and the residency mirror in sync. All
+    /// engine-applied [`Effect::NodePromote`]s route through here. A
+    /// miss (`node.promote.missed`: the SSD copy vanished between plan
+    /// and effect — impossible while the planner pins it) or rejection
+    /// (`node.promote.rejected`) leaves both tiers untouched.
+    pub fn promote_range(&mut self, lo: u32, hi: u32, path: &str) -> PromoteOutcome {
+        let outcome = self.nodes.promote_range(lo, hi, path);
+        match &outcome {
+            PromoteOutcome::Promoted { bytes, evicted } => {
+                self.metrics.add_bytes("node.promote", bytes * (hi - lo + 1) as u64);
+                self.metrics.incr("node.promotions");
+                self.residency.on_promoted(lo, hi, path, *bytes, evicted);
+                self.book_evictions(evicted);
+            }
+            PromoteOutcome::Missing => {
+                self.metrics.incr("node.promote.missed");
+            }
+            PromoteOutcome::Rejected { .. } => {
+                self.metrics.incr("node.promote.rejected");
             }
         }
         outcome
@@ -209,15 +307,13 @@ impl SimCore {
         self.metrics.count("node.write.rejected")
     }
 
-    /// Forcibly evict `path` from every node (no-op when pinned),
-    /// keeping metrics and the residency mirror in sync.
+    /// Forcibly evict `path` from every node and **both tiers** — a
+    /// purge, nothing demotes (no-op when pinned) — keeping metrics
+    /// and the residency mirror in sync.
     pub fn evict_path(&mut self, path: &str) -> Vec<Eviction> {
         let evicted = self.nodes.evict_path(path);
-        for ev in &evicted {
-            self.metrics.add_bytes("node.evict", ev.bytes * (ev.hi - ev.lo + 1) as u64);
-            self.metrics.incr("node.evictions");
-        }
         self.residency.on_evicted(&evicted);
+        self.book_evictions(&evicted);
         evicted
     }
 
@@ -340,6 +436,9 @@ impl SimCore {
             }
             Effect::NodeWrite { nodes: (lo, hi), path, data } => {
                 self.node_write_range(lo, hi, &path, data);
+            }
+            Effect::NodePromote { nodes: (lo, hi), path } => {
+                self.promote_range(lo, hi, &path);
             }
             Effect::Notify(tag) => {
                 self.pending.push_back(Notice::Step { tag });
@@ -534,6 +633,69 @@ mod tests {
         assert!(core.residency.mirrors(&core.nodes));
         assert_eq!(core.residency.evicted_bytes, 30 * 4 * 2);
         assert_eq!(core.nodes.path_count(), 0);
+    }
+
+    #[test]
+    fn demotions_ride_the_demote_route_and_mirror_stays_synced() {
+        use crate::storage::StorageTier;
+        let mut core = SimCore::new();
+        let l = core.net.add_link("ssd", Capacity::Fixed(GB as f64));
+        core.set_demote_route(Some(DemoteRoute { path: vec![l], cap_each: GB as f64 }));
+        core.nodes.set_capacity(Some(50));
+        core.nodes.set_ssd_capacity(Some(200));
+        core.node_write_range(0, 3, "/tmp/a", Blob::real(vec![1; 30]));
+        let out = core.node_write_range(0, 3, "/tmp/b", Blob::real(vec![2; 30]));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert_eq!(evicted.len(), 1);
+                assert!(evicted[0].demoted, "SSD tier armed: eviction must demote");
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        // The replica moved tiers in the data plane and the mirror...
+        assert!(core.residency.mirrors(&core.nodes));
+        assert!(core.residency.resident_tier(StorageTier::Ssd, 1, "/tmp/a"));
+        assert!(!core.residency.resident(1, "/tmp/a"));
+        assert_eq!(core.metrics.bytes("node.demote"), 30 * 4);
+        assert_eq!(core.metrics.count("node.demotions"), 1);
+        // `node.evict` keeps meaning "displaced from RAM".
+        assert_eq!(core.metrics.bytes("node.evict"), 30 * 4);
+        // ...and the timed transfer is a live plan over the SSD link.
+        assert_eq!(core.live_plans(), 1);
+        core.run_to_completion();
+        assert!(core.now.secs_f64() > 0.0, "demotion must cost virtual time");
+        assert_eq!(core.live_plans(), 0);
+    }
+
+    #[test]
+    fn promote_effect_restores_ram_and_times_the_transfer() {
+        use crate::storage::StorageTier;
+        let mut core = SimCore::new();
+        core.nodes.set_capacity(Some(50));
+        core.nodes.set_ssd_capacity(Some(100));
+        core.node_write_range(0, 1, "/tmp/a", Blob::real(vec![1; 30]));
+        core.node_write_range(0, 1, "/tmp/b", Blob::real(vec![2; 30])); // a -> SSD
+        assert!(!core.nodes.exists_on(0, "/tmp/a"));
+        let l = core.net.add_link("ssd", Capacity::Fixed(GB as f64));
+        let mut p = Plan::new(0);
+        let f = p.flow(vec![l], 2, 30, vec![], "promote");
+        p.effect(
+            Effect::NodePromote { nodes: (0, 1), path: "/tmp/a".into() },
+            vec![f],
+            "promote",
+        );
+        core.submit(p);
+        core.run_to_completion();
+        assert!(core.nodes.exists_on(0, "/tmp/a"));
+        assert!(core.residency.mirrors(&core.nodes));
+        assert_eq!(core.metrics.bytes("node.promote"), 30 * 2);
+        assert_eq!(core.metrics.count("node.promotions"), 1);
+        // b was displaced in turn — demoted, not destroyed.
+        assert!(core.residency.resident_tier(StorageTier::Ssd, 0, "/tmp/b"));
+        assert!(core.now.secs_f64() > 0.0);
+        // Promoting a path with no SSD copy is a recorded miss.
+        core.promote_range(0, 1, "/tmp/nothing");
+        assert_eq!(core.metrics.count("node.promote.missed"), 1);
     }
 
     struct Chainer {

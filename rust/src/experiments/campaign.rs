@@ -75,8 +75,9 @@ fn setup(
     // slice: /tmp also holds application state, and a 640 MB slice
     // against three 256 MB campaigns is what makes the working set
     // genuinely not fit. min() keeps the slice honest if a machine
-    // ever models less than the slice.
-    topo.apply_ramdisk_budget(&mut core.nodes);
+    // ever models less than the slice. (BG/Q has no SSD tier, so
+    // eviction here really discards — paper fidelity.)
+    topo.apply_storage_budgets(&mut core);
     let budget = core.nodes.capacity().map_or(NODE_CAPACITY, |c| c.min(NODE_CAPACITY));
     core.nodes.set_capacity(Some(budget));
     let mut catalog = Catalog::new();
@@ -140,12 +141,7 @@ pub fn run_session(nodes: u32, residency_mode: bool, mode: ThroughputMode) -> Ca
         if residency_mode {
             let m = res.stage_dataset(&mut core, &topo, &leader, *id).unwrap();
             staged_bytes += m.staged_bytes;
-            delivered = m
-                .hits
-                .iter()
-                .chain(m.staged.iter())
-                .map(|t| (t.src.clone(), t.dst.clone()))
-                .collect();
+            delivered = m.all_files().map(|t| (t.src.clone(), t.dst.clone())).collect();
         } else {
             let mut p = Plan::new(0);
             let (m, _done) =

@@ -12,6 +12,7 @@ pub mod fig13;
 pub mod reduction;
 pub mod reuse;
 pub mod serve;
+pub mod tiers;
 
 use crate::cluster::{bgq, Topology};
 use crate::engine::SimCore;
@@ -52,7 +53,7 @@ pub const DATASET_GLOB: &str = "/projects/HEDM/layer0/*.bin";
 pub fn bgq_setup(nodes: u32) -> (SimCore, Topology, HookSpec) {
     let mut core = SimCore::new();
     let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
-    topo.apply_ramdisk_budget(&mut core.nodes);
+    topo.apply_storage_budgets(&mut core);
     let per_file = DATASET_BYTES / DATASET_FILES as u64;
     for i in 0..DATASET_FILES {
         core.pfs.write(

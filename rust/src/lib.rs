@@ -24,7 +24,10 @@
 //! - [`engine`] — the simulation core executing plans over a machine
 //! - [`pfs`] — GPFS-like parallel filesystem (striping, metadata server)
 //! - [`cluster`] — BG/Q and Orthros machine models (torus, I/O nodes,
-//!   node-local RAM disks)
+//!   per-tier storage budgets and the SSD link class)
+//! - [`storage`] — the multi-tier node-local storage subsystem:
+//!   RAM tier + SSD demotion tier ([`storage::NodeStores`]), the
+//!   per-tier residency mirror, and [`storage::StorageTier`]
 //! - [`mpisim`] — MPI substrate: communicators, broadcast, two-phase
 //!   collective file read (`MPI_File_read_all`)
 //! - [`staging`] — **the paper's contribution**: the Swift I/O hook,
@@ -61,6 +64,7 @@ pub mod pfs;
 pub mod runtime;
 pub mod simtime;
 pub mod staging;
+pub mod storage;
 pub mod transfer;
 pub mod units;
 pub mod util;

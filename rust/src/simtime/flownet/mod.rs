@@ -113,6 +113,9 @@ pub enum LinkClass {
     Ion,
     /// Torus / cluster interconnect bisection.
     Interconnect,
+    /// Node-local SSD / burst-buffer layer (storage-tier demotion and
+    /// promotion traffic).
+    Ssd,
     /// Wide-area pipe between facilities.
     Wan,
     /// Anything else (tests, ad-hoc scenarios).

@@ -31,6 +31,10 @@ pub enum Effect {
     /// Replicate a file into the node-local stores of `nodes`
     /// (inclusive range) — the RAM-disk write of the staging hook.
     NodeWrite { nodes: (u32, u32), path: String, data: Blob },
+    /// Promote a replica from the SSD tier into RAM on `nodes`
+    /// (inclusive range) — the data-plane half of the cheap re-stage
+    /// path; the timed half is the SSD-link flow it depends on.
+    NodePromote { nodes: (u32, u32), path: String },
     /// Deliver an opaque tag to the director (progress notification).
     Notify(u64),
 }

@@ -7,17 +7,20 @@
 //! regime needs management:
 //!
 //! - [`ResidencyTable`] — the bookkeeping mirror of
-//!   [`crate::cluster::NodeStores`]: path -> resident node ranges,
-//!   plus eviction telemetry. `SimCore` owns one and keeps it exactly
-//!   in sync with every engine-applied node write and eviction, so
-//!   experiments can report hit rates and evicted bytes without
-//!   rescanning the data plane.
+//!   [`crate::storage::NodeStores`]: path -> resident node ranges per
+//!   storage tier, plus displacement telemetry. `SimCore` owns one and
+//!   keeps it exactly in sync with every engine-applied node write,
+//!   demotion, promotion, and eviction, so experiments can report hit
+//!   rates and evicted bytes without rescanning the data plane.
 //! - [`incremental_plan`] — the hook's re-stage path: rank 0 still
 //!   globs the full spec (discovering what exists costs the same
-//!   either way), but only files *not already resident with matching
-//!   content on every node of the communicator* are broadcast and
-//!   transferred. A replica whose shared-FS original changed since
-//!   staging fails the content check and is restaged — staleness
+//!   either way), then plans per file the cheapest tier that holds
+//!   matching content: RAM-resident files are **hits** (nothing
+//!   moves), SSD-resident files are **promoted** back over the
+//!   machine's local SSD link (cheap, uncontended with the shared FS),
+//!   and only the rest are re-staged from GPFS (expensive, shared).
+//!   A replica whose shared-FS original changed since staging fails
+//!   the content check in *both* tiers and is restaged — staleness
 //!   against the catalog's view of the dataset is detected by
 //!   checksum, not by trust.
 //! - [`Residency`] — the session-level manager binding catalog
@@ -32,42 +35,49 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::catalog::DatasetId;
-use crate::cluster::{NodeStores, Topology};
+use crate::cluster::Topology;
 use crate::engine::SimCore;
 use crate::mpisim::{bcast::bcast_plan, Comm};
 use crate::pfs::ParallelFs;
-use crate::simtime::plan::{Plan, StepId};
+use crate::simtime::plan::{Effect, Plan, StepId};
 use crate::staging::hook::{bulk_stage_phases, LIST_ENTRY_BYTES};
 use crate::staging::spec::{HookSpec, Transfer};
+use crate::storage::{NodeStores, StorageTier};
 use crate::units::Duration;
 
 /// The bookkeeping mirror lives beside the store it mirrors
-/// ([`crate::cluster::ResidencyTable`], owned by `SimCore`);
+/// ([`crate::storage::ResidencyTable`], owned by `SimCore`);
 /// re-exported here as part of the residency surface.
-pub use crate::cluster::ResidencyTable;
+pub use crate::storage::ResidencyTable;
 
-/// What an incremental stage resolved: the delta it moved and the
-/// resident files it skipped.
+/// What an incremental stage resolved: the delta it moved, the SSD
+/// promotions it planned, and the resident files it skipped.
 #[derive(Clone, Debug, Default)]
 pub struct IncrementalManifest {
-    /// Files transferred this invocation (missing or stale).
+    /// Files transferred from the shared FS this invocation (missing
+    /// or stale in both node-local tiers).
     pub staged: Vec<Transfer>,
-    /// Files already resident with matching content on every node.
+    /// Files promoted from the node-local SSD tier (resident there
+    /// with matching content, absent or stale in RAM).
+    pub promoted: Vec<Transfer>,
+    /// Files already RAM-resident with matching content on every node.
     pub hits: Vec<Transfer>,
     pub staged_bytes: u64,
+    pub promoted_bytes: u64,
     pub hit_bytes: u64,
     pub meta_ops: u64,
 }
 
 impl IncrementalManifest {
     pub fn total_files(&self) -> usize {
-        self.staged.len() + self.hits.len()
+        self.staged.len() + self.promoted.len() + self.hits.len()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.staged_bytes + self.hit_bytes
+        self.staged_bytes + self.promoted_bytes + self.hit_bytes
     }
 
+    /// RAM-hit fraction of the resolved file set.
     pub fn hit_rate(&self) -> f64 {
         if self.total_files() == 0 {
             0.0
@@ -75,14 +85,33 @@ impl IncrementalManifest {
             self.hits.len() as f64 / self.total_files() as f64
         }
     }
+
+    /// Fraction served without touching the shared FS (RAM hits +
+    /// SSD promotions) — the tiered generalisation of the hit rate.
+    pub fn local_rate(&self) -> f64 {
+        if self.total_files() == 0 {
+            0.0
+        } else {
+            (self.hits.len() + self.promoted.len()) as f64 / self.total_files() as f64
+        }
+    }
+
+    /// Every file the stage delivers or reuses, in manifest order.
+    pub fn all_files(&self) -> impl Iterator<Item = &Transfer> {
+        self.hits.iter().chain(self.promoted.iter()).chain(self.staged.iter())
+    }
 }
 
 /// Build the incremental re-stage plan for `spec` over the leader
-/// communicator `comm`: glob everything, transfer only what is missing
-/// or stale on `comm`'s nodes. Appends to `plan`; returns the manifest
-/// and the final step. With every file resident the plan reduces to
-/// the metadata pass (a few ms), which is what makes sub-10-minute
-/// interactive cycles survive memory pressure.
+/// communicator `comm`: glob everything, then per file take the
+/// cheapest tier holding matching content — RAM hit (free), SSD
+/// promotion (a timed transfer over the machine's local SSD link,
+/// never touching the shared FS), or GPFS re-stage (the full
+/// collective path) for what is missing or stale everywhere. Appends
+/// to `plan`; returns the manifest and the final step. With every file
+/// RAM-resident the plan reduces to the metadata pass (a few ms),
+/// which is what makes sub-10-minute interactive cycles survive memory
+/// pressure.
 pub fn incremental_plan(
     plan: &mut Plan,
     pfs: &ParallelFs,
@@ -97,10 +126,14 @@ pub fn incremental_plan(
         return Err(anyhow!("hook spec matched no files"));
     }
     let (lo, hi) = comm.node_range();
+    // Promotion is only planned when the machine times it: a topology
+    // without an SSD layer never demoted anything through the engine.
+    let can_promote = topo.ssd_layer.is_some();
     let mut staged = Vec::new();
+    let mut promoted = Vec::new();
     let mut hits = Vec::new();
     let mut blobs = Vec::new();
-    let (mut staged_bytes, mut hit_bytes) = (0u64, 0u64);
+    let (mut staged_bytes, mut promoted_bytes, mut hit_bytes) = (0u64, 0u64, 0u64);
     for t in &transfers {
         let blob = pfs
             .read(&t.src)
@@ -109,6 +142,11 @@ pub fn incremental_plan(
         if nodes.resident_matches(lo, hi, &t.dst, &blob) {
             hit_bytes += blob.len();
             hits.push(t.clone());
+        } else if can_promote
+            && nodes.resident_matches_tier(StorageTier::Ssd, lo, hi, &t.dst, &blob)
+        {
+            promoted_bytes += blob.len();
+            promoted.push(t.clone());
         } else {
             staged_bytes += blob.len();
             staged.push(t.clone());
@@ -119,24 +157,60 @@ pub fn incremental_plan(
     // Phase 1: rank-0 glob — discovering what exists costs the full
     // metadata pass whether or not bytes then move.
     let glob = plan.flow(topo.path_meta(), 1, meta_ops, deps, "glob");
-    let manifest =
-        IncrementalManifest { staged: staged.clone(), hits, staged_bytes, hit_bytes, meta_ops };
-    if staged.is_empty() {
-        let done = plan.delay(Duration::ZERO, vec![glob], "stage-skip");
-        return Ok((manifest, done));
-    }
-    // Phase 2: broadcast only the *delta* transfer list.
-    let list_bytes = staged.len() as u64 * LIST_ENTRY_BYTES;
-    let list = bcast_plan(plan, topo, comm, list_bytes, vec![glob], "list-bcast");
-    // Phases 3+4: collective read + node-local write of the delta only.
-    let done = bulk_stage_phases(
-        plan,
-        topo,
-        comm,
-        staged.into_iter().zip(blobs).collect(),
+    let manifest = IncrementalManifest {
+        staged: staged.clone(),
+        promoted: promoted.clone(),
+        hits,
         staged_bytes,
-        vec![list],
-    );
+        promoted_bytes,
+        hit_bytes,
+        meta_ops,
+    };
+    let mut tails = vec![glob];
+    // Promotion leg: every node streams its promoted set back from the
+    // local SSD (one member per node over the aggregated SSD layer,
+    // capped at the per-node device rate), then the data plane moves
+    // the replicas SSD -> RAM.
+    if !promoted.is_empty() {
+        let span = (hi - lo + 1) as u64;
+        let pflow = plan.flow_capped(
+            topo.path_ssd(),
+            span,
+            promoted_bytes,
+            topo.spec.ssd_bw,
+            vec![glob],
+            "promote",
+        );
+        for t in &promoted {
+            let eff = plan.effect(
+                Effect::NodePromote { nodes: (lo, hi), path: t.dst.clone() },
+                vec![pflow],
+                "promote",
+            );
+            tails.push(eff);
+        }
+    }
+    // Staging leg: broadcast only the *delta* transfer list, then the
+    // collective read + node-local write of the delta only.
+    if !staged.is_empty() {
+        let list_bytes = staged.len() as u64 * LIST_ENTRY_BYTES;
+        let list = bcast_plan(plan, topo, comm, list_bytes, vec![glob], "list-bcast");
+        let stage_done = bulk_stage_phases(
+            plan,
+            topo,
+            comm,
+            staged.into_iter().zip(blobs).collect(),
+            staged_bytes,
+            vec![list],
+        );
+        tails.push(stage_done);
+    }
+    let label = if manifest.staged.is_empty() && manifest.promoted.is_empty() {
+        "stage-skip"
+    } else {
+        "stage-join"
+    };
+    let done = plan.delay(Duration::ZERO, tails, label);
     Ok((manifest, done))
 }
 
@@ -146,17 +220,38 @@ pub struct ResidencyStats {
     pub stages: u64,
     pub file_hits: u64,
     pub file_misses: u64,
+    /// Files served by SSD promotion (neither a RAM hit nor a GPFS
+    /// re-stage).
+    pub file_promotions: u64,
     pub hit_bytes: u64,
     pub staged_bytes: u64,
+    /// Bytes promoted from the SSD tier instead of re-staged.
+    pub promoted_bytes: u64,
 }
 
 impl ResidencyStats {
+    fn total_files(&self) -> u64 {
+        self.file_hits + self.file_misses + self.file_promotions
+    }
+
+    /// RAM-hit fraction of all resolved files.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.file_hits + self.file_misses;
+        let total = self.total_files();
         if total == 0 {
             0.0
         } else {
             self.file_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction served without touching the shared FS (RAM hits +
+    /// SSD promotions).
+    pub fn local_rate(&self) -> f64 {
+        let total = self.total_files();
+        if total == 0 {
+            0.0
+        } else {
+            (self.file_hits + self.file_promotions) as f64 / total as f64
         }
     }
 }
@@ -270,8 +365,10 @@ impl Residency {
             core.nodes.touch_range(lo, hi, &t.dst);
         }
         // Pin before the transfer lands so staging file k can never
-        // evict file k-1 of its own dataset.
-        for t in m.hits.iter().chain(m.staged.iter()) {
+        // evict file k-1 of its own dataset. Pins cover both tiers, so
+        // a planned promotion's SSD copy cannot be discarded between
+        // submission and the promote effect.
+        for t in m.all_files() {
             core.nodes.pin(t.dst.clone());
         }
         core.submit(plan);
@@ -297,13 +394,13 @@ impl Residency {
             .remove(&id)
             .ok_or_else(|| anyhow!("dataset {id:?} has no stage in flight"))?;
         let (lo, hi) = comm.node_range();
-        for t in m.hits.iter().chain(m.staged.iter()) {
+        for t in m.all_files() {
             let landed = core
                 .pfs
                 .read(&t.src)
                 .is_some_and(|want| core.nodes.resident_matches(lo, hi, &t.dst, want));
             if !landed {
-                for t2 in m.hits.iter().chain(m.staged.iter()) {
+                for t2 in m.all_files() {
                     core.nodes.unpin(&t2.dst);
                 }
                 // The delivery record must not outlive a failed stage:
@@ -321,10 +418,11 @@ impl Residency {
         self.stats.stages += 1;
         self.stats.file_hits += m.hits.len() as u64;
         self.stats.file_misses += m.staged.len() as u64;
+        self.stats.file_promotions += m.promoted.len() as u64;
         self.stats.hit_bytes += m.hit_bytes;
         self.stats.staged_bytes += m.staged_bytes;
-        let fresh: Vec<String> =
-            m.hits.iter().chain(m.staged.iter()).map(|t| t.dst.clone()).collect();
+        self.stats.promoted_bytes += m.promoted_bytes;
+        let fresh: Vec<String> = m.all_files().map(|t| t.dst.clone()).collect();
         self.pinned_paths.insert(id, fresh.clone());
         self.delivered.insert(id, fresh);
         Ok(m)
@@ -515,6 +613,67 @@ mod tests {
         assert!(res.commit_stage(&mut core, &comm, id).is_err());
         res.unpin_dataset(&mut core, id);
         assert!(core.residency.mirrors(&core.nodes));
+    }
+
+    #[test]
+    fn evicted_dataset_promotes_from_ssd_not_gpfs() {
+        // Orthros-class machine (SSD tier live) with a RAM slice that
+        // holds exactly one 2 MB dataset: staging the second dataset
+        // demotes the first whole, and re-opening the first is pure
+        // promotion — zero GPFS re-staging.
+        let mut core = SimCore::new();
+        let mut machine = crate::cluster::orthros();
+        machine.nodes = 4;
+        let topo = Topology::build(machine, GpfsParams::default(), &mut core.net);
+        topo.apply_storage_budgets(&mut core);
+        core.nodes.set_capacity(Some(2 * MB));
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut catalog = Catalog::new();
+        let mut res = Residency::new();
+        let mut ids = Vec::new();
+        for d in 0..2u64 {
+            for f in 0..2u64 {
+                core.pfs.write(
+                    format!("/projects/tds{d}/f{f}.bin"),
+                    Blob::synthetic(MB, 10 + d * 2 + f),
+                );
+            }
+            let id = catalog.register(format!("tds{d}"), format!("/projects/tds{d}"), 2, 2 * MB);
+            let spec = HookSpec::parse(&format!(
+                "broadcast to /tmp/tds{d} {{ /projects/tds{d}/*.bin }}"
+            ))
+            .unwrap();
+            res.bind(id, spec);
+            ids.push(id);
+        }
+        let m0 = res.stage_dataset(&mut core, &topo, &comm, ids[0]).unwrap();
+        assert_eq!(m0.staged.len(), 2);
+        res.unpin_dataset(&mut core, ids[0]);
+        let m1 = res.stage_dataset(&mut core, &topo, &comm, ids[1]).unwrap();
+        assert_eq!(m1.staged.len(), 2);
+        res.unpin_dataset(&mut core, ids[1]);
+        // Dataset 0 was displaced — but demoted, and the engine billed
+        // the transfers over the SSD link.
+        assert_eq!(core.metrics.count("node.demotions"), 2);
+        let staged_before = res.stats.staged_bytes;
+        let m2 = res.stage_dataset(&mut core, &topo, &comm, ids[0]).unwrap();
+        assert_eq!(m2.promoted.len(), 2, "re-open must promote, not re-stage");
+        assert!(m2.staged.is_empty() && m2.hits.is_empty());
+        assert_eq!(m2.promoted_bytes, 2 * MB);
+        assert_eq!(m2.local_rate(), 1.0);
+        assert_eq!(res.stats.staged_bytes, staged_before, "no GPFS bytes moved");
+        assert_eq!(res.stats.file_promotions, 2);
+        assert!(core.metrics.bytes("node.promote") >= 2 * MB);
+        // Promoted replicas are byte-identical to the originals and
+        // pinned; the mirror tracked every tier move.
+        for f in 0..2 {
+            let want = core.pfs.read(&format!("/projects/tds0/f{f}.bin")).unwrap();
+            let got = core.nodes.read(2, &format!("/tmp/tds0/f{f}.bin")).unwrap();
+            assert!(got.same_content(want));
+        }
+        assert!(core.nodes.is_pinned("/tmp/tds0/f0.bin"));
+        assert!(core.residency.mirrors(&core.nodes));
+        res.unpin_dataset(&mut core, ids[0]);
     }
 
     #[test]

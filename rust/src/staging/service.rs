@@ -83,10 +83,16 @@ pub struct ServiceCfg {
     pub datasets: usize,
     pub files_per_dataset: usize,
     pub file_bytes: u64,
-    /// Per-node staging budget override (None = machine default). The
-    /// admission layer keeps the open working set within whatever
-    /// budget the store ends up with.
+    /// Per-node RAM staging budget override (None = machine default).
+    /// The admission layer keeps the open (pinned) working set within
+    /// whatever budget the store ends up with.
     pub ramdisk_slice: Option<u64>,
+    /// Per-node SSD-tier budget override: None = machine default,
+    /// `Some(0)` disables the tier entirely (the discard-eviction
+    /// baseline the `tiers` experiment compares against). Closed
+    /// datasets demote here under RAM pressure and are promoted back
+    /// on re-open instead of re-staged from the shared FS.
+    pub ssd_slice: Option<u64>,
     pub mode: ServeMode,
     pub sched: SchedulerCfg,
 }
@@ -101,6 +107,7 @@ impl Default for ServiceCfg {
             files_per_dataset: 6,
             file_bytes: 16 * MB,
             ramdisk_slice: None,
+            ssd_slice: None,
             mode: ServeMode::Staged,
             sched: SchedulerCfg { locality_aware: true, ..Default::default() },
         }
@@ -240,8 +247,11 @@ pub struct Service {
     admit_queue: VecDeque<usize>,
     /// Bytes of currently-open datasets (the admitted working set).
     admitted_bytes: u64,
-    /// Node budget admission enforces (None = unbounded).
-    budget: Option<u64>,
+    /// Per-tier node budgets admission accounts: the open (pinned)
+    /// working set must fit `budgets.ram`; `budgets.ssd` is the
+    /// demotion reservoir closed-but-warm datasets overflow into, so
+    /// re-opens promote locally instead of re-staging from GPFS.
+    budgets: crate::storage::TierBudgets,
     /// Deepest the admission queue ever got.
     pub peak_queue: usize,
 }
@@ -266,7 +276,7 @@ impl Service {
         while let Some(&s) = self.admit_queue.front() {
             let d = self.specs[s].dataset;
             let need = if self.ds_users[d] > 0 { 0 } else { self.cfg.dataset_bytes() };
-            if let Some(b) = self.budget {
+            if let Some(b) = self.budgets.ram {
                 if self.admitted_bytes + need > b {
                     break;
                 }
@@ -364,8 +374,14 @@ pub struct ServeOutcome {
     pub percentiles: Percentiles,
     /// Total virtual time until the machine drained.
     pub virtual_secs: f64,
-    /// Bytes the staging path actually moved (0 in naive mode).
+    /// Bytes the staging path actually moved from GPFS (0 in naive
+    /// mode).
     pub staged_bytes: u64,
+    /// Bytes served by SSD-tier promotion instead of GPFS re-staging.
+    pub promoted_bytes: u64,
+    /// Bytes RAM eviction demoted into the SSD tier (survived) over
+    /// the run.
+    pub demoted_bytes: u64,
     /// Input-read accounting summed over all sessions.
     pub reads: ReadStats,
     pub peak_queue: usize,
@@ -382,10 +398,20 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
     spec.nodes = nodes;
     let gpfs = GpfsParams { peak_bw: 1.25 * GB as f64, ..Default::default() };
     let topo = Topology::build(spec, gpfs, &mut core.net);
-    topo.apply_ramdisk_budget(&mut core.nodes);
+    topo.apply_storage_budgets(&mut core);
     if let Some(slice) = cfg.ramdisk_slice {
         let b = core.nodes.capacity().map_or(slice, |c| c.min(slice));
         core.nodes.set_capacity(Some(b));
+    }
+    match cfg.ssd_slice {
+        // 0 disables the tier: eviction discards, the pre-tiering
+        // baseline.
+        Some(0) => core.nodes.set_ssd_capacity(None),
+        Some(slice) => {
+            let b = core.nodes.ssd_capacity().map_or(slice, |c| c.min(slice));
+            core.nodes.set_ssd_capacity(Some(b));
+        }
+        None => {}
     }
 
     // The shared-FS datasets + their catalog records and hook specs.
@@ -413,12 +439,15 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         res.bind(id, spec);
         ds_ids.push(id);
     }
-    let budget = core.nodes.capacity();
+    let budgets = crate::storage::TierBudgets {
+        ram: core.nodes.capacity(),
+        ssd: core.nodes.ssd_capacity(),
+    };
     if cfg.mode == ServeMode::Staged {
-        if let Some(b) = budget {
+        if let Some(b) = budgets.ram {
             assert!(
                 cfg.dataset_bytes() <= b,
-                "a single dataset ({}) must fit the node budget ({b})",
+                "a single dataset ({}) must fit the node RAM budget ({b})",
                 cfg.dataset_bytes()
             );
         }
@@ -446,7 +475,7 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         done_at: vec![None; n],
         admit_queue: VecDeque::new(),
         admitted_bytes: 0,
-        budget,
+        budgets,
         peak_queue: 0,
     };
     core.run(&mut svc);
@@ -456,6 +485,10 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         "serve run drained with unserved sessions"
     );
     assert_eq!(core.node_write_rejections(), 0, "admission let a write be rejected");
+    // Promotion plans pin their SSD copies, so a planned promotion can
+    // neither miss nor be rejected mid-flight.
+    assert_eq!(core.metrics.count("node.promote.missed"), 0, "promotion missed its SSD copy");
+    assert_eq!(core.metrics.count("node.promote.rejected"), 0, "promotion rejected");
     let turnaround_secs: Vec<f64> = (0..n)
         .map(|s| (svc.done_at[s].unwrap() - svc.specs[s].arrival).secs_f64())
         .collect();
@@ -479,6 +512,7 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
     for i in 0..svc.sched.session_count() {
         let st = svc.sched.stats(SessionId(i as u32));
         reads.staged_bytes += st.reads.staged_bytes;
+        reads.ssd_bytes += st.reads.ssd_bytes;
         reads.unstaged_bytes += st.reads.unstaged_bytes;
         reads.cache_hits += st.reads.cache_hits;
     }
@@ -487,6 +521,8 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         percentiles,
         virtual_secs: core.now.secs_f64(),
         staged_bytes: svc.res.stats.staged_bytes,
+        promoted_bytes: svc.res.stats.promoted_bytes,
+        demoted_bytes: core.metrics.bytes("node.demote"),
         reads,
         peak_queue: svc.peak_queue,
         sessions: n,
@@ -609,6 +645,37 @@ mod tests {
         // Determinism under pressure.
         let again = run_serve(2, &cfg, ThroughputMode::Fast);
         assert_eq!(out.turnaround_secs, again.turnaround_secs);
+    }
+
+    #[test]
+    fn ssd_tier_absorbs_pressure_and_cuts_gpfs_restaging() {
+        // Budget of ~1.5 datasets: transitions evict. With the SSD
+        // tier live the evicted files demote and re-opens promote
+        // locally; with it disabled every re-open re-stages from the
+        // shared FS.
+        let mut cfg = small_cfg(ServeMode::Staged);
+        cfg.ramdisk_slice = Some(cfg.dataset_bytes() * 3 / 2);
+        let mut discard = cfg.clone();
+        discard.ssd_slice = Some(0);
+        let tiered = run_serve(2, &cfg, ThroughputMode::Fast);
+        let base = run_serve(2, &discard, ThroughputMode::Fast);
+        assert!(tiered.demoted_bytes > 0, "pressure must demote");
+        assert!(tiered.promoted_bytes > 0, "re-opens must promote");
+        assert_eq!(base.promoted_bytes, 0, "disabled tier must not promote");
+        assert_eq!(base.demoted_bytes, 0);
+        assert!(
+            tiered.staged_bytes < base.staged_bytes,
+            "promotions must cut GPFS re-staging: tiered {} vs discard {}",
+            tiered.staged_bytes,
+            base.staged_bytes
+        );
+        // Neither policy ever sends task reads to the shared FS.
+        assert_eq!(tiered.reads.unstaged_bytes, 0);
+        assert_eq!(base.reads.unstaged_bytes, 0);
+        // Determinism holds with tier traffic in the network.
+        let again = run_serve(2, &cfg, ThroughputMode::Fast);
+        assert_eq!(tiered.turnaround_secs, again.turnaround_secs);
+        assert_eq!(tiered.promoted_bytes, again.promoted_bytes);
     }
 
     #[test]

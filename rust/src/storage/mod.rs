@@ -1,0 +1,35 @@
+//! The multi-tier node-local storage subsystem.
+//!
+//! Extracted from `cluster.rs` when the single RAM-disk staging tier
+//! grew an SSD demotion tier underneath it. Three layers:
+//!
+//! - [`tier`] — [`StorageTier`]: the levels of the staging hierarchy
+//!   (node RAM, node SSD, the shared GPFS backing store) and the
+//!   per-node [`TierBudgets`] a machine grants them.
+//! - [`node_stores`] — [`NodeStores`]: the data plane. A
+//!   capacity-managed RAM tier whose LRU eviction **demotes** whole
+//!   replicas to the per-node SSD tier (when the machine models one)
+//!   instead of destroying them, plus the [`NodeStores::promote_range`]
+//!   path that moves them back at local-device cost. Pinning, LRU
+//!   upkeep, deterministic enumeration, and memoized coverage for the
+//!   scheduler's placement loop all live here.
+//! - [`residency_table`] — [`ResidencyTable`]: the per-tier
+//!   bookkeeping mirror `engine::SimCore` keeps exactly in sync with
+//!   every engine-applied write, demotion, promotion, and eviction,
+//!   plus displacement telemetry ([`Eviction`]).
+//!
+//! The *timing* of tier traffic is not modelled here: demotions and
+//! promotions are timed flows over the machine's SSD link class
+//! (`cluster::Topology::path_ssd`), scheduled by the engine
+//! (`SimCore::node_write_range` / `Effect::NodePromote`).
+//!
+//! `cluster` re-exports this module's surface, so pre-extraction
+//! imports (`crate::cluster::NodeStores`, ...) keep compiling.
+
+pub mod node_stores;
+pub mod residency_table;
+pub mod tier;
+
+pub use node_stores::{NodeStores, PromoteOutcome, ReplicaSnapshot, StoreWrite};
+pub use residency_table::{Eviction, ResidencyTable};
+pub use tier::{StorageTier, TierBudgets};

@@ -1,0 +1,1185 @@
+//! The node-local storage data plane: a capacity-managed RAM tier
+//! whose eviction **demotes** whole replicas to a per-node SSD tier
+//! (when the machine models one) instead of destroying them.
+//!
+//! Residency semantics of a real tiered node store:
+//!
+//! - Replicas are stored once per *node range* (the staging hook
+//!   writes the same blob to every node), so memory is O(files), not
+//!   O(files x nodes). Replicas of one path are node-disjoint within a
+//!   tier: a write replaces the overlapped portion of any older
+//!   same-path replica in that tier.
+//! - An optional uniform per-node **capacity** per tier is enforced on
+//!   every write: least-recently-used unpinned replicas of other paths
+//!   covering a still-over-budget node of the write range are
+//!   displaced (whole replicas, LRU order, ties broken by insertion
+//!   sequence then path/lo order) until the write fits on every node
+//!   of its range. An infeasible write — pinned residents alone exceed
+//!   the budget — is rejected with the store untouched.
+//! - **Displacement from RAM demotes**: when the SSD tier is enabled,
+//!   each RAM victim is re-inserted whole into the SSD tier (which may
+//!   in turn discard its own LRU victims — the cascade is reported in
+//!   the same eviction list, tagged [`StorageTier::Ssd`]). A victim
+//!   the SSD cannot admit (over its budget even after discarding every
+//!   unpinned SSD resident) is discarded, exactly the single-tier
+//!   behaviour. With the SSD tier absent (`ssd_capacity() == None`)
+//!   the store is byte-for-byte the pre-tiering single-tier RAM disk.
+//! - **Pinned** paths are never displaced from either tier (the
+//!   dataset a campaign is actively computing on, or an SSD replica a
+//!   submitted promotion plan is about to consume).
+//! - [`NodeStores::promote_range`] moves a replica SSD -> RAM (the
+//!   cheap local re-stage path), with the same capacity-checked
+//!   admission — RAM victims it displaces demote as usual.
+//!
+//! Enumeration is deterministic (BTreeMap): glob results, transfer
+//! lists, and LRU victim order are reproducible across runs. Per-path
+//! coverage is memoized beside the replica list, so the scheduler's
+//! placement loop ([`NodeStores::coverage_of`]) is a borrow, not a
+//! rescan.
+
+use std::collections::BTreeMap;
+
+use crate::pfs::Blob;
+
+use super::residency_table::Eviction;
+use super::tier::StorageTier;
+
+/// Outcome of a capacity-checked node-local write.
+#[derive(Clone, Debug)]
+pub enum StoreWrite {
+    /// Replica stored on every node of the range; `evicted` lists the
+    /// displaced victims in displacement order: each RAM victim (LRU
+    /// first, `demoted` telling whether it survived on SSD) followed
+    /// immediately by the SSD discards its demotion caused.
+    Stored { evicted: Vec<Eviction> },
+    /// Write refused and the store left untouched: even after evicting
+    /// every unpinned replica, some node of the range would still be
+    /// `short_bytes` over capacity.
+    Rejected { short_bytes: u64 },
+}
+
+/// Outcome of [`NodeStores::promote_range`].
+#[derive(Clone, Debug)]
+pub enum PromoteOutcome {
+    /// The SSD replica now lives in RAM (`bytes` per node); `evicted`
+    /// lists the RAM victims its admission displaced (plus their
+    /// demotion cascade), as in [`StoreWrite::Stored`].
+    Promoted { bytes: u64, evicted: Vec<Eviction> },
+    /// Nothing to promote: the SSD tier does not hold `path` with
+    /// uniform content across the whole node range.
+    Missing,
+    /// RAM admission was rejected (pinned residents alone exceed the
+    /// budget); the SSD copy is left intact.
+    Rejected { short_bytes: u64 },
+}
+
+/// One path's replicas in a [`NodeStores::dump`] snapshot:
+/// (lo, hi, per-node bytes) per replica.
+pub type ReplicaSnapshot = Vec<(u32, u32, u64)>;
+
+/// One resident replica: `blob` present on every node in `lo..=hi`.
+#[derive(Clone, Debug)]
+struct Replica {
+    lo: u32,
+    hi: u32,
+    blob: Blob,
+    /// LRU clock value of the last write or touch.
+    last_use: u64,
+    /// Monotone insertion sequence (deterministic LRU tie-break;
+    /// residuals of a split replica keep their original seq).
+    seq: u64,
+}
+
+impl Replica {
+    fn covers(&self, node: u32) -> bool {
+        (self.lo..=self.hi).contains(&node)
+    }
+
+    fn overlaps(&self, lo: u32, hi: u32) -> bool {
+        self.lo <= hi && self.hi >= lo
+    }
+}
+
+/// One path's state in a tier: the node-disjoint replica list plus the
+/// memoized coverage it implies. `coverage` is rebuilt on every
+/// structural mutation, so reads are a slice borrow.
+#[derive(Debug, Default)]
+struct PathEntry {
+    /// Node-disjoint replicas, sorted by `lo`.
+    reps: Vec<Replica>,
+    /// Memoized `(lo, hi)` per replica — sorted, disjoint.
+    coverage: Vec<(u32, u32)>,
+}
+
+impl PathEntry {
+    fn refresh_coverage(&mut self) {
+        self.coverage.clear();
+        self.coverage.extend(self.reps.iter().map(|r| (r.lo, r.hi)));
+    }
+
+    /// Binary search the memoized coverage for the replica covering
+    /// `node` (coverage is sorted and disjoint).
+    fn covering_idx(&self, node: u32) -> Option<usize> {
+        let i = self.coverage.partition_point(|&(lo, _)| lo <= node);
+        if i > 0 && self.coverage[i - 1].1 >= node {
+            Some(i - 1)
+        } else {
+            None
+        }
+    }
+}
+
+type Pins = BTreeMap<String, u32>;
+
+/// Victims a tier displaced for one write, with their replicas (blobs
+/// intact so the caller can demote them).
+enum TierWrite {
+    Stored { victims: Vec<(String, Replica)> },
+    Rejected { short_bytes: u64 },
+}
+
+/// One tier's replica store: capacity accounting, LRU displacement,
+/// deterministic enumeration. The LRU clock and insertion sequence are
+/// shared across tiers (owned by [`NodeStores`]) so demotions order
+/// correctly against ordinary writes.
+#[derive(Debug, Default)]
+struct TierStore {
+    /// path -> replicas + memoized coverage.
+    entries: BTreeMap<String, PathEntry>,
+    /// Uniform per-node byte budget; None = unbounded (RAM) or tier
+    /// absent (SSD).
+    capacity: Option<u64>,
+    /// Resident bytes per node (only nodes holding data appear).
+    used: BTreeMap<u32, u64>,
+}
+
+impl TierStore {
+    /// Capacity-checked write. On success returns the displaced
+    /// victims (whole replicas, LRU order) so the caller can demote
+    /// them; rejection leaves the tier byte-for-byte untouched.
+    /// `clock`/`seq` are the shared LRU counters, bumped once on
+    /// success.
+    #[allow(clippy::too_many_arguments)]
+    fn write_range_evicting(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        data: Blob,
+        pinned: &Pins,
+        clock: &mut u64,
+        seq: &mut u64,
+    ) -> TierWrite {
+        assert!(lo <= hi, "bad node range");
+        let need = data.len();
+        let mut victims = Vec::new();
+        if let Some(cap) = self.capacity {
+            if need > cap {
+                return TierWrite::Rejected { short_bytes: need - cap };
+            }
+            // Feasibility first, so rejection is a no-op: with every
+            // eligible victim gone, only pinned other-path replicas
+            // remain on the range's nodes. (Nothing pinned -> always
+            // feasible, since `need <= cap` held above.)
+            if !pinned.is_empty() {
+                for n in lo..=hi {
+                    let kept: u64 = self
+                        .entries
+                        .iter()
+                        .filter(|(p, _)| p.as_str() != path && pinned.contains_key(p.as_str()))
+                        .flat_map(|(_, e)| e.reps.iter())
+                        .filter(|r| r.covers(n))
+                        .map(|r| r.blob.len())
+                        .sum();
+                    if kept + need > cap {
+                        return TierWrite::Rejected { short_bytes: kept + need - cap };
+                    }
+                }
+            }
+            // Evict LRU victims until every node of the range fits.
+            // Victims must cover at least one currently-over-budget
+            // node: a merely range-overlapping replica on a node that
+            // already fits would be displaced without freeing anything
+            // where it matters.
+            loop {
+                let over: Vec<u32> = (lo..=hi)
+                    .filter(|&n| self.used_after_overwrite(n, path) + need > cap)
+                    .collect();
+                if over.is_empty() {
+                    break;
+                }
+                let victim = self
+                    .entries
+                    .iter()
+                    .filter(|(p, _)| p.as_str() != path && !pinned.contains_key(p.as_str()))
+                    .flat_map(|(p, e)| e.reps.iter().map(move |r| (p, r)))
+                    .filter(|(_, r)| over.iter().any(|&n| r.covers(n)))
+                    .min_by_key(|(_, r)| (r.last_use, r.seq))
+                    .map(|(p, r)| (p.clone(), r.lo));
+                let (vpath, vlo) =
+                    victim.expect("feasibility check guaranteed an evictable victim");
+                let rep = self.remove_replica(&vpath, vlo);
+                victims.push((vpath, rep));
+            }
+        }
+        // Replace the overlapped portion of older same-path replicas
+        // and store the new one.
+        *clock += 1;
+        *seq += 1;
+        let (now, sq) = (*clock, *seq);
+        let mut entry = self.entries.remove(path).unwrap_or_default();
+        let mut out: Vec<Replica> = Vec::with_capacity(entry.reps.len() + 1);
+        for r in entry.reps.drain(..) {
+            if !r.overlaps(lo, hi) {
+                out.push(r);
+                continue;
+            }
+            let (olo, ohi) = (r.lo.max(lo), r.hi.min(hi));
+            let b = r.blob.len();
+            if b > 0 {
+                for n in olo..=ohi {
+                    self.sub_used(n, b);
+                }
+            }
+            if r.lo < lo {
+                out.push(Replica { lo: r.lo, hi: lo - 1, ..r.clone() });
+            }
+            if r.hi > hi {
+                out.push(Replica { lo: hi + 1, hi: r.hi, ..r });
+            }
+        }
+        if need > 0 {
+            for n in lo..=hi {
+                *self.used.entry(n).or_insert(0) += need;
+            }
+        }
+        out.push(Replica { lo, hi, blob: data, last_use: now, seq: sq });
+        out.sort_by_key(|r| r.lo);
+        entry.reps = out;
+        entry.refresh_coverage();
+        self.entries.insert(path.to_string(), entry);
+        TierWrite::Stored { victims }
+    }
+
+    /// Remove every replica of `path` (forced purge). Returns the
+    /// removed replicas sorted by `lo`.
+    fn purge_path(&mut self, path: &str) -> Vec<Replica> {
+        let Some(entry) = self.entries.remove(path) else {
+            return Vec::new();
+        };
+        for r in &entry.reps {
+            let b = r.blob.len();
+            if b > 0 {
+                for n in r.lo..=r.hi {
+                    self.sub_used(n, b);
+                }
+            }
+        }
+        entry.reps
+    }
+
+    /// Remove the portions of `path`'s replicas inside `lo..=hi`,
+    /// splitting stragglers (promotion consumed that range).
+    fn remove_range(&mut self, lo: u32, hi: u32, path: &str) {
+        let Some(mut entry) = self.entries.remove(path) else {
+            return;
+        };
+        let mut out: Vec<Replica> = Vec::with_capacity(entry.reps.len() + 1);
+        for r in entry.reps.drain(..) {
+            if !r.overlaps(lo, hi) {
+                out.push(r);
+                continue;
+            }
+            let (olo, ohi) = (r.lo.max(lo), r.hi.min(hi));
+            let b = r.blob.len();
+            if b > 0 {
+                for n in olo..=ohi {
+                    self.sub_used(n, b);
+                }
+            }
+            if r.lo < lo {
+                out.push(Replica { lo: r.lo, hi: lo - 1, ..r.clone() });
+            }
+            if r.hi > hi {
+                out.push(Replica { lo: hi + 1, hi: r.hi, ..r });
+            }
+        }
+        if !out.is_empty() {
+            entry.reps = out;
+            entry.refresh_coverage();
+            self.entries.insert(path.to_string(), entry);
+        }
+    }
+
+    /// Usage of `n` once the same-path replica covering it (if any) is
+    /// replaced by the pending write.
+    fn used_after_overwrite(&self, n: u32, path: &str) -> u64 {
+        let mut u = self.used.get(&n).copied().unwrap_or(0);
+        if let Some(e) = self.entries.get(path) {
+            if let Some(i) = e.covering_idx(n) {
+                u -= e.reps[i].blob.len();
+            }
+        }
+        u
+    }
+
+    /// Remove the replica of `path` starting at node `lo` (unique:
+    /// replicas of one path are node-disjoint).
+    fn remove_replica(&mut self, path: &str, lo: u32) -> Replica {
+        let e = self.entries.get_mut(path).expect("victim path present");
+        let idx = e.reps.iter().position(|r| r.lo == lo).expect("victim replica present");
+        let r = e.reps.remove(idx);
+        e.refresh_coverage();
+        if e.reps.is_empty() {
+            self.entries.remove(path);
+        }
+        let b = r.blob.len();
+        if b > 0 {
+            for n in r.lo..=r.hi {
+                self.sub_used(n, b);
+            }
+        }
+        r
+    }
+
+    fn sub_used(&mut self, n: u32, b: u64) {
+        let e = self.used.get_mut(&n).expect("usage accounting out of sync");
+        *e -= b;
+        if *e == 0 {
+            self.used.remove(&n);
+        }
+    }
+
+    fn read(&self, node: u32, path: &str) -> Option<&Blob> {
+        let e = self.entries.get(path)?;
+        e.covering_idx(node).map(|i| &e.reps[i].blob)
+    }
+
+    fn bytes_on(&self, node: u32) -> u64 {
+        self.used.get(&node).copied().unwrap_or(0)
+    }
+
+    fn coverage_of(&self, path: &str) -> &[(u32, u32)] {
+        self.entries.get(path).map(|e| e.coverage.as_slice()).unwrap_or(&[])
+    }
+
+    /// True when every node of `lo..=hi` holds `path` with content
+    /// identical to `want`.
+    fn resident_matches(&self, lo: u32, hi: u32, path: &str, want: &Blob) -> bool {
+        let Some(e) = self.entries.get(path) else {
+            return false;
+        };
+        let mut covered = 0u64;
+        for r in &e.reps {
+            if !r.overlaps(lo, hi) {
+                continue;
+            }
+            if !r.blob.same_content(want) {
+                return false;
+            }
+            covered += (r.hi.min(hi) - r.lo.max(lo) + 1) as u64;
+        }
+        covered == (hi - lo + 1) as u64
+    }
+
+    /// The single blob covering all of `lo..=hi` when every
+    /// overlapping replica agrees on content; None otherwise.
+    fn uniform_content(&self, lo: u32, hi: u32, path: &str) -> Option<Blob> {
+        let e = self.entries.get(path)?;
+        let first = e.covering_idx(lo).map(|i| e.reps[i].blob.clone())?;
+        self.resident_matches(lo, hi, path, &first).then_some(first)
+    }
+
+    fn paths_on(&self, node: u32) -> Vec<String> {
+        // Memoized coverage + binary search: O(paths x log replicas)
+        // per query, never a replica rescan.
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.covering_idx(node).is_some())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    fn dump(&self) -> Vec<(String, ReplicaSnapshot)> {
+        self.entries
+            .iter()
+            .map(|(p, e)| {
+                (p.clone(), e.reps.iter().map(|r| (r.lo, r.hi, r.blob.len())).collect())
+            })
+            .collect()
+    }
+}
+
+/// The tiered node-local storage data plane: a RAM tier ("/tmp" on
+/// every node) whose eviction demotes to a per-node SSD tier, backed
+/// by the shared parallel filesystem. See the module docs for the full
+/// semantics; the un-suffixed query surface reads the RAM tier.
+#[derive(Debug, Default)]
+pub struct NodeStores {
+    ram: TierStore,
+    ssd: TierStore,
+    /// Paths exempt from displacement in **both** tiers, refcounted:
+    /// several owners (e.g. two datasets delivering the same
+    /// node-local path) may hold a pin independently and the path
+    /// stays protected until every one releases it.
+    pinned: Pins,
+    /// LRU clock, bumped by writes and touches (shared across tiers).
+    clock: u64,
+    /// Insertion sequence counter (shared across tiers).
+    seq: u64,
+}
+
+impl NodeStores {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn tier(&self, tier: StorageTier) -> &TierStore {
+        match tier {
+            StorageTier::Ram => &self.ram,
+            StorageTier::Ssd => &self.ssd,
+            StorageTier::Gpfs => panic!("GPFS is backed by ParallelFs, not NodeStores"),
+        }
+    }
+
+    fn tier_mut(&mut self, tier: StorageTier) -> &mut TierStore {
+        match tier {
+            StorageTier::Ram => &mut self.ram,
+            StorageTier::Ssd => &mut self.ssd,
+            StorageTier::Gpfs => panic!("GPFS is backed by ParallelFs, not NodeStores"),
+        }
+    }
+
+    /// Set or clear the uniform per-node RAM capacity. Enforced on
+    /// subsequent writes; existing contents are left as they are.
+    pub fn set_capacity(&mut self, cap: Option<u64>) {
+        self.ram.capacity = cap;
+    }
+
+    pub fn capacity(&self) -> Option<u64> {
+        self.ram.capacity
+    }
+
+    /// Set or clear the per-node SSD tier capacity. `None` disables
+    /// the tier: eviction discards, exactly the single-tier store.
+    pub fn set_ssd_capacity(&mut self, cap: Option<u64>) {
+        self.ssd.capacity = cap;
+    }
+
+    pub fn ssd_capacity(&self) -> Option<u64> {
+        self.ssd.capacity
+    }
+
+    /// Exempt `path` from displacement (both tiers) until a matching
+    /// [`NodeStores::unpin`]. Refcounted: pin twice, unpin twice.
+    pub fn pin(&mut self, path: impl Into<String>) {
+        *self.pinned.entry(path.into()).or_insert(0) += 1;
+    }
+
+    /// Release one pin of `path` (no-op when not pinned).
+    pub fn unpin(&mut self, path: &str) {
+        if let Some(n) = self.pinned.get_mut(path) {
+            *n -= 1;
+            if *n == 0 {
+                self.pinned.remove(path);
+            }
+        }
+    }
+
+    pub fn is_pinned(&self, path: &str) -> bool {
+        self.pinned.contains_key(path)
+    }
+
+    /// Refresh the LRU clock of the RAM replica covering
+    /// (`node`, `path`). No-op when nothing covers it (the clock still
+    /// advances).
+    pub fn touch(&mut self, node: u32, path: &str) {
+        self.touch_tier(StorageTier::Ram, node, path);
+    }
+
+    /// [`NodeStores::touch`] against an arbitrary managed tier — an
+    /// in-place SSD stream must refresh its replica's recency, or
+    /// actively-read demoted data becomes the next discard victim.
+    pub fn touch_tier(&mut self, tier: StorageTier, node: u32, path: &str) {
+        self.clock += 1;
+        let now = self.clock;
+        if let Some(e) = self.tier_mut(tier).entries.get_mut(path) {
+            if let Some(i) = e.covering_idx(node) {
+                e.reps[i].last_use = now;
+            }
+        }
+    }
+
+    /// Refresh the LRU clock of *every* RAM replica of `path`
+    /// overlapping `lo..=hi` (one clock bump shared by all). A
+    /// range-wide hit must not leave split replicas of the reused path
+    /// LRU-stale.
+    pub fn touch_range(&mut self, lo: u32, hi: u32, path: &str) {
+        self.clock += 1;
+        let now = self.clock;
+        if let Some(e) = self.ram.entries.get_mut(path) {
+            for r in e.reps.iter_mut().filter(|r| r.overlaps(lo, hi)) {
+                r.last_use = now;
+            }
+        }
+    }
+
+    /// RAM-resident node ranges of `path`: disjoint, sorted by `lo`.
+    /// A borrow of the memoized coverage — O(1), no replica scan — so
+    /// the scheduler's placement inner loop can call it per task
+    /// without allocation.
+    pub fn coverage_of(&self, path: &str) -> &[(u32, u32)] {
+        self.ram.coverage_of(path)
+    }
+
+    /// [`NodeStores::coverage_of`] for an arbitrary managed tier.
+    pub fn coverage_of_tier(&self, tier: StorageTier, path: &str) -> &[(u32, u32)] {
+        self.tier(tier).coverage_of(path)
+    }
+
+    /// Write `data` at `path` on every node in `lo..=hi`, panicking if
+    /// the capacity-checked write is rejected (legacy entry point for
+    /// unbounded stores; capacity-aware callers use
+    /// [`NodeStores::write_range_evicting`] or route through
+    /// `SimCore::node_write_range` to keep metrics and the residency
+    /// mirror in sync).
+    pub fn write_range(&mut self, lo: u32, hi: u32, path: impl Into<String>, data: Blob) {
+        let path = path.into();
+        match self.write_range_evicting(lo, hi, &path, data) {
+            StoreWrite::Stored { .. } => {}
+            StoreWrite::Rejected { short_bytes } => panic!(
+                "node store write of {path} on {lo}..={hi} exceeds capacity by {short_bytes} B"
+            ),
+        }
+    }
+
+    /// Write on a single node.
+    pub fn write(&mut self, node: u32, path: impl Into<String>, data: Blob) {
+        self.write_range(node, node, path, data);
+    }
+
+    /// Capacity-checked RAM write of `data` at `path` on every node in
+    /// `lo..=hi`. Displaces LRU unpinned replicas of *other* paths
+    /// covering a still-over-budget node of the range until the write
+    /// fits on every node (the overlapped portion of an older
+    /// same-path replica is replaced, never counted); each victim is
+    /// demoted whole into the SSD tier when it can admit it (see
+    /// module docs). Rejection leaves the store byte-for-byte
+    /// untouched.
+    pub fn write_range_evicting(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        data: Blob,
+    ) -> StoreWrite {
+        match self.ram.write_range_evicting(
+            lo,
+            hi,
+            path,
+            data,
+            &self.pinned,
+            &mut self.clock,
+            &mut self.seq,
+        ) {
+            TierWrite::Rejected { short_bytes } => StoreWrite::Rejected { short_bytes },
+            TierWrite::Stored { victims } => {
+                StoreWrite::Stored { evicted: self.demote_victims(victims) }
+            }
+        }
+    }
+
+    /// Demote RAM victims into the SSD tier (where enabled and
+    /// admissible), producing the eviction records: each RAM victim
+    /// followed by the SSD discards its demotion caused.
+    fn demote_victims(&mut self, victims: Vec<(String, Replica)>) -> Vec<Eviction> {
+        let mut out = Vec::with_capacity(victims.len());
+        for (vpath, rep) in victims {
+            let bytes = rep.blob.len();
+            let (lo, hi) = (rep.lo, rep.hi);
+            let mut cascade = Vec::new();
+            let mut demoted = false;
+            if self.ssd.capacity.is_some() {
+                match self.ssd.write_range_evicting(
+                    lo,
+                    hi,
+                    &vpath,
+                    rep.blob,
+                    &self.pinned,
+                    &mut self.clock,
+                    &mut self.seq,
+                ) {
+                    TierWrite::Stored { victims } => {
+                        demoted = true;
+                        cascade = victims;
+                    }
+                    TierWrite::Rejected { .. } => {}
+                }
+            }
+            out.push(Eviction { path: vpath, lo, hi, bytes, tier: StorageTier::Ram, demoted });
+            for (cpath, crep) in cascade {
+                out.push(Eviction {
+                    path: cpath,
+                    lo: crep.lo,
+                    hi: crep.hi,
+                    bytes: crep.blob.len(),
+                    tier: StorageTier::Ssd,
+                    demoted: false,
+                });
+            }
+        }
+        out
+    }
+
+    /// Promote `path` from the SSD tier into RAM across `lo..=hi`: the
+    /// cheap, node-local re-stage path. Requires full SSD coverage of
+    /// the range with uniform content; RAM admission is the ordinary
+    /// capacity-checked write (its victims demote as usual), and on
+    /// success the promoted portion leaves the SSD tier.
+    pub fn promote_range(&mut self, lo: u32, hi: u32, path: &str) -> PromoteOutcome {
+        let Some(blob) = self.ssd.uniform_content(lo, hi, path) else {
+            return PromoteOutcome::Missing;
+        };
+        let bytes = blob.len();
+        match self.write_range_evicting(lo, hi, path, blob) {
+            StoreWrite::Rejected { short_bytes } => PromoteOutcome::Rejected { short_bytes },
+            StoreWrite::Stored { evicted } => {
+                self.ssd.remove_range(lo, hi, path);
+                PromoteOutcome::Promoted { bytes, evicted }
+            }
+        }
+    }
+
+    /// Forcibly purge every replica of `path` from **both** tiers
+    /// (the path is being destroyed — deleted upstream, torn down by a
+    /// test — so nothing demotes). No-op when pinned.
+    pub fn evict_path(&mut self, path: &str) -> Vec<Eviction> {
+        if self.pinned.contains_key(path) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (tier, store) in [
+            (StorageTier::Ram, &mut self.ram),
+            (StorageTier::Ssd, &mut self.ssd),
+        ] {
+            for r in store.purge_path(path) {
+                out.push(Eviction {
+                    path: path.to_string(),
+                    lo: r.lo,
+                    hi: r.hi,
+                    bytes: r.blob.len(),
+                    tier,
+                    demoted: false,
+                });
+            }
+        }
+        out
+    }
+
+    /// Read `path` as seen by `node` (RAM tier).
+    pub fn read(&self, node: u32, path: &str) -> Option<&Blob> {
+        self.ram.read(node, path)
+    }
+
+    /// Read `path` as seen by `node` in an arbitrary managed tier.
+    pub fn read_tier(&self, tier: StorageTier, node: u32, path: &str) -> Option<&Blob> {
+        self.tier(tier).read(node, path)
+    }
+
+    pub fn exists_on(&self, node: u32, path: &str) -> bool {
+        self.read(node, path).is_some()
+    }
+
+    /// Bytes RAM-resident on one node (O(1): incrementally accounted).
+    pub fn bytes_on(&self, node: u32) -> u64 {
+        self.ram.bytes_on(node)
+    }
+
+    /// Bytes resident on one node in an arbitrary managed tier.
+    pub fn bytes_on_tier(&self, tier: StorageTier, node: u32) -> u64 {
+        self.tier(tier).bytes_on(node)
+    }
+
+    /// True when every node of `lo..=hi` holds `path` in RAM with
+    /// content identical to `want` — the incremental re-stage hit test
+    /// (a stale replica, updated on the shared FS since staging, fails
+    /// the checksum and is restaged).
+    pub fn resident_matches(&self, lo: u32, hi: u32, path: &str, want: &Blob) -> bool {
+        self.ram.resident_matches(lo, hi, path, want)
+    }
+
+    /// [`NodeStores::resident_matches`] against an arbitrary managed
+    /// tier — the promotion planner's SSD hit test.
+    pub fn resident_matches_tier(
+        &self,
+        tier: StorageTier,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        want: &Blob,
+    ) -> bool {
+        self.tier(tier).resident_matches(lo, hi, path, want)
+    }
+
+    /// Number of distinct paths RAM-resident anywhere.
+    pub fn path_count(&self) -> usize {
+        self.ram.entries.len()
+    }
+
+    /// Number of distinct paths resident in a managed tier.
+    pub fn path_count_tier(&self, tier: StorageTier) -> usize {
+        self.tier(tier).entries.len()
+    }
+
+    /// Paths RAM-visible to `node`, in sorted order by construction
+    /// (deterministic enumeration for the gather collective's local
+    /// directory listing and the hook's transfer lists).
+    pub fn paths_on(&self, node: u32) -> Vec<String> {
+        self.ram.paths_on(node)
+    }
+
+    /// Deterministic RAM snapshot: (path, [(lo, hi, per-node bytes)]),
+    /// paths sorted, replicas sorted by `lo`. Test/mirror support.
+    pub fn dump(&self) -> Vec<(String, ReplicaSnapshot)> {
+        self.ram.dump()
+    }
+
+    /// [`NodeStores::dump`] for an arbitrary managed tier.
+    pub fn dump_tier(&self, tier: StorageTier) -> Vec<(String, ReplicaSnapshot)> {
+        self.tier(tier).dump()
+    }
+
+    /// Wipe all replicas (both tiers), usage accounting, and pins
+    /// (capacities and the LRU clock survive).
+    pub fn clear(&mut self) {
+        for store in [&mut self.ram, &mut self.ssd] {
+            store.entries.clear();
+            store.used.clear();
+        }
+        self.pinned.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::MB;
+
+    #[test]
+    fn node_store_replicas() {
+        let mut ns = NodeStores::new();
+        let blob = Blob::real(vec![9; 64]);
+        ns.write_range(0, 511, "/tmp/param.txt", blob.clone());
+        assert!(ns.exists_on(0, "/tmp/param.txt"));
+        assert!(ns.exists_on(511, "/tmp/param.txt"));
+        assert!(!ns.exists_on(512, "/tmp/param.txt"));
+        assert!(ns.read(100, "/tmp/param.txt").unwrap().same_content(&blob));
+        assert_eq!(ns.bytes_on(77), 64);
+        assert_eq!(ns.bytes_on(1000), 0);
+        assert_eq!(ns.path_count(), 1);
+    }
+
+    #[test]
+    fn node_store_newest_wins() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 10, "/tmp/x", Blob::real(vec![1]));
+        ns.write(5, "/tmp/x", Blob::real(vec![2, 2]));
+        assert_eq!(ns.read(5, "/tmp/x").unwrap().len(), 2);
+        assert_eq!(ns.read(4, "/tmp/x").unwrap().len(), 1);
+        // The overwrite replaced (not shadowed) the middle node.
+        assert_eq!(ns.bytes_on(5), 2);
+        assert_eq!(ns.bytes_on(4), 1);
+    }
+
+    #[test]
+    fn capacity_evicts_lru_first() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.write_range(0, 3, "/tmp/a", Blob::real(vec![1; 40]));
+        ns.write_range(0, 3, "/tmp/b", Blob::real(vec![2; 40]));
+        // Refresh a: b becomes the LRU victim.
+        ns.touch(1, "/tmp/a");
+        let out = ns.write_range_evicting(0, 3, "/tmp/c", Blob::real(vec![3; 40]));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert_eq!(evicted.len(), 1);
+                assert_eq!(evicted[0].path, "/tmp/b");
+                assert_eq!(evicted[0].bytes, 40);
+                assert_eq!((evicted[0].lo, evicted[0].hi), (0, 3));
+                // No SSD tier: the displacement is a discard.
+                assert!(!evicted[0].demoted);
+                assert_eq!(evicted[0].tier, StorageTier::Ram);
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        assert!(ns.exists_on(2, "/tmp/a"));
+        assert!(!ns.exists_on(2, "/tmp/b"));
+        assert!(ns.exists_on(2, "/tmp/c"));
+        assert_eq!(ns.bytes_on(2), 80);
+    }
+
+    #[test]
+    fn pinned_replicas_survive_pressure() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.write_range(0, 1, "/tmp/keep", Blob::real(vec![1; 60]));
+        ns.pin("/tmp/keep");
+        ns.write_range(0, 1, "/tmp/x", Blob::real(vec![2; 30]));
+        // 60 pinned + 30 + 30 > 100: x is evicted, keep survives.
+        let out = ns.write_range_evicting(0, 1, "/tmp/y", Blob::real(vec![3; 30]));
+        assert!(matches!(out, StoreWrite::Stored { ref evicted } if evicted.len() == 1
+            && evicted[0].path == "/tmp/x"));
+        assert!(ns.exists_on(0, "/tmp/keep"));
+        // A write that cannot fit beside the pinned resident is
+        // rejected with the store untouched.
+        let before = ns.dump();
+        let out = ns.write_range_evicting(0, 1, "/tmp/z", Blob::real(vec![4; 50]));
+        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 10 }));
+        assert_eq!(ns.dump(), before);
+        // Unpinning makes the same write admissible again.
+        ns.unpin("/tmp/keep");
+        assert!(matches!(
+            ns.write_range_evicting(0, 1, "/tmp/z", Blob::real(vec![4; 50])),
+            StoreWrite::Stored { .. }
+        ));
+        assert!(ns.bytes_on(0) <= 100 && ns.bytes_on(1) <= 100);
+    }
+
+    #[test]
+    fn oversized_blob_rejected_outright() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(10));
+        let out = ns.write_range_evicting(0, 0, "/tmp/big", Blob::real(vec![0; 25]));
+        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 15 }));
+        assert_eq!(ns.path_count(), 0);
+    }
+
+    #[test]
+    fn eviction_scoped_to_overlapping_ranges() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.write_range(0, 1, "/tmp/left", Blob::real(vec![1; 80]));
+        ns.write_range(4, 5, "/tmp/right", Blob::real(vec![2; 80]));
+        // Pressure on nodes 4-5 must not evict the disjoint left range.
+        let out = ns.write_range_evicting(4, 5, "/tmp/new", Blob::real(vec![3; 60]));
+        assert!(matches!(out, StoreWrite::Stored { ref evicted } if evicted.len() == 1
+            && evicted[0].path == "/tmp/right"));
+        assert!(ns.exists_on(0, "/tmp/left"));
+        assert!(!ns.exists_on(4, "/tmp/right"));
+    }
+
+    #[test]
+    fn touch_range_refreshes_split_replicas() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        // Split /tmp/hot into three replicas via a same-content patch.
+        ns.write_range(0, 5, "/tmp/hot", Blob::real(vec![1; 30]));
+        ns.write_range(2, 3, "/tmp/hot", Blob::real(vec![1; 30]));
+        ns.write_range(0, 5, "/tmp/cold", Blob::real(vec![2; 30]));
+        assert_eq!(ns.coverage_of("/tmp/hot"), vec![(0, 1), (2, 3), (4, 5)]);
+        assert!(ns.coverage_of("/tmp/none").is_empty());
+        // A range-wide hit refreshes ALL hot replicas (not just the
+        // one covering the probe node); cold is then the LRU victim.
+        ns.touch_range(0, 5, "/tmp/hot");
+        let out = ns.write_range_evicting(0, 5, "/tmp/new", Blob::real(vec![3; 60]));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert!(!evicted.is_empty());
+                assert!(
+                    evicted.iter().all(|e| e.path == "/tmp/cold"),
+                    "hot replicas evicted despite the range-wide hit: {evicted:?}"
+                );
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        for n in 0..6u32 {
+            assert!(ns.exists_on(n, "/tmp/hot"));
+        }
+    }
+
+    #[test]
+    fn victims_must_cover_an_over_budget_node() {
+        // /tmp/old (LRU-oldest) lives only on node 0, which still fits
+        // the incoming write; /tmp/busy fills node 5. The eviction must
+        // take /tmp/busy (covering the over-budget node), not destroy
+        // /tmp/old needlessly.
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.write_range(0, 0, "/tmp/old", Blob::real(vec![1; 40]));
+        ns.write_range(5, 5, "/tmp/busy", Blob::real(vec![2; 80]));
+        let out = ns.write_range_evicting(0, 5, "/tmp/new", Blob::real(vec![3; 60]));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert_eq!(evicted.len(), 1);
+                assert_eq!(evicted[0].path, "/tmp/busy");
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        assert!(ns.exists_on(0, "/tmp/old"), "node-0 replica destroyed needlessly");
+        assert!(ns.exists_on(3, "/tmp/new"));
+        assert_eq!(ns.bytes_on(0), 100);
+        assert_eq!(ns.bytes_on(5), 60);
+    }
+
+    #[test]
+    fn overwrite_splits_replicas_and_keeps_accounting() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 9, "/tmp/x", Blob::real(vec![1; 10]));
+        ns.write_range(3, 6, "/tmp/x", Blob::real(vec![2; 20]));
+        assert_eq!(ns.dump(), vec![(
+            "/tmp/x".to_string(),
+            vec![(0, 2, 10), (3, 6, 20), (7, 9, 10)],
+        )]);
+        for n in 0..10u32 {
+            let want = if (3..=6).contains(&n) { 20 } else { 10 };
+            assert_eq!(ns.bytes_on(n), want, "node {n}");
+        }
+        assert_eq!(ns.bytes_on(10), 0);
+    }
+
+    #[test]
+    fn paths_on_is_sorted_and_deterministic() {
+        let build = || {
+            let mut ns = NodeStores::new();
+            for name in ["/tmp/z.bin", "/tmp/a.bin", "/tmp/m.bin", "/tmp/k.bin"] {
+                ns.write_range(0, 7, name, Blob::real(vec![0; 4]));
+            }
+            ns.write_range(2, 3, "/tmp/partial.bin", Blob::real(vec![0; 4]));
+            ns
+        };
+        let a = build();
+        let b = build();
+        let paths = a.paths_on(2);
+        let mut sorted = paths.clone();
+        sorted.sort();
+        assert_eq!(paths, sorted, "paths_on must return sorted order");
+        assert_eq!(paths.len(), 5);
+        assert_eq!(a.paths_on(5).len(), 4);
+        // Identical construction -> identical enumeration (no
+        // HashMap iteration-order dependence).
+        assert_eq!(a.paths_on(2), b.paths_on(2));
+        assert_eq!(a.dump(), b.dump());
+    }
+
+    #[test]
+    fn resident_matches_checks_coverage_and_content() {
+        let mut ns = NodeStores::new();
+        let blob = Blob::synthetic(1000, 7);
+        ns.write_range(0, 3, "/tmp/d", blob.clone());
+        assert!(ns.resident_matches(0, 3, "/tmp/d", &blob));
+        assert!(ns.resident_matches(1, 2, "/tmp/d", &blob));
+        // Partial coverage fails.
+        assert!(!ns.resident_matches(0, 4, "/tmp/d", &blob));
+        // Stale content fails.
+        assert!(!ns.resident_matches(0, 3, "/tmp/d", &Blob::synthetic(1000, 8)));
+        // A same-content patch over a sub-range still matches.
+        ns.write_range(1, 2, "/tmp/d", blob.clone());
+        assert!(ns.resident_matches(0, 3, "/tmp/d", &blob));
+    }
+
+    #[test]
+    fn pins_are_refcounted_across_owners() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 1, "/tmp/shared", Blob::real(vec![1; 8]));
+        ns.pin("/tmp/shared"); // owner X
+        ns.pin("/tmp/shared"); // owner Y
+        ns.unpin("/tmp/shared"); // Y releases; X still holds it
+        assert!(ns.is_pinned("/tmp/shared"));
+        assert!(ns.evict_path("/tmp/shared").is_empty());
+        ns.unpin("/tmp/shared");
+        assert!(!ns.is_pinned("/tmp/shared"));
+        // Unbalanced extra unpins are harmless no-ops.
+        ns.unpin("/tmp/shared");
+        assert_eq!(ns.evict_path("/tmp/shared").len(), 1);
+    }
+
+    #[test]
+    fn forced_evict_path_respects_pins() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 3, "/tmp/a", Blob::real(vec![1; 8]));
+        ns.pin("/tmp/a");
+        assert!(ns.evict_path("/tmp/a").is_empty());
+        assert!(ns.exists_on(0, "/tmp/a"));
+        ns.unpin("/tmp/a");
+        let ev = ns.evict_path("/tmp/a");
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].bytes, 8);
+        assert!(!ns.exists_on(0, "/tmp/a"));
+        assert_eq!(ns.bytes_on(0), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // tiered semantics
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn eviction_demotes_to_ssd_preserving_content() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(200));
+        let a = Blob::synthetic(60, 11);
+        ns.write_range(0, 3, "/tmp/a", a.clone());
+        let out = ns.write_range_evicting(0, 3, "/tmp/b", Blob::synthetic(60, 12));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert_eq!(evicted.len(), 1);
+                assert!(evicted[0].demoted, "SSD tier enabled: eviction must demote");
+                assert_eq!(evicted[0].tier, StorageTier::Ram);
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        // The replica left RAM but survives bit-identical on SSD.
+        assert!(!ns.exists_on(1, "/tmp/a"));
+        assert!(ns.read_tier(StorageTier::Ssd, 1, "/tmp/a").unwrap().same_content(&a));
+        assert_eq!(ns.bytes_on_tier(StorageTier::Ssd, 2), 60);
+        assert_eq!(ns.bytes_on(2), 60);
+    }
+
+    #[test]
+    fn ssd_overflow_cascades_to_discard() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        // Three 60 B datasets through a 100 B RAM + 100 B SSD stack:
+        // staging c demotes a to SSD; staging d demotes b, which
+        // discards a from SSD to make room (cascade).
+        ns.write_range(0, 1, "/tmp/a", Blob::synthetic(60, 1));
+        ns.write_range(0, 1, "/tmp/b", Blob::synthetic(60, 2));
+        let out = ns.write_range_evicting(0, 1, "/tmp/c", Blob::synthetic(60, 3));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                // b was written second (a demoted already when b
+                // landed): the victim here is b, whose demotion
+                // discards a from the SSD.
+                assert_eq!(evicted.len(), 2, "{evicted:?}");
+                assert_eq!(evicted[0].tier, StorageTier::Ram);
+                assert!(evicted[0].demoted);
+                assert_eq!(evicted[1].tier, StorageTier::Ssd);
+                assert!(!evicted[1].demoted);
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        // Per-tier budgets held throughout.
+        for n in 0..2 {
+            assert!(ns.bytes_on(n) <= 100);
+            assert!(ns.bytes_on_tier(StorageTier::Ssd, n) <= 100);
+        }
+    }
+
+    #[test]
+    fn promote_restores_ram_residency() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(200));
+        let a = Blob::synthetic(60, 5);
+        ns.write_range(0, 3, "/tmp/a", a.clone());
+        ns.write_range(0, 3, "/tmp/b", Blob::synthetic(60, 6)); // a -> SSD
+        assert!(!ns.exists_on(0, "/tmp/a"));
+        match ns.promote_range(0, 3, "/tmp/a") {
+            PromoteOutcome::Promoted { bytes, evicted } => {
+                assert_eq!(bytes, 60);
+                // b displaced in turn — and demoted, not lost.
+                assert!(evicted.iter().any(|e| e.path == "/tmp/b" && e.demoted));
+            }
+            other => panic!("expected promotion, got {other:?}"),
+        }
+        assert!(ns.read(2, "/tmp/a").unwrap().same_content(&a));
+        // The promoted copy left the SSD tier.
+        assert!(ns.read_tier(StorageTier::Ssd, 2, "/tmp/a").is_none());
+        assert!(ns.read_tier(StorageTier::Ssd, 2, "/tmp/b").is_some());
+    }
+
+    #[test]
+    fn promote_missing_and_rejected() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(200));
+        assert!(matches!(ns.promote_range(0, 1, "/tmp/none"), PromoteOutcome::Missing));
+        // Partial SSD coverage does not promote.
+        ns.write_range(0, 0, "/tmp/p", Blob::synthetic(40, 1));
+        ns.write_range(0, 0, "/tmp/q", Blob::synthetic(80, 2)); // p -> SSD on node 0 only
+        assert!(matches!(ns.promote_range(0, 1, "/tmp/p"), PromoteOutcome::Missing));
+        // A pinned wall in RAM rejects promotion, leaving SSD intact.
+        ns.pin("/tmp/q");
+        assert!(matches!(
+            ns.promote_range(0, 0, "/tmp/p"),
+            PromoteOutcome::Rejected { short_bytes: 20 }
+        ));
+        assert!(ns.read_tier(StorageTier::Ssd, 0, "/tmp/p").is_some());
+    }
+
+    #[test]
+    fn pins_never_demote_because_they_never_evict() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        ns.write_range(0, 1, "/tmp/pinned", Blob::synthetic(50, 1));
+        ns.pin("/tmp/pinned");
+        ns.write_range(0, 1, "/tmp/x", Blob::synthetic(40, 2));
+        let out = ns.write_range_evicting(0, 1, "/tmp/y", Blob::synthetic(40, 3));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert!(evicted.iter().all(|e| e.path != "/tmp/pinned"));
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        assert!(ns.exists_on(0, "/tmp/pinned"));
+        assert!(ns.read_tier(StorageTier::Ssd, 0, "/tmp/pinned").is_none());
+    }
+
+    #[test]
+    fn pinned_ssd_replicas_survive_demotion_pressure() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        // a demotes to SSD, then gets pinned there (a promotion plan
+        // in flight). Later demotions must not discard it.
+        ns.write_range(0, 1, "/tmp/a", Blob::synthetic(70, 1));
+        ns.write_range(0, 1, "/tmp/b", Blob::synthetic(70, 2)); // a -> SSD
+        ns.pin("/tmp/a");
+        let out = ns.write_range_evicting(0, 1, "/tmp/c", Blob::synthetic(70, 3));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                // b displaced from RAM, but a's pinned SSD copy blocks
+                // its demotion (70 pinned + 70 > 100): b is discarded.
+                let b = evicted.iter().find(|e| e.path == "/tmp/b").unwrap();
+                assert!(!b.demoted, "SSD pin must block the demotion");
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        assert!(ns.read_tier(StorageTier::Ssd, 0, "/tmp/a").is_some());
+    }
+
+    #[test]
+    fn forced_evict_purges_both_tiers() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(200));
+        ns.write_range(0, 1, "/tmp/a", Blob::synthetic(60, 1));
+        ns.write_range(0, 1, "/tmp/b", Blob::synthetic(60, 2)); // a -> SSD
+        ns.write_range(2, 3, "/tmp/a", Blob::synthetic(60, 1)); // a also in RAM elsewhere
+        let ev = ns.evict_path("/tmp/a");
+        assert_eq!(ev.len(), 2, "{ev:?}");
+        assert!(ev.iter().any(|e| e.tier == StorageTier::Ram));
+        assert!(ev.iter().any(|e| e.tier == StorageTier::Ssd));
+        assert!(ev.iter().all(|e| !e.demoted));
+        assert_eq!(ns.path_count_tier(StorageTier::Ssd), 0);
+        assert!(!ns.exists_on(3, "/tmp/a"));
+    }
+
+    #[test]
+    fn coverage_is_memoized_not_rescanned() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 3, "/tmp/a", Blob::synthetic(MB, 1));
+        ns.write_range(6, 9, "/tmp/a", Blob::synthetic(MB, 1));
+        let first = ns.coverage_of("/tmp/a");
+        assert_eq!(first, vec![(0, 3), (6, 9)]);
+        // Same borrow on every call — a slice of memoized state, not a
+        // fresh allocation per query (the scheduler hot-path property;
+        // also asserted in benches/hotpath.rs).
+        assert_eq!(ns.coverage_of("/tmp/a").as_ptr(), ns.coverage_of("/tmp/a").as_ptr());
+        // Mutation refreshes it.
+        ns.write_range(4, 5, "/tmp/a", Blob::synthetic(MB, 1));
+        assert_eq!(ns.coverage_of("/tmp/a"), vec![(0, 3), (4, 5), (6, 9)]);
+    }
+}

@@ -1,0 +1,289 @@
+//! The residency mirror: which paths are resident on which node
+//! ranges, per storage tier, plus displacement telemetry.
+//!
+//! `engine::SimCore` owns one [`ResidencyTable`] and keeps it exactly
+//! in sync with every engine-applied node write
+//! (`SimCore::node_write_range`), promotion (`SimCore::promote_range`)
+//! and eviction (`SimCore::evict_path`), so experiments can report hit
+//! rates, demoted bytes, and evicted bytes without rescanning the data
+//! plane.
+
+use std::collections::BTreeMap;
+
+use super::node_stores::NodeStores;
+use super::tier::StorageTier;
+
+/// A replica displaced from a tier — to make room for a write, by a
+/// forced [`NodeStores::evict_path`], or as demotion cascade fallout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Eviction {
+    pub path: String,
+    pub lo: u32,
+    pub hi: u32,
+    /// Per-node bytes the displacement freed in `tier`.
+    pub bytes: u64,
+    /// Tier the replica was displaced from.
+    pub tier: StorageTier,
+    /// True when the replica survived: it was demoted whole into the
+    /// SSD tier rather than destroyed. Only `tier == Ram` evictions
+    /// can demote; an SSD displacement is always a discard (the GPFS
+    /// original remains the backing copy).
+    pub demoted: bool,
+}
+
+impl Eviction {
+    /// Bytes across the whole node span (per-node bytes x span).
+    pub fn span_bytes(&self) -> u64 {
+        self.bytes * (self.hi - self.lo + 1) as u64
+    }
+}
+
+type RangeMap = BTreeMap<String, Vec<(u32, u32)>>;
+
+/// Bookkeeping mirror of [`NodeStores`]: path -> disjoint, sorted,
+/// coalesced node ranges, kept **per tier**, plus displacement
+/// telemetry. The legacy (un-suffixed) query surface reads the RAM
+/// tier — the tier analysis tasks consume.
+#[derive(Clone, Debug, Default)]
+pub struct ResidencyTable {
+    /// RAM tier: path -> resident node ranges.
+    ram: RangeMap,
+    /// SSD tier: path -> resident node ranges.
+    ssd: RangeMap,
+    /// Replicas displaced from RAM under capacity pressure or by
+    /// forced eviction (count; includes demotions).
+    pub evictions: u64,
+    /// Total bytes displaced from RAM (per-node bytes x node span).
+    pub evicted_bytes: u64,
+    /// RAM displacements that survived as SSD demotions (count).
+    pub demotions: u64,
+    /// Total bytes demoted RAM -> SSD (per-node bytes x node span).
+    pub demoted_bytes: u64,
+    /// Replicas discarded from the SSD tier (count).
+    pub ssd_evictions: u64,
+    /// Total bytes discarded from SSD (per-node bytes x node span).
+    pub ssd_evicted_bytes: u64,
+    /// Replicas promoted SSD -> RAM (count).
+    pub promotions: u64,
+    /// Total bytes promoted SSD -> RAM (per-node bytes x node span).
+    pub promoted_bytes: u64,
+}
+
+impl ResidencyTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a stored RAM write of `path` on `lo..=hi` that displaced
+    /// `evicted` first.
+    pub fn on_stored(&mut self, lo: u32, hi: u32, path: &str, evicted: &[Eviction]) {
+        self.on_evicted(evicted);
+        add_range(self.ram.entry(path.to_string()).or_default(), lo, hi);
+    }
+
+    /// Record displacements (capacity pressure, demotion cascade, or
+    /// forced eviction), tier by tier.
+    pub fn on_evicted(&mut self, evicted: &[Eviction]) {
+        for ev in evicted {
+            match ev.tier {
+                StorageTier::Ram => {
+                    self.evictions += 1;
+                    self.evicted_bytes += ev.span_bytes();
+                    remove_from(&mut self.ram, &ev.path, ev.lo, ev.hi);
+                    if ev.demoted {
+                        self.demotions += 1;
+                        self.demoted_bytes += ev.span_bytes();
+                        add_range(self.ssd.entry(ev.path.clone()).or_default(), ev.lo, ev.hi);
+                    }
+                }
+                StorageTier::Ssd => {
+                    self.ssd_evictions += 1;
+                    self.ssd_evicted_bytes += ev.span_bytes();
+                    remove_from(&mut self.ssd, &ev.path, ev.lo, ev.hi);
+                }
+                StorageTier::Gpfs => unreachable!("GPFS is not capacity-managed"),
+            }
+        }
+    }
+
+    /// Record a promotion of `path` on `lo..=hi` (`bytes` per node)
+    /// whose RAM admission displaced `evicted` first.
+    pub fn on_promoted(&mut self, lo: u32, hi: u32, path: &str, bytes: u64, evicted: &[Eviction]) {
+        self.on_evicted(evicted);
+        self.promotions += 1;
+        self.promoted_bytes += bytes * (hi - lo + 1) as u64;
+        remove_from(&mut self.ssd, path, lo, hi);
+        add_range(self.ram.entry(path.to_string()).or_default(), lo, hi);
+    }
+
+    /// True when `path` is RAM-resident on `node`.
+    pub fn resident(&self, node: u32, path: &str) -> bool {
+        self.resident_tier(StorageTier::Ram, node, path)
+    }
+
+    /// True when `path` is resident on `node` in `tier`.
+    pub fn resident_tier(&self, tier: StorageTier, node: u32, path: &str) -> bool {
+        self.map_of(tier)
+            .get(path)
+            .is_some_and(|rs| rs.iter().any(|&(a, b)| (a..=b).contains(&node)))
+    }
+
+    /// RAM-resident node ranges of `path` (sorted, coalesced).
+    pub fn coverage(&self, path: &str) -> &[(u32, u32)] {
+        self.coverage_tier(StorageTier::Ram, path)
+    }
+
+    /// Resident node ranges of `path` in `tier` (sorted, coalesced).
+    pub fn coverage_tier(&self, tier: StorageTier, path: &str) -> &[(u32, u32)] {
+        self.map_of(tier).get(path).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// All RAM-resident paths, sorted.
+    pub fn resident_paths(&self) -> impl Iterator<Item = &String> {
+        self.ram.keys()
+    }
+
+    fn map_of(&self, tier: StorageTier) -> &RangeMap {
+        match tier {
+            StorageTier::Ram => &self.ram,
+            StorageTier::Ssd => &self.ssd,
+            StorageTier::Gpfs => panic!("GPFS residency lives in ParallelFs"),
+        }
+    }
+
+    /// Exact-mirror check against the data plane: the table and the
+    /// store must agree on every path's resident node set, in both
+    /// managed tiers.
+    pub fn mirrors(&self, stores: &NodeStores) -> bool {
+        let want = |tier| {
+            let mut m: RangeMap = BTreeMap::new();
+            for (path, reps) in stores.dump_tier(tier) {
+                let ranges = m.entry(path).or_default();
+                for (lo, hi, _) in reps {
+                    add_range(ranges, lo, hi);
+                }
+            }
+            m
+        };
+        want(StorageTier::Ram) == self.ram && want(StorageTier::Ssd) == self.ssd
+    }
+}
+
+fn remove_from(map: &mut RangeMap, path: &str, lo: u32, hi: u32) {
+    if let Some(ranges) = map.get_mut(path) {
+        sub_range(ranges, lo, hi);
+        if ranges.is_empty() {
+            map.remove(path);
+        }
+    }
+}
+
+/// Merge `[lo, hi]` into a sorted, disjoint, coalesced range set.
+pub(crate) fn add_range(ranges: &mut Vec<(u32, u32)>, lo: u32, hi: u32) {
+    ranges.push((lo, hi));
+    ranges.sort_unstable();
+    let mut out: Vec<(u32, u32)> = Vec::with_capacity(ranges.len());
+    for &(a, b) in ranges.iter() {
+        match out.last_mut() {
+            Some((_, pb)) if a <= pb.saturating_add(1) => *pb = (*pb).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    *ranges = out;
+}
+
+/// Remove `[lo, hi]` from a sorted, disjoint range set.
+pub(crate) fn sub_range(ranges: &mut Vec<(u32, u32)>, lo: u32, hi: u32) {
+    let mut out: Vec<(u32, u32)> = Vec::with_capacity(ranges.len() + 1);
+    for &(a, b) in ranges.iter() {
+        if b < lo || a > hi {
+            out.push((a, b));
+            continue;
+        }
+        if a < lo {
+            out.push((a, lo - 1));
+        }
+        if b > hi {
+            out.push((hi + 1, b));
+        }
+    }
+    *ranges = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::Blob;
+    use crate::storage::StoreWrite;
+
+    #[test]
+    fn residency_range_set_algebra() {
+        let mut rs = Vec::new();
+        add_range(&mut rs, 4, 7);
+        add_range(&mut rs, 0, 1);
+        assert_eq!(rs, vec![(0, 1), (4, 7)]);
+        add_range(&mut rs, 2, 3); // bridges and coalesces
+        assert_eq!(rs, vec![(0, 7)]);
+        sub_range(&mut rs, 3, 5);
+        assert_eq!(rs, vec![(0, 2), (6, 7)]);
+        sub_range(&mut rs, 0, 7);
+        assert!(rs.is_empty());
+    }
+
+    #[test]
+    fn residency_table_mirrors_store() {
+        let mut ns = NodeStores::new();
+        let mut table = ResidencyTable::new();
+        let w = |ns: &mut NodeStores, t: &mut ResidencyTable, lo, hi, p: &str| {
+            match ns.write_range_evicting(lo, hi, p, Blob::real(vec![0; 4])) {
+                StoreWrite::Stored { evicted } => t.on_stored(lo, hi, p, &evicted),
+                StoreWrite::Rejected { .. } => {}
+            }
+        };
+        w(&mut ns, &mut table, 0, 3, "/tmp/a");
+        w(&mut ns, &mut table, 4, 7, "/tmp/a"); // coalesces to (0,7)
+        w(&mut ns, &mut table, 2, 5, "/tmp/b");
+        assert!(table.mirrors(&ns));
+        assert!(table.resident(5, "/tmp/a"));
+        assert_eq!(table.coverage("/tmp/a"), &[(0, 7)]);
+        assert_eq!(table.resident_paths().count(), 2);
+        table.on_evicted(&ns.evict_path("/tmp/b"));
+        assert!(table.mirrors(&ns));
+        assert!(!table.resident(3, "/tmp/b"));
+        assert_eq!(table.evictions, 1);
+        assert_eq!(table.evicted_bytes, 4 * 4);
+    }
+
+    #[test]
+    fn mirror_tracks_demotion_and_promotion() {
+        let mut ns = NodeStores::new();
+        let mut table = ResidencyTable::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        let mut w = |ns: &mut NodeStores, t: &mut ResidencyTable, lo, hi, p: &str, b: u64| {
+            match ns.write_range_evicting(lo, hi, p, Blob::synthetic(b, 7)) {
+                StoreWrite::Stored { evicted } => t.on_stored(lo, hi, p, &evicted),
+                StoreWrite::Rejected { .. } => panic!("unexpected rejection"),
+            }
+        };
+        w(&mut ns, &mut table, 0, 3, "/tmp/a", 60);
+        w(&mut ns, &mut table, 0, 3, "/tmp/b", 60); // a demotes to SSD
+        assert!(table.mirrors(&ns));
+        assert_eq!(table.demotions, 1);
+        assert_eq!(table.demoted_bytes, 60 * 4);
+        assert!(table.resident_tier(StorageTier::Ssd, 2, "/tmp/a"));
+        assert!(!table.resident(2, "/tmp/a"));
+        // Promote a back: b demotes in turn.
+        match ns.promote_range(0, 3, "/tmp/a") {
+            crate::storage::PromoteOutcome::Promoted { bytes, evicted } => {
+                table.on_promoted(0, 3, "/tmp/a", bytes, &evicted);
+            }
+            other => panic!("expected promotion, got {other:?}"),
+        }
+        assert!(table.mirrors(&ns));
+        assert_eq!(table.promotions, 1);
+        assert_eq!(table.promoted_bytes, 60 * 4);
+        assert!(table.resident(1, "/tmp/a"));
+        assert!(table.resident_tier(StorageTier::Ssd, 1, "/tmp/b"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Storage tiers: the levels of the staging hierarchy a replica can
+//! occupy.
+//!
+//! The paper's machine has exactly one staging tier — the node-local
+//! RAM disk ("/tmp") — backed by the shared GPFS. Modern deployments
+//! interpose a node-local flash/burst-buffer tier between the two
+//! (cf. the Perlmutter direct-streaming work in PAPERS.md), which
+//! turns eviction from *destruction* into *demotion*: a replica
+//! displaced from RAM survives on the node's SSD and can later be
+//! promoted back at local-device bandwidth instead of being re-staged
+//! through the contended parallel filesystem.
+//!
+//! [`StorageTier`] names the tiers; [`crate::storage::NodeStores`]
+//! manages the two node-local ones (RAM + SSD) while
+//! [`crate::pfs::ParallelFs`] *is* the GPFS backing tier — it holds
+//! the originals and is never capacity-managed here.
+
+/// One level of the staging hierarchy.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum StorageTier {
+    /// Node-local RAM disk: the paper's "/tmp". Fastest reads
+    /// (per-process stream at `ramdisk_proc_read_bw`); the only tier
+    /// analysis tasks read from.
+    Ram,
+    /// Node-local SSD / burst buffer: the demotion target. Larger and
+    /// slower than RAM; replicas here are promoted back before use.
+    Ssd,
+    /// The shared parallel filesystem: the backing tier holding every
+    /// original. Not managed by `NodeStores` — re-staging from here is
+    /// the expensive path the tiers above exist to avoid.
+    Gpfs,
+}
+
+impl StorageTier {
+    /// Short lower-case name for metrics keys and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageTier::Ram => "ram",
+            StorageTier::Ssd => "ssd",
+            StorageTier::Gpfs => "gpfs",
+        }
+    }
+}
+
+/// Per-node byte budgets of the two managed tiers. `ram: None` means
+/// the RAM tier is unbounded; `ssd: None` means the SSD tier is
+/// **absent** (a diskless machine — zero capacity, not infinite).
+/// Produced by [`crate::cluster::MachineSpec`] accessors and applied
+/// by [`crate::cluster::Topology::apply_storage_budgets`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierBudgets {
+    pub ram: Option<u64>,
+    pub ssd: Option<u64>,
+}
+
+impl TierBudgets {
+    /// Total node-local staging bytes across both managed tiers: RAM
+    /// plus the SSD budget (an absent SSD tier contributes zero).
+    /// None only when the RAM tier is unbounded.
+    pub fn total(&self) -> Option<u64> {
+        self.ram.map(|r| r + self.ssd.unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_are_stable_metric_keys() {
+        assert_eq!(StorageTier::Ram.name(), "ram");
+        assert_eq!(StorageTier::Ssd.name(), "ssd");
+        assert_eq!(StorageTier::Gpfs.name(), "gpfs");
+    }
+
+    #[test]
+    fn budgets_total() {
+        assert_eq!(TierBudgets { ram: Some(10), ssd: Some(32) }.total(), Some(42));
+        // An absent SSD tier is zero capacity, not unbounded: the
+        // diskless machine's total is its RAM budget.
+        assert_eq!(TierBudgets { ram: Some(10), ssd: None }.total(), Some(10));
+        // An unbounded RAM tier makes the total unbounded.
+        assert_eq!(TierBudgets { ram: None, ssd: Some(32) }.total(), None);
+        assert_eq!(TierBudgets::default().total(), None);
+    }
+}

@@ -101,6 +101,7 @@ pub const MIB: u64 = 1 << 20;
 pub const GIB: u64 = 1 << 30;
 pub const MB: u64 = 1_000_000;
 pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
 
 /// Time to move `bytes` at `bw` bytes/second, rounded up to the ns.
 pub fn transfer_time(bytes: u64, bw: f64) -> Duration {

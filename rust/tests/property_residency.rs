@@ -343,3 +343,445 @@ fn residency_invariants_hold_slow_model() {
         drive(ThroughputMode::Slow, 0xA5EED_000 + s);
     }
 }
+
+// ---------------------------------------------------------------------
+// tiered shadow: RAM + SSD with demotion, cascade discards, promotion
+// ---------------------------------------------------------------------
+
+use xstage::storage::{PromoteOutcome, StorageTier};
+
+/// One tier's victims for one write, in eviction order.
+type TierVictims = Vec<Rep>;
+
+/// One displacement record mirrored against [`xstage::storage::Eviction`].
+#[derive(Debug, PartialEq)]
+struct ShadowEv {
+    path: String,
+    lo: u32,
+    hi: u32,
+    len: u64,
+    tier: StorageTier,
+    demoted: bool,
+}
+
+/// Naive reimplementation of the documented *tiered* NodeStores
+/// semantics: a RAM tier whose victims demote whole into an SSD tier
+/// (own capacity, own LRU discards), sharing one pin set and one
+/// clock/seq stream, plus SSD -> RAM promotion.
+#[derive(Default)]
+struct TieredShadow {
+    ram_cap: u64,
+    ssd_cap: Option<u64>,
+    ram: Vec<Rep>,
+    ssd: Vec<Rep>,
+    pinned: BTreeMap<String, u32>,
+    clock: u64,
+    seq: u64,
+}
+
+impl TieredShadow {
+    fn used(reps: &[Rep], n: u32) -> u64 {
+        reps.iter().filter(|r| r.covers(n)).map(|r| r.len).sum()
+    }
+
+    fn sort(reps: &mut [Rep]) {
+        reps.sort_by(|a, b| (a.path.as_str(), a.lo).cmp(&(b.path.as_str(), b.lo)));
+    }
+
+    /// The documented single-tier write spec against one tier's rep
+    /// list. Some(victims in eviction order) when stored; None when
+    /// rejected (tier untouched). Bumps clock/seq once on success —
+    /// exactly the store's `TierStore::write_range_evicting`.
+    #[allow(clippy::too_many_arguments)]
+    fn tier_write(
+        reps: &mut Vec<Rep>,
+        cap: u64,
+        pinned: &BTreeMap<String, u32>,
+        clock: &mut u64,
+        seq: &mut u64,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        len: u64,
+        seed: u64,
+    ) -> Option<TierVictims> {
+        if len > cap {
+            return None;
+        }
+        for n in lo..=hi {
+            let kept: u64 = reps
+                .iter()
+                .filter(|r| r.covers(n) && r.path != path && pinned.contains_key(&r.path))
+                .map(|r| r.len)
+                .sum();
+            if kept + len > cap {
+                return None;
+            }
+        }
+        let mut victims = Vec::new();
+        loop {
+            let post = |reps: &[Rep], n: u32| {
+                let mut u = Self::used(reps, n);
+                if let Some(r) = reps.iter().find(|r| r.path == path && r.covers(n)) {
+                    u -= r.len;
+                }
+                u
+            };
+            let over: Vec<u32> = (lo..=hi).filter(|&n| post(reps, n) + len > cap).collect();
+            if over.is_empty() {
+                break;
+            }
+            Self::sort(reps);
+            let idx = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| {
+                    r.path != path
+                        && !pinned.contains_key(&r.path)
+                        && over.iter().any(|&n| r.covers(n))
+                })
+                .min_by_key(|(_, r)| (r.last_use, r.seq))
+                .map(|(i, _)| i)
+                .expect("feasibility check promised an evictable victim");
+            victims.push(reps.remove(idx));
+        }
+        *clock += 1;
+        *seq += 1;
+        let (now, sq) = (*clock, *seq);
+        let mut next = Vec::with_capacity(reps.len() + 1);
+        for r in reps.drain(..) {
+            if r.path != path || !r.overlaps(lo, hi) {
+                next.push(r);
+                continue;
+            }
+            if r.lo < lo {
+                next.push(Rep { hi: lo - 1, ..r.clone() });
+            }
+            if r.hi > hi {
+                next.push(Rep { lo: hi + 1, ..r });
+            }
+        }
+        next.push(Rep { path: path.to_string(), lo, hi, len, seed, last_use: now, seq: sq });
+        *reps = next;
+        Some(victims)
+    }
+
+    /// The tiered write: RAM admission, then per-victim demotion into
+    /// SSD (cascade discards interleaved after their cause).
+    fn write(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        len: u64,
+        seed: u64,
+    ) -> Option<Vec<ShadowEv>> {
+        let victims = Self::tier_write(
+            &mut self.ram,
+            self.ram_cap,
+            &self.pinned,
+            &mut self.clock,
+            &mut self.seq,
+            lo,
+            hi,
+            path,
+            len,
+            seed,
+        )?;
+        Some(self.demote(victims))
+    }
+
+    fn demote(&mut self, victims: Vec<Rep>) -> Vec<ShadowEv> {
+        let mut out = Vec::new();
+        for v in victims {
+            let mut demoted = false;
+            let mut cascade = Vec::new();
+            if let Some(cap) = self.ssd_cap {
+                if let Some(c) = Self::tier_write(
+                    &mut self.ssd,
+                    cap,
+                    &self.pinned,
+                    &mut self.clock,
+                    &mut self.seq,
+                    v.lo,
+                    v.hi,
+                    &v.path,
+                    v.len,
+                    v.seed,
+                ) {
+                    demoted = true;
+                    cascade = c;
+                }
+            }
+            out.push(ShadowEv {
+                path: v.path.clone(),
+                lo: v.lo,
+                hi: v.hi,
+                len: v.len,
+                tier: StorageTier::Ram,
+                demoted,
+            });
+            for c in cascade {
+                out.push(ShadowEv {
+                    path: c.path,
+                    lo: c.lo,
+                    hi: c.hi,
+                    len: c.len,
+                    tier: StorageTier::Ssd,
+                    demoted: false,
+                });
+            }
+        }
+        out
+    }
+
+    /// SSD -> RAM promotion: full-coverage uniform-content check, RAM
+    /// admission (victims demote as usual), SSD range removal.
+    /// None = Missing, Some(None) = Rejected, Some(Some(evs)) = Promoted.
+    #[allow(clippy::type_complexity)]
+    fn promote(&mut self, lo: u32, hi: u32, path: &str) -> Option<Option<Vec<ShadowEv>>> {
+        let first = self.ssd.iter().find(|r| r.path == path && r.covers(lo))?;
+        let (len, seed) = (first.len, first.seed);
+        let mut covered = 0u64;
+        for r in self.ssd.iter().filter(|r| r.path == path && r.overlaps(lo, hi)) {
+            if (r.len, r.seed) != (len, seed) {
+                return None;
+            }
+            covered += (r.hi.min(hi) - r.lo.max(lo) + 1) as u64;
+        }
+        if covered != (hi - lo + 1) as u64 {
+            return None;
+        }
+        let Some(evs) = self.write(lo, hi, path, len, seed) else {
+            return Some(None);
+        };
+        // Remove the promoted portion from SSD (split stragglers).
+        let mut next = Vec::with_capacity(self.ssd.len() + 1);
+        for r in self.ssd.drain(..) {
+            if r.path != path || !r.overlaps(lo, hi) {
+                next.push(r);
+                continue;
+            }
+            if r.lo < lo {
+                next.push(Rep { hi: lo - 1, ..r.clone() });
+            }
+            if r.hi > hi {
+                next.push(Rep { lo: hi + 1, ..r });
+            }
+        }
+        self.ssd = next;
+        Some(Some(evs))
+    }
+
+    fn touch_range(&mut self, lo: u32, hi: u32, path: &str) {
+        self.clock += 1;
+        let now = self.clock;
+        for r in self.ram.iter_mut().filter(|r| r.path == path && r.overlaps(lo, hi)) {
+            r.last_use = now;
+        }
+    }
+
+    fn evict_path(&mut self, path: &str) -> Vec<ShadowEv> {
+        if self.pinned.contains_key(path) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (tier, reps) in
+            [(StorageTier::Ram, &mut self.ram), (StorageTier::Ssd, &mut self.ssd)]
+        {
+            let mut gone: Vec<&Rep> = reps.iter().filter(|r| r.path == path).collect();
+            gone.sort_by_key(|r| r.lo);
+            for r in gone {
+                out.push(ShadowEv {
+                    path: r.path.clone(),
+                    lo: r.lo,
+                    hi: r.hi,
+                    len: r.len,
+                    tier,
+                    demoted: false,
+                });
+            }
+            reps.retain(|r| r.path != path);
+        }
+        out
+    }
+}
+
+/// Assert every tiered invariant, comparing both store tiers against
+/// the shadow.
+fn check_tiered(core: &SimCore, sh: &TieredShadow) {
+    for (tier, reps, cap) in [
+        (StorageTier::Ram, &sh.ram, Some(sh.ram_cap)),
+        (StorageTier::Ssd, &sh.ssd, sh.ssd_cap),
+    ] {
+        for n in 0..NODES {
+            let got = core.nodes.bytes_on_tier(tier, n);
+            if let Some(cap) = cap {
+                assert!(got <= cap, "{tier:?} node {n}: {got} B resident > capacity {cap}");
+            }
+            assert_eq!(
+                got,
+                TieredShadow::used(reps, n),
+                "{tier:?} node {n}: usage diverged from shadow"
+            );
+            for r in reps.iter().filter(|r| r.covers(n)) {
+                let got = core
+                    .nodes
+                    .read_tier(tier, n, &r.path)
+                    .unwrap_or_else(|| panic!("{tier:?}: shadow replica {} missing", r.path));
+                assert!(
+                    got.same_content(&Blob::synthetic(r.len, r.seed)),
+                    "{tier:?}: content of {} diverged on node {n}",
+                    r.path
+                );
+            }
+        }
+    }
+    assert!(
+        core.residency.mirrors(&core.nodes),
+        "residency table no longer mirrors the tiered NodeStores"
+    );
+}
+
+/// Compare the store's eviction records against the shadow's, field
+/// by field (order, tier, demotion flag), and assert pins never
+/// appear.
+fn check_evictions(
+    step: usize,
+    got: &[xstage::storage::Eviction],
+    want: &[ShadowEv],
+    pinned: &BTreeMap<String, u32>,
+) {
+    assert_eq!(got.len(), want.len(), "step {step}: displacement count diverged");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(
+            (&g.path, g.lo, g.hi, g.bytes, g.tier, g.demoted),
+            (&w.path, w.lo, w.hi, w.len, w.tier, w.demoted),
+            "step {step}: displacement record diverged"
+        );
+        assert!(
+            !pinned.contains_key(&g.path),
+            "step {step}: pinned replica {} displaced",
+            g.path
+        );
+    }
+}
+
+fn drive_tiered(mode: ThroughputMode, schedule_seed: u64) {
+    let mut rng = Pcg64::new(schedule_seed);
+    let ram_cap = rng.range_u64(60, 160);
+    let ssd_cap = rng.range_u64(60, 200);
+    let mut core = SimCore::with_mode(mode);
+    core.nodes.set_capacity(Some(ram_cap));
+    core.nodes.set_ssd_capacity(Some(ssd_cap));
+    let mut sh = TieredShadow { ram_cap, ssd_cap: Some(ssd_cap), ..Default::default() };
+
+    for step in 0..STEPS {
+        match rng.below(10) {
+            // Stage: a capacity-checked tiered write (victims demote).
+            0..=3 => {
+                let lo = rng.below(NODES as u64) as u32;
+                let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                let len = rng.range_u64(1, 80);
+                let seed = rng.next_u64() | 1;
+                let got = core.node_write_range(lo, hi, path, Blob::synthetic(len, seed));
+                let want = sh.write(lo, hi, path, len, seed);
+                match (&got, &want) {
+                    (StoreWrite::Stored { evicted }, Some(evs)) => {
+                        check_evictions(step, evicted, evs, &sh.pinned);
+                        // Demotion preserves bytes + checksums: every
+                        // demoted replica is readable on SSD with its
+                        // original content.
+                        for e in evicted.iter().filter(|e| e.demoted) {
+                            let r = sh
+                                .ssd
+                                .iter()
+                                .find(|r| r.path == e.path && r.covers(e.lo))
+                                .expect("demoted replica absent from shadow SSD");
+                            let got = core
+                                .nodes
+                                .read_tier(StorageTier::Ssd, e.lo, &e.path)
+                                .expect("demoted replica absent from store SSD");
+                            assert!(got.same_content(&Blob::synthetic(r.len, r.seed)));
+                        }
+                    }
+                    (StoreWrite::Rejected { .. }, None) => {}
+                    (g, w) => panic!("step {step}: outcome diverged: {g:?} vs shadow {w:?}"),
+                }
+            }
+            // Promote: SSD -> RAM (restores RAM residency).
+            4..=5 => {
+                let lo = rng.below(NODES as u64) as u32;
+                let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                let got = core.promote_range(lo, hi, path);
+                let want = sh.promote(lo, hi, path);
+                match (&got, &want) {
+                    (PromoteOutcome::Promoted { evicted, .. }, Some(Some(evs))) => {
+                        check_evictions(step, evicted, evs, &sh.pinned);
+                        // Promotion restores RAM residency across the
+                        // whole range.
+                        for n in lo..=hi {
+                            assert!(
+                                core.nodes.exists_on(n, path),
+                                "step {step}: promoted {path} absent from RAM on {n}"
+                            );
+                        }
+                    }
+                    (PromoteOutcome::Rejected { .. }, Some(None)) => {}
+                    (PromoteOutcome::Missing, None) => {}
+                    (g, w) => {
+                        panic!("step {step}: promote outcome diverged: {g:?} vs shadow {w:?}")
+                    }
+                }
+            }
+            // Read: refreshes LRU recency on the RAM tier.
+            6 => {
+                let lo = rng.below(NODES as u64) as u32;
+                let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                core.nodes.touch_range(lo, hi, path);
+                sh.touch_range(lo, hi, path);
+            }
+            // Pin / unpin (protects both tiers).
+            7..=8 => {
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                if rng.below(2) == 0 {
+                    core.nodes.pin(path.to_string());
+                    *sh.pinned.entry(path.to_string()).or_insert(0) += 1;
+                } else {
+                    core.nodes.unpin(path);
+                    if let Some(n) = sh.pinned.get_mut(path) {
+                        *n -= 1;
+                        if *n == 0 {
+                            sh.pinned.remove(path);
+                        }
+                    }
+                }
+            }
+            // Forced eviction: purges both tiers (no-op when pinned).
+            _ => {
+                let path = PATHS[rng.below(PATHS.len() as u64) as usize];
+                let got = core.evict_path(path);
+                let want = sh.evict_path(path);
+                check_evictions(step, &got, &want, &sh.pinned);
+            }
+        }
+        check_tiered(&core, &sh);
+    }
+}
+
+#[test]
+fn tiered_invariants_hold_fast_model() {
+    for s in 0..SCHEDULES {
+        drive_tiered(ThroughputMode::Fast, 0x71E2_0000 + s);
+    }
+}
+
+#[test]
+fn tiered_invariants_hold_slow_model() {
+    for s in 0..SCHEDULES {
+        drive_tiered(ThroughputMode::Slow, 0xA71E2_000 + s);
+    }
+}
