@@ -1,0 +1,141 @@
+//! Bench: the fleet-scale matrix — seed vs flattened hot paths.
+//!
+//! Runs every (nodes, sessions) point once per [`PathMode`], asserts
+//! the two modes produce bit-identical virtual outcomes, records host
+//! time and events/sec for each, and reports resident bytes of state
+//! per session and per path via the `StateBytes` reporter. At the
+//! largest point (8192 nodes, 10⁴ concurrent sessions) the flattened
+//! paths must clear **5x** the seed's events/sec — the tentpole
+//! acceptance bar (full mode only; smoke shrinks the matrix to a
+//! correctness pass).
+//!
+//! Also micro-benches the two flattened subsystems in isolation:
+//! string-keyed vs interned-id residency lookups, and the fast
+//! throughput model settling one giant hub-and-spoke component
+//! (hierarchical split vs the flat water-fill it replaces).
+//!
+//! With `XSTAGE_BENCH_JSON` set every measurement appends one JSON
+//! point — CI uploads them per run as the `BENCH_scale.json` artifact.
+//!
+//! Run: `cargo bench --bench scale`
+
+use std::hint::black_box;
+
+use xstage::experiments::scale;
+use xstage::pfs::Blob;
+use xstage::simtime::flownet::{Capacity, FlowNet, LinkClass, ThroughputMode};
+use xstage::storage::NodeStores;
+use xstage::units::{StateBytes, MB};
+use xstage::util::bench::{bench_n, record, report_state, section, smoke};
+
+fn main() {
+    section("scale — fleet matrix: seed vs flattened hot paths");
+    let (nodes_sweep, session_sweep): (Vec<u32>, Vec<u32>) = if smoke() {
+        (vec![64], vec![200])
+    } else {
+        (scale::NODE_SWEEP.to_vec(), scale::SESSION_SWEEP.to_vec())
+    };
+    let mut last_speedup = 0.0f64;
+    for (&nodes, &sessions) in nodes_sweep.iter().zip(&session_sweep) {
+        // run_point_both asserts the cross-mode virtual identity
+        // (finish times, event counts, clock) at every point.
+        let (seed_out, flat_out) = scale::run_point_both(nodes, sessions as usize, scale::SEED);
+        record(&format!("scale/seed/n{nodes}-s{sessions}"), seed_out.host_secs);
+        record(&format!("scale/flat/n{nodes}-s{sessions}"), flat_out.host_secs);
+        last_speedup = flat_out.events_per_sec() / seed_out.events_per_sec().max(1e-9);
+        println!(
+            "  n{nodes}/s{sessions}: {} events; seed {:.0} ev/s, flat {:.0} ev/s \
+             ({last_speedup:.1}x); flat wall per sim-second {:.3} ms",
+            flat_out.events,
+            seed_out.events_per_sec(),
+            flat_out.events_per_sec(),
+            flat_out.wall_per_sim_sec() * 1e3,
+        );
+        report_state(
+            &format!("scale/sched-per-session/n{nodes}-s{sessions}"),
+            flat_out.sched_state,
+        );
+        report_state(&format!("scale/store-per-path/n{nodes}-s{sessions}"), flat_out.store_state);
+        report_state(
+            &format!("scale/residency-per-path/n{nodes}-s{sessions}"),
+            flat_out.residency_state,
+        );
+        // Post-drain footprint stays bounded per session regardless of
+        // fleet size (completed sessions hold no graph storage).
+        assert!(
+            flat_out.sched_state.per_unit() < 1024,
+            "resident {} B/session after drain",
+            flat_out.sched_state.per_unit()
+        );
+    }
+    if !smoke() {
+        assert!(
+            last_speedup >= 5.0,
+            "flattened hot paths must clear 5x the seed events/sec at the largest \
+             matrix point, got {last_speedup:.1}x"
+        );
+        println!("\nlargest point speedup {last_speedup:.1}x >= 5x: acceptance bar cleared");
+    }
+
+    section("scale — residency lookups: string-keyed vs interned id");
+    let paths_n = if smoke() { 256 } else { 4096 };
+    let mut stores = NodeStores::new();
+    let paths: Vec<String> = (0..paths_n)
+        .map(|i| format!("/projects/HEDM/layer{}/f{i:05}.bin", i % 7))
+        .collect();
+    for (i, p) in paths.iter().enumerate() {
+        stores.write_range(0, 63, p, Blob::synthetic(MB, i as u64));
+    }
+    let ids: Vec<u32> = paths.iter().map(|p| stores.path_id(p).unwrap()).collect();
+    let by_string = bench_n(&format!("scale/coverage-string-{paths_n}"), 5, || {
+        for p in &paths {
+            black_box(stores.coverage_of(p));
+        }
+    });
+    let by_id = bench_n(&format!("scale/coverage-id-{paths_n}"), 5, || {
+        for &id in &ids {
+            black_box(stores.coverage_of_id(id));
+        }
+    });
+    report_state(
+        "scale/stores-per-path",
+        StateBytes::new(stores.state_bytes(), stores.interned_paths() as u64),
+    );
+    if !smoke() {
+        assert!(
+            by_id.median < by_string.median,
+            "id coverage ({}) must beat string coverage ({})",
+            by_id.median,
+            by_string.median
+        );
+    }
+
+    section("scale — flownet: giant hub-and-spoke component settle");
+    // One backplane-class hub feeding n independent spokes: with slack
+    // on the hub the fast model splits the giant component per spoke
+    // group, so the settle and every later completion touch one spoke,
+    // not all n. comp_count == n is the witness that the split took.
+    let spokes = if smoke() { 300 } else { 2048 };
+    bench_n(&format!("scale/giant-settle-{spokes}"), 3, || {
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        let hub = net.add_link_classed(
+            "hub",
+            Capacity::Fixed(4.0 * spokes as f64 * 1e6),
+            LinkClass::Backplane,
+        );
+        let mut flows = Vec::with_capacity(spokes);
+        for i in 0..spokes {
+            let spoke =
+                net.add_link_classed(format!("s{i}"), Capacity::Fixed(1e6), LinkClass::Ion);
+            flows.push(net.start(vec![spoke, hub], 1, 10_000 + 7 * i as u64));
+        }
+        net.recompute();
+        assert_eq!(net.comp_count(), spokes, "hierarchical split must take");
+        // Churn: each completion re-settles only its own spoke group.
+        for &f in flows.iter().take(spokes / 4) {
+            net.complete(f);
+            net.recompute();
+        }
+        assert_eq!(net.comp_count(), spokes - spokes / 4);
+    });
+}

@@ -27,7 +27,7 @@ pub fn commands() -> &'static [Command] {
     &COMMANDS
 }
 
-static COMMANDS: [Command; 12] = [
+static COMMANDS: [Command; 13] = [
     Command {
         name: "fig10",
         flags: "[--nodes a,b,c]",
@@ -137,6 +137,29 @@ static COMMANDS: [Command; 12] = [
         },
     },
     Command {
+        name: "scale",
+        flags: "[--nodes a,b,c] [--sessions x,y,z] [--seed S]",
+        summary: "Fleet-scale matrix: seed vs flattened scheduler hot paths",
+        run: |args| {
+            let nodes = args.u32_list_or("nodes", experiments::scale::NODE_SWEEP)?;
+            let sessions = args.u32_list_or("sessions", experiments::scale::SESSION_SWEEP)?;
+            anyhow::ensure!(
+                nodes.len() == sessions.len(),
+                "--nodes and --sessions must have the same length \
+                 ({} vs {})",
+                nodes.len(),
+                sessions.len()
+            );
+            anyhow::ensure!(
+                sessions.iter().all(|&s| (1..=65536).contains(&s)),
+                "--sessions entries must be in 1..=65536"
+            );
+            let seed = args.u64_or("seed", experiments::scale::SEED)?;
+            experiments::scale::run_with(&nodes, &sessions, seed).print();
+            Ok(())
+        },
+    },
+    Command {
         name: "all",
         flags: "",
         summary: "Run every experiment table in order",
@@ -160,6 +183,10 @@ static COMMANDS: [Command; 12] = [
             experiments::serve::run().print();
             println!();
             experiments::tiers::run().print();
+            println!();
+            // One reduced fleet point: the full scale matrix is its
+            // own command (`xstage scale`) / bench.
+            experiments::scale::run_with(&[128], &[500], experiments::scale::SEED).print();
             Ok(())
         },
     },
@@ -290,5 +317,15 @@ mod tests {
     #[test]
     fn serve_small_matrix_runs() {
         dispatch(&parse("serve --sessions 6 --seed 9")).unwrap();
+    }
+
+    #[test]
+    fn scale_small_point_runs() {
+        dispatch(&parse("scale --nodes 8 --sessions 30 --seed 5")).unwrap();
+    }
+
+    #[test]
+    fn scale_rejects_mismatched_sweeps() {
+        assert!(dispatch(&parse("scale --nodes 8,16 --sessions 30")).is_err());
     }
 }

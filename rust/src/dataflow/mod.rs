@@ -29,4 +29,4 @@ pub mod sched;
 pub mod swift;
 
 pub use graph::{Task, TaskGraph, TaskId, TaskInput};
-pub use sched::{run_workflow, Scheduler, SchedulerCfg, WorkflowStats};
+pub use sched::{run_workflow, FairPick, Scheduler, SchedulerCfg, WorkflowStats};

@@ -30,8 +30,10 @@
 //!   fair policy degenerates to the FIFO baseline and the two are
 //!   bit-identical (tested).
 
+use std::collections::BTreeSet;
 use std::collections::HashSet;
 use std::collections::VecDeque;
+use std::mem::size_of;
 
 use crate::cluster::Topology;
 use crate::engine::{Director, Notice, SimCore};
@@ -63,6 +65,23 @@ pub fn decode_task_tag(tag: u64) -> Option<(SessionId, TaskId)> {
     Some((SessionId((rel >> 32) as u32), TaskId((rel & 0xffff_ffff) as usize)))
 }
 
+/// Which implementation drives the [`SessionScheduler`] fair pick.
+/// Both compute the same session — the admitted session with the
+/// least dispatched compute, ties to the lower id — so schedules are
+/// bit-identical; only the cost per pick differs. Debug builds assert
+/// the equivalence on every single pick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FairPick {
+    /// The seed implementation: a linear scan of the live-session
+    /// list. O(live) per dispatched task — fine to a few hundred
+    /// concurrent sessions, quadratic pain at 10⁴.
+    Scan,
+    /// Indexed: an ordered set keyed `(dispatched_work, session_id)`
+    /// holding exactly the live sessions with ready tasks, updated in
+    /// place as keys change. O(log live) per dispatched task.
+    Indexed,
+}
+
 /// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerCfg {
@@ -78,6 +97,16 @@ pub struct SchedulerCfg {
     /// preferred slot *is* the baseline slot, so placement, timing,
     /// and stats are bit-identical to the baseline scheduler.
     pub locality_aware: bool,
+    /// Fair-pick implementation (see [`FairPick`]); schedules are
+    /// identical either way.
+    pub fair_pick: FairPick,
+    /// Intern session input paths to dense ids at admission and drive
+    /// every per-task storage query (coverage, reads, LRU touches,
+    /// cache keys) through the id surface instead of string lookups.
+    /// Queries answer identically (the interner is a bijection), so
+    /// this is cost-only; off reproduces the seed string-keyed walks
+    /// for A/B measurement.
+    pub interned_paths: bool,
 }
 
 impl Default for SchedulerCfg {
@@ -86,6 +115,8 @@ impl Default for SchedulerCfg {
             dispatch_overhead: Duration::from_micros(500),
             cache_inputs: false,
             locality_aware: false,
+            fair_pick: FairPick::Indexed,
+            interned_paths: true,
         }
     }
 }
@@ -132,12 +163,15 @@ pub struct ReadStats {
 /// that, the topmost slot where every input is at least node-local
 /// (RAM or the SSD tier — a local stream still beats a shared-FS
 /// re-read); top-of-pool fallback when none (or when the task reads
-/// nothing).
+/// nothing). `ids` (when the caller pre-interned the task's input
+/// paths) routes the coverage lookups through the O(1) id surface;
+/// the answers are identical either way.
 fn pick_slot_in(
     core: &SimCore,
     cfg: &SchedulerCfg,
     graph: &TaskGraph,
     tid: TaskId,
+    ids: Option<&[u32]>,
     free_slots: &[u32],
 ) -> usize {
     let top = free_slots.len() - 1;
@@ -153,8 +187,10 @@ fn pick_slot_in(
     // resolution is a borrow of the store's memoized coverage (no
     // replica rescan, no allocation) — the serve/campaign dispatch
     // inner loop runs this per task.
-    let ram_cov: Vec<&[(u32, u32)]> =
-        task.inputs.iter().map(|i| core.nodes.coverage_of(&i.path)).collect();
+    let ram_cov: Vec<&[(u32, u32)]> = match ids {
+        Some(ids) => ids.iter().map(|&id| core.nodes.coverage_of_id(id)).collect(),
+        None => task.inputs.iter().map(|i| core.nodes.coverage_of(&i.path)).collect(),
+    };
     let in_cov = |c: &[(u32, u32)], node: u32| c.iter().any(|&(a, b)| (a..=b).contains(&node));
     if ram_cov.iter().all(|c| !c.is_empty()) {
         for (idx, &node) in free_slots.iter().enumerate().rev() {
@@ -166,11 +202,17 @@ fn pick_slot_in(
     // RAM placement failed; try nodes where every input is at least
     // node-local counting the SSD tier (only on machines that model
     // one — coverage is empty otherwise, costing nothing extra).
-    let ssd_cov: Vec<&[(u32, u32)]> = task
-        .inputs
-        .iter()
-        .map(|i| core.nodes.coverage_of_tier(crate::storage::StorageTier::Ssd, &i.path))
-        .collect();
+    let ssd_cov: Vec<&[(u32, u32)]> = match ids {
+        Some(ids) => ids
+            .iter()
+            .map(|&id| core.nodes.coverage_of_tier_id(crate::storage::StorageTier::Ssd, id))
+            .collect(),
+        None => task
+            .inputs
+            .iter()
+            .map(|i| core.nodes.coverage_of_tier(crate::storage::StorageTier::Ssd, &i.path))
+            .collect(),
+    };
     if ram_cov
         .iter()
         .zip(&ssd_cov)
@@ -193,18 +235,29 @@ fn pick_slot_in(
 /// SSD streams (one lookup for the dispatch hot path; None on a
 /// machine without an SSD layer, so a pathless infinite-rate flow can
 /// never arise).
-fn ssd_stream_len(core: &SimCore, topo: &Topology, node: u32, path: &str) -> Option<u64> {
+fn ssd_stream_len(
+    core: &SimCore,
+    topo: &Topology,
+    node: u32,
+    path: &str,
+    id: Option<u32>,
+) -> Option<u64> {
     if topo.ssd_layer.is_none() {
         return None;
     }
-    core.nodes
-        .read_tier(crate::storage::StorageTier::Ssd, node, path)
-        .map(crate::pfs::Blob::len)
+    match id {
+        Some(id) => core.nodes.read_tier_id(crate::storage::StorageTier::Ssd, node, id),
+        None => core.nodes.read_tier(crate::storage::StorageTier::Ssd, node, path),
+    }
+    .map(crate::pfs::Blob::len)
 }
 
 /// Build the per-task plan: dispatch overhead -> input reads ->
 /// compute -> output write. `cache` and `reads` carry the caller's
 /// (per-workflow or per-session) input-cache and byte accounting.
+/// `ids` (input paths pre-interned at admission, aligned with
+/// `task.inputs`) routes the storage reads and LRU touches through
+/// the id surface; behaviour is identical either way.
 #[allow(clippy::too_many_arguments)]
 fn build_task_plan(
     core: &mut SimCore,
@@ -214,7 +267,8 @@ fn build_task_plan(
     tid: TaskId,
     node: u32,
     tag: u64,
-    cache: &mut HashSet<(u32, String)>,
+    ids: Option<&[u32]>,
+    cache: &mut HashSet<(u32, u32)>,
     reads: &mut ReadStats,
 ) -> Plan {
     let task = &graph.tasks[tid.0];
@@ -223,32 +277,52 @@ fn build_task_plan(
 
     // Input reads.
     let mut local_bytes = 0u64;
-    for input in &task.inputs {
-        // (node, path) worker cache: insert returns false when the
-        // path is already warm on this node. The key String is only
-        // allocated when caching is on — the serve hot path runs with
-        // it off.
-        if cfg.cache_inputs && !cache.insert((node, input.path.clone())) {
-            reads.cache_hits += 1;
-            continue;
+    for (j, input) in task.inputs.iter().enumerate() {
+        let pid = ids.map(|ids| ids[j]);
+        // (node, path-id) worker cache: insert returns false when the
+        // path is already warm on this node. Keys are dense ids —
+        // interned here on first sight when the caller didn't
+        // pre-intern — so a long-lived serving core holds u32 pairs,
+        // not per-entry String clones. Ids are bijective with paths,
+        // so hit/miss behaviour matches the string-keyed seed cache
+        // exactly.
+        if cfg.cache_inputs {
+            let key = match pid {
+                Some(id) => id,
+                None => core.nodes.intern_path(&input.path),
+            };
+            if !cache.insert((node, key)) {
+                reads.cache_hits += 1;
+                continue;
+            }
         }
-        if let Some(blob) = core.nodes.read(node, &input.path) {
+        let staged = match pid {
+            Some(id) => core.nodes.read_id(node, id).map(crate::pfs::Blob::len),
+            None => core.nodes.read(node, &input.path).map(crate::pfs::Blob::len),
+        };
+        if let Some(blob_len) = staged {
             // Staged: node-local stream, perfectly scalable -> a
             // pure delay at the per-process RAM-disk rate (not a
             // flownet flow; it contends with nothing).
-            let bytes = input.bytes.unwrap_or(blob.len());
+            let bytes = input.bytes.unwrap_or(blob_len);
             local_bytes += bytes;
             reads.staged_bytes += bytes;
             // The read refreshes the replica's LRU recency.
-            core.nodes.touch(node, &input.path);
-        } else if let Some(blob_len) = ssd_stream_len(core, topo, node, &input.path) {
+            match pid {
+                Some(id) => core.nodes.touch_id(node, id),
+                None => core.nodes.touch(node, &input.path),
+            }
+        } else if let Some(blob_len) = ssd_stream_len(core, topo, node, &input.path, pid) {
             // Demoted to the node's SSD tier: stream it in place over
             // the machine's SSD layer — slower than RAM, but still
             // off the shared FS. The read refreshes the SSD replica's
             // recency, like the RAM branch's touch.
             let bytes = input.bytes.unwrap_or(blob_len);
             reads.ssd_bytes += bytes;
-            core.nodes.touch_tier(crate::storage::StorageTier::Ssd, node, &input.path);
+            match pid {
+                Some(id) => core.nodes.touch_tier_id(crate::storage::StorageTier::Ssd, node, id),
+                None => core.nodes.touch_tier(crate::storage::StorageTier::Ssd, node, &input.path),
+            }
             prev = p.flow_capped(
                 topo.path_ssd(),
                 1,
@@ -401,8 +475,8 @@ pub struct Scheduler {
     run: GraphRun,
     /// Free worker slots (see [`build_slot_pool`]).
     free_slots: Vec<u32>,
-    /// (node, path) pairs already read by some worker on that node.
-    cache: HashSet<(u32, String)>,
+    /// (node, path-id) pairs already read by some worker on that node.
+    cache: HashSet<(u32, u32)>,
     start: Option<SimTime>,
     reads: ReadStats,
 }
@@ -428,7 +502,7 @@ impl Scheduler {
         }
         while !self.run.ready.is_empty() && !self.free_slots.is_empty() {
             let tid = self.run.ready.pop_front().unwrap();
-            let idx = pick_slot_in(core, &self.cfg, &self.run.graph, tid, &self.free_slots);
+            let idx = pick_slot_in(core, &self.cfg, &self.run.graph, tid, None, &self.free_slots);
             // swap_remove of the top index == pop: the baseline path
             // and a satisfied locality preference at the top slot are
             // byte-identical in slot-pool evolution.
@@ -442,6 +516,7 @@ impl Scheduler {
                 tid,
                 node,
                 TASK_TAG_BASE + tid.0 as u64,
+                None,
                 &mut self.cache,
                 &mut self.reads,
             );
@@ -546,7 +621,7 @@ struct SessionRun {
     run: GraphRun,
     /// Per-session worker input cache (sessions are independent
     /// tenants; one session's reads must not warm another's cache).
-    cache: HashSet<(u32, String)>,
+    cache: HashSet<(u32, u32)>,
     reads: ReadStats,
     submitted: SimTime,
     finished: SimTime,
@@ -556,21 +631,56 @@ struct SessionRun {
     /// after the completed session's storage is released.
     tasks_run: usize,
     total_work: Duration,
+    /// Input paths interned to dense ids at admission, aligned with
+    /// each task's `inputs` (`cfg.interned_paths` only; released with
+    /// the graph on completion).
+    input_ids: Option<Vec<Vec<u32>>>,
 }
 
 impl SessionRun {
     /// Drop the completed session's heavyweight state — the task
-    /// graph (name + input-path strings per task) and the worker
-    /// cache — mirroring the engine's plan-storage release: a serving
-    /// core's memory tracks live sessions, not total sessions served.
+    /// graph (name + input-path strings per task), the dataflow
+    /// bookkeeping, the interned-id table, and the worker cache —
+    /// mirroring the engine's plan-storage release: a serving core's
+    /// memory tracks live sessions, not total sessions served.
     /// Completion times and read stats stay for `stats()`.
     fn release_storage(&mut self) {
         debug_assert!(self.run.is_done());
         self.run.graph.tasks = Vec::new();
+        self.run.ready = VecDeque::new();
         self.run.missing = Vec::new();
         self.run.dependents = Vec::new();
         self.run.running_node = Vec::new();
         self.cache = HashSet::new();
+        self.input_ids = None;
+    }
+
+    /// Resident bytes of this session's scheduler-side bookkeeping:
+    /// container capacities (not lengths — allocator-held memory is
+    /// what bounds a serving core), string payloads, and the struct
+    /// header. After `release_storage` only the completion vector,
+    /// counters, and the header remain.
+    fn state_bytes(&self) -> u64 {
+        let g = &self.run.graph;
+        let mut b = (g.tasks.capacity() * size_of::<super::graph::Task>()) as u64;
+        for t in &g.tasks {
+            b += t.name.capacity() as u64;
+            b += (t.inputs.capacity() * size_of::<super::graph::TaskInput>()) as u64;
+            b += t.inputs.iter().map(|i| i.path.capacity() as u64).sum::<u64>();
+            b += (t.deps.capacity() * size_of::<TaskId>()) as u64;
+        }
+        b += (self.run.ready.capacity() * size_of::<TaskId>()) as u64;
+        b += self.run.missing.capacity() as u64 * 4;
+        b += (self.run.dependents.capacity() * size_of::<Vec<u32>>()) as u64;
+        b += self.run.dependents.iter().map(|d| d.capacity() as u64 * 4).sum::<u64>();
+        b += self.run.running_node.capacity() as u64 * 4;
+        b += (self.run.completion.capacity() * size_of::<SimTime>()) as u64;
+        b += (self.cache.capacity() * size_of::<(u32, u32)>()) as u64;
+        if let Some(ids) = &self.input_ids {
+            b += (ids.capacity() * size_of::<Vec<u32>>()) as u64;
+            b += ids.iter().map(|v| v.capacity() as u64 * 4).sum::<u64>();
+        }
+        b + size_of::<SessionRun>() as u64
     }
 }
 
@@ -591,9 +701,19 @@ pub struct SessionScheduler {
     free_slots: Vec<u32>,
     sessions: Vec<SessionRun>,
     /// Incomplete sessions, unordered (completion swap-removes). The
-    /// fair pick scans only these, so dispatch cost tracks live
-    /// sessions, not total sessions ever served.
+    /// [`FairPick::Scan`] pick scans only these, so its dispatch cost
+    /// tracks live sessions, not total sessions ever served.
     live: Vec<u32>,
+    /// `live_pos[sid]` = index of `sid` in `live` (`usize::MAX` once
+    /// complete), so completion removes a session in O(1) instead of
+    /// scanning `live`.
+    live_pos: Vec<usize>,
+    /// The [`FairPick::Indexed`] structure: exactly the live sessions
+    /// with a non-empty ready queue, keyed `(dispatched_work, sid)`.
+    /// Its minimum is the scan's `min_by_key` by construction. Keys
+    /// are removed before `dispatched_work` changes and re-inserted
+    /// after — an in-place decrease-key on an ordered set.
+    pick_queue: BTreeSet<(Duration, u32)>,
 }
 
 impl SessionScheduler {
@@ -604,6 +724,8 @@ impl SessionScheduler {
             free_slots: build_slot_pool(&comm),
             sessions: Vec::new(),
             live: Vec::new(),
+            live_pos: Vec::new(),
+            pick_queue: BTreeSet::new(),
         }
     }
 
@@ -618,6 +740,15 @@ impl SessionScheduler {
         );
         let sid = SessionId(self.sessions.len() as u32);
         let (tasks_run, total_work) = (graph.len(), graph.total_work());
+        // Intern every input path once, up front: the per-task hot
+        // path then never walks a string-keyed map.
+        let input_ids: Option<Vec<Vec<u32>>> = self.cfg.interned_paths.then(|| {
+            graph
+                .tasks
+                .iter()
+                .map(|t| t.inputs.iter().map(|i| core.nodes.intern_path(&i.path)).collect())
+                .collect()
+        });
         self.sessions.push(SessionRun {
             run: GraphRun::new(graph),
             cache: HashSet::new(),
@@ -627,8 +758,12 @@ impl SessionScheduler {
             dispatched_work: Duration::ZERO,
             tasks_run,
             total_work,
+            input_ids,
         });
+        self.live_pos.push(self.live.len());
         self.live.push(sid.0);
+        // A fresh graph always has ready roots (acyclic + non-empty).
+        self.pick_queue.insert((Duration::ZERO, sid.0));
         self.dispatch(core);
         sid
     }
@@ -637,43 +772,66 @@ impl SessionScheduler {
     /// compute, ties to the lower id; `None` when nothing is ready.
     /// The `live` list is unordered, but the (work, id) key makes the
     /// minimum — and therefore the schedule — order-independent.
+    /// [`FairPick::Indexed`] reads the same minimum off `pick_queue`
+    /// in O(log live); debug builds cross-check it against the scan on
+    /// every pick, so the differential suites exercise the
+    /// decision-for-decision equivalence, not just end states.
     fn next_session(&self) -> Option<usize> {
-        self.live
-            .iter()
-            .map(|&i| i as usize)
-            .filter(|&i| !self.sessions[i].run.ready.is_empty())
-            .min_by_key(|&i| (self.sessions[i].dispatched_work, i))
+        let scan = || {
+            self.live
+                .iter()
+                .map(|&i| i as usize)
+                .filter(|&i| !self.sessions[i].run.ready.is_empty())
+                .min_by_key(|&i| (self.sessions[i].dispatched_work, i))
+        };
+        match self.cfg.fair_pick {
+            FairPick::Scan => scan(),
+            FairPick::Indexed => {
+                let pick = self.pick_queue.iter().next().map(|&(_, sid)| sid as usize);
+                debug_assert_eq!(pick, scan(), "indexed fair pick diverged from the scan");
+                pick
+            }
+        }
     }
 
     /// Hand out free slots session-fairly until slots or work run out.
     fn dispatch(&mut self, core: &mut SimCore) {
         while !self.free_slots.is_empty() {
             let Some(s) = self.next_session() else { break };
+            // The pick's key is about to change: pull it out of the
+            // index first, re-insert under the new key after dispatch
+            // (and only if the session still has ready work).
+            self.pick_queue.remove(&(self.sessions[s].dispatched_work, s as u32));
             let tid = self.sessions[s].run.ready.pop_front().unwrap();
-            let idx = pick_slot_in(
-                core,
-                &self.cfg,
-                &self.sessions[s].run.graph,
-                tid,
-                &self.free_slots,
-            );
+            let sref = &self.sessions[s];
+            let ids = sref.input_ids.as_ref().map(|v| v[tid.0].as_slice());
+            let idx = pick_slot_in(core, &self.cfg, &sref.run.graph, tid, ids, &self.free_slots);
             // swap_remove of the top index == pop, matching the
             // baseline scheduler byte-for-byte.
             let node = self.free_slots.swap_remove(idx);
             let sess = &mut self.sessions[s];
             sess.run.launch(tid, node);
             sess.dispatched_work += sess.run.graph.tasks[tid.0].runtime;
+            let tag = session_task_tag(SessionId(s as u32), tid);
+            let refill = !sess.run.ready.is_empty();
+            let new_key = (sess.dispatched_work, s as u32);
+            let SessionRun { run, cache, reads, input_ids, .. } = sess;
+            let ids = input_ids.as_ref().map(|v| v[tid.0].as_slice());
             let plan = build_task_plan(
                 core,
                 &self.topo,
                 &self.cfg,
-                &sess.run.graph,
+                &run.graph,
                 tid,
                 node,
-                session_task_tag(SessionId(s as u32), tid),
-                &mut sess.cache,
-                &mut sess.reads,
+                tag,
+                ids,
+                cache,
+                reads,
             );
+            if refill {
+                self.pick_queue.insert(new_key);
+            }
             core.submit(plan);
         }
     }
@@ -689,8 +847,23 @@ impl SessionScheduler {
         if just_done {
             sess.finished = core.now;
             sess.release_storage();
-            let pos = self.live.iter().position(|&i| i == sid.0).expect("not live");
+            // A done session has an empty ready queue, so it holds no
+            // pick_queue key; the O(1) live_pos removal replaces the
+            // seed's linear `position` scan of `live`.
+            debug_assert!(!self.pick_queue.contains(&(sess.dispatched_work, sid.0)));
+            let pos = self.live_pos[sid.0 as usize];
+            debug_assert_eq!(self.live[pos], sid.0, "live_pos out of sync");
             self.live.swap_remove(pos);
+            self.live_pos[sid.0 as usize] = usize::MAX;
+            if pos < self.live.len() {
+                let moved = self.live[pos];
+                self.live_pos[moved as usize] = pos;
+            }
+        } else if !sess.run.ready.is_empty() {
+            // The completion may have released dependents into an
+            // empty ready queue; (re-)index the session. BTreeSet
+            // insert is idempotent when the key was already present.
+            self.pick_queue.insert((sess.dispatched_work, sid.0));
         }
         self.dispatch(core);
         just_done.then_some(sid)
@@ -707,6 +880,25 @@ impl SessionScheduler {
 
     pub fn session_count(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Incomplete sessions still holding full graph state.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Resident bytes of the scheduler's own bookkeeping across every
+    /// admitted session (live sessions carry their graphs; completed
+    /// ones only completion times and counters — the scale harness
+    /// reports this per idle session to bound serving-core growth).
+    pub fn state_bytes(&self) -> u64 {
+        self.sessions.iter().map(SessionRun::state_bytes).sum::<u64>()
+            + (self.sessions.capacity() * size_of::<SessionRun>()) as u64
+            + self.free_slots.capacity() as u64 * 4
+            + self.live.capacity() as u64 * 4
+            + (self.live_pos.capacity() * size_of::<usize>()) as u64
+            // BTreeSet node payload + rough structural overhead.
+            + self.pick_queue.len() as u64 * (size_of::<(Duration, u32)>() + 16) as u64
     }
 
     pub fn stats(&self, sid: SessionId) -> SessionStats {
@@ -1144,5 +1336,94 @@ mod tests {
         let t = stats.makespan.secs_f64();
         assert!(t > 300.0 && t < 450.0, "{t}");
         assert!(stats.utilization > 0.9);
+    }
+
+    #[test]
+    fn scan_and_indexed_fair_pick_bit_identical() {
+        // The perf knobs must be cost-only: every combination of
+        // fair-pick implementation and interned-path routing yields
+        // the same schedule, byte accounting, and virtual clock.
+        // (Debug builds additionally assert the indexed pick equals
+        // the scan on every single dispatch decision.)
+        let run = |fair_pick: FairPick, interned: bool| {
+            let mut core = SimCore::new();
+            let mut spec = orthros();
+            spec.nodes = 2;
+            let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+            let comm = Comm::world(&topo.spec);
+            core.pfs.write("/data/in.bin", Blob::synthetic(20 * MB, 8));
+            core.node_write_range(0, 0, "/data/in.bin", Blob::synthetic(20 * MB, 8));
+            let cfg = SchedulerCfg {
+                cache_inputs: true,
+                locality_aware: true,
+                fair_pick,
+                interned_paths: interned,
+                ..Default::default()
+            };
+            let mut ss = SessionScheduler::new(topo, comm, cfg);
+            let sids: Vec<SessionId> = (0u64..12)
+                .map(|i| ss.add_session(&mut core, random_graph(50 + i, 40, Some("/data/in.bin"))))
+                .collect();
+            core.run(&mut ss);
+            assert!(ss.all_done());
+            let stats: Vec<SessionStats> = sids.iter().map(|&s| ss.stats(s)).collect();
+            (core.now, stats)
+        };
+        let (now0, base) = run(FairPick::Scan, false);
+        for (fp, interned) in [
+            (FairPick::Scan, true),
+            (FairPick::Indexed, false),
+            (FairPick::Indexed, true),
+        ] {
+            let (now, stats) = run(fp, interned);
+            assert_eq!(now, now0, "{fp:?} interned={interned}");
+            for (a, b) in base.iter().zip(&stats) {
+                assert_eq!(a.completion, b.completion, "{fp:?} interned={interned}");
+                assert_eq!(a.reads, b.reads, "{fp:?} interned={interned}");
+            }
+        }
+    }
+
+    #[test]
+    fn completed_sessions_release_all_storage() {
+        // Long-lived serving cores: once a session completes, every
+        // heavyweight container is back to zero capacity — resident
+        // bytes per finished session are the struct header plus its
+        // completion vector, nothing proportional to graph strings,
+        // dataflow bookkeeping, interned-id tables, or cache entries.
+        let mut core = SimCore::new();
+        let mut spec = orthros();
+        spec.nodes = 1;
+        let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+        let comm = Comm::world(&topo.spec);
+        core.pfs.write("/data/in.bin", Blob::synthetic(MB, 6));
+        let cfg = SchedulerCfg {
+            cache_inputs: true,
+            locality_aware: true,
+            ..Default::default()
+        };
+        let mut ss = SessionScheduler::new(topo, comm, cfg);
+        for seed in 0u64..20 {
+            ss.add_session(&mut core, random_graph(100 + seed, 12, Some("/data/in.bin")));
+        }
+        core.run(&mut ss);
+        assert!(ss.all_done());
+        assert_eq!(ss.live_count(), 0);
+        assert!(ss.pick_queue.is_empty());
+        for s in &ss.sessions {
+            assert_eq!(s.run.graph.tasks.capacity(), 0);
+            assert_eq!(s.run.missing.capacity(), 0);
+            assert_eq!(s.run.dependents.capacity(), 0);
+            assert_eq!(s.run.running_node.capacity(), 0);
+            assert!(s.run.ready.is_empty());
+            assert_eq!(s.cache.capacity(), 0);
+            assert!(s.input_ids.is_none());
+            // Bounded idle footprint: header + completion vector (and
+            // whatever empty capacity the drained ready deque kept).
+            let bound = size_of::<SessionRun>() as u64
+                + (s.run.ready.capacity() * size_of::<TaskId>()) as u64
+                + (s.run.completion.capacity() * size_of::<SimTime>()) as u64;
+            assert_eq!(s.state_bytes(), bound);
+        }
     }
 }

@@ -11,6 +11,7 @@ pub mod fig12;
 pub mod fig13;
 pub mod reduction;
 pub mod reuse;
+pub mod scale;
 pub mod serve;
 pub mod tiers;
 

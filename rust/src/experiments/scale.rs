@@ -1,0 +1,280 @@
+//! The fleet-scale harness (`xstage scale`, `benches/scale.rs`):
+//! thousands of BG/Q nodes times tens of thousands of concurrent
+//! analysis sessions, run twice per matrix point — once on the seed
+//! hot paths ([`PathMode::Seed`]: linear fair-pick scan, string-keyed
+//! storage lookups) and once on the flattened ones ([`PathMode::Flat`]:
+//! indexed fair pick, interned-id storage routing).
+//!
+//! The two modes are **bit-identical in virtual outcome** (asserted at
+//! every point: same per-session finish times, same event count) —
+//! the matrix measures pure host cost. Reported per point:
+//!
+//! - events/sec of engine throughput under each mode, and the speedup;
+//! - host wall-time per simulated second (the interactivity budget:
+//!   how much real time one virtual second of fleet costs);
+//! - resident scheduler bytes per admitted session after the fleet
+//!   drains (completed sessions must not hold graph storage);
+//! - resident storage-bookkeeping bytes per interned path.
+//!
+//! Each session is a dependency *chain* of [`DEPTH`] tasks, so every
+//! task completion re-runs the fair pick with the full concurrent
+//! population live — the worst case for the seed's O(live) scan and
+//! exactly the shape a long-lived serving core sees.
+
+use std::time::Instant;
+
+use crate::cluster::{bgq, Topology};
+use crate::dataflow::sched::{SessionId, SessionScheduler};
+use crate::dataflow::{FairPick, SchedulerCfg, Task, TaskGraph};
+use crate::engine::SimCore;
+use crate::metrics::Table;
+use crate::mpisim::Comm;
+use crate::pfs::{Blob, GpfsParams};
+use crate::units::{fmt_bytes, Duration, SimTime, StateBytes, MB};
+
+use super::ExpResult;
+
+/// Fleet sizes swept, paired index-wise with [`SESSION_SWEEP`].
+pub const NODE_SWEEP: &[u32] = &[512, 2048, 8192];
+/// Concurrent sessions per point (all admitted up front).
+pub const SESSION_SWEEP: &[u32] = &[1_000, 4_000, 10_000];
+/// Tasks per session, chained by dependency.
+pub const DEPTH: usize = 4;
+/// Staged dataset files shared by all sessions (the SVI-B 64-file
+/// layout, resident on every node).
+pub const FILES: usize = 64;
+pub const FILE_BYTES: u64 = 9 * MB;
+/// Default deterministic seed for the matrix.
+pub const SEED: u64 = 42;
+
+/// Which hot-path implementations drive a run. Virtual outcomes are
+/// identical; only host cost differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathMode {
+    /// The pre-flattening implementations: linear fair-pick scan and
+    /// string-keyed storage lookups on every task.
+    Seed,
+    /// Indexed fair pick + admission-time path interning.
+    Flat,
+}
+
+impl PathMode {
+    pub fn cfg(self) -> SchedulerCfg {
+        let (fair_pick, interned_paths) = match self {
+            PathMode::Seed => (FairPick::Scan, false),
+            PathMode::Flat => (FairPick::Indexed, true),
+        };
+        SchedulerCfg { cache_inputs: true, fair_pick, interned_paths, ..Default::default() }
+    }
+}
+
+/// One (nodes, sessions, mode) run's measurements.
+#[derive(Clone, Debug)]
+pub struct ScaleOutcome {
+    pub nodes: u32,
+    pub sessions: usize,
+    /// Host seconds from first admission to fleet drain.
+    pub host_secs: f64,
+    /// Virtual clock at drain.
+    pub now: SimTime,
+    /// Engine events processed.
+    pub events: u64,
+    /// Per-session finish times (the cross-mode identity witness).
+    pub finished: Vec<SimTime>,
+    /// Scheduler bookkeeping bytes over admitted sessions, post-drain.
+    pub sched_state: StateBytes,
+    /// Node-store bookkeeping bytes over interned paths.
+    pub store_state: StateBytes,
+    /// Residency-mirror bookkeeping bytes over interned paths.
+    pub residency_state: StateBytes,
+}
+
+impl ScaleOutcome {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.host_secs.max(1e-9)
+    }
+
+    /// Host seconds spent per simulated second (interactivity budget).
+    pub fn wall_per_sim_sec(&self) -> f64 {
+        self.host_secs / self.now.secs_f64().max(1e-9)
+    }
+}
+
+/// The session workload: a chain of [`DEPTH`] tasks, each reading one
+/// staged dataset file, runtimes log-uniform in 5–50 s. Seeded per
+/// session, so the workload is identical across modes by construction.
+pub fn session_graph(seed: u64, session: u64) -> TaskGraph {
+    let mut rng =
+        crate::util::prng::Pcg64::new(seed ^ (session + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut g = TaskGraph::new();
+    let mut prev = None;
+    for t in 0..DEPTH {
+        let file = rng.range_u64(0, FILES as u64 - 1);
+        let mut task = Task::compute(
+            format!("s{session}/t{t}"),
+            Duration::from_secs_f64(rng.log_uniform(5.0, 50.0)),
+        )
+        .with_input(format!("/tmp/hedm/f{file:04}.bin"), None);
+        if let Some(p) = prev {
+            task = task.with_dep(p);
+        }
+        prev = Some(g.add(task));
+    }
+    g
+}
+
+/// Run one matrix point: build the BG/Q fleet, stage the dataset on
+/// every node, admit all sessions, and drain.
+pub fn run_point(nodes: u32, sessions: usize, mode: PathMode, seed: u64) -> ScaleOutcome {
+    let mut core = SimCore::new();
+    let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
+    topo.apply_storage_budgets(&mut core);
+    for i in 0..FILES {
+        core.node_write_range(
+            0,
+            nodes - 1,
+            &format!("/tmp/hedm/f{i:04}.bin"),
+            Blob::synthetic(FILE_BYTES, 0x5CA1E + i as u64),
+        );
+    }
+    let comm = Comm::world(&topo.spec);
+    let mut ss = SessionScheduler::new(topo, comm, mode.cfg());
+    let t0 = Instant::now();
+    for s in 0..sessions {
+        ss.add_session(&mut core, session_graph(seed, s as u64));
+    }
+    core.run(&mut ss);
+    let host_secs = t0.elapsed().as_secs_f64();
+    assert!(ss.all_done(), "scale point left incomplete sessions");
+    let finished = (0..sessions).map(|i| ss.stats(SessionId(i as u32)).finished).collect();
+    let paths = core.nodes.interned_paths() as u64;
+    ScaleOutcome {
+        nodes,
+        sessions,
+        host_secs,
+        now: core.now,
+        events: core.events_processed,
+        finished,
+        sched_state: StateBytes::new(ss.state_bytes(), sessions as u64),
+        store_state: StateBytes::new(core.nodes.state_bytes(), paths),
+        residency_state: StateBytes::new(core.residency.state_bytes(), paths),
+    }
+}
+
+/// Run both modes at one point and assert the virtual outcomes match
+/// bit-for-bit.
+pub fn run_point_both(nodes: u32, sessions: usize, seed: u64) -> (ScaleOutcome, ScaleOutcome) {
+    let seed_out = run_point(nodes, sessions, PathMode::Seed, seed);
+    let flat_out = run_point(nodes, sessions, PathMode::Flat, seed);
+    assert_eq!(seed_out.now, flat_out.now, "virtual clock diverged at {nodes} nodes");
+    assert_eq!(seed_out.events, flat_out.events, "event count diverged at {nodes} nodes");
+    assert_eq!(
+        seed_out.finished, flat_out.finished,
+        "session finish times diverged at {nodes} nodes"
+    );
+    (seed_out, flat_out)
+}
+
+/// Run the matrix (`nodes[i]` paired with `sessions[i]`) and render
+/// the comparison table. Host-time columns vary with the machine; the
+/// virtual columns and the seed/flat identity do not.
+pub fn run_with(nodes: &[u32], sessions: &[u32], seed: u64) -> ExpResult {
+    assert_eq!(nodes.len(), sessions.len(), "--nodes and --sessions must pair up");
+    let mut table = Table::new(
+        "Scale — fleet matrix, seed vs flattened hot paths (identical virtual outcomes)"
+            .to_string(),
+        &[
+            "nodes",
+            "sessions",
+            "seed ev/s",
+            "flat ev/s",
+            "speedup",
+            "ms-host/sim-s",
+            "B/session",
+            "B/path",
+        ],
+    );
+    let mut speedup_pts = Vec::new();
+    let mut evps_pts = Vec::new();
+    for (&n, &s) in nodes.iter().zip(sessions) {
+        let (seed_out, flat_out) = run_point_both(n, s as usize, seed);
+        let speedup = flat_out.events_per_sec() / seed_out.events_per_sec().max(1e-9);
+        table.row(&[
+            n.to_string(),
+            s.to_string(),
+            format!("{:.0}", seed_out.events_per_sec()),
+            format!("{:.0}", flat_out.events_per_sec()),
+            format!("{speedup:.1}x"),
+            format!("{:.3}", flat_out.wall_per_sim_sec() * 1e3),
+            fmt_bytes(flat_out.sched_state.per_unit()),
+            fmt_bytes(flat_out.store_state.per_unit()),
+        ]);
+        speedup_pts.push((n as f64, speedup));
+        evps_pts.push((n as f64, flat_out.events_per_sec()));
+    }
+    ExpResult {
+        table,
+        series: vec![
+            ("speedup".into(), speedup_pts),
+            ("flat events/sec".into(), evps_pts),
+        ],
+    }
+}
+
+pub fn run() -> ExpResult {
+    run_with(NODE_SWEEP, SESSION_SWEEP, SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_and_flat_agree_on_a_small_point() {
+        // The identity assertions live inside run_point_both; at a
+        // debug-build point the Indexed mode additionally cross-checks
+        // the scan on every single pick.
+        let (seed_out, flat_out) = run_point_both(16, 60, 7);
+        assert_eq!(seed_out.finished.len(), 60);
+        assert!(seed_out.events > 0);
+        assert!(flat_out.now > SimTime::ZERO);
+    }
+
+    #[test]
+    fn drained_fleet_keeps_per_session_state_small() {
+        let out = run_point(8, 50, PathMode::Flat, 3);
+        // Completed sessions released graph/cache/id storage: the
+        // post-drain scheduler footprint per admitted session is a
+        // few hundred bytes (header + completion times), never the
+        // admitted graph.
+        assert!(
+            out.sched_state.per_unit() < 1024,
+            "resident {} per session",
+            out.sched_state.per_unit()
+        );
+        assert_eq!(out.store_state.units, (FILES) as u64);
+    }
+
+    #[test]
+    fn workload_is_deterministic_per_seed() {
+        let a = session_graph(9, 4);
+        let b = session_graph(9, 4);
+        assert_eq!(a.len(), DEPTH);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.runtime, y.runtime);
+            assert_eq!(x.inputs[0].path, y.inputs[0].path);
+        }
+        // Different sessions draw different chains.
+        let c = session_graph(9, 5);
+        assert!(a.tasks.iter().zip(&c.tasks).any(|(x, y)| x.runtime != y.runtime));
+    }
+
+    #[test]
+    fn table_renders_with_speedup_series() {
+        let r = run_with(&[8], &[40], 5);
+        assert_eq!(r.table.rows.len(), 1);
+        let sp = r.series_named("speedup").unwrap();
+        assert_eq!(sp.len(), 1);
+        assert!(sp[0].1 > 0.0);
+    }
+}

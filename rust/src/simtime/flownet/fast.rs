@@ -177,6 +177,16 @@ impl ThroughputModel for FastModel {
             stack.push(seed);
             while let Some(fid) = stack.pop() {
                 members.push(fid);
+                // Live component reached through a shared link: only
+                // possible when a hierarchical split left sibling
+                // components sharing hub links (I2 covers everything
+                // else). Retire it so its members aren't double-owned;
+                // its scheduled check goes stale with the dead id.
+                let c = st.slots[fid.idx()].flow.comp;
+                if c != CompId::NONE {
+                    self.comps.remove(&c.0);
+                    st.slots[fid.idx()].flow.comp = CompId::NONE;
+                }
                 let fidx = fid.idx();
                 for pi in 0..st.slots[fidx].flow.path.len() {
                     let LinkId(l) = st.slots[fidx].flow.path[pi];
@@ -190,6 +200,24 @@ impl ThroughputModel for FastModel {
                 }
             }
             members.sort();
+            // Giant components settle hierarchically when the spoke /
+            // hub structure allows an exact split (see `hier`); the
+            // flat pass below is the fallback and the only path for
+            // ordinary-sized components.
+            if let Some(groups) = super::hier::try_split(st, &members, &mut self.round) {
+                for g in groups {
+                    let cid = self.next_comp;
+                    self.next_comp += 1;
+                    for &m in &g {
+                        let f = &mut st.slots[m.idx()].flow;
+                        f.comp = CompId(cid);
+                        f.dirty = false;
+                    }
+                    let next = super::hier::finish_group(st, &g, CompId(cid), out);
+                    self.comps.insert(cid, Comp { members: g, next });
+                }
+                continue;
+            }
             let cid = self.next_comp;
             self.next_comp += 1;
             for &m in &members {

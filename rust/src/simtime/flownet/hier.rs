@@ -1,0 +1,348 @@
+//! Hierarchical settling for giant components.
+//!
+//! At fleet scale one component can span the whole machine: thousands
+//! of node-layer flows (cluster spokes) all touching a handful of
+//! shared filesystem-side links (hubs). The flat water-filling pass is
+//! O(touched links × freeze rounds); with thousands of independent
+//! spoke bottlenecks the freeze rounds grow with the spoke count and
+//! the settle goes quadratic. This module restores linearity by
+//! splitting the settle *when doing so is provably exact*:
+//!
+//! 1. partition the component's flows into **spoke groups** — the
+//!    connected components of the sharing graph with hub-class links
+//!    ([`hub_class`]: the filesystem-side Backplane/Disk/Meta/Wan
+//!    layers) removed;
+//! 2. water-fill each group independently with hub links excluded
+//!    ([`super::waterfill::assign_rates_filtered`]);
+//! 3. verify every hub link has **strict slack** under the combined
+//!    group rates (with its degrading capacity evaluated at the full
+//!    stream count).
+//!
+//! When step 3 holds, the per-group allocation *is* the global max-min
+//! allocation: every flow is frozen either at its rate cap or at a
+//! saturated group-internal link (spoke groups share no non-hub link
+//! by construction, so each group's saturated bottlenecks stay
+//! saturated globally), and the slack hubs impose no constraint. The
+//! max-min allocation is unique, so the split is exact — the slow
+//! oracle differential suite holds within the existing FP tolerance.
+//! If any hub binds (or any rate is non-finite), the split is
+//! abandoned before anything observable changes and the caller falls
+//! back to the flat settle, so behaviour is conservative by
+//! construction.
+//!
+//! Components smaller than [`GIANT_COMPONENT_MIN`] never attempt the
+//! split: for them the flat pass is already cheap, and keeping the
+//! gate above every workload the differential suites replay makes the
+//! fast model byte-identical to its pre-hierarchical behaviour there.
+//!
+//! One structural consequence: sibling groups settled this way hold
+//! distinct component ids while *sharing* hub links, so a later
+//! flood-fill (e.g. after one sibling's flow completes) can reach live
+//! sibling components through a hub. The fast model's settle absorbs
+//! such components on contact — see the stale-comp removal in
+//! `fast::FastModel::settle`.
+
+use super::model::CompCheck;
+use super::state::{eta_secs, NetState};
+use super::{CompId, FlowId, LinkClass, LinkId};
+use crate::units::{Duration, SimTime};
+
+/// Flow-count threshold below which a component settles flat. All
+/// pre-fleet workloads sit far below it, so the hierarchical path is
+/// provably dormant for them.
+pub(crate) const GIANT_COMPONENT_MIN: usize = 256;
+
+/// True for the shared filesystem-side link layers a fleet-spanning
+/// component funnels through; false for the per-node / cluster layers
+/// that partition into spoke groups.
+pub(crate) fn hub_class(c: LinkClass) -> bool {
+    matches!(
+        c,
+        LinkClass::Backplane | LinkClass::Disk | LinkClass::Meta | LinkClass::Wan
+    )
+}
+
+/// Attempt the hierarchical settle of one component (`members`:
+/// sorted, live, synced-or-stale — this function syncs before touching
+/// rates). On success the members' rates are the exact global max-min
+/// rates and the sorted spoke groups are returned for the caller to
+/// register as separate components. On `None` nothing observable
+/// changed (any partially-written rates are recomputed by the caller's
+/// flat pass over the same synced state).
+///
+/// `round` is the fast model's flood-fill stamp source; it is bumped
+/// once so this fill cannot collide with the caller's.
+pub(crate) fn try_split(
+    st: &mut NetState,
+    members: &[FlowId],
+    round: &mut u64,
+) -> Option<Vec<Vec<FlowId>>> {
+    if members.len() < GIANT_COMPONENT_MIN {
+        return None;
+    }
+    *round += 1;
+    let r = *round;
+
+    // Spoke groups: flood-fill over non-hub links only. Seeding in
+    // sorted member order with sorted group output keeps everything
+    // downstream deterministic.
+    let mut groups: Vec<Vec<FlowId>> = Vec::new();
+    let mut stack: Vec<FlowId> = Vec::new();
+    for &seed in members {
+        if st.slots[seed.idx()].flow.visit == r {
+            continue;
+        }
+        st.slots[seed.idx()].flow.visit = r;
+        stack.push(seed);
+        let mut g: Vec<FlowId> = Vec::new();
+        while let Some(fid) = stack.pop() {
+            g.push(fid);
+            let fidx = fid.idx();
+            for pi in 0..st.slots[fidx].flow.path.len() {
+                let LinkId(l) = st.slots[fidx].flow.path[pi];
+                if hub_class(st.links[l].class) {
+                    continue;
+                }
+                for mi in 0..st.links[l].members.len() {
+                    let (nid, _) = st.links[l].members[mi];
+                    if st.slots[nid.idx()].flow.visit != r {
+                        st.slots[nid.idx()].flow.visit = r;
+                        stack.push(nid);
+                    }
+                }
+            }
+        }
+        g.sort();
+        groups.push(g);
+    }
+    if groups.len() < 2 {
+        // Hub removal didn't disconnect anything; a split buys nothing.
+        return None;
+    }
+
+    // Materialise progress at the old rates, then water-fill each
+    // group with the hubs excluded.
+    for &m in members {
+        st.sync_flow(m);
+    }
+    for g in &groups {
+        super::waterfill::assign_rates_filtered(st, g, Some(hub_class));
+    }
+
+    // Exactness condition: strict slack on every hub link under the
+    // combined rates. (A component's links carry only the component's
+    // own flows, so the link member lists are exactly the loads.)
+    let mut hubs: Vec<usize> = Vec::new();
+    for &m in members {
+        for &LinkId(l) in &st.slots[m.idx()].flow.path {
+            if hub_class(st.links[l].class) {
+                hubs.push(l);
+            }
+        }
+    }
+    hubs.sort_unstable();
+    hubs.dedup();
+    for &l in &hubs {
+        let mut load = 0.0f64;
+        let mut streams = 0.0f64;
+        for &(fid, _) in &st.links[l].members {
+            let f = &st.slots[fid.idx()].flow;
+            load += f.rate_each * f.members as f64;
+            streams += f.members as f64;
+        }
+        let cap = st.links[l].cap.effective(streams);
+        // Written so NaN or infinite load also falls back to flat.
+        if !(load <= (1.0 - 1e-9) * cap) {
+            return None;
+        }
+    }
+    Some(groups)
+}
+
+/// The settle epilogue for one already-rated spoke group: fold the
+/// earliest completion (ties to the first member in sorted order, like
+/// `model::settle_component`) and emit the group's check. Rates were
+/// assigned by [`try_split`]; nothing is recomputed here.
+pub(crate) fn finish_group(
+    st: &NetState,
+    members: &[FlowId],
+    comp: CompId,
+    out: &mut Vec<CompCheck>,
+) -> Option<(SimTime, FlowId)> {
+    let now = st.now;
+    let mut next: Option<(SimTime, FlowId)> = None;
+    for &m in members {
+        let f = &st.slots[m.idx()].flow;
+        if let Some(e) = eta_secs(f) {
+            let at = now + Duration::from_secs_f64(e);
+            if next.map_or(true, |(t, _)| at < t) {
+                next = Some((at, m));
+            }
+        }
+    }
+    if let Some((at, _)) = next {
+        out.push(CompCheck { comp, at });
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Capacity, FlowNet, LinkClass, ThroughputMode};
+    use super::*;
+
+    /// Drive `net` to empty one completion at a time; returns the
+    /// per-flow completion times in completion order.
+    fn run_to_empty(net: &mut FlowNet) -> Vec<(FlowId, SimTime)> {
+        let mut now = SimTime::ZERO;
+        let mut done = Vec::new();
+        net.recompute();
+        while let Some((t, id)) = net.next_completion(now) {
+            net.advance(t - now);
+            now = t;
+            net.complete(id);
+            done.push((id, now));
+            net.recompute();
+        }
+        assert_eq!(net.active_count(), 0, "flows starved");
+        done
+    }
+
+    /// A fleet-shaped net: `n` spoke links (cluster layer) feeding one
+    /// hub link (filesystem layer), one flow per spoke crossing both.
+    /// Returns the flow ids in spoke order.
+    fn hub_and_spoke(net: &mut FlowNet, n: usize, hub_cap: f64) -> Vec<FlowId> {
+        let hub = net.add_link_classed("hub", Capacity::Fixed(hub_cap), LinkClass::Backplane);
+        (0..n)
+            .map(|i| {
+                let spoke = net.add_link_classed(
+                    format!("spoke{i}"),
+                    Capacity::Fixed(100.0),
+                    LinkClass::Ion,
+                );
+                // Distinct byte counts -> distinct completion times ->
+                // a model-independent completion order.
+                net.start(vec![spoke, hub], 1, 10_000 + 7 * i as u64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn giant_hub_and_spoke_splits_and_matches_oracle() {
+        // 300 spokes ≥ GIANT_COMPONENT_MIN, hub with ample slack
+        // (300 × 100 < 1e6): the fast model must split into one
+        // component per spoke and agree with the slow oracle on every
+        // rate and completion time.
+        let n = 300;
+        assert!(n >= GIANT_COMPONENT_MIN);
+        let mut fast = FlowNet::with_mode(ThroughputMode::Fast);
+        let ff = hub_and_spoke(&mut fast, n, 1e6);
+        let mut slow = FlowNet::with_mode(ThroughputMode::Slow);
+        let sf = hub_and_spoke(&mut slow, n, 1e6);
+
+        fast.recompute();
+        slow.recompute();
+        assert_eq!(fast.comp_count(), n, "hierarchical settle must split per spoke");
+        assert_eq!(slow.comp_count(), 1);
+        for (a, b) in ff.iter().zip(&sf) {
+            let (ra, rb) = (fast.rate_each(*a), slow.rate_each(*b));
+            assert!((ra - rb).abs() < 1e-6, "rate diverged: fast {ra} slow {rb}");
+            assert!((ra - 100.0).abs() < 1e-6, "spoke-bound rate expected, got {ra}");
+        }
+
+        // Churn to empty: every completion re-floods and re-splits the
+        // remainder (exercising the sibling-absorption path); the two
+        // models must complete the same flows at the same times.
+        let fd = run_to_empty(&mut fast);
+        let sd = run_to_empty(&mut slow);
+        assert_eq!(fd.len(), n);
+        assert_eq!(fd.len(), sd.len());
+        for ((fa, ta), (fb, tb)) in fd.iter().zip(&sd) {
+            // Flow ids are allocation-order identical across the nets.
+            assert_eq!(fa, fb);
+            let dt = (ta.secs_f64() - tb.secs_f64()).abs();
+            assert!(dt < 1e-6, "completion diverged: {ta:?} vs {tb:?}");
+        }
+    }
+
+    #[test]
+    fn binding_hub_falls_back_to_flat_settle() {
+        // Hub capacity far below the spoke aggregate: no slack, so the
+        // split must be rejected and the flat (exact) pass used — one
+        // component, hub-fair rates, still matching the oracle.
+        let n = 300;
+        let mut fast = FlowNet::with_mode(ThroughputMode::Fast);
+        let ff = hub_and_spoke(&mut fast, n, 3_000.0);
+        let mut slow = FlowNet::with_mode(ThroughputMode::Slow);
+        let sf = hub_and_spoke(&mut slow, n, 3_000.0);
+        fast.recompute();
+        slow.recompute();
+        assert_eq!(fast.comp_count(), 1, "binding hub must keep one component");
+        for (a, b) in ff.iter().zip(&sf) {
+            let (ra, rb) = (fast.rate_each(*a), slow.rate_each(*b));
+            assert!((ra - rb).abs() < 1e-6, "rate diverged: fast {ra} slow {rb}");
+            assert!((ra - 10.0).abs() < 1e-6, "hub share expected, got {ra}");
+        }
+    }
+
+    #[test]
+    fn small_components_never_split() {
+        // Below the gate the hierarchical path must be dormant even on
+        // a perfectly splittable topology: one component, as before.
+        let n = 10;
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        hub_and_spoke(&mut net, n, 1e6);
+        net.recompute();
+        assert_eq!(net.comp_count(), 1);
+    }
+
+    #[test]
+    fn start_on_a_spoke_reabsorbs_siblings() {
+        // After a split, a start touching only one spoke dirties that
+        // spoke's component; the resettle flood-fill then reaches every
+        // sibling *through the hub* and must absorb their live
+        // components before re-splitting — the I2 exception the fast
+        // settle handles explicitly. Differential against the oracle
+        // through the whole churn.
+        let n = 300;
+        let run = |mode: ThroughputMode| {
+            let mut net = FlowNet::with_mode(mode);
+            hub_and_spoke(&mut net, n, 1e6);
+            net.recompute();
+            // Link ids: hub is 0, spoke i is i+1.
+            net.start(vec![LinkId(1 + 17)], 1, 4_242);
+            net.recompute();
+            run_to_empty(&mut net)
+        };
+        let fd = run(ThroughputMode::Fast);
+        let sd = run(ThroughputMode::Slow);
+        assert_eq!(fd.len(), n + 1);
+        assert_eq!(fd.len(), sd.len());
+        for ((fa, ta), (fb, tb)) in fd.iter().zip(&sd) {
+            assert_eq!(fa, fb);
+            let dt = (ta.secs_f64() - tb.secs_f64()).abs();
+            assert!(dt < 1e-6, "completion diverged: {ta:?} vs {tb:?}");
+        }
+    }
+
+    #[test]
+    fn hub_only_flows_group_alone() {
+        // A flow whose entire path is hub-class joins no spoke group;
+        // it settles as its own singleton with its cap honoured (the
+        // filtered water-fill treats it as pathless, the hub slack
+        // check still bounds it).
+        let n = GIANT_COMPONENT_MIN;
+        let mut net = FlowNet::with_mode(ThroughputMode::Fast);
+        let flows = hub_and_spoke(&mut net, n, 1e9);
+        let hub_only = net.start_capped(
+            vec![super::super::LinkId(0)], // the hub link
+            1,
+            1_000_000,
+            50.0,
+        );
+        net.recompute();
+        assert_eq!(net.comp_count(), n + 1);
+        assert_eq!(net.rate_each(hub_only), 50.0);
+        assert!((net.rate_each(flows[0]) - 100.0).abs() < 1e-6);
+    }
+}

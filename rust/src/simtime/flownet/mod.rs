@@ -49,6 +49,7 @@
 //! paper's measured 21 GB/s naive aggregate at 8K nodes.
 
 mod fast;
+mod hier;
 pub mod model;
 mod slow;
 mod state;

@@ -16,7 +16,7 @@
 //! cleared at O(total links).
 
 use super::state::NetState;
-use super::{FlowId, LinkId};
+use super::{FlowId, LinkClass, LinkId};
 
 /// Per-touched-link accumulator for one assignment pass.
 struct Acc {
@@ -30,16 +30,38 @@ struct Acc {
 /// link-connected components of the active set). Flows must be synced
 /// before rates are overwritten; pathless flows get their cap.
 pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
+    assign_rates_filtered(st, flows, None)
+}
+
+/// [`assign_rates`] restricted to the links whose class `skip_class`
+/// does **not** match: matching links contribute no capacity constraint
+/// and collect no load, and a flow whose entire path is skipped is
+/// treated as pathless (rate = its cap). The hierarchical settle uses
+/// this to water-fill one spoke group at a time with the shared hub
+/// links excluded, then separately verifies the hubs have slack — the
+/// exactness condition for the split (see `hier`). With `None` the
+/// behaviour is byte-identical to the unfiltered pass.
+pub(crate) fn assign_rates_filtered(
+    st: &mut NetState,
+    flows: &[FlowId],
+    skip_class: Option<fn(LinkClass) -> bool>,
+) {
     st.stamp += 1;
     let stamp = st.stamp;
     // Split-borrow the state so link scratch and slot reads don't alias.
     let NetState { links, slots, link_stamp, link_slot, .. } = st;
+    let skip = |l: usize| skip_class.is_some_and(|s| s(links[l].class));
 
     // Collect the touched links, in ascending link order so bottleneck
     // selection is deterministic and identical to a whole-network scan.
+    // Skipped links are never stamped, so `link_slot` holds garbage for
+    // them — every later path walk must apply the same filter.
     let mut accs: Vec<Acc> = Vec::new();
     for &id in flows {
         for &LinkId(l) in &slots[id.idx()].flow.path {
+            if skip(l) {
+                continue;
+            }
             if link_stamp[l] != stamp {
                 link_stamp[l] = stamp;
                 accs.push(Acc { link: l as u32, cap_left: 0.0, members_left: 0.0, streams: 0.0 });
@@ -55,6 +77,9 @@ pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
     for &id in flows {
         let f = &slots[id.idx()].flow;
         for &LinkId(l) in &f.path {
+            if skip(l) {
+                continue;
+            }
             accs[link_slot[l] as usize].streams += f.members as f64;
         }
     }
@@ -66,9 +91,11 @@ pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
     let mut unfrozen: Vec<FlowId> = Vec::with_capacity(flows.len());
     for &id in flows {
         let f = &mut slots[id.idx()].flow;
-        if f.path.is_empty() {
+        if f.path.is_empty() || f.path.iter().all(|&LinkId(l)| skip(l)) {
             // An in-RAM copy or per-process local stream; rate is its
-            // cap (INFINITY = instantaneous).
+            // cap (INFINITY = instantaneous). Under a filter, a flow
+            // whose links are all skipped is constrained by nothing in
+            // this pass — the caller's feasibility check owns it.
             f.rate_each = f.cap_each;
             continue;
         }
@@ -76,6 +103,9 @@ pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
         unfrozen.push(id);
         let members = f.members as f64;
         for &LinkId(l) in &f.path {
+            if skip(l) {
+                continue;
+            }
             accs[link_slot[l] as usize].members_left += members;
         }
     }
@@ -110,6 +140,9 @@ pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
                     slots[id.idx()].flow.rate_each = cap;
                     let members = slots[id.idx()].flow.members as f64;
                     for &LinkId(l) in &slots[id.idx()].flow.path {
+                        if skip(l) {
+                            continue;
+                        }
                         let a = &mut accs[link_slot[l] as usize];
                         a.cap_left -= cap * members;
                         a.members_left -= members;
@@ -130,6 +163,9 @@ pub(crate) fn assign_rates(st: &mut NetState, flows: &[FlowId]) {
                     slots[id.idx()].flow.rate_each = share;
                     let members = slots[id.idx()].flow.members as f64;
                     for &LinkId(l) in &slots[id.idx()].flow.path {
+                        if skip(l) {
+                            continue;
+                        }
                         let a = &mut accs[link_slot[l] as usize];
                         a.cap_left -= share * members;
                         a.members_left -= members;

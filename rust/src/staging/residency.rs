@@ -443,6 +443,38 @@ impl Residency {
         let paths = self.paths_of(id);
         !paths.is_empty() && paths.iter().all(|p| core.nodes.exists_on(node, p))
     }
+
+    /// Resident bookkeeping bytes this manager holds (same accounting
+    /// convention as [`crate::storage::NodeStores::state_bytes`]: heap
+    /// payload plus a rough 16 B/entry structural overhead per map
+    /// node). A long-lived serving core binds thousands of datasets;
+    /// this is the number that must stay proportional to *bound*
+    /// datasets, not to stages performed.
+    pub fn state_bytes(&self) -> u64 {
+        use std::mem::size_of;
+        let entry = |v: usize| (v + size_of::<DatasetId>() + 16) as u64;
+        let strings = |v: &Vec<String>| -> u64 {
+            v.capacity() as u64 * size_of::<String>() as u64
+                + v.iter().map(|s| s.capacity() as u64).sum::<u64>()
+        };
+        let transfers = |v: &Vec<Transfer>| -> u64 {
+            v.capacity() as u64 * size_of::<Transfer>() as u64
+                + v.iter().map(|t| (t.src.capacity() + t.dst.capacity()) as u64).sum::<u64>()
+        };
+        self.bindings.len() as u64 * entry(size_of::<HookSpec>())
+            + self.delivered.values().map(|v| entry(0) + strings(v)).sum::<u64>()
+            + self.pinned_paths.values().map(|v| entry(0) + strings(v)).sum::<u64>()
+            + self
+                .in_flight
+                .values()
+                .map(|m| {
+                    entry(size_of::<IncrementalManifest>())
+                        + transfers(&m.staged)
+                        + transfers(&m.promoted)
+                        + transfers(&m.hits)
+                })
+                .sum::<u64>()
+    }
 }
 
 #[cfg(test)]
@@ -535,6 +567,31 @@ mod tests {
         assert!(!core.nodes.is_pinned("/tmp/ds/f000.bin"));
         // The engine kept the residency mirror in sync throughout.
         assert!(core.residency.mirrors(&core.nodes));
+    }
+
+    #[test]
+    fn manager_state_tracks_bindings_not_stage_count() {
+        let (mut core, topo, spec) = setup(4, 6);
+        let comm = crate::mpisim::Comm::leader(&topo.spec);
+        let mut catalog = Catalog::new();
+        let id = catalog.register("ds", "/projects/ds", 6, 6 * MB);
+        let mut res = Residency::new();
+        assert_eq!(res.state_bytes(), 0);
+        res.bind(id, spec);
+        let bound = res.state_bytes();
+        assert!(bound > 0);
+        res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        let staged = res.state_bytes();
+        assert!(staged > bound, "delivered/pinned paths are accounted");
+        // Re-staging the same dataset must not grow the footprint: the
+        // serving loop stages on every re-open, and a footprint that
+        // scaled with stage count would leak on a long-lived core.
+        for _ in 0..5 {
+            res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+        }
+        assert_eq!(res.state_bytes(), staged, "footprint grew with stage count");
+        res.unpin_dataset(&mut core, id);
+        assert!(res.state_bytes() < staged, "released pins leave the books");
     }
 
     #[test]

@@ -52,7 +52,7 @@ use crate::mpisim::Comm;
 use crate::pfs::{Blob, GpfsParams};
 use crate::simtime::flownet::ThroughputMode;
 use crate::staging::{HookSpec, Residency};
-use crate::units::{Duration, SimTime, GB, MB};
+use crate::units::{Duration, SimTime, StateBytes, GB, MB};
 use crate::util::prng::Pcg64;
 
 /// Tag namespace for staging plans the service submits (one per
@@ -386,6 +386,13 @@ pub struct ServeOutcome {
     pub reads: ReadStats,
     pub peak_queue: usize,
     pub sessions: usize,
+    /// Scheduler bookkeeping resident after the machine drained, over
+    /// sessions served — a long-lived serving core must hold a few
+    /// hundred bytes per *completed* session (stats headers), never
+    /// retained task graphs.
+    pub sched_state: StateBytes,
+    /// Residency-manager bookkeeping over catalogued datasets.
+    pub residency_state: StateBytes,
 }
 
 /// Run one serve scenario on an Orthros-class cluster of `nodes` fat
@@ -526,6 +533,8 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         reads,
         peak_queue: svc.peak_queue,
         sessions: n,
+        sched_state: StateBytes::new(svc.sched.state_bytes(), svc.sched.session_count() as u64),
+        residency_state: StateBytes::new(svc.res.state_bytes(), cfg.datasets as u64),
     }
 }
 
@@ -602,6 +611,15 @@ mod tests {
         assert!(out.staged_bytes <= 3 * per_ds, "{}", out.staged_bytes);
         assert!(out.percentiles.p50 <= out.percentiles.p95);
         assert!(out.percentiles.p95 <= out.percentiles.p99);
+        // Completed sessions released their graphs: the drained core
+        // keeps only per-session stats headers.
+        assert_eq!(out.sched_state.units, 10);
+        assert!(
+            out.sched_state.per_unit() < 1024,
+            "resident {} per served session",
+            out.sched_state.per_unit()
+        );
+        assert!(out.residency_state.total > 0);
     }
 
     #[test]

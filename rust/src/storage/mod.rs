@@ -1,11 +1,16 @@
 //! The multi-tier node-local storage subsystem.
 //!
 //! Extracted from `cluster.rs` when the single RAM-disk staging tier
-//! grew an SSD demotion tier underneath it. Three layers:
+//! grew an SSD demotion tier underneath it. Four layers:
 //!
 //! - [`tier`] — [`StorageTier`]: the levels of the staging hierarchy
 //!   (node RAM, node SSD, the shared GPFS backing store) and the
 //!   per-node [`TierBudgets`] a machine grants them.
+//! - [`intern`] — [`PathInterner`]: dense path ↔ `u32` id interning.
+//!   Both the data plane and the mirror key their per-path state on
+//!   dense ids so fleet-scale hot paths (coverage queries, cache-hit
+//!   tests, residency probes) are array indexes, not string-keyed
+//!   BTree walks.
 //! - [`node_stores`] — [`NodeStores`]: the data plane. A
 //!   capacity-managed RAM tier whose LRU eviction **demotes** whole
 //!   replicas to the per-node SSD tier (when the machine models one)
@@ -26,10 +31,12 @@
 //! `cluster` re-exports this module's surface, so pre-extraction
 //! imports (`crate::cluster::NodeStores`, ...) keep compiling.
 
+pub mod intern;
 pub mod node_stores;
 pub mod residency_table;
 pub mod tier;
 
+pub use intern::PathInterner;
 pub use node_stores::{NodeStores, PromoteOutcome, ReplicaSnapshot, StoreWrite};
 pub use residency_table::{Eviction, ResidencyTable};
 pub use tier::{StorageTier, TierBudgets};

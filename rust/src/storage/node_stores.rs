@@ -31,16 +31,30 @@
 //!   cheap local re-stage path), with the same capacity-checked
 //!   admission — RAM victims it displaces demote as usual.
 //!
-//! Enumeration is deterministic (BTreeMap): glob results, transfer
-//! lists, and LRU victim order are reproducible across runs. Per-path
-//! coverage is memoized beside the replica list, so the scheduler's
-//! placement loop ([`NodeStores::coverage_of`]) is a borrow, not a
-//! rescan.
+//! Fleet-scale layout: paths are interned to dense `u32` ids
+//! ([`super::intern::PathInterner`]) and each tier's per-path state
+//! lives in a `Vec<Option<PathEntry>>` indexed by id, so the
+//! scheduler's placement loop ([`NodeStores::coverage_of_id`]) and the
+//! cache-hit test are array indexes, not string-keyed BTree walks. The
+//! string surface remains: it resolves through the interner once and
+//! answers identically (the differential suite in
+//! `tests/property_sched_scale.rs` holds the two surfaces equal).
+//!
+//! Enumeration is deterministic: `paths_on`/`dump` resolve ids and
+//! sort by path, reproducing the BTreeMap-era ordering exactly. LRU
+//! victim order never depended on enumeration order — the
+//! `(last_use, seq)` key is unique across paths (ties only arise
+//! between residuals of one split replica, which stay lo-sorted within
+//! their entry) — so victim choice is bit-identical to the string
+//! era. Per-path coverage is memoized beside the replica list, so the
+//! scheduler's placement loop is a borrow, not a rescan.
 
 use std::collections::BTreeMap;
+use std::mem::size_of;
 
 use crate::pfs::Blob;
 
+use super::intern::PathInterner;
 use super::residency_table::Eviction;
 use super::tier::StorageTier;
 
@@ -129,23 +143,28 @@ impl PathEntry {
     }
 }
 
-type Pins = BTreeMap<String, u32>;
+/// Pin refcounts, keyed by interned path id.
+type Pins = BTreeMap<u32, u32>;
 
 /// Victims a tier displaced for one write, with their replicas (blobs
 /// intact so the caller can demote them).
 enum TierWrite {
-    Stored { victims: Vec<(String, Replica)> },
+    Stored { victims: Vec<(u32, Replica)> },
     Rejected { short_bytes: u64 },
 }
 
 /// One tier's replica store: capacity accounting, LRU displacement,
-/// deterministic enumeration. The LRU clock and insertion sequence are
-/// shared across tiers (owned by [`NodeStores`]) so demotions order
-/// correctly against ordinary writes.
+/// deterministic enumeration. Per-path state is a dense `Vec` indexed
+/// by interned path id (`None` = path not resident in this tier). The
+/// LRU clock and insertion sequence are shared across tiers (owned by
+/// [`NodeStores`]) so demotions order correctly against ordinary
+/// writes.
 #[derive(Debug, Default)]
 struct TierStore {
-    /// path -> replicas + memoized coverage.
-    entries: BTreeMap<String, PathEntry>,
+    /// path id -> replicas + memoized coverage.
+    entries: Vec<Option<PathEntry>>,
+    /// Number of `Some` slots (== distinct resident paths).
+    occupied: usize,
     /// Uniform per-node byte budget; None = unbounded (RAM) or tier
     /// absent (SSD).
     capacity: Option<u64>,
@@ -154,6 +173,41 @@ struct TierStore {
 }
 
 impl TierStore {
+    fn entry(&self, id: u32) -> Option<&PathEntry> {
+        self.entries.get(id as usize).and_then(Option::as_ref)
+    }
+
+    fn entry_mut(&mut self, id: u32) -> Option<&mut PathEntry> {
+        self.entries.get_mut(id as usize).and_then(Option::as_mut)
+    }
+
+    /// Remove and return the entry of `id`, if resident.
+    fn take_entry(&mut self, id: u32) -> Option<PathEntry> {
+        let e = self.entries.get_mut(id as usize).and_then(Option::take);
+        if e.is_some() {
+            self.occupied -= 1;
+        }
+        e
+    }
+
+    /// Install `e` at `id` (the slot must be vacant).
+    fn put_entry(&mut self, id: u32, e: PathEntry) {
+        if id as usize >= self.entries.len() {
+            self.entries.resize_with(id as usize + 1, || None);
+        }
+        debug_assert!(self.entries[id as usize].is_none());
+        self.entries[id as usize] = Some(e);
+        self.occupied += 1;
+    }
+
+    /// All resident entries in id order.
+    fn iter_entries(&self) -> impl Iterator<Item = (u32, &PathEntry)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i as u32, e)))
+    }
+
     /// Capacity-checked write. On success returns the displaced
     /// victims (whole replicas, LRU order) so the caller can demote
     /// them; rejection leaves the tier byte-for-byte untouched.
@@ -164,7 +218,7 @@ impl TierStore {
         &mut self,
         lo: u32,
         hi: u32,
-        path: &str,
+        id: u32,
         data: Blob,
         pinned: &Pins,
         clock: &mut u64,
@@ -184,9 +238,8 @@ impl TierStore {
             if !pinned.is_empty() {
                 for n in lo..=hi {
                     let kept: u64 = self
-                        .entries
-                        .iter()
-                        .filter(|(p, _)| p.as_str() != path && pinned.contains_key(p.as_str()))
+                        .iter_entries()
+                        .filter(|&(p, _)| p != id && pinned.contains_key(&p))
                         .flat_map(|(_, e)| e.reps.iter())
                         .filter(|r| r.covers(n))
                         .map(|r| r.blob.len())
@@ -203,23 +256,22 @@ impl TierStore {
             // where it matters.
             loop {
                 let over: Vec<u32> = (lo..=hi)
-                    .filter(|&n| self.used_after_overwrite(n, path) + need > cap)
+                    .filter(|&n| self.used_after_overwrite(n, id) + need > cap)
                     .collect();
                 if over.is_empty() {
                     break;
                 }
                 let victim = self
-                    .entries
-                    .iter()
-                    .filter(|(p, _)| p.as_str() != path && !pinned.contains_key(p.as_str()))
+                    .iter_entries()
+                    .filter(|&(p, _)| p != id && !pinned.contains_key(&p))
                     .flat_map(|(p, e)| e.reps.iter().map(move |r| (p, r)))
                     .filter(|(_, r)| over.iter().any(|&n| r.covers(n)))
-                    .min_by_key(|(_, r)| (r.last_use, r.seq))
-                    .map(|(p, r)| (p.clone(), r.lo));
-                let (vpath, vlo) =
+                    .min_by_key(|&(_, r)| (r.last_use, r.seq))
+                    .map(|(p, r)| (p, r.lo));
+                let (vid, vlo) =
                     victim.expect("feasibility check guaranteed an evictable victim");
-                let rep = self.remove_replica(&vpath, vlo);
-                victims.push((vpath, rep));
+                let rep = self.remove_replica(vid, vlo);
+                victims.push((vid, rep));
             }
         }
         // Replace the overlapped portion of older same-path replicas
@@ -227,7 +279,7 @@ impl TierStore {
         *clock += 1;
         *seq += 1;
         let (now, sq) = (*clock, *seq);
-        let mut entry = self.entries.remove(path).unwrap_or_default();
+        let mut entry = self.take_entry(id).unwrap_or_default();
         let mut out: Vec<Replica> = Vec::with_capacity(entry.reps.len() + 1);
         for r in entry.reps.drain(..) {
             if !r.overlaps(lo, hi) {
@@ -257,14 +309,14 @@ impl TierStore {
         out.sort_by_key(|r| r.lo);
         entry.reps = out;
         entry.refresh_coverage();
-        self.entries.insert(path.to_string(), entry);
+        self.put_entry(id, entry);
         TierWrite::Stored { victims }
     }
 
-    /// Remove every replica of `path` (forced purge). Returns the
+    /// Remove every replica of `id` (forced purge). Returns the
     /// removed replicas sorted by `lo`.
-    fn purge_path(&mut self, path: &str) -> Vec<Replica> {
-        let Some(entry) = self.entries.remove(path) else {
+    fn purge_path(&mut self, id: u32) -> Vec<Replica> {
+        let Some(entry) = self.take_entry(id) else {
             return Vec::new();
         };
         for r in &entry.reps {
@@ -278,10 +330,10 @@ impl TierStore {
         entry.reps
     }
 
-    /// Remove the portions of `path`'s replicas inside `lo..=hi`,
+    /// Remove the portions of `id`'s replicas inside `lo..=hi`,
     /// splitting stragglers (promotion consumed that range).
-    fn remove_range(&mut self, lo: u32, hi: u32, path: &str) {
-        let Some(mut entry) = self.entries.remove(path) else {
+    fn remove_range(&mut self, lo: u32, hi: u32, id: u32) {
+        let Some(mut entry) = self.take_entry(id) else {
             return;
         };
         let mut out: Vec<Replica> = Vec::with_capacity(entry.reps.len() + 1);
@@ -307,15 +359,15 @@ impl TierStore {
         if !out.is_empty() {
             entry.reps = out;
             entry.refresh_coverage();
-            self.entries.insert(path.to_string(), entry);
+            self.put_entry(id, entry);
         }
     }
 
     /// Usage of `n` once the same-path replica covering it (if any) is
     /// replaced by the pending write.
-    fn used_after_overwrite(&self, n: u32, path: &str) -> u64 {
+    fn used_after_overwrite(&self, n: u32, id: u32) -> u64 {
         let mut u = self.used.get(&n).copied().unwrap_or(0);
-        if let Some(e) = self.entries.get(path) {
+        if let Some(e) = self.entry(id) {
             if let Some(i) = e.covering_idx(n) {
                 u -= e.reps[i].blob.len();
             }
@@ -323,15 +375,16 @@ impl TierStore {
         u
     }
 
-    /// Remove the replica of `path` starting at node `lo` (unique:
+    /// Remove the replica of `id` starting at node `lo` (unique:
     /// replicas of one path are node-disjoint).
-    fn remove_replica(&mut self, path: &str, lo: u32) -> Replica {
-        let e = self.entries.get_mut(path).expect("victim path present");
+    fn remove_replica(&mut self, id: u32, lo: u32) -> Replica {
+        let e = self.entry_mut(id).expect("victim path present");
         let idx = e.reps.iter().position(|r| r.lo == lo).expect("victim replica present");
         let r = e.reps.remove(idx);
         e.refresh_coverage();
-        if e.reps.is_empty() {
-            self.entries.remove(path);
+        let now_empty = e.reps.is_empty();
+        if now_empty {
+            self.take_entry(id);
         }
         let b = r.blob.len();
         if b > 0 {
@@ -350,8 +403,8 @@ impl TierStore {
         }
     }
 
-    fn read(&self, node: u32, path: &str) -> Option<&Blob> {
-        let e = self.entries.get(path)?;
+    fn read(&self, node: u32, id: u32) -> Option<&Blob> {
+        let e = self.entry(id)?;
         e.covering_idx(node).map(|i| &e.reps[i].blob)
     }
 
@@ -359,14 +412,14 @@ impl TierStore {
         self.used.get(&node).copied().unwrap_or(0)
     }
 
-    fn coverage_of(&self, path: &str) -> &[(u32, u32)] {
-        self.entries.get(path).map(|e| e.coverage.as_slice()).unwrap_or(&[])
+    fn coverage_of(&self, id: u32) -> &[(u32, u32)] {
+        self.entry(id).map(|e| e.coverage.as_slice()).unwrap_or(&[])
     }
 
-    /// True when every node of `lo..=hi` holds `path` with content
+    /// True when every node of `lo..=hi` holds `id` with content
     /// identical to `want`.
-    fn resident_matches(&self, lo: u32, hi: u32, path: &str, want: &Blob) -> bool {
-        let Some(e) = self.entries.get(path) else {
+    fn resident_matches(&self, lo: u32, hi: u32, id: u32, want: &Blob) -> bool {
+        let Some(e) = self.entry(id) else {
             return false;
         };
         let mut covered = 0u64;
@@ -384,38 +437,52 @@ impl TierStore {
 
     /// The single blob covering all of `lo..=hi` when every
     /// overlapping replica agrees on content; None otherwise.
-    fn uniform_content(&self, lo: u32, hi: u32, path: &str) -> Option<Blob> {
-        let e = self.entries.get(path)?;
+    fn uniform_content(&self, lo: u32, hi: u32, id: u32) -> Option<Blob> {
+        let e = self.entry(id)?;
         let first = e.covering_idx(lo).map(|i| e.reps[i].blob.clone())?;
-        self.resident_matches(lo, hi, path, &first).then_some(first)
+        self.resident_matches(lo, hi, id, &first).then_some(first)
     }
 
-    fn paths_on(&self, node: u32) -> Vec<String> {
+    /// Ids of paths visible to `node`, in id order (the caller
+    /// resolves and sorts by path for the deterministic surface).
+    fn ids_on(&self, node: u32) -> Vec<u32> {
         // Memoized coverage + binary search: O(paths x log replicas)
         // per query, never a replica rescan.
-        self.entries
-            .iter()
+        self.iter_entries()
             .filter(|(_, e)| e.covering_idx(node).is_some())
-            .map(|(k, _)| k.clone())
+            .map(|(id, _)| id)
             .collect()
     }
 
-    fn dump(&self) -> Vec<(String, ReplicaSnapshot)> {
-        self.entries
-            .iter()
-            .map(|(p, e)| {
-                (p.clone(), e.reps.iter().map(|r| (r.lo, r.hi, r.blob.len())).collect())
-            })
+    fn dump(&self) -> Vec<(u32, ReplicaSnapshot)> {
+        self.iter_entries()
+            .map(|(id, e)| (id, e.reps.iter().map(|r| (r.lo, r.hi, r.blob.len())).collect()))
             .collect()
+    }
+
+    /// Resident bytes of this tier's bookkeeping (slot table, replica
+    /// lists, memoized coverage, usage map) — simulated blob payload
+    /// excluded, it is what the store *models*, not what it costs.
+    fn state_bytes(&self) -> u64 {
+        let mut b = self.entries.capacity() as u64 * size_of::<Option<PathEntry>>() as u64;
+        for e in self.entries.iter().flatten() {
+            b += e.reps.capacity() as u64 * size_of::<Replica>() as u64;
+            b += e.coverage.capacity() as u64 * size_of::<(u32, u32)>() as u64;
+        }
+        b + self.used.len() as u64 * (size_of::<(u32, u64)>() + 16) as u64
     }
 }
 
 /// The tiered node-local storage data plane: a RAM tier ("/tmp" on
 /// every node) whose eviction demotes to a per-node SSD tier, backed
 /// by the shared parallel filesystem. See the module docs for the full
-/// semantics; the un-suffixed query surface reads the RAM tier.
+/// semantics; the un-suffixed query surface reads the RAM tier, and
+/// the `_id` surface answers the same questions for pre-interned paths
+/// without touching a string.
 #[derive(Debug, Default)]
 pub struct NodeStores {
+    /// Path ↔ dense id bijection shared by both tiers and the pin set.
+    interner: PathInterner,
     ram: TierStore,
     ssd: TierStore,
     /// Paths exempt from displacement in **both** tiers, refcounted:
@@ -450,6 +517,28 @@ impl NodeStores {
         }
     }
 
+    /// Intern `path`, returning its dense id for the `_id` fast paths.
+    /// Idempotent; ids are stable for the life of the store.
+    pub fn intern_path(&mut self, path: &str) -> u32 {
+        self.interner.intern(path)
+    }
+
+    /// Id of `path` if it has ever been interned (written, pinned, or
+    /// explicitly interned).
+    pub fn path_id(&self, path: &str) -> Option<u32> {
+        self.interner.get(path)
+    }
+
+    /// The path behind an id issued by [`NodeStores::intern_path`].
+    pub fn resolve_path(&self, id: u32) -> &str {
+        self.interner.resolve(id)
+    }
+
+    /// Number of paths ever interned (resident or not).
+    pub fn interned_paths(&self) -> usize {
+        self.interner.len()
+    }
+
     /// Set or clear the uniform per-node RAM capacity. Enforced on
     /// subsequent writes; existing contents are left as they are.
     pub fn set_capacity(&mut self, cap: Option<u64>) {
@@ -473,21 +562,26 @@ impl NodeStores {
     /// Exempt `path` from displacement (both tiers) until a matching
     /// [`NodeStores::unpin`]. Refcounted: pin twice, unpin twice.
     pub fn pin(&mut self, path: impl Into<String>) {
-        *self.pinned.entry(path.into()).or_insert(0) += 1;
+        let path = path.into();
+        let id = self.interner.intern(&path);
+        *self.pinned.entry(id).or_insert(0) += 1;
     }
 
     /// Release one pin of `path` (no-op when not pinned).
     pub fn unpin(&mut self, path: &str) {
-        if let Some(n) = self.pinned.get_mut(path) {
+        let Some(id) = self.interner.get(path) else {
+            return;
+        };
+        if let Some(n) = self.pinned.get_mut(&id) {
             *n -= 1;
             if *n == 0 {
-                self.pinned.remove(path);
+                self.pinned.remove(&id);
             }
         }
     }
 
     pub fn is_pinned(&self, path: &str) -> bool {
-        self.pinned.contains_key(path)
+        self.interner.get(path).is_some_and(|id| self.pinned.contains_key(&id))
     }
 
     /// Refresh the LRU clock of the RAM replica covering
@@ -503,7 +597,26 @@ impl NodeStores {
     pub fn touch_tier(&mut self, tier: StorageTier, node: u32, path: &str) {
         self.clock += 1;
         let now = self.clock;
-        if let Some(e) = self.tier_mut(tier).entries.get_mut(path) {
+        let Some(id) = self.interner.get(path) else {
+            return;
+        };
+        if let Some(e) = self.tier_mut(tier).entry_mut(id) {
+            if let Some(i) = e.covering_idx(node) {
+                e.reps[i].last_use = now;
+            }
+        }
+    }
+
+    /// [`NodeStores::touch`] by pre-interned id (RAM tier).
+    pub fn touch_id(&mut self, node: u32, id: u32) {
+        self.touch_tier_id(StorageTier::Ram, node, id);
+    }
+
+    /// [`NodeStores::touch_tier`] by pre-interned id.
+    pub fn touch_tier_id(&mut self, tier: StorageTier, node: u32, id: u32) {
+        self.clock += 1;
+        let now = self.clock;
+        if let Some(e) = self.tier_mut(tier).entry_mut(id) {
             if let Some(i) = e.covering_idx(node) {
                 e.reps[i].last_use = now;
             }
@@ -517,7 +630,10 @@ impl NodeStores {
     pub fn touch_range(&mut self, lo: u32, hi: u32, path: &str) {
         self.clock += 1;
         let now = self.clock;
-        if let Some(e) = self.ram.entries.get_mut(path) {
+        let Some(id) = self.interner.get(path) else {
+            return;
+        };
+        if let Some(e) = self.ram.entry_mut(id) {
             for r in e.reps.iter_mut().filter(|r| r.overlaps(lo, hi)) {
                 r.last_use = now;
             }
@@ -529,12 +645,29 @@ impl NodeStores {
     /// the scheduler's placement inner loop can call it per task
     /// without allocation.
     pub fn coverage_of(&self, path: &str) -> &[(u32, u32)] {
-        self.ram.coverage_of(path)
+        match self.interner.get(path) {
+            Some(id) => self.ram.coverage_of(id),
+            None => &[],
+        }
     }
 
     /// [`NodeStores::coverage_of`] for an arbitrary managed tier.
     pub fn coverage_of_tier(&self, tier: StorageTier, path: &str) -> &[(u32, u32)] {
-        self.tier(tier).coverage_of(path)
+        match self.interner.get(path) {
+            Some(id) => self.tier(tier).coverage_of(id),
+            None => &[],
+        }
+    }
+
+    /// [`NodeStores::coverage_of`] by pre-interned id: a direct array
+    /// index, the scheduler's fleet-scale placement path.
+    pub fn coverage_of_id(&self, id: u32) -> &[(u32, u32)] {
+        self.ram.coverage_of(id)
+    }
+
+    /// [`NodeStores::coverage_of_tier`] by pre-interned id.
+    pub fn coverage_of_tier_id(&self, tier: StorageTier, id: u32) -> &[(u32, u32)] {
+        self.tier(tier).coverage_of(id)
     }
 
     /// Write `data` at `path` on every node in `lo..=hi`, panicking if
@@ -573,10 +706,16 @@ impl NodeStores {
         path: &str,
         data: Blob,
     ) -> StoreWrite {
+        let id = self.interner.intern(path);
+        self.write_range_evicting_id(lo, hi, id, data)
+    }
+
+    /// [`NodeStores::write_range_evicting`] by pre-interned id.
+    pub fn write_range_evicting_id(&mut self, lo: u32, hi: u32, id: u32, data: Blob) -> StoreWrite {
         match self.ram.write_range_evicting(
             lo,
             hi,
-            path,
+            id,
             data,
             &self.pinned,
             &mut self.clock,
@@ -592,9 +731,9 @@ impl NodeStores {
     /// Demote RAM victims into the SSD tier (where enabled and
     /// admissible), producing the eviction records: each RAM victim
     /// followed by the SSD discards its demotion caused.
-    fn demote_victims(&mut self, victims: Vec<(String, Replica)>) -> Vec<Eviction> {
+    fn demote_victims(&mut self, victims: Vec<(u32, Replica)>) -> Vec<Eviction> {
         let mut out = Vec::with_capacity(victims.len());
-        for (vpath, rep) in victims {
+        for (vid, rep) in victims {
             let bytes = rep.blob.len();
             let (lo, hi) = (rep.lo, rep.hi);
             let mut cascade = Vec::new();
@@ -603,7 +742,7 @@ impl NodeStores {
                 match self.ssd.write_range_evicting(
                     lo,
                     hi,
-                    &vpath,
+                    vid,
                     rep.blob,
                     &self.pinned,
                     &mut self.clock,
@@ -616,10 +755,17 @@ impl NodeStores {
                     TierWrite::Rejected { .. } => {}
                 }
             }
-            out.push(Eviction { path: vpath, lo, hi, bytes, tier: StorageTier::Ram, demoted });
-            for (cpath, crep) in cascade {
+            out.push(Eviction {
+                path: self.interner.resolve(vid).to_string(),
+                lo,
+                hi,
+                bytes,
+                tier: StorageTier::Ram,
+                demoted,
+            });
+            for (cid, crep) in cascade {
                 out.push(Eviction {
-                    path: cpath,
+                    path: self.interner.resolve(cid).to_string(),
                     lo: crep.lo,
                     hi: crep.hi,
                     bytes: crep.blob.len(),
@@ -637,14 +783,22 @@ impl NodeStores {
     /// capacity-checked write (its victims demote as usual), and on
     /// success the promoted portion leaves the SSD tier.
     pub fn promote_range(&mut self, lo: u32, hi: u32, path: &str) -> PromoteOutcome {
-        let Some(blob) = self.ssd.uniform_content(lo, hi, path) else {
+        let Some(id) = self.interner.get(path) else {
+            return PromoteOutcome::Missing;
+        };
+        self.promote_range_id(lo, hi, id)
+    }
+
+    /// [`NodeStores::promote_range`] by pre-interned id.
+    pub fn promote_range_id(&mut self, lo: u32, hi: u32, id: u32) -> PromoteOutcome {
+        let Some(blob) = self.ssd.uniform_content(lo, hi, id) else {
             return PromoteOutcome::Missing;
         };
         let bytes = blob.len();
-        match self.write_range_evicting(lo, hi, path, blob) {
+        match self.write_range_evicting_id(lo, hi, id, blob) {
             StoreWrite::Rejected { short_bytes } => PromoteOutcome::Rejected { short_bytes },
             StoreWrite::Stored { evicted } => {
-                self.ssd.remove_range(lo, hi, path);
+                self.ssd.remove_range(lo, hi, id);
                 PromoteOutcome::Promoted { bytes, evicted }
             }
         }
@@ -654,7 +808,10 @@ impl NodeStores {
     /// (the path is being destroyed — deleted upstream, torn down by a
     /// test — so nothing demotes). No-op when pinned.
     pub fn evict_path(&mut self, path: &str) -> Vec<Eviction> {
-        if self.pinned.contains_key(path) {
+        let Some(id) = self.interner.get(path) else {
+            return Vec::new();
+        };
+        if self.pinned.contains_key(&id) {
             return Vec::new();
         }
         let mut out = Vec::new();
@@ -662,7 +819,7 @@ impl NodeStores {
             (StorageTier::Ram, &mut self.ram),
             (StorageTier::Ssd, &mut self.ssd),
         ] {
-            for r in store.purge_path(path) {
+            for r in store.purge_path(id) {
                 out.push(Eviction {
                     path: path.to_string(),
                     lo: r.lo,
@@ -678,12 +835,24 @@ impl NodeStores {
 
     /// Read `path` as seen by `node` (RAM tier).
     pub fn read(&self, node: u32, path: &str) -> Option<&Blob> {
-        self.ram.read(node, path)
+        let id = self.interner.get(path)?;
+        self.ram.read(node, id)
     }
 
     /// Read `path` as seen by `node` in an arbitrary managed tier.
     pub fn read_tier(&self, tier: StorageTier, node: u32, path: &str) -> Option<&Blob> {
-        self.tier(tier).read(node, path)
+        let id = self.interner.get(path)?;
+        self.tier(tier).read(node, id)
+    }
+
+    /// [`NodeStores::read`] by pre-interned id.
+    pub fn read_id(&self, node: u32, id: u32) -> Option<&Blob> {
+        self.ram.read(node, id)
+    }
+
+    /// [`NodeStores::read_tier`] by pre-interned id.
+    pub fn read_tier_id(&self, tier: StorageTier, node: u32, id: u32) -> Option<&Blob> {
+        self.tier(tier).read(node, id)
     }
 
     pub fn exists_on(&self, node: u32, path: &str) -> bool {
@@ -705,7 +874,9 @@ impl NodeStores {
     /// (a stale replica, updated on the shared FS since staging, fails
     /// the checksum and is restaged).
     pub fn resident_matches(&self, lo: u32, hi: u32, path: &str, want: &Blob) -> bool {
-        self.ram.resident_matches(lo, hi, path, want)
+        self.interner
+            .get(path)
+            .is_some_and(|id| self.ram.resident_matches(lo, hi, id, want))
     }
 
     /// [`NodeStores::resident_matches`] against an arbitrary managed
@@ -718,42 +889,72 @@ impl NodeStores {
         path: &str,
         want: &Blob,
     ) -> bool {
-        self.tier(tier).resident_matches(lo, hi, path, want)
+        self.interner
+            .get(path)
+            .is_some_and(|id| self.tier(tier).resident_matches(lo, hi, id, want))
     }
 
     /// Number of distinct paths RAM-resident anywhere.
     pub fn path_count(&self) -> usize {
-        self.ram.entries.len()
+        self.ram.occupied
     }
 
     /// Number of distinct paths resident in a managed tier.
     pub fn path_count_tier(&self, tier: StorageTier) -> usize {
-        self.tier(tier).entries.len()
+        self.tier(tier).occupied
     }
 
-    /// Paths RAM-visible to `node`, in sorted order by construction
-    /// (deterministic enumeration for the gather collective's local
-    /// directory listing and the hook's transfer lists).
+    /// Paths RAM-visible to `node`, sorted (deterministic enumeration
+    /// for the gather collective's local directory listing and the
+    /// hook's transfer lists).
     pub fn paths_on(&self, node: u32) -> Vec<String> {
-        self.ram.paths_on(node)
+        let mut v: Vec<String> = self
+            .ram
+            .ids_on(node)
+            .into_iter()
+            .map(|id| self.interner.resolve(id).to_string())
+            .collect();
+        v.sort();
+        v
     }
 
     /// Deterministic RAM snapshot: (path, [(lo, hi, per-node bytes)]),
     /// paths sorted, replicas sorted by `lo`. Test/mirror support.
     pub fn dump(&self) -> Vec<(String, ReplicaSnapshot)> {
-        self.ram.dump()
+        self.dump_tier(StorageTier::Ram)
     }
 
     /// [`NodeStores::dump`] for an arbitrary managed tier.
     pub fn dump_tier(&self, tier: StorageTier) -> Vec<(String, ReplicaSnapshot)> {
-        self.tier(tier).dump()
+        let mut v: Vec<(String, ReplicaSnapshot)> = self
+            .tier(tier)
+            .dump()
+            .into_iter()
+            .map(|(id, snap)| (self.interner.resolve(id).to_string(), snap))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Resident bytes of the store's own bookkeeping: interner, both
+    /// tier tables, and the pin set. Simulated blob payload is
+    /// excluded — it is what the store models, not what it costs. The
+    /// `scale` bench divides this by interned paths to report
+    /// bytes-of-state per path.
+    pub fn state_bytes(&self) -> u64 {
+        self.interner.state_bytes()
+            + self.ram.state_bytes()
+            + self.ssd.state_bytes()
+            + self.pinned.len() as u64 * (size_of::<(u32, u32)>() + 16) as u64
     }
 
     /// Wipe all replicas (both tiers), usage accounting, and pins
-    /// (capacities and the LRU clock survive).
+    /// (capacities, the LRU clock, and the path interner survive — ids
+    /// stay stable across a clear).
     pub fn clear(&mut self) {
         for store in [&mut self.ram, &mut self.ssd] {
             store.entries.clear();
+            store.occupied = 0;
             store.used.clear();
         }
         self.pinned.clear();
@@ -1181,5 +1382,90 @@ mod tests {
         // Mutation refreshes it.
         ns.write_range(4, 5, "/tmp/a", Blob::synthetic(MB, 1));
         assert_eq!(ns.coverage_of("/tmp/a"), vec![(0, 3), (4, 5), (6, 9)]);
+    }
+
+    // ------------------------------------------------------------------
+    // interned-id surface
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn id_surface_answers_identically_to_strings() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(200));
+        ns.set_ssd_capacity(Some(200));
+        ns.write_range(0, 7, "/tmp/a", Blob::synthetic(60, 1));
+        ns.write_range(2, 5, "/tmp/b", Blob::synthetic(60, 2));
+        let a = ns.path_id("/tmp/a").unwrap();
+        let b = ns.path_id("/tmp/b").unwrap();
+        assert_eq!(ns.resolve_path(a), "/tmp/a");
+        assert_eq!(ns.coverage_of_id(a), ns.coverage_of("/tmp/a"));
+        assert_eq!(ns.coverage_of_id(b), ns.coverage_of("/tmp/b"));
+        for n in 0..9u32 {
+            assert_eq!(ns.read_id(n, a).is_some(), ns.exists_on(n, "/tmp/a"));
+            assert_eq!(
+                ns.read_tier_id(StorageTier::Ram, n, b).map(Blob::len),
+                ns.read_tier(StorageTier::Ram, n, "/tmp/b").map(Blob::len)
+            );
+        }
+        // An interned-but-never-written path answers empty, like an
+        // unknown string.
+        let ghost = ns.intern_path("/tmp/ghost");
+        assert!(ns.coverage_of_id(ghost).is_empty());
+        assert!(ns.read_id(0, ghost).is_none());
+    }
+
+    #[test]
+    fn id_writes_and_touches_match_string_behavior() {
+        let via_str = {
+            let mut ns = NodeStores::new();
+            ns.set_capacity(Some(100));
+            ns.write_range(0, 3, "/tmp/a", Blob::synthetic(40, 1));
+            ns.write_range(0, 3, "/tmp/b", Blob::synthetic(40, 2));
+            ns.touch(1, "/tmp/a");
+            ns.write_range_evicting(0, 3, "/tmp/c", Blob::synthetic(40, 3));
+            ns.dump()
+        };
+        let via_id = {
+            let mut ns = NodeStores::new();
+            ns.set_capacity(Some(100));
+            let a = ns.intern_path("/tmp/a");
+            let b = ns.intern_path("/tmp/b");
+            let c = ns.intern_path("/tmp/c");
+            ns.write_range_evicting_id(0, 3, a, Blob::synthetic(40, 1));
+            ns.write_range_evicting_id(0, 3, b, Blob::synthetic(40, 2));
+            ns.touch_id(1, a);
+            ns.write_range_evicting_id(0, 3, c, Blob::synthetic(40, 3));
+            ns.dump()
+        };
+        assert_eq!(via_str, via_id);
+    }
+
+    #[test]
+    fn clear_keeps_ids_stable() {
+        let mut ns = NodeStores::new();
+        ns.write_range(0, 1, "/tmp/a", Blob::synthetic(8, 1));
+        let a = ns.path_id("/tmp/a").unwrap();
+        ns.clear();
+        assert_eq!(ns.path_count(), 0);
+        assert_eq!(ns.path_id("/tmp/a"), Some(a), "interner must survive clear");
+        ns.write_range(0, 1, "/tmp/a", Blob::synthetic(8, 1));
+        assert_eq!(ns.path_id("/tmp/a"), Some(a));
+        assert!(ns.exists_on(0, "/tmp/a"));
+    }
+
+    #[test]
+    fn state_bytes_tracks_bookkeeping_not_payload() {
+        let mut ns = NodeStores::new();
+        let empty = ns.state_bytes();
+        // A large simulated blob must not dominate state_bytes: the
+        // payload is modelled, not held per node.
+        ns.write_range(0, 4095, "/tmp/big", Blob::synthetic(512 * MB, 1));
+        let one = ns.state_bytes();
+        assert!(one > empty);
+        assert!(one < 512 * MB, "payload leaked into state accounting: {one}");
+        for i in 0..64 {
+            ns.write_range(0, 63, format!("/tmp/f{i:02}"), Blob::synthetic(1024, 2));
+        }
+        assert!(ns.state_bytes() > one);
     }
 }

@@ -7,9 +7,18 @@
 //! and eviction (`SimCore::evict_path`), so experiments can report hit
 //! rates, demoted bytes, and evicted bytes without rescanning the data
 //! plane.
+//!
+//! Fleet-scale layout: like [`NodeStores`], the table interns paths to
+//! dense `u32` ids and keeps each tier's ranges in a `Vec` indexed by
+//! id, so the per-query cost is an array index. The string surface
+//! resolves through the interner and answers identically; enumeration
+//! (`resident_paths`) stays path-sorted via the interner's sorted
+//! side.
 
 use std::collections::BTreeMap;
+use std::mem::size_of;
 
+use super::intern::PathInterner;
 use super::node_stores::NodeStores;
 use super::tier::StorageTier;
 
@@ -38,7 +47,9 @@ impl Eviction {
     }
 }
 
-type RangeMap = BTreeMap<String, Vec<(u32, u32)>>;
+/// Per-tier residency: range set per interned path id (empty = not
+/// resident in this tier).
+type RangeVec = Vec<Vec<(u32, u32)>>;
 
 /// Bookkeeping mirror of [`NodeStores`]: path -> disjoint, sorted,
 /// coalesced node ranges, kept **per tier**, plus displacement
@@ -46,10 +57,13 @@ type RangeMap = BTreeMap<String, Vec<(u32, u32)>>;
 /// tier — the tier analysis tasks consume.
 #[derive(Clone, Debug, Default)]
 pub struct ResidencyTable {
-    /// RAM tier: path -> resident node ranges.
-    ram: RangeMap,
-    /// SSD tier: path -> resident node ranges.
-    ssd: RangeMap,
+    /// Path ↔ dense id bijection (the table's own — independent of the
+    /// data plane's, since either side may learn a path first).
+    interner: PathInterner,
+    /// RAM tier: path id -> resident node ranges.
+    ram: RangeVec,
+    /// SSD tier: path id -> resident node ranges.
+    ssd: RangeVec,
     /// Replicas displaced from RAM under capacity pressure or by
     /// forced eviction (count; includes demotions).
     pub evictions: u64,
@@ -69,6 +83,14 @@ pub struct ResidencyTable {
     pub promoted_bytes: u64,
 }
 
+/// The ranges slot of `id`, growing the dense table as needed.
+fn slot_mut(v: &mut RangeVec, id: u32) -> &mut Vec<(u32, u32)> {
+    if id as usize >= v.len() {
+        v.resize_with(id as usize + 1, Vec::new);
+    }
+    &mut v[id as usize]
+}
+
 impl ResidencyTable {
     pub fn new() -> Self {
         Self::default()
@@ -78,28 +100,30 @@ impl ResidencyTable {
     /// `evicted` first.
     pub fn on_stored(&mut self, lo: u32, hi: u32, path: &str, evicted: &[Eviction]) {
         self.on_evicted(evicted);
-        add_range(self.ram.entry(path.to_string()).or_default(), lo, hi);
+        let id = self.interner.intern(path);
+        add_range(slot_mut(&mut self.ram, id), lo, hi);
     }
 
     /// Record displacements (capacity pressure, demotion cascade, or
     /// forced eviction), tier by tier.
     pub fn on_evicted(&mut self, evicted: &[Eviction]) {
         for ev in evicted {
+            let id = self.interner.intern(&ev.path);
             match ev.tier {
                 StorageTier::Ram => {
                     self.evictions += 1;
                     self.evicted_bytes += ev.span_bytes();
-                    remove_from(&mut self.ram, &ev.path, ev.lo, ev.hi);
+                    sub_range(slot_mut(&mut self.ram, id), ev.lo, ev.hi);
                     if ev.demoted {
                         self.demotions += 1;
                         self.demoted_bytes += ev.span_bytes();
-                        add_range(self.ssd.entry(ev.path.clone()).or_default(), ev.lo, ev.hi);
+                        add_range(slot_mut(&mut self.ssd, id), ev.lo, ev.hi);
                     }
                 }
                 StorageTier::Ssd => {
                     self.ssd_evictions += 1;
                     self.ssd_evicted_bytes += ev.span_bytes();
-                    remove_from(&mut self.ssd, &ev.path, ev.lo, ev.hi);
+                    sub_range(slot_mut(&mut self.ssd, id), ev.lo, ev.hi);
                 }
                 StorageTier::Gpfs => unreachable!("GPFS is not capacity-managed"),
             }
@@ -112,8 +136,14 @@ impl ResidencyTable {
         self.on_evicted(evicted);
         self.promotions += 1;
         self.promoted_bytes += bytes * (hi - lo + 1) as u64;
-        remove_from(&mut self.ssd, path, lo, hi);
-        add_range(self.ram.entry(path.to_string()).or_default(), lo, hi);
+        let id = self.interner.intern(path);
+        sub_range(slot_mut(&mut self.ssd, id), lo, hi);
+        add_range(slot_mut(&mut self.ram, id), lo, hi);
+    }
+
+    /// Id of `path` in the table's interner, if it has ever appeared.
+    pub fn path_id(&self, path: &str) -> Option<u32> {
+        self.interner.get(path)
     }
 
     /// True when `path` is RAM-resident on `node`.
@@ -123,9 +153,14 @@ impl ResidencyTable {
 
     /// True when `path` is resident on `node` in `tier`.
     pub fn resident_tier(&self, tier: StorageTier, node: u32, path: &str) -> bool {
-        self.map_of(tier)
-            .get(path)
-            .is_some_and(|rs| rs.iter().any(|&(a, b)| (a..=b).contains(&node)))
+        self.coverage_tier(tier, path).iter().any(|&(a, b)| (a..=b).contains(&node))
+    }
+
+    /// [`ResidencyTable::resident`] by pre-interned id (RAM tier).
+    pub fn resident_id(&self, node: u32, id: u32) -> bool {
+        self.coverage_tier_id(StorageTier::Ram, id)
+            .iter()
+            .any(|&(a, b)| (a..=b).contains(&node))
     }
 
     /// RAM-resident node ranges of `path` (sorted, coalesced).
@@ -135,15 +170,32 @@ impl ResidencyTable {
 
     /// Resident node ranges of `path` in `tier` (sorted, coalesced).
     pub fn coverage_tier(&self, tier: StorageTier, path: &str) -> &[(u32, u32)] {
-        self.map_of(tier).get(path).map(Vec::as_slice).unwrap_or(&[])
+        match self.interner.get(path) {
+            Some(id) => self.coverage_tier_id(tier, id),
+            None => &[],
+        }
+    }
+
+    /// [`ResidencyTable::coverage`] by pre-interned id (RAM tier).
+    pub fn coverage_id(&self, id: u32) -> &[(u32, u32)] {
+        self.coverage_tier_id(StorageTier::Ram, id)
+    }
+
+    /// [`ResidencyTable::coverage_tier`] by pre-interned id: a direct
+    /// array index.
+    pub fn coverage_tier_id(&self, tier: StorageTier, id: u32) -> &[(u32, u32)] {
+        self.vec_of(tier).get(id as usize).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// All RAM-resident paths, sorted.
     pub fn resident_paths(&self) -> impl Iterator<Item = &String> {
-        self.ram.keys()
+        self.interner
+            .iter()
+            .filter(|&(_, id)| self.ram.get(id as usize).is_some_and(|rs| !rs.is_empty()))
+            .map(|(p, _)| p)
     }
 
-    fn map_of(&self, tier: StorageTier) -> &RangeMap {
+    fn vec_of(&self, tier: StorageTier) -> &RangeVec {
         match tier {
             StorageTier::Ram => &self.ram,
             StorageTier::Ssd => &self.ssd,
@@ -151,12 +203,23 @@ impl ResidencyTable {
         }
     }
 
+    /// Resident bytes of the mirror's own bookkeeping (interner plus
+    /// both dense range tables). The `scale` bench divides by path
+    /// count to report bytes-of-state per mirrored path.
+    pub fn state_bytes(&self) -> u64 {
+        let side = |v: &RangeVec| -> u64 {
+            v.capacity() as u64 * size_of::<Vec<(u32, u32)>>() as u64
+                + v.iter().map(|rs| rs.capacity() as u64 * 8).sum::<u64>()
+        };
+        self.interner.state_bytes() + side(&self.ram) + side(&self.ssd)
+    }
+
     /// Exact-mirror check against the data plane: the table and the
     /// store must agree on every path's resident node set, in both
     /// managed tiers.
     pub fn mirrors(&self, stores: &NodeStores) -> bool {
         let want = |tier| {
-            let mut m: RangeMap = BTreeMap::new();
+            let mut m: BTreeMap<String, Vec<(u32, u32)>> = BTreeMap::new();
             for (path, reps) in stores.dump_tier(tier) {
                 let ranges = m.entry(path).or_default();
                 for (lo, hi, _) in reps {
@@ -165,16 +228,18 @@ impl ResidencyTable {
             }
             m
         };
-        want(StorageTier::Ram) == self.ram && want(StorageTier::Ssd) == self.ssd
-    }
-}
-
-fn remove_from(map: &mut RangeMap, path: &str, lo: u32, hi: u32) {
-    if let Some(ranges) = map.get_mut(path) {
-        sub_range(ranges, lo, hi);
-        if ranges.is_empty() {
-            map.remove(path);
-        }
+        let have = |v: &RangeVec| {
+            let mut m: BTreeMap<String, Vec<(u32, u32)>> = BTreeMap::new();
+            for (path, id) in self.interner.iter() {
+                if let Some(rs) = v.get(id as usize) {
+                    if !rs.is_empty() {
+                        m.insert(path.clone(), rs.clone());
+                    }
+                }
+            }
+            m
+        };
+        want(StorageTier::Ram) == have(&self.ram) && want(StorageTier::Ssd) == have(&self.ssd)
     }
 }
 
@@ -285,5 +350,40 @@ mod tests {
         assert_eq!(table.promoted_bytes, 60 * 4);
         assert!(table.resident(1, "/tmp/a"));
         assert!(table.resident_tier(StorageTier::Ssd, 1, "/tmp/b"));
+    }
+
+    #[test]
+    fn id_surface_matches_string_surface() {
+        let mut table = ResidencyTable::new();
+        table.on_stored(0, 7, "/tmp/a", &[]);
+        table.on_stored(2, 5, "/tmp/b", &[]);
+        let a = table.path_id("/tmp/a").unwrap();
+        let b = table.path_id("/tmp/b").unwrap();
+        assert_eq!(table.coverage_id(a), table.coverage("/tmp/a"));
+        assert_eq!(table.coverage_id(b), table.coverage("/tmp/b"));
+        for n in 0..9u32 {
+            assert_eq!(table.resident_id(n, a), table.resident(n, "/tmp/a"));
+            assert_eq!(table.resident_id(n, b), table.resident(n, "/tmp/b"));
+        }
+        assert!(table.path_id("/tmp/nope").is_none());
+        assert!(table.coverage("/tmp/nope").is_empty());
+        // Paths enumerate sorted regardless of interning order.
+        table.on_stored(0, 1, "/tmp/0-first", &[]);
+        let order: Vec<&str> = table.resident_paths().map(String::as_str).collect();
+        assert_eq!(order, vec!["/tmp/0-first", "/tmp/a", "/tmp/b"]);
+    }
+
+    #[test]
+    fn state_bytes_scales_with_paths() {
+        let mut table = ResidencyTable::new();
+        let empty = table.state_bytes();
+        for i in 0..100 {
+            table.on_stored(0, 63, &format!("/tmp/f{i:03}"), &[]);
+        }
+        let full = table.state_bytes();
+        assert!(full > empty);
+        // Bounded per-path state: well under 1 KiB each for short
+        // paths with one range.
+        assert!(full / 100 < 1024, "bytes per path: {}", full / 100);
     }
 }

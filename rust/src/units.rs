@@ -122,6 +122,43 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// A resident-state measurement: `total` bookkeeping bytes spread over
+/// `units` accountable things (sessions, paths, nodes...). The scale
+/// harness reports these so footprint-per-session / per-path growth is
+/// a tracked number, not a hope.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct StateBytes {
+    pub total: u64,
+    pub units: u64,
+}
+
+impl StateBytes {
+    pub fn new(total: u64, units: u64) -> StateBytes {
+        StateBytes { total, units }
+    }
+
+    /// Bytes per accountable unit (0 when there are no units).
+    pub fn per_unit(&self) -> u64 {
+        if self.units == 0 {
+            0
+        } else {
+            self.total / self.units
+        }
+    }
+}
+
+impl fmt::Display for StateBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} over {} units ({}/unit)",
+            fmt_bytes(self.total),
+            self.units,
+            fmt_bytes(self.per_unit())
+        )
+    }
+}
+
 /// Pretty-print a bandwidth in GB/s (paper convention).
 pub fn fmt_bw(bytes_per_sec: f64) -> String {
     if bytes_per_sec >= GB as f64 {

@@ -80,6 +80,22 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> Sample {
     bench_n(name, 10, f)
 }
 
+/// Report one already-measured wall time in the standard shape (for
+/// whole-run measurements too expensive to repeat under [`bench_n`]'s
+/// iteration loop — the `scale` matrix points run once per mode).
+pub fn record(name: &str, secs: f64) -> Sample {
+    let s = Sample { median: secs, p10: secs, p90: secs, n: 1 };
+    println!(
+        "bench {name} ... median {}  (p10 {}, p90 {}, n={})",
+        fmt_secs(s.median),
+        fmt_secs(s.p10),
+        fmt_secs(s.p90),
+        s.n
+    );
+    emit_json(name, &s);
+    s
+}
+
 /// One measurement as a JSON object line (stable key order).
 pub fn json_line(name: &str, s: &Sample) -> String {
     format!(
@@ -118,6 +134,36 @@ fn emit_json(name: &str, s: &Sample) {
     if let Err(e) = res {
         eprintln!("warning: XSTAGE_BENCH_JSON append failed: {e}");
     }
+}
+
+/// Report a resident-state measurement in the same grep-friendly shape
+/// as [`bench`], and append a distinct JSON line
+/// (`{"name":…,"state_bytes":…,"units":…,"bytes_per_unit":…}`) to
+/// `$XSTAGE_BENCH_JSON` so footprint trajectories accumulate alongside
+/// timing ones.
+pub fn report_state(name: &str, sb: crate::units::StateBytes) {
+    println!("state {name} ... {sb}");
+    let Some(path) = std::env::var_os("XSTAGE_BENCH_JSON") else { return };
+    let line = state_json_line(name, sb);
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        eprintln!("warning: XSTAGE_BENCH_JSON append failed: {e}");
+    }
+}
+
+/// One state measurement as a JSON object line (stable key order).
+pub fn state_json_line(name: &str, sb: crate::units::StateBytes) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"state_bytes\":{},\"units\":{},\"bytes_per_unit\":{}}}",
+        escape_json(name),
+        sb.total,
+        sb.units,
+        sb.per_unit(),
+    )
 }
 
 /// Human duration (s/ms/us/ns).
@@ -171,6 +217,21 @@ mod tests {
         // Round-trips through the in-tree JSON parser.
         let v = crate::util::json::Json::parse(&line).unwrap();
         assert_eq!(v.get("iters").and_then(|j| j.as_f64()), Some(42.0));
+    }
+
+    #[test]
+    fn state_json_line_is_parseable() {
+        let sb = crate::units::StateBytes::new(4096, 16);
+        let line = state_json_line("sched/sessions", sb);
+        assert_eq!(
+            line,
+            "{\"name\":\"sched/sessions\",\"state_bytes\":4096,\
+             \"units\":16,\"bytes_per_unit\":256}"
+        );
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get("bytes_per_unit").and_then(|j| j.as_f64()), Some(256.0));
+        // Zero units never divides by zero.
+        assert_eq!(crate::units::StateBytes::new(100, 0).per_unit(), 0);
     }
 
     #[test]

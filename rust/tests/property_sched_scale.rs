@@ -1,0 +1,256 @@
+//! Property suite for the fleet-scale hot-path flattening.
+//!
+//! Two differential families, 500 random schedules each:
+//!
+//! - **Fair pick**: every schedule runs under the seed's linear scan
+//!   ([`FairPick::Scan`], string-keyed storage) and the flattened
+//!   implementations ([`FairPick::Indexed`], interned ids); virtual
+//!   clock, per-task completion times, and byte accounting must be
+//!   bit-identical. These are debug builds, so the scheduler's
+//!   in-code `debug_assert` additionally cross-checks the indexed
+//!   pick against the scan on **every single dispatch decision** —
+//!   the suite exercises decision-for-decision equivalence, not just
+//!   end states.
+//! - **Interned storage surface**: two [`NodeStores`] under tight
+//!   RAM/SSD budgets are driven in lockstep through the same random
+//!   write/touch/promote/evict/pin schedule — one via the string API,
+//!   one via the pre-interned id API. After every step, both tiers'
+//!   snapshots, coverage answers, reads, and the path↔id bijection
+//!   must agree exactly (including LRU/demotion behaviour, which
+//!   would expose any clock or victim-order skew between the two
+//!   surfaces).
+
+use xstage::cluster::{orthros, Topology};
+use xstage::dataflow::sched::{SessionId, SessionScheduler, SessionStats};
+use xstage::dataflow::{FairPick, SchedulerCfg, Task, TaskGraph};
+use xstage::engine::SimCore;
+use xstage::mpisim::Comm;
+use xstage::pfs::{Blob, GpfsParams};
+use xstage::storage::{NodeStores, PromoteOutcome, StorageTier, StoreWrite};
+use xstage::units::{Duration, SimTime, MB};
+use xstage::util::prng::Pcg64;
+
+const SCHEDULES: u64 = 500;
+
+// ---------------------------------------------------------------------
+// Family 1: indexed fair pick == linear scan, schedule for schedule
+// ---------------------------------------------------------------------
+
+const PATHS: &[&str] = &["/tmp/s0.bin", "/tmp/s1.bin", "/pfs/u0.bin", "/pfs/u1.bin"];
+
+/// A random multi-session workload: a few sessions of small graphs
+/// with random chains/inputs on a machine small enough that sessions
+/// genuinely contend for slots.
+struct Scenario {
+    nodes: u32,
+    ranks: u32,
+    cache_inputs: bool,
+    locality_aware: bool,
+    graphs: Vec<TaskGraph>,
+}
+
+fn scenario(seed: u64) -> Scenario {
+    let mut rng = Pcg64::new(seed);
+    let sessions = rng.range_u64(2, 10) as usize;
+    let mut graphs = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        let mut g = TaskGraph::new();
+        let n = rng.range_u64(2, 8) as usize;
+        for t in 0..n {
+            let mut task = Task::compute(
+                format!("s{s}/t{t}"),
+                Duration::from_secs_f64(rng.log_uniform(0.5, 10.0)),
+            );
+            if t > 0 && rng.f64() < 0.4 {
+                let dep = rng.range_u64(0, t as u64 - 1) as usize;
+                task = task.with_dep(xstage::dataflow::TaskId(dep));
+            }
+            if rng.f64() < 0.6 {
+                let p = PATHS[rng.range_u64(0, PATHS.len() as u64 - 1) as usize];
+                task = task.with_input(p, None);
+            }
+            if rng.f64() < 0.3 {
+                task = task.with_output(MB / 4);
+            }
+            g.add(task);
+        }
+        graphs.push(g);
+    }
+    Scenario {
+        nodes: rng.range_u64(1, 3) as u32,
+        ranks: rng.range_u64(2, 4) as u32,
+        cache_inputs: rng.f64() < 0.5,
+        locality_aware: rng.f64() < 0.5,
+        graphs,
+    }
+}
+
+fn run_scenario(
+    sc: &Scenario,
+    fair_pick: FairPick,
+    interned: bool,
+) -> (SimTime, Vec<SessionStats>) {
+    let mut core = SimCore::new();
+    let mut spec = orthros();
+    spec.nodes = sc.nodes;
+    spec.ranks_per_node = sc.ranks;
+    let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+    let comm = Comm::world(&topo.spec);
+    // Two paths staged on a node prefix, two only on the shared FS.
+    for p in PATHS {
+        core.pfs.write(*p, Blob::synthetic(2 * MB, 0xF00D));
+    }
+    core.node_write_range(0, 0, "/tmp/s0.bin", Blob::synthetic(2 * MB, 0xF00D));
+    core.node_write_range(0, sc.nodes - 1, "/tmp/s1.bin", Blob::synthetic(2 * MB, 0xF00D));
+    let cfg = SchedulerCfg {
+        cache_inputs: sc.cache_inputs,
+        locality_aware: sc.locality_aware,
+        fair_pick,
+        interned_paths: interned,
+        ..Default::default()
+    };
+    let mut ss = SessionScheduler::new(topo, comm, cfg);
+    let sids: Vec<SessionId> =
+        sc.graphs.iter().map(|g| ss.add_session(&mut core, g.clone())).collect();
+    core.run(&mut ss);
+    assert!(ss.all_done());
+    (core.now, sids.into_iter().map(|s| ss.stats(s)).collect())
+}
+
+#[test]
+fn indexed_fair_pick_matches_scan_on_500_random_schedules() {
+    for seed in 0..SCHEDULES {
+        let sc = scenario(seed);
+        let (now_scan, scan) = run_scenario(&sc, FairPick::Scan, false);
+        let (now_idx, idx) = run_scenario(&sc, FairPick::Indexed, true);
+        assert_eq!(now_scan, now_idx, "virtual clock diverged (seed {seed})");
+        assert_eq!(scan.len(), idx.len());
+        for (i, (a, b)) in scan.iter().zip(&idx).enumerate() {
+            assert_eq!(a.completion, b.completion, "completions (seed {seed}, session {i})");
+            assert_eq!(a.finished, b.finished, "finish time (seed {seed}, session {i})");
+            assert_eq!(a.reads, b.reads, "read accounting (seed {seed}, session {i})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family 2: string-keyed and id-keyed storage surfaces in lockstep
+// ---------------------------------------------------------------------
+
+const NODES: u32 = 8;
+const POOL: &[&str] = &[
+    "/projects/a.bin",
+    "/projects/b.bin",
+    "/projects/c.bin",
+    "/projects/d.bin",
+    "/projects/e.bin",
+    "/projects/f.bin",
+];
+
+fn stored(w: &StoreWrite) -> bool {
+    matches!(w, StoreWrite::Stored { .. })
+}
+
+/// Full cross-surface state check: bijection, coverage, reads, and
+/// both tiers' snapshots.
+fn assert_surfaces_agree(a: &NodeStores, b: &NodeStores, rng: &mut Pcg64, step: usize) {
+    assert_eq!(a.dump(), b.dump(), "RAM snapshots diverged at step {step}");
+    assert_eq!(
+        a.dump_tier(StorageTier::Ssd),
+        b.dump_tier(StorageTier::Ssd),
+        "SSD snapshots diverged at step {step}"
+    );
+    for p in POOL {
+        assert_eq!(a.path_id(p), b.path_id(p), "interning diverged for {p} at step {step}");
+        let Some(id) = a.path_id(p) else { continue };
+        assert_eq!(a.resolve_path(id), *p);
+        assert_eq!(b.resolve_path(id), *p);
+        // String answers on A == id answers on B, both directions.
+        assert_eq!(a.coverage_of(p), b.coverage_of_id(id), "{p} step {step}");
+        assert_eq!(a.coverage_of_id(id), b.coverage_of(p), "{p} step {step}");
+        assert_eq!(
+            a.coverage_of_tier(StorageTier::Ssd, p),
+            b.coverage_of_tier_id(StorageTier::Ssd, id),
+            "{p} step {step}"
+        );
+        let n = rng.range_u64(0, NODES as u64 - 1) as u32;
+        assert_eq!(
+            a.read(n, p).map(Blob::len),
+            b.read_id(n, id).map(Blob::len),
+            "{p} node {n} step {step}"
+        );
+        assert_eq!(
+            a.read_tier(StorageTier::Ssd, n, p).map(Blob::len),
+            b.read_tier_id(StorageTier::Ssd, n, id).map(Blob::len),
+            "{p} node {n} step {step}"
+        );
+    }
+}
+
+#[test]
+fn interned_storage_surface_answers_identically_on_500_random_schedules() {
+    for seed in 0..SCHEDULES {
+        let mut rng = Pcg64::new(0x1D5EED ^ seed);
+        let mut qrng = Pcg64::new(0xC0FFEE ^ seed);
+        let mut a = NodeStores::new(); // driven via the string surface
+        let mut b = NodeStores::new(); // driven via the id surface
+        for s in [&mut a, &mut b] {
+            s.set_capacity(Some(3 * MB));
+            s.set_ssd_capacity(Some(4 * MB));
+        }
+        for step in 0..40 {
+            let p = POOL[rng.range_u64(0, POOL.len() as u64 - 1) as usize];
+            let lo = rng.range_u64(0, NODES as u64 - 1) as u32;
+            let hi = rng.range_u64(lo as u64, NODES as u64 - 1) as u32;
+            match rng.range_u64(0, 9) {
+                0..=3 => {
+                    let len = rng.range_u64(100_000, 1_200_000);
+                    let bseed = rng.next_u64();
+                    let ra = a.write_range_evicting(lo, hi, p, Blob::synthetic(len, bseed));
+                    let id = b.intern_path(p);
+                    let rb = b.write_range_evicting_id(lo, hi, id, Blob::synthetic(len, bseed));
+                    assert_eq!(stored(&ra), stored(&rb), "write outcome (seed {seed} step {step})");
+                }
+                4..=5 => {
+                    // Touches must advance both clocks identically, so
+                    // only touch paths both sides have interned.
+                    if a.path_id(p).is_some() {
+                        let tier =
+                            if rng.f64() < 0.5 { StorageTier::Ram } else { StorageTier::Ssd };
+                        a.touch_tier(tier, lo, p);
+                        let id = b.path_id(p).unwrap();
+                        b.touch_tier_id(tier, lo, id);
+                    }
+                }
+                6 => {
+                    let ra = a.promote_range(lo, hi, p);
+                    let rb = match b.path_id(p) {
+                        Some(id) => b.promote_range_id(lo, hi, id),
+                        None => PromoteOutcome::Missing,
+                    };
+                    assert_eq!(
+                        matches!(ra, PromoteOutcome::Promoted { .. }),
+                        matches!(rb, PromoteOutcome::Promoted { .. }),
+                        "promotion outcome (seed {seed} step {step})"
+                    );
+                }
+                7 => {
+                    // evict_path has no id variant (teardown path).
+                    a.evict_path(p);
+                    b.evict_path(p);
+                }
+                _ => {
+                    if rng.f64() < 0.6 {
+                        a.pin(p);
+                        b.pin(p);
+                    } else {
+                        a.unpin(p);
+                        b.unpin(p);
+                    }
+                }
+            }
+            assert_surfaces_agree(&a, &b, &mut qrng, step);
+        }
+        assert_eq!(a.state_bytes(), b.state_bytes(), "state accounting diverged (seed {seed})");
+    }
+}
