@@ -1,0 +1,82 @@
+//! Bench: serving under chaos — node-failure injection with recovery.
+//!
+//! Prints the failure-count x requeue-policy matrix, then asserts the
+//! acceptance bar:
+//!
+//! - **bounded degradation** — at every injected failure count in the
+//!   sweep (which kills far *denser* than the MTBF-calibrated fleet
+//!   rate, so the bound holds a fortiori at realistic rates), the P99
+//!   turnaround stays within 2x of the same policy's zero-failure
+//!   control;
+//! - **no task loss, no duplication** — every session completes
+//!   (asserted inside `run_serve`) and the whole chaotic run is
+//!   bit-reproducible across two same-seed runs;
+//! - **checksum-clean recovery** — every recovery stage content-verifies
+//!   its replicas against the shared-FS originals before committing
+//!   (`Residency::commit_stage` panics the run otherwise), and no task
+//!   read ever falls back to the shared FS.
+//!
+//! With `XSTAGE_BENCH_JSON` set the measurements emit one JSON point
+//! each — CI uploads them per run as the `BENCH_chaos.json` artifact.
+//!
+//! Run: `cargo bench --bench chaos`
+
+use xstage::experiments::chaos;
+use xstage::util::bench::{bench_n, section, smoke};
+
+fn main() {
+    section("chaos — node-failure injection over staged serving");
+    let sessions = if smoke() { 8 } else { chaos::SESSIONS };
+    chaos::run_with(sessions, chaos::SEED).print();
+
+    // Acceptance: bounded P99 degradation vs the zero-failure control,
+    // deterministic replay, and recovery that never touches the shared
+    // FS for task reads.
+    for stealing in [false, true] {
+        let calm = chaos::run_point(0, stealing, sessions, chaos::SEED);
+        assert_eq!(calm.node_failures, 0);
+        assert_eq!(calm.lost_tasks, 0);
+        for &failures in chaos::FAILURE_SWEEP {
+            let out = chaos::run_point(failures, stealing, sessions, chaos::SEED);
+            assert_eq!(out.node_failures, failures);
+            assert!(
+                out.percentiles.p99 <= 2.0 * calm.percentiles.p99,
+                "P99 degraded beyond 2x at {failures} failures (stealing {stealing}): \
+                 {:.1}s vs calm {:.1}s",
+                out.percentiles.p99,
+                calm.percentiles.p99
+            );
+            assert_eq!(
+                out.reads.unstaged_bytes, 0,
+                "recovery let a task read fall back to the shared FS"
+            );
+            let again = chaos::run_point(failures, stealing, sessions, chaos::SEED);
+            assert_eq!(
+                out.turnaround_secs, again.turnaround_secs,
+                "same-seed chaotic runs diverged at {failures} failures"
+            );
+            assert_eq!(out.lost_tasks, again.lost_tasks);
+            assert_eq!(out.copied_bytes, again.copied_bytes);
+        }
+    }
+    println!(
+        "\nall {} failure counts x both policies: P99 <= 2x calm, \
+         deterministic, checksum-clean recovery",
+        chaos::FAILURE_SWEEP.len()
+    );
+
+    section("host-time: chaotic serve simulation throughput");
+    let failures = *chaos::FAILURE_SWEEP.last().unwrap();
+    bench_n("chaos/fifo-requeue-point", 3, || {
+        let out = chaos::run_point(failures, false, sessions, chaos::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("chaos/work-stealing-point", 3, || {
+        let out = chaos::run_point(failures, true, sessions, chaos::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("chaos/zero-failure-control", 3, || {
+        let out = chaos::run_point(0, true, sessions, chaos::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+}

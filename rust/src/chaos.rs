@@ -1,0 +1,193 @@
+//! Seeded node-failure injection ("chaos") for the staged serving
+//! stack.
+//!
+//! The paper's turnaround numbers assume every staged replica and
+//! every dispatched task survives the campaign; at fleet scale node
+//! loss is the norm. This module generates the *when and who* of
+//! failures — a reproducible kill schedule — while the mechanics live
+//! where the state lives:
+//!
+//! - [`crate::engine::SimCore::fail_node`] drops the dead node's RAM
+//!   and SSD replicas (pins are not honoured) and keeps the residency
+//!   mirror true;
+//! - [`crate::engine::SimCore::abort_plan`] cancels the in-flight
+//!   flows and unfinished steps of plans that died with the node,
+//!   emitting **no** completion so the owner can resubmit under the
+//!   same tag;
+//! - [`crate::dataflow::sched::SessionScheduler::on_node_failure`]
+//!   requeues the lost tasks exactly once (optionally stealing:
+//!   [`crate::dataflow::sched::SchedulerCfg::work_stealing`]);
+//! - [`crate::staging::incremental_plan`] re-stages lost
+//!   replica ranges from the cheapest surviving source (peer RAM copy
+//!   → node SSD promote → shared-FS re-read);
+//! - [`crate::staging::service::ServiceCfg::chaos`] arms all of the
+//!   above inside the serving loop.
+//!
+//! The failure model is **crash-restart with a warm spare**: the
+//! node's memory contents vanish at the kill instant, but a
+//! replacement with the same node id joins immediately — the machine
+//! shape, slot pool, and network are unchanged, so recovery is purely
+//! a data-and-tasks concern. Kills are sampled from a seeded
+//! exponential inter-arrival process (a Poisson fleet-failure model)
+//! with uniformly random victims, so a (seed, failures, mean-gap)
+//! triple always yields the same schedule and the whole chaotic run
+//! stays bit-reproducible.
+//!
+//! ```
+//! use xstage::chaos::{kill_schedule, ChaosCfg};
+//!
+//! let cfg = ChaosCfg { seed: 7, failures: 3, mean_gap_secs: 60.0 };
+//! let kills = kill_schedule(&cfg, 8);
+//! assert_eq!(kills.len(), 3);
+//! assert!(kills.iter().all(|&(_, node)| node < 8));
+//! // Seeded: the same config always produces the same schedule.
+//! assert_eq!(kills, kill_schedule(&cfg, 8));
+//! ```
+
+use crate::units::{Duration, SimTime};
+use crate::util::prng::Pcg64;
+
+/// Tag namespace for chaos kill timers. Strictly a **timer** namespace
+/// — no plan is ever submitted with a chaos tag — sitting below the
+/// engine's demotion plans (`1 << 46`), the staging plans (`1 << 47`),
+/// and the scheduler's task plans (`1 << 48`). Directors that treat
+/// `Notice::Timer` as something else (e.g. the serving layer's session
+/// arrivals) must check this namespace first.
+pub const CHAOS_TAG_BASE: u64 = 1 << 45;
+
+/// Parameters of the seeded failure process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosCfg {
+    /// PRNG seed; the entire kill schedule is a pure function of
+    /// `(seed, failures, mean_gap_secs, nodes)`.
+    pub seed: u64,
+    /// Number of node kills to inject. Zero disarms chaos entirely —
+    /// a run with `failures: 0` is bit-identical to one with no chaos
+    /// config at all (tested).
+    pub failures: usize,
+    /// Mean of the exponential gap between consecutive kills, in
+    /// simulated seconds. This is the *fleet* inter-failure time; see
+    /// [`mean_gap_secs_for_mtbf`] to derive it from a per-node MTBF.
+    pub mean_gap_secs: f64,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg { seed: 0xC8A05, failures: 0, mean_gap_secs: 600.0 }
+    }
+}
+
+impl ChaosCfg {
+    /// A config whose kill cadence matches a per-node MTBF on an
+    /// `nodes`-node machine (see [`mean_gap_secs_for_mtbf`]).
+    pub fn calibrated(seed: u64, failures: usize, node_mtbf_hours: f64, nodes: u32) -> ChaosCfg {
+        ChaosCfg {
+            seed,
+            failures,
+            mean_gap_secs: mean_gap_secs_for_mtbf(node_mtbf_hours, nodes),
+        }
+    }
+}
+
+/// Fleet mean time between failures, in seconds, for a machine of
+/// `nodes` nodes whose individual nodes fail independently with the
+/// given MTBF: `mtbf / nodes`. A 25,000-hour-MTBF node population at
+/// BG/Q scale (8,192 nodes) fails somewhere every ~3 hours; the
+/// 5-node Orthros partition goes months.
+///
+/// ```
+/// use xstage::chaos::mean_gap_secs_for_mtbf;
+/// let gap = mean_gap_secs_for_mtbf(25_000.0, 8_192);
+/// assert!((gap / 3600.0 - 3.05).abs() < 0.01); // ~3 hours
+/// ```
+pub fn mean_gap_secs_for_mtbf(node_mtbf_hours: f64, nodes: u32) -> f64 {
+    assert!(node_mtbf_hours > 0.0 && node_mtbf_hours.is_finite(), "bad MTBF");
+    assert!(nodes > 0, "no nodes");
+    node_mtbf_hours * 3600.0 / nodes as f64
+}
+
+/// Exponential sample with the given mean (inverse-CDF on the open
+/// unit interval; `1 - u` keeps the log away from zero).
+fn exp_secs(rng: &mut Pcg64, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// Materialise the kill schedule: `failures` events of (kill time,
+/// victim node), times strictly increasing by exponential gaps from
+/// `SimTime::ZERO`, victims uniform over `0..nodes`. Deterministic in
+/// the config; callers arm each entry as an engine timer under
+/// [`CHAOS_TAG_BASE`].
+pub fn kill_schedule(cfg: &ChaosCfg, nodes: u32) -> Vec<(SimTime, u32)> {
+    assert!(nodes > 0, "cannot schedule kills on an empty machine");
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut t = SimTime::ZERO;
+    let mut out = Vec::with_capacity(cfg.failures);
+    for _ in 0..cfg.failures {
+        t += Duration::from_secs_f64(exp_secs(&mut rng, cfg.mean_gap_secs));
+        out.push((t, rng.below(nodes as u64) as u32));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_in_bounds() {
+        let cfg = ChaosCfg { seed: 11, failures: 50, mean_gap_secs: 30.0 };
+        let a = kill_schedule(&cfg, 16);
+        let b = kill_schedule(&cfg, 16);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        assert!(a.iter().all(|&(_, n)| n < 16));
+        for w in a.windows(2) {
+            assert!(w[0].0 <= w[1].0, "kill times must be non-decreasing");
+        }
+        let c = kill_schedule(&ChaosCfg { seed: 12, ..cfg }, 16);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn zero_failures_is_empty() {
+        let cfg = ChaosCfg { failures: 0, ..Default::default() };
+        assert!(kill_schedule(&cfg, 8).is_empty());
+    }
+
+    #[test]
+    fn gaps_average_to_the_mean() {
+        let cfg = ChaosCfg { seed: 3, failures: 20_000, mean_gap_secs: 40.0 };
+        let sched = kill_schedule(&cfg, 4);
+        let total = sched.last().unwrap().0.secs_f64();
+        let mean = total / sched.len() as f64;
+        assert!((mean - 40.0).abs() < 1.0, "empirical mean gap {mean}");
+    }
+
+    #[test]
+    fn victims_cover_the_machine() {
+        let cfg = ChaosCfg { seed: 5, failures: 200, mean_gap_secs: 1.0 };
+        let mut seen = [false; 8];
+        for (_, n) in kill_schedule(&cfg, 8) {
+            seen[n as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform victims hit every node");
+    }
+
+    #[test]
+    fn mtbf_calibration() {
+        // 8,192 nodes at 25k-hour MTBF: a failure every ~3.05 hours.
+        let gap = mean_gap_secs_for_mtbf(25_000.0, 8_192);
+        assert!((gap - 10_986.3).abs() < 1.0, "{gap}");
+        let cfg = ChaosCfg::calibrated(1, 10, 25_000.0, 8_192);
+        assert_eq!(cfg.mean_gap_secs, gap);
+        // One node: the fleet rate is the node rate.
+        assert_eq!(mean_gap_secs_for_mtbf(1.0, 1), 3600.0);
+    }
+
+    #[test]
+    fn tag_namespace_sits_below_the_others() {
+        assert!(CHAOS_TAG_BASE < crate::engine::DEMOTE_TAG);
+        assert!(CHAOS_TAG_BASE < crate::staging::service::STAGE_TAG_BASE);
+        assert!(CHAOS_TAG_BASE < crate::dataflow::sched::TASK_TAG_BASE);
+    }
+}

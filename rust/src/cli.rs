@@ -27,7 +27,7 @@ pub fn commands() -> &'static [Command] {
     &COMMANDS
 }
 
-static COMMANDS: [Command; 13] = [
+static COMMANDS: [Command; 14] = [
     Command {
         name: "fig10",
         flags: "[--nodes a,b,c]",
@@ -160,6 +160,21 @@ static COMMANDS: [Command; 13] = [
         },
     },
     Command {
+        name: "chaos",
+        flags: "[--sessions N] [--seed S]",
+        summary: "Chaos matrix: node-failure injection, FIFO vs work stealing",
+        run: |args| {
+            let sessions = args.u64_or("sessions", experiments::chaos::SESSIONS as u64)?;
+            anyhow::ensure!(
+                (1..=65536).contains(&sessions),
+                "--sessions must be in 1..=65536, got {sessions}"
+            );
+            let seed = args.u64_or("seed", experiments::chaos::SEED)?;
+            experiments::chaos::run_with(sessions as usize, seed).print();
+            Ok(())
+        },
+    },
+    Command {
         name: "all",
         flags: "",
         summary: "Run every experiment table in order",
@@ -187,6 +202,8 @@ static COMMANDS: [Command; 13] = [
             // One reduced fleet point: the full scale matrix is its
             // own command (`xstage scale`) / bench.
             experiments::scale::run_with(&[128], &[500], experiments::scale::SEED).print();
+            println!();
+            experiments::chaos::run_with(8, experiments::chaos::SEED).print();
             Ok(())
         },
     },
@@ -322,6 +339,11 @@ mod tests {
     #[test]
     fn scale_small_point_runs() {
         dispatch(&parse("scale --nodes 8 --sessions 30 --seed 5")).unwrap();
+    }
+
+    #[test]
+    fn chaos_small_matrix_runs() {
+        dispatch(&parse("chaos --sessions 6 --seed 9")).unwrap();
     }
 
     #[test]

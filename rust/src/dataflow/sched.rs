@@ -29,6 +29,24 @@
 //!   far) and per-session accounting. With exactly one session the
 //!   fair policy degenerates to the FIFO baseline and the two are
 //!   bit-identical (tested).
+//!
+//! # Failure handling
+//!
+//! The [`SessionScheduler`] additionally tolerates node death (the
+//! [`crate::chaos`] event source): [`SessionScheduler::on_node_failure`]
+//! aborts the engine plans of every task that was computing on the dead
+//! node — the engine emits **no** `PlanDone` for an aborted plan, so
+//! resubmitting the task under the same tag yields exactly one
+//! completion per task (the TLA `NoTaskDuplication` / `NoTaskLoss`
+//! invariants) — returns the lost tasks to their sessions' ready
+//! queues, and frees the slots for the warm replacement node. With
+//! [`SchedulerCfg::work_stealing`] enabled the lost tasks requeue at
+//! the *front* of the ready queue so the next free slot anywhere on
+//! the machine steals them immediately; disabled, they requeue at the
+//! back like freshly-released dependents. Either way a run with zero
+//! failures never reaches this code, so both settings are
+//! decision-identical to the seed FIFO scheduler until a node actually
+//! dies (tested).
 
 use std::collections::BTreeSet;
 use std::collections::HashSet;
@@ -38,7 +56,7 @@ use std::mem::size_of;
 use crate::cluster::Topology;
 use crate::engine::{Director, Notice, SimCore};
 use crate::mpisim::Comm;
-use crate::simtime::plan::Plan;
+use crate::simtime::plan::{Plan, PlanId};
 use crate::units::{Duration, SimTime};
 
 use super::graph::{TaskGraph, TaskId};
@@ -107,6 +125,13 @@ pub struct SchedulerCfg {
     /// this is cost-only; off reproduces the seed string-keyed walks
     /// for A/B measurement.
     pub interned_paths: bool,
+    /// When a node dies, requeue its lost tasks at the *front* of
+    /// their sessions' ready queues so the next free slot anywhere
+    /// steals them immediately, instead of behind every
+    /// already-released task. Only node failures exercise the switch,
+    /// so at failure rate zero it is decision-identical to the seed
+    /// FIFO scheduler (tested).
+    pub work_stealing: bool,
 }
 
 impl Default for SchedulerCfg {
@@ -117,6 +142,7 @@ impl Default for SchedulerCfg {
             locality_aware: false,
             fair_pick: FairPick::Indexed,
             interned_paths: true,
+            work_stealing: false,
         }
     }
 }
@@ -153,6 +179,12 @@ pub struct ReadStats {
     pub ssd_bytes: u64,
     /// Bytes read (or re-read) from the shared FS.
     pub unstaged_bytes: u64,
+    /// Bytes streamed from a surviving peer's RAM replica over the
+    /// interconnect — the node-failure recovery read path, reachable
+    /// only after a failure erased the local replica of a dataset
+    /// that has no shared-FS fallback (zero in every failure-free
+    /// run).
+    pub peer_bytes: u64,
     /// Reads skipped by the worker input cache.
     pub cache_hits: u64,
 }
@@ -229,6 +261,27 @@ fn pick_slot_in(
         }
     }
     top
+}
+
+/// First surviving RAM holder of `path` (lowest node id) and the
+/// replica's length — the node-failure recovery read source. Only
+/// consulted after the local RAM, local SSD, and shared-FS branches
+/// all miss, which cannot happen in a failure-free run (a `/tmp` path
+/// was either staged onto this node or never existed here at all), so
+/// the no-failure schedule never depends on it.
+fn peer_replica(core: &SimCore, path: &str, id: Option<u32>) -> Option<(u32, u64)> {
+    let donor = match id {
+        Some(id) => core.nodes.coverage_of_id(id),
+        None => core.nodes.coverage_of(path),
+    }
+    .first()
+    .map(|&(lo, _)| lo)?;
+    let len = match id {
+        Some(id) => core.nodes.read_id(donor, id),
+        None => core.nodes.read(donor, path),
+    }
+    .map(crate::pfs::Blob::len)?;
+    Some((donor, len))
 }
 
 /// Per-node length of `path` in the SSD tier, when the machine times
@@ -343,6 +396,18 @@ fn build_task_plan(
                 vec![prev],
                 "read",
             );
+        } else if let Some((donor, blob_len)) = peer_replica(core, &input.path, pid) {
+            // Recovery read: a failure erased this node's replica of a
+            // node-local-only path, but a peer still holds it — stream
+            // it over the interconnect instead of dying. The donor
+            // read refreshes that replica's recency like any other.
+            let bytes = input.bytes.unwrap_or(blob_len);
+            reads.peer_bytes += bytes;
+            match pid {
+                Some(id) => core.nodes.touch_id(donor, id),
+                None => core.nodes.touch(donor, &input.path),
+            }
+            prev = p.flow(topo.path_torus(), 1, bytes, vec![prev], "read");
         } else if let Some(bytes) = input.bytes {
             // Size-only input (pure timing model, no data plane).
             reads.unstaged_bytes += bytes;
@@ -396,6 +461,10 @@ struct GraphRun {
     dependents: Vec<Vec<u32>>,
     /// Node a running task occupies.
     running_node: Vec<u32>,
+    /// Engine plan id of a running task (`u32::MAX` when not
+    /// running), so a node failure can abort exactly the plans that
+    /// died with the node.
+    running_plan: Vec<u32>,
     completion: Vec<SimTime>,
     remaining: usize,
 }
@@ -422,6 +491,7 @@ impl GraphRun {
             missing,
             dependents,
             running_node: vec![u32::MAX; n],
+            running_plan: vec![u32::MAX; n],
             completion: vec![SimTime::ZERO; n],
             remaining: n,
             graph,
@@ -440,6 +510,7 @@ impl GraphRun {
         self.remaining -= 1;
         let node = std::mem::replace(&mut self.running_node[tid.0], u32::MAX);
         debug_assert_ne!(node, u32::MAX, "completion of non-running task");
+        self.running_plan[tid.0] = u32::MAX;
         for d in std::mem::take(&mut self.dependents[tid.0]) {
             self.missing[d as usize] -= 1;
             if self.missing[d as usize] == 0 {
@@ -520,7 +591,8 @@ impl Scheduler {
                 &mut self.cache,
                 &mut self.reads,
             );
-            core.submit(plan);
+            let pid = core.submit(plan);
+            self.run.running_plan[tid.0] = pid.0 as u32;
         }
     }
 
@@ -651,6 +723,7 @@ impl SessionRun {
         self.run.missing = Vec::new();
         self.run.dependents = Vec::new();
         self.run.running_node = Vec::new();
+        self.run.running_plan = Vec::new();
         self.cache = HashSet::new();
         self.input_ids = None;
     }
@@ -674,6 +747,7 @@ impl SessionRun {
         b += (self.run.dependents.capacity() * size_of::<Vec<u32>>()) as u64;
         b += self.run.dependents.iter().map(|d| d.capacity() as u64 * 4).sum::<u64>();
         b += self.run.running_node.capacity() as u64 * 4;
+        b += self.run.running_plan.capacity() as u64 * 4;
         b += (self.run.completion.capacity() * size_of::<SimTime>()) as u64;
         b += (self.cache.capacity() * size_of::<(u32, u32)>()) as u64;
         if let Some(ids) = &self.input_ids {
@@ -832,7 +906,8 @@ impl SessionScheduler {
             if refill {
                 self.pick_queue.insert(new_key);
             }
-            core.submit(plan);
+            let pid = core.submit(plan);
+            self.sessions[s].run.running_plan[tid.0] = pid.0 as u32;
         }
     }
 
@@ -867,6 +942,80 @@ impl SessionScheduler {
         }
         self.dispatch(core);
         just_done.then_some(sid)
+    }
+
+    /// Node-death recovery: abort the engine plan of every task that
+    /// was computing on `node`, requeue the tasks in their sessions,
+    /// free the slots for the warm replacement, and redispatch.
+    /// Returns the number of tasks lost (and requeued).
+    ///
+    /// Exactly-once: each lost task is requeued here and nowhere else.
+    /// [`SimCore::abort_plan`] emits no `PlanDone` for the dead plan,
+    /// so the task's eventual re-dispatch under the same tag produces
+    /// the single completion its session ever observes; if the task's
+    /// completion notice was already pending at the kill instant the
+    /// engine delivered it *before* the kill timer fired (pending
+    /// notices drain before the next heap pop), the task is already
+    /// complete, and it is not requeued — either way exactly one
+    /// completion. `dispatched_work` is **not** rewound: the compute
+    /// was genuinely spent, and charging it keeps the fair-share key
+    /// honest about what each session cost the machine.
+    ///
+    /// With [`SchedulerCfg::work_stealing`] the lost tasks go to the
+    /// *front* of the ready queue (in task order, so FIFO among
+    /// themselves) and the freed slots go to whichever sessions the
+    /// fair pick chooses — idle nodes steal the failed node's backlog
+    /// immediately. Without it they queue behind already-ready work.
+    pub fn on_node_failure(&mut self, core: &mut SimCore, node: u32) -> usize {
+        let mut lost_total = 0;
+        for s in 0..self.sessions.len() {
+            let sess = &mut self.sessions[s];
+            if sess.run.is_done() {
+                continue;
+            }
+            // Tasks of this session caught computing on the dead node,
+            // in task order for deterministic requeueing.
+            let lost: Vec<usize> = sess
+                .run
+                .running_node
+                .iter()
+                .enumerate()
+                .filter(|&(_, &n)| n == node)
+                .map(|(t, _)| t)
+                .collect();
+            if lost.is_empty() {
+                continue;
+            }
+            let had_ready = !sess.run.ready.is_empty();
+            for &t in &lost {
+                let pid = std::mem::replace(&mut sess.run.running_plan[t], u32::MAX);
+                debug_assert_ne!(pid, u32::MAX, "lost task has no live plan");
+                let aborted = core.abort_plan(PlanId(pid as usize));
+                debug_assert!(aborted, "lost task's plan already completed");
+                sess.run.running_node[t] = u32::MAX;
+                // The rank the task occupied belongs to the warm
+                // replacement node and is free again.
+                self.free_slots.push(node);
+            }
+            if self.cfg.work_stealing {
+                for &t in lost.iter().rev() {
+                    sess.run.ready.push_front(TaskId(t));
+                }
+            } else {
+                for &t in &lost {
+                    sess.run.ready.push_back(TaskId(t));
+                }
+            }
+            // The session gained ready work; index it if it wasn't.
+            if !had_ready {
+                self.pick_queue.insert((sess.dispatched_work, s as u32));
+            }
+            lost_total += lost.len();
+        }
+        if lost_total > 0 {
+            self.dispatch(core);
+        }
+        lost_total
     }
 
     /// True when every admitted session has completed.
@@ -1424,6 +1573,107 @@ mod tests {
                 + (s.run.ready.capacity() * size_of::<TaskId>()) as u64
                 + (s.run.completion.capacity() * size_of::<SimTime>()) as u64;
             assert_eq!(s.state_bytes(), bound);
+        }
+    }
+
+    /// Test harness: a [`SessionScheduler`] plus one scheduled node
+    /// kill, wired together the way the serving layer does it.
+    struct KillOnce {
+        ss: SessionScheduler,
+        node: u32,
+        lost: usize,
+    }
+
+    impl Director for KillOnce {
+        fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
+            match notice {
+                Notice::Timer { .. } => {
+                    core.fail_node(self.node);
+                    self.lost += self.ss.on_node_failure(core, self.node);
+                }
+                Notice::PlanDone { tag, .. } => {
+                    self.ss.on_plan_done(core, tag);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn node_failure_requeues_lost_tasks_exactly_once() {
+        // 2 nodes x 1 rank, 4 x 10 s tasks: t0 lands on node 0, t1 on
+        // node 1, t2/t3 wait. Killing node 0 at t=5 aborts t0
+        // mid-compute. With stealing, t0 jumps the queue and reruns
+        // 5->15; without, it waits behind t2/t3 and reruns 15->25.
+        // Either way every task completes exactly once (a duplicate
+        // completion would trip GraphRun::complete's non-running
+        // assert) and the makespan is identical — stealing only
+        // reorders who waits.
+        let run = |steal: bool| {
+            let mut core = SimCore::new();
+            let mut spec = orthros();
+            spec.nodes = 2;
+            spec.ranks_per_node = 1;
+            let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+            let comm = Comm::world(&topo.spec);
+            let cfg = SchedulerCfg { work_stealing: steal, ..Default::default() };
+            let mut ss = SessionScheduler::new(topo, comm, cfg);
+            let mut g = TaskGraph::new();
+            g.foreach(4, |i| Task::compute(format!("t{i}"), Duration::from_secs(10)));
+            let sid = ss.add_session(&mut core, g);
+            core.timer(SimTime::ZERO + Duration::from_secs(5), 1);
+            let mut d = KillOnce { ss, node: 0, lost: 0 };
+            core.run(&mut d);
+            assert!(d.ss.all_done());
+            assert_eq!(d.lost, 1, "exactly the one running task was lost");
+            assert_eq!(core.metrics.count("chaos.plans.aborted"), 1);
+            (d.ss.stats(sid), core.now)
+        };
+        let (steal, now_s) = run(true);
+        let (fifo, now_f) = run(false);
+        assert_eq!(steal.completion.len(), 4);
+        // The re-run of t0 finishes ~15 s stealing, ~25 s FIFO.
+        assert!((steal.completion[0].secs_f64() - 15.0).abs() < 0.1, "{:?}", steal.completion);
+        assert!((fifo.completion[0].secs_f64() - 25.0).abs() < 0.1, "{:?}", fifo.completion);
+        assert!((now_s.secs_f64() - 25.0).abs() < 0.1);
+        assert_eq!(now_s, now_f, "stealing reorders, it does not change the makespan here");
+    }
+
+    #[test]
+    fn work_stealing_is_decision_identical_without_failures() {
+        // The SchedulerCfg switch must be invisible until a node
+        // actually dies: identical completion times, byte accounting,
+        // and virtual clock across a mixed multi-session run.
+        let run = |steal: bool| {
+            let mut core = SimCore::new();
+            let mut spec = orthros();
+            spec.nodes = 2;
+            let topo = Topology::build(spec, GpfsParams::default(), &mut core.net);
+            let comm = Comm::world(&topo.spec);
+            core.pfs.write("/data/in.bin", Blob::synthetic(20 * MB, 8));
+            core.node_write_range(0, 0, "/data/in.bin", Blob::synthetic(20 * MB, 8));
+            let cfg = SchedulerCfg {
+                cache_inputs: true,
+                locality_aware: true,
+                work_stealing: steal,
+                ..Default::default()
+            };
+            let mut ss = SessionScheduler::new(topo, comm, cfg);
+            let sids: Vec<SessionId> = (0u64..8)
+                .map(|i| ss.add_session(&mut core, random_graph(70 + i, 30, Some("/data/in.bin"))))
+                .collect();
+            core.run(&mut ss);
+            assert!(ss.all_done());
+            let stats: Vec<SessionStats> = sids.iter().map(|&s| ss.stats(s)).collect();
+            (core.now, stats)
+        };
+        let (now0, base) = run(false);
+        let (now1, steal) = run(true);
+        assert_eq!(now0, now1);
+        for (a, b) in base.iter().zip(&steal) {
+            assert_eq!(a.completion, b.completion);
+            assert_eq!(a.reads, b.reads);
+            assert_eq!(a.reads.peer_bytes, 0, "peer reads need a failure to exist");
         }
     }
 }

@@ -23,7 +23,9 @@ use crate::units::{Duration, SimTime};
 /// spun off evictions). Below every director-owned tag namespace
 /// (`dataflow::sched::TASK_TAG_BASE` = 1<<48,
 /// `staging::service::STAGE_TAG_BASE` = 1<<47), so directors ignore
-/// their completions.
+/// their completions. (`chaos::CHAOS_TAG_BASE` = 1<<45 sits below
+/// this too, but is a **timer** namespace — chaos never tags plans —
+/// so the two cannot collide.)
 pub const DEMOTE_TAG: u64 = 1 << 46;
 
 /// How engine-applied demotions reach the SSD tier: the flownet path
@@ -317,6 +319,80 @@ impl SimCore {
         evicted
     }
 
+    /// Crash-restart failure injection: `node`'s memory vanishes.
+    /// Every RAM and SSD replica slice the node held is dropped — pins
+    /// are not honoured, hardware failure outranks them — and the
+    /// residency mirror follows (the losses book as non-demoting
+    /// displacements). A warm spare rejoins instantly under the same
+    /// node id: the cluster's shape, slot pool, and network are
+    /// unchanged, so recovery is purely a data-and-tasks concern — the
+    /// owner aborts plans that were computing on the node
+    /// ([`SimCore::abort_plan`]) and re-stages lost replicas from the
+    /// cheapest surviving source. Returns the lost slices;
+    /// `chaos.node.failed` / `chaos.bytes.lost` account the event.
+    pub fn fail_node(&mut self, node: u32) -> Vec<Eviction> {
+        let lost = self.nodes.fail_node(node);
+        self.residency.on_evicted(&lost);
+        self.metrics.incr("chaos.node.failed");
+        for ev in &lost {
+            self.metrics.add_bytes("chaos.bytes.lost", ev.span_bytes());
+        }
+        lost
+    }
+
+    /// Abort an in-flight plan (its work died with a failed node):
+    /// cancel the flows it owns — the freed capacity redistributes at
+    /// the next settle — discard its unfinished steps without applying
+    /// their effects, and release its step storage. **No `PlanDone` is
+    /// emitted**, so the owner can resubmit the work under the same
+    /// tag and observe exactly one completion. Delay timers and flow
+    /// checks already in the heap become stale and are ignored when
+    /// they fire. Returns false (and does nothing) when the plan had
+    /// already completed: the abort raced a completion notice still in
+    /// the pending queue, and exactly-once then belongs to that
+    /// notice.
+    pub fn abort_plan(&mut self, id: PlanId) -> bool {
+        if self.plans[id.0].remaining == 0 {
+            return false;
+        }
+        // Cancel owned flows in FlowId order: the flow-owner map is
+        // hash-ordered, and slot free-list order must stay
+        // deterministic for bit-reproducible runs.
+        let mut owned: Vec<FlowId> = self
+            .flow_owner
+            .iter()
+            .filter(|&(_, &(p, _))| p as usize == id.0)
+            .map(|(&f, _)| f)
+            .collect();
+        owned.sort();
+        for f in owned {
+            self.flow_owner.remove(&f);
+            self.net.cancel(f);
+        }
+        let run = &mut self.plans[id.0];
+        // Close the metrics phases of steps caught mid-run.
+        let open: Vec<&'static str> = run
+            .state
+            .iter()
+            .enumerate()
+            .filter(|&(_, &st)| st == StepState::Running)
+            .map(|(i, _)| run.plan.steps[i].label)
+            .collect();
+        let released = run.plan.steps.len();
+        run.plan.steps = Vec::new();
+        run.state = Vec::new();
+        run.missing = Vec::new();
+        run.dependents = Vec::new();
+        run.remaining = 0;
+        self.live_plan_count -= 1;
+        self.retained_step_count -= released;
+        for label in open {
+            self.metrics.phase_end(label, self.now);
+        }
+        self.metrics.incr("chaos.plans.aborted");
+        true
+    }
+
     /// Run until the event queue drains. The director receives every
     /// notice and may keep submitting work.
     pub fn run(&mut self, director: &mut impl Director) {
@@ -365,6 +441,15 @@ impl SimCore {
                 }
             }
             Ev::StepDone { plan, step } => {
+                // A Delay timer may outlive its plan: the plan was
+                // aborted (node failure) and its storage released.
+                // Such stale timers are no-ops — a *live* plan can
+                // never see a StepDone for an already-Done step, so
+                // remaining == 0 precisely identifies the aborted (or
+                // finished-by-abort-race) case.
+                if self.plans[plan as usize].remaining == 0 {
+                    return;
+                }
                 self.complete_step(plan, step);
             }
             Ev::Timer { tag } => {
@@ -787,6 +872,71 @@ mod tests {
         assert_eq!(core.retained_steps(), 0);
         core.run_to_completion();
         assert_eq!(core.now.secs_f64(), 0.0);
+    }
+
+    #[test]
+    fn abort_plan_cancels_flows_and_stays_silent() {
+        let mut core = SimCore::new();
+        let l = core.net.add_link("l", Capacity::Fixed(GB as f64));
+        let mut p = Plan::new(11);
+        p.flow(vec![l], 1, 4 * GB, vec![], "doomed");
+        let mut q = Plan::new(22);
+        q.flow(vec![l], 1, GB, vec![], "survivor");
+        let doomed = core.submit(p);
+        core.submit(q);
+        assert!(core.abort_plan(doomed));
+        assert!(!core.abort_plan(doomed), "second abort must be a no-op");
+        struct Tags(Vec<u64>);
+        impl Director for Tags {
+            fn on_notice(&mut self, _c: &mut SimCore, n: Notice) {
+                if let Notice::PlanDone { tag, .. } = n {
+                    self.0.push(tag);
+                }
+            }
+        }
+        let mut d = Tags(vec![]);
+        core.run(&mut d);
+        // Only the survivor completes — no PlanDone for the abort —
+        // and with the doomed flow cancelled it gets the whole link.
+        assert_eq!(d.0, vec![22]);
+        assert!(core.plan_done(doomed), "aborted plan reads as settled");
+        assert!((core.now.secs_f64() - 1.0).abs() < 1e-6, "{}", core.now);
+        assert_eq!(core.live_plans(), 0);
+        assert_eq!(core.retained_steps(), 0);
+        assert_eq!(core.metrics.count("chaos.plans.aborted"), 1);
+    }
+
+    #[test]
+    fn aborted_plans_stale_delay_timers_are_ignored() {
+        let mut core = SimCore::new();
+        let mut p = Plan::new(1);
+        p.delay(Duration::from_secs(5), vec![], "work");
+        let id = core.submit(p);
+        let mut q = Plan::new(2);
+        q.delay(Duration::from_secs(7), vec![], "other");
+        core.submit(q);
+        assert!(core.abort_plan(id));
+        // The 5 s StepDone for the aborted plan fires mid-run and must
+        // be ignored rather than indexing the released state vector.
+        core.run_to_completion();
+        assert_eq!(core.now.secs_f64(), 7.0);
+    }
+
+    #[test]
+    fn fail_node_drops_replicas_and_mirror_follows() {
+        let mut core = SimCore::new();
+        core.nodes.set_capacity(Some(100));
+        core.nodes.set_ssd_capacity(Some(100));
+        core.node_write_range(0, 3, "/tmp/a", Blob::real(vec![1; 60]));
+        core.node_write_range(0, 3, "/tmp/b", Blob::real(vec![2; 60])); // a -> SSD
+        let lost = core.fail_node(2);
+        // One RAM slice (b) and one SSD slice (a) died with the node.
+        assert_eq!(lost.len(), 2, "{lost:?}");
+        assert!(core.residency.mirrors(&core.nodes));
+        assert!(!core.residency.resident(2, "/tmp/b"));
+        assert!(core.residency.resident(1, "/tmp/b"));
+        assert_eq!(core.metrics.count("chaos.node.failed"), 1);
+        assert_eq!(core.metrics.bytes("chaos.bytes.lost"), 120);
     }
 
     #[test]

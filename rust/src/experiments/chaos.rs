@@ -1,0 +1,167 @@
+//! The chaos experiment: interactive serving under seeded node-failure
+//! injection, FIFO requeue vs work stealing.
+//!
+//! Each matrix point replays the same seeded serve workload on an
+//! Orthros-class cluster while a [`crate::chaos`] kill schedule fails
+//! nodes mid-run: replicas and in-flight work are lost, the scheduler
+//! reassigns every lost task exactly once (queue tail for FIFO, queue
+//! front when stealing), and the residency manager re-stages torn
+//! datasets from the cheapest surviving source (peer RAM copy → SSD
+//! promote → GPFS re-read). The table sweeps the failure count for
+//! both requeue policies and reports turnaround percentiles, lost
+//! tasks, and recovery traffic; the zero-failure row doubles as the
+//! control — both policies must reproduce it bit-identically, and
+//! `benches/chaos.rs` asserts the injected-failure P99 stays within
+//! 2x of it.
+
+use crate::chaos::ChaosCfg;
+use crate::dataflow::sched::SchedulerCfg;
+use crate::metrics::Table;
+use crate::simtime::flownet::ThroughputMode;
+use crate::staging::service::{run_serve, ServeMode, ServeOutcome, ServiceCfg};
+use crate::units::{fmt_bytes, MB};
+
+use super::ExpResult;
+
+/// Failure counts swept (0 is the control row).
+pub const FAILURE_SWEEP: &[usize] = &[0, 2, 4];
+/// Mean gap between kills (seconds) — dense enough that every non-zero
+/// sweep point lands kills inside the serving window.
+pub const MEAN_GAP_SECS: f64 = 90.0;
+/// Orthros-class fat nodes per run; kills always leave survivors to
+/// peer-copy from.
+pub const NODES: u32 = 3;
+/// Sessions per matrix point.
+pub const SESSIONS: usize = 14;
+/// Default workload/chaos seed.
+pub const SEED: u64 = 42;
+
+/// The serve scenario a chaos point runs: staged serving with chaos
+/// armed at `failures` kills and the requeue policy selected.
+pub fn cfg(failures: usize, stealing: bool, sessions: usize, seed: u64) -> ServiceCfg {
+    ServiceCfg {
+        seed,
+        sessions,
+        mean_gap_secs: 20.0,
+        datasets: 3,
+        files_per_dataset: 4,
+        file_bytes: 8 * MB,
+        mode: ServeMode::Staged,
+        sched: SchedulerCfg {
+            locality_aware: true,
+            work_stealing: stealing,
+            ..Default::default()
+        },
+        chaos: Some(ChaosCfg {
+            // Decorrelate the kill stream from the workload stream.
+            seed: seed ^ 0xC8A0_5EED,
+            failures,
+            mean_gap_secs: MEAN_GAP_SECS,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Run one matrix point.
+pub fn run_point(failures: usize, stealing: bool, sessions: usize, seed: u64) -> ServeOutcome {
+    run_serve(NODES, &cfg(failures, stealing, sessions, seed), ThroughputMode::Fast)
+}
+
+/// Run the failure-count x requeue-policy matrix and render the table.
+pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    let mut table = Table::new(
+        format!(
+            "Chaos — serving under node-failure injection, {sessions} sessions/point \
+             (turnaround seconds; P99 ratio vs the same policy's zero-failure control)"
+        ),
+        &[
+            "failures",
+            "policy",
+            "P50",
+            "P95",
+            "P99",
+            "lost tasks",
+            "peer-copied",
+            "re-staged",
+            "P99 ratio",
+        ],
+    );
+    let mut fifo_pts = Vec::new();
+    let mut steal_pts = Vec::new();
+    let mut calm_p99 = [0.0f64; 2];
+    for &failures in FAILURE_SWEEP {
+        for (pi, stealing) in [false, true].into_iter().enumerate() {
+            let out = run_point(failures, stealing, sessions, seed);
+            debug_assert_eq!(out.node_failures, failures);
+            if failures == 0 {
+                calm_p99[pi] = out.percentiles.p99;
+            }
+            table.row(&[
+                failures.to_string(),
+                if stealing { "steal" } else { "fifo" }.to_string(),
+                format!("{:.1}", out.percentiles.p50),
+                format!("{:.1}", out.percentiles.p95),
+                format!("{:.1}", out.percentiles.p99),
+                out.lost_tasks.to_string(),
+                fmt_bytes(out.copied_bytes),
+                fmt_bytes(out.staged_bytes),
+                format!("{:.2}x", out.percentiles.p99 / calm_p99[pi]),
+            ]);
+            let pts = if stealing { &mut steal_pts } else { &mut fifo_pts };
+            pts.push((failures as f64, out.percentiles.p99));
+        }
+    }
+    ExpResult {
+        table,
+        series: vec![("fifo p99".into(), fifo_pts), ("steal p99".into(), steal_pts)],
+    }
+}
+
+pub fn run() -> ExpResult {
+    run_with(SESSIONS, SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_failure_point_is_policy_invariant() {
+        // The control row: with no kills, stealing never fires and
+        // both policies reproduce the same run bit-for-bit.
+        let fifo = run_point(0, false, 8, 7);
+        let steal = run_point(0, true, 8, 7);
+        assert_eq!(fifo.turnaround_secs, steal.turnaround_secs);
+        assert_eq!(fifo.virtual_secs, steal.virtual_secs);
+        assert_eq!(fifo.lost_tasks, 0);
+        assert_eq!(steal.lost_tasks, 0);
+        assert_eq!(fifo.copied_bytes, 0);
+    }
+
+    #[test]
+    fn injected_failures_fire_and_recover() {
+        for stealing in [false, true] {
+            let out = run_point(3, stealing, 8, 7);
+            assert_eq!(out.node_failures, 3, "stealing {stealing}");
+            // Recovery never routes task reads to the shared FS.
+            assert_eq!(out.reads.unstaged_bytes, 0);
+            // Deterministic replay.
+            let again = run_point(3, stealing, 8, 7);
+            assert_eq!(out.turnaround_secs, again.turnaround_secs);
+            assert_eq!(out.lost_tasks, again.lost_tasks);
+        }
+    }
+
+    #[test]
+    fn chaos_experiment_table_renders() {
+        let r = run_with(6, 9);
+        assert_eq!(r.table.rows.len(), 2 * FAILURE_SWEEP.len());
+        let fifo = r.series_named("fifo p99").unwrap();
+        let steal = r.series_named("steal p99").unwrap();
+        assert_eq!(fifo.len(), FAILURE_SWEEP.len());
+        assert_eq!(steal.len(), FAILURE_SWEEP.len());
+        assert!(fifo.iter().all(|&(_, y)| y > 0.0));
+        // The zero-failure control is identical across policies.
+        assert_eq!(fifo[0].1, steal[0].1);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod cache;
 pub mod campaign;
+pub mod chaos;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;

@@ -39,6 +39,9 @@
 //!   connected components, NF/FF stage-2 orientation fitting/indexing
 //! - [`runtime`] — PJRT executor for the AOT artifacts (behind the
 //!   `pjrt-artifacts` feature; a graceful stub otherwise)
+//! - [`chaos`] — seeded node-failure injection: reproducible kill
+//!   schedules driving replica loss, exactly-once task reassignment,
+//!   work stealing, and recovery re-staging
 //! - [`transfer`] / [`catalog`] — Globus-like transfer + metadata catalog
 //! - [`metrics`] — phase accounting and report tables
 //! - [`experiments`] — one driver per paper table/figure
@@ -52,6 +55,7 @@
 //! ```
 
 pub mod catalog;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod dataflow;

@@ -242,6 +242,22 @@ impl FlowNet {
         self.st.remove_flow(id);
     }
 
+    /// Abort a flow mid-transfer (its endpoint died): remove it from
+    /// the active set without crediting the remaining bytes. The freed
+    /// capacity redistributes at the next settle, like a completion.
+    /// Returns false when the flow had already drained (stale id) —
+    /// cancelling a flow that raced to completion is a no-op, not an
+    /// error, since the killing event and the completion check may
+    /// land at the same virtual instant.
+    pub fn cancel(&mut self, id: FlowId) -> bool {
+        if self.st.flow(id).is_none() {
+            return false;
+        }
+        self.model.on_complete(&mut self.st, id);
+        self.st.remove_flow(id);
+        true
+    }
+
     /// Advance virtual time by `dt`. O(1): flow progress is lazy —
     /// materialised from rates on read or at the next settle.
     pub fn advance(&mut self, dt: Duration) {
@@ -575,6 +591,28 @@ mod tests {
             assert_eq!(net.rate_each(f), 100.0);
             let (t, _) = net.next_completion(SimTime::ZERO).unwrap();
             assert_eq!(t.secs_f64(), 10.0);
+        });
+    }
+
+    #[test]
+    fn cancel_frees_capacity_and_tolerates_stale_ids() {
+        both(|mut net| {
+            let l = net.add_link("l", Capacity::Fixed(10.0 * GB));
+            let a = net.start(vec![l], 1, GB as u64);
+            let b = net.start(vec![l], 1, GB as u64);
+            net.recompute();
+            assert_eq!(net.rate_each(b), 5.0 * GB);
+            assert!(net.cancel(a));
+            net.recompute();
+            // The aborted flow's share redistributed; nothing of `a`
+            // survives to complete later.
+            assert_eq!(net.rate_each(b), 10.0 * GB);
+            assert!(net.is_done(a));
+            assert!(!net.cancel(a), "second cancel must be a stale no-op");
+            net.advance(Duration::from_secs(1));
+            net.complete(b);
+            assert!(!net.cancel(b), "cancel after completion must be a no-op");
+            assert_eq!(net.active_count(), 0);
         });
     }
 

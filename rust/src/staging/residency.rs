@@ -22,7 +22,12 @@
 //!   A replica whose shared-FS original changed since staging fails
 //!   the content check in *both* tiers and is restaged — staleness
 //!   against the catalog's view of the dataset is detected by
-//!   checksum, not by trust.
+//!   checksum, not by trust. With [`Residency::peer_copy`] armed (the
+//!   chaos recovery mode, see [`crate::chaos`]) a fourth source slots
+//!   in between: a file resident-and-matching on *some* nodes but
+//!   torn elsewhere by a node failure is **peer-copied** — surviving
+//!   holders stream it over the interconnect to exactly the missing
+//!   nodes, never touching the shared FS.
 //! - [`Residency`] — the session-level manager binding catalog
 //!   [`DatasetId`]s to hook specs: stages datasets incrementally,
 //!   refreshes LRU recency for hits, pins the active dataset so the
@@ -38,7 +43,7 @@ use crate::catalog::DatasetId;
 use crate::cluster::Topology;
 use crate::engine::SimCore;
 use crate::mpisim::{bcast::bcast_plan, Comm};
-use crate::pfs::ParallelFs;
+use crate::pfs::{Blob, ParallelFs};
 use crate::simtime::plan::{Effect, Plan, StepId};
 use crate::staging::hook::{bulk_stage_phases, LIST_ENTRY_BYTES};
 use crate::staging::spec::{HookSpec, Transfer};
@@ -60,21 +65,27 @@ pub struct IncrementalManifest {
     /// Files promoted from the node-local SSD tier (resident there
     /// with matching content, absent or stale in RAM).
     pub promoted: Vec<Transfer>,
+    /// Files peer-copied from surviving RAM holders to the nodes a
+    /// failure stripped ([`Residency::peer_copy`] recovery mode only;
+    /// always empty otherwise).
+    pub copied: Vec<Transfer>,
     /// Files already RAM-resident with matching content on every node.
     pub hits: Vec<Transfer>,
     pub staged_bytes: u64,
     pub promoted_bytes: u64,
+    /// Bytes re-replicated over the interconnect by the peer-copy leg.
+    pub copied_bytes: u64,
     pub hit_bytes: u64,
     pub meta_ops: u64,
 }
 
 impl IncrementalManifest {
     pub fn total_files(&self) -> usize {
-        self.staged.len() + self.promoted.len() + self.hits.len()
+        self.staged.len() + self.promoted.len() + self.copied.len() + self.hits.len()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.staged_bytes + self.promoted_bytes + self.hit_bytes
+        self.staged_bytes + self.promoted_bytes + self.copied_bytes + self.hit_bytes
     }
 
     /// RAM-hit fraction of the resolved file set.
@@ -87,19 +98,45 @@ impl IncrementalManifest {
     }
 
     /// Fraction served without touching the shared FS (RAM hits +
-    /// SSD promotions) — the tiered generalisation of the hit rate.
+    /// SSD promotions + peer copies) — the tiered generalisation of
+    /// the hit rate.
     pub fn local_rate(&self) -> f64 {
         if self.total_files() == 0 {
             0.0
         } else {
-            (self.hits.len() + self.promoted.len()) as f64 / self.total_files() as f64
+            (self.hits.len() + self.promoted.len() + self.copied.len()) as f64
+                / self.total_files() as f64
         }
     }
 
     /// Every file the stage delivers or reuses, in manifest order.
     pub fn all_files(&self) -> impl Iterator<Item = &Transfer> {
-        self.hits.iter().chain(self.promoted.iter()).chain(self.staged.iter())
+        self.hits
+            .iter()
+            .chain(self.promoted.iter())
+            .chain(self.copied.iter())
+            .chain(self.staged.iter())
     }
+}
+
+/// Nodes in `lo..=hi` *not* holding a RAM replica of `path` matching
+/// `want`, coalesced into inclusive ranges — empty when every node
+/// matches, the full range when none do. The peer-copy leg's gap
+/// computation; only consulted when the path has some RAM coverage,
+/// i.e. after a failure (or node-scoped eviction) tore a hole in an
+/// otherwise-resident replica set.
+fn missing_ranges(nodes: &NodeStores, lo: u32, hi: u32, path: &str, want: &Blob) -> Vec<(u32, u32)> {
+    let mut out: Vec<(u32, u32)> = Vec::new();
+    for n in lo..=hi {
+        if nodes.read(n, path).is_some_and(|b| b.same_content(want)) {
+            continue;
+        }
+        match out.last_mut() {
+            Some(r) if r.1 + 1 == n => r.1 = n,
+            _ => out.push((n, n)),
+        }
+    }
+    out
 }
 
 /// Build the incremental re-stage plan for `spec` over the leader
@@ -112,6 +149,17 @@ impl IncrementalManifest {
 /// RAM-resident the plan reduces to the metadata pass (a few ms),
 /// which is what makes sub-10-minute interactive cycles survive memory
 /// pressure.
+///
+/// `peer_copy` arms the node-failure recovery source between the RAM
+/// hit and the SSD promotion: a file matching on *some* nodes of the
+/// range but torn elsewhere is re-replicated from the survivors over
+/// the interconnect ([`crate::cluster::Topology::path_torus`]) to
+/// exactly the missing nodes — cheaper than both alternatives and
+/// invisible to the shared FS. It is a behaviour switch, not just a
+/// cost one (node-scoped LRU eviction can also tear ranges), so the
+/// serving layer arms it only when chaos is configured and the
+/// default-off keeps failure-free runs byte-identical to the seed.
+#[allow(clippy::too_many_arguments)]
 pub fn incremental_plan(
     plan: &mut Plan,
     pfs: &ParallelFs,
@@ -119,6 +167,7 @@ pub fn incremental_plan(
     topo: &Topology,
     comm: &Comm,
     spec: &HookSpec,
+    peer_copy: bool,
     deps: Vec<StepId>,
 ) -> Result<(IncrementalManifest, StepId)> {
     let (transfers, meta_ops) = spec.resolve(pfs);
@@ -131,17 +180,39 @@ pub fn incremental_plan(
     let can_promote = topo.ssd_layer.is_some();
     let mut staged = Vec::new();
     let mut promoted = Vec::new();
+    let mut copied = Vec::new();
     let mut hits = Vec::new();
     let mut blobs = Vec::new();
-    let (mut staged_bytes, mut promoted_bytes, mut hit_bytes) = (0u64, 0u64, 0u64);
+    // Per copied file: the gap ranges to fill and the content to land
+    // (checked identical to what the surviving holders have).
+    let mut copy_gaps: Vec<Vec<(u32, u32)>> = Vec::new();
+    let mut copy_blobs: Vec<Blob> = Vec::new();
+    let (mut staged_bytes, mut promoted_bytes, mut copied_bytes, mut hit_bytes) =
+        (0u64, 0u64, 0u64, 0u64);
     for t in &transfers {
         let blob = pfs
             .read(&t.src)
             .ok_or_else(|| anyhow!("resolved file vanished: {}", t.src))?
             .clone();
+        // The coverage pre-filter keeps the common misses cheap: only
+        // a path with *some* RAM residency pays the per-node gap scan.
+        let gaps = if peer_copy && !nodes.coverage_of(&t.dst).is_empty() {
+            let g = missing_ranges(nodes, lo, hi, &t.dst, &blob);
+            // Survivors must exist (gaps != the whole range, which is
+            // the stale-everywhere case) and gaps must exist (empty
+            // means a full RAM hit, taken below).
+            (!g.is_empty() && g != [(lo, hi)]).then_some(g)
+        } else {
+            None
+        };
         if nodes.resident_matches(lo, hi, &t.dst, &blob) {
             hit_bytes += blob.len();
             hits.push(t.clone());
+        } else if let Some(gaps) = gaps {
+            copied_bytes += blob.len();
+            copied.push(t.clone());
+            copy_gaps.push(gaps);
+            copy_blobs.push(blob);
         } else if can_promote
             && nodes.resident_matches_tier(StorageTier::Ssd, lo, hi, &t.dst, &blob)
         {
@@ -160,9 +231,11 @@ pub fn incremental_plan(
     let manifest = IncrementalManifest {
         staged: staged.clone(),
         promoted: promoted.clone(),
+        copied: copied.clone(),
         hits,
         staged_bytes,
         promoted_bytes,
+        copied_bytes,
         hit_bytes,
         meta_ops,
     };
@@ -190,6 +263,23 @@ pub fn incremental_plan(
             tails.push(eff);
         }
     }
+    // Peer-copy leg: surviving RAM holders stream each torn file over
+    // the interconnect to exactly its missing nodes — one flow member
+    // per missing node, no shared-FS traffic. The landed content is
+    // the shared-FS original, which the gap scan proved bit-identical
+    // to what the survivors hold.
+    for ((t, gaps), blob) in copied.iter().zip(&copy_gaps).zip(copy_blobs) {
+        let members: u64 = gaps.iter().map(|&(a, b)| (b - a + 1) as u64).sum();
+        let cflow = plan.flow(topo.path_torus(), members, blob.len(), vec![glob], "peer-copy");
+        for &(a, b) in gaps {
+            let eff = plan.effect(
+                Effect::NodeWrite { nodes: (a, b), path: t.dst.clone(), data: blob.clone() },
+                vec![cflow],
+                "peer-copy",
+            );
+            tails.push(eff);
+        }
+    }
     // Staging leg: broadcast only the *delta* transfer list, then the
     // collective read + node-local write of the delta only.
     if !staged.is_empty() {
@@ -205,7 +295,10 @@ pub fn incremental_plan(
         );
         tails.push(stage_done);
     }
-    let label = if manifest.staged.is_empty() && manifest.promoted.is_empty() {
+    let label = if manifest.staged.is_empty()
+        && manifest.promoted.is_empty()
+        && manifest.copied.is_empty()
+    {
         "stage-skip"
     } else {
         "stage-join"
@@ -223,15 +316,20 @@ pub struct ResidencyStats {
     /// Files served by SSD promotion (neither a RAM hit nor a GPFS
     /// re-stage).
     pub file_promotions: u64,
+    /// Files peer-copied from surviving RAM holders after a node
+    /// failure tore their replica range.
+    pub file_copies: u64,
     pub hit_bytes: u64,
     pub staged_bytes: u64,
     /// Bytes promoted from the SSD tier instead of re-staged.
     pub promoted_bytes: u64,
+    /// Bytes re-replicated over the interconnect by peer copies.
+    pub copied_bytes: u64,
 }
 
 impl ResidencyStats {
     fn total_files(&self) -> u64 {
-        self.file_hits + self.file_misses + self.file_promotions
+        self.file_hits + self.file_misses + self.file_promotions + self.file_copies
     }
 
     /// RAM-hit fraction of all resolved files.
@@ -245,13 +343,13 @@ impl ResidencyStats {
     }
 
     /// Fraction served without touching the shared FS (RAM hits +
-    /// SSD promotions).
+    /// SSD promotions + peer copies).
     pub fn local_rate(&self) -> f64 {
         let total = self.total_files();
         if total == 0 {
             0.0
         } else {
-            (self.file_hits + self.file_promotions) as f64 / total as f64
+            (self.file_hits + self.file_promotions + self.file_copies) as f64 / total as f64
         }
     }
 }
@@ -282,6 +380,11 @@ pub struct Residency {
     pinned_paths: BTreeMap<DatasetId, Vec<String>>,
     /// Stages submitted by `begin_stage` awaiting `commit_stage`.
     in_flight: BTreeMap<DatasetId, IncrementalManifest>,
+    /// Arm the peer-copy recovery source in [`incremental_plan`]
+    /// (chaos mode): torn replica ranges re-replicate from surviving
+    /// holders instead of the shared FS. Off (the default) reproduces
+    /// the seed classification exactly.
+    pub peer_copy: bool,
     pub stats: ResidencyStats,
 }
 
@@ -348,8 +451,16 @@ impl Residency {
             .ok_or_else(|| anyhow!("dataset {id:?} has no bound hook spec"))?
             .clone();
         let mut plan = Plan::new(tag);
-        let (m, _done) =
-            incremental_plan(&mut plan, &core.pfs, &core.nodes, topo, comm, &spec, vec![])?;
+        let (m, _done) = incremental_plan(
+            &mut plan,
+            &core.pfs,
+            &core.nodes,
+            topo,
+            comm,
+            &spec,
+            self.peer_copy,
+            vec![],
+        )?;
         let (lo, hi) = comm.node_range();
         // Refresh this dataset's pins atomically: release whatever it
         // still holds from a previous stage (a path the spec no longer
@@ -419,9 +530,11 @@ impl Residency {
         self.stats.file_hits += m.hits.len() as u64;
         self.stats.file_misses += m.staged.len() as u64;
         self.stats.file_promotions += m.promoted.len() as u64;
+        self.stats.file_copies += m.copied.len() as u64;
         self.stats.hit_bytes += m.hit_bytes;
         self.stats.staged_bytes += m.staged_bytes;
         self.stats.promoted_bytes += m.promoted_bytes;
+        self.stats.copied_bytes += m.copied_bytes;
         let fresh: Vec<String> = m.all_files().map(|t| t.dst.clone()).collect();
         self.pinned_paths.insert(id, fresh.clone());
         self.delivered.insert(id, fresh);
@@ -471,6 +584,7 @@ impl Residency {
                     entry(size_of::<IncrementalManifest>())
                         + transfers(&m.staged)
                         + transfers(&m.promoted)
+                        + transfers(&m.copied)
                         + transfers(&m.hits)
                 })
                 .sum::<u64>()
@@ -502,7 +616,7 @@ mod tests {
         let comm = crate::mpisim::Comm::leader(&topo.spec);
         let mut p = Plan::new(0);
         let (m1, _) =
-            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, false, vec![])
                 .unwrap();
         assert_eq!(m1.staged.len(), 10);
         assert_eq!(m1.hits.len(), 0);
@@ -512,7 +626,7 @@ mod tests {
 
         let mut p = Plan::new(1);
         let (m2, _) =
-            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, false, vec![])
                 .unwrap();
         assert_eq!(m2.staged.len(), 0);
         assert_eq!(m2.hits.len(), 10);
@@ -528,7 +642,7 @@ mod tests {
         let (mut core, topo, spec) = setup(4, 4);
         let comm = crate::mpisim::Comm::leader(&topo.spec);
         let mut p = Plan::new(0);
-        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, false, vec![])
             .unwrap();
         core.submit(p);
         core.run_to_completion();
@@ -536,7 +650,7 @@ mod tests {
         core.pfs.write("/projects/ds/f001.bin", Blob::synthetic(MB, 999));
         let mut p = Plan::new(1);
         let (m, _) =
-            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, vec![])
+            incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &comm, &spec, false, vec![])
                 .unwrap();
         assert_eq!(m.staged.len(), 1, "only the stale file restages");
         assert_eq!(m.staged[0].src, "/projects/ds/f001.bin");
@@ -731,6 +845,51 @@ mod tests {
         assert!(core.nodes.is_pinned("/tmp/tds0/f0.bin"));
         assert!(core.residency.mirrors(&core.nodes));
         res.unpin_dataset(&mut core, ids[0]);
+    }
+
+    #[test]
+    fn torn_replica_peer_copies_from_survivors() {
+        // A node failure strips node 2's replicas of a dataset staged
+        // on 4 nodes. With peer_copy armed, the re-stage classifies
+        // every torn file as a copy — zero shared-FS traffic — and
+        // lands content identical to the originals on exactly the
+        // missing node. Disarmed (the seed behaviour), the same tear
+        // re-stages from GPFS.
+        let run = |armed: bool| {
+            let (mut core, topo, spec) = setup(4, 3);
+            let comm = crate::mpisim::Comm::leader(&topo.spec);
+            let mut catalog = Catalog::new();
+            let id = catalog.register("ds", "/projects/ds", 3, 3 * MB);
+            let mut res = Residency::new();
+            res.peer_copy = armed;
+            res.bind(id, spec);
+            res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+            res.unpin_dataset(&mut core, id);
+            core.fail_node(2);
+            let m = res.stage_dataset(&mut core, &topo, &comm, id).unwrap();
+            // Whatever the source, recovery must restore bit-identical
+            // content on the stripped node and keep the mirror true.
+            for f in 0..3 {
+                let want = core.pfs.read(&format!("/projects/ds/f00{f}.bin")).unwrap();
+                let got = core.nodes.read(2, &format!("/tmp/ds/f00{f}.bin")).unwrap();
+                assert!(got.same_content(want), "armed={armed} f{f}");
+            }
+            assert!(core.residency.mirrors(&core.nodes));
+            res.unpin_dataset(&mut core, id);
+            (m, res.stats)
+        };
+        let (m, stats) = run(true);
+        assert_eq!(m.copied.len(), 3, "torn files must peer-copy");
+        assert!(m.staged.is_empty() && m.promoted.is_empty() && m.hits.is_empty());
+        assert_eq!(m.copied_bytes, 3 * MB);
+        assert_eq!(m.local_rate(), 1.0);
+        assert_eq!(stats.file_copies, 3);
+        assert_eq!(stats.staged_bytes, 3 * MB, "only the first stage touched GPFS");
+        let (m, stats) = run(false);
+        assert_eq!(m.staged.len(), 3, "seed behaviour: the tear re-stages from GPFS");
+        assert!(m.copied.is_empty());
+        assert_eq!(stats.file_copies, 0);
+        assert_eq!(stats.staged_bytes, 6 * MB);
     }
 
     #[test]

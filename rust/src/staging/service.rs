@@ -37,10 +37,23 @@
 //!
 //! Everything is deterministic: same seed, same turnaround table,
 //! bit-for-bit (tested in `rust/tests/integration_serve.rs`).
+//!
+//! # Chaos serving
+//!
+//! [`ServiceCfg::chaos`] arms seeded node-failure injection (see
+//! [`crate::chaos`]): kill timers fire under [`CHAOS_TAG_BASE`], each
+//! dropping one node's replicas and in-flight work. The service then
+//! (a) routes the loss to
+//! [`SessionScheduler::on_node_failure`] so every lost task is
+//! reassigned exactly once, and (b) re-stages every open dataset the
+//! kill tore, through the residency manager's peer-copy-first recovery
+//! path. A chaos config with zero failures schedules nothing and is
+//! bit-identical to no chaos config at all (tested).
 
 use std::collections::VecDeque;
 
 use crate::catalog::{Catalog, DatasetId};
+use crate::chaos::{kill_schedule, ChaosCfg, CHAOS_TAG_BASE};
 use crate::cluster::{orthros, Topology};
 use crate::dataflow::graph::{Task, TaskGraph};
 use crate::dataflow::sched::{
@@ -95,6 +108,11 @@ pub struct ServiceCfg {
     pub ssd_slice: Option<u64>,
     pub mode: ServeMode,
     pub sched: SchedulerCfg,
+    /// Seeded node-failure injection. `None` (and `Some` with zero
+    /// failures) runs bit-identically to the pre-chaos service; `Some`
+    /// with failures arms kill timers, peer-copy recovery staging, and
+    /// exactly-once task reassignment.
+    pub chaos: Option<ChaosCfg>,
 }
 
 impl Default for ServiceCfg {
@@ -110,6 +128,7 @@ impl Default for ServiceCfg {
             ssd_slice: None,
             mode: ServeMode::Staged,
             sched: SchedulerCfg { locality_aware: true, ..Default::default() },
+            chaos: None,
         }
     }
 }
@@ -254,6 +273,13 @@ pub struct Service {
     budgets: crate::storage::TierBudgets,
     /// Deepest the admission queue ever got.
     pub peak_queue: usize,
+    /// The materialised kill schedule; index k is the victim of the
+    /// timer armed under `CHAOS_TAG_BASE + k`. Empty = chaos disarmed.
+    kills: Vec<(SimTime, u32)>,
+    /// Kills that actually fired.
+    pub node_failures: usize,
+    /// Dispatched tasks lost to kills and reassigned (exactly once).
+    pub lost_tasks: usize,
 }
 
 impl Service {
@@ -308,13 +334,50 @@ impl Service {
         debug_assert_eq!(self.ds_state[d], DsState::Staging);
         // Byte accounting lives in `Residency::stats`; no second
         // counter to keep in sync here.
-        self.res
-            .commit_stage(core, &self.leader, self.ds_ids[d])
-            .expect("serve: stage rejected under memory pressure (admission bug)");
+        match self.res.commit_stage(core, &self.leader, self.ds_ids[d]) {
+            Ok(()) => {}
+            Err(e) => {
+                // Without chaos a failed commit is an admission bug.
+                // With chaos, a kill can tear replicas the in-flight
+                // stage classified as hits; re-stage the delta (the
+                // residency manager recovers via peer copy / SSD
+                // promote / GPFS re-read) and keep waiters waiting.
+                assert!(
+                    !self.kills.is_empty(),
+                    "serve: stage rejected under memory pressure (admission bug): {e}"
+                );
+                self.res
+                    .begin_stage(
+                        core,
+                        &self.topo,
+                        &self.leader,
+                        self.ds_ids[d],
+                        STAGE_TAG_BASE + d as u64,
+                    )
+                    .expect("serve: recovery begin_stage failed");
+                return;
+            }
+        }
         self.ds_state[d] = DsState::Resident;
         for s in std::mem::take(&mut self.ds_waiters[d]) {
             self.start_tasks(core, s);
         }
+        if self.ds_users[d] == 0 {
+            // Every user left while a recovery stage was in flight
+            // (only possible under chaos): close the dataset now that
+            // the stage has landed.
+            self.close_dataset(core, d);
+        }
+    }
+
+    /// Last user out: unpin so the space serves the next tenant.
+    /// Replicas stay resident until evicted, so a re-open usually
+    /// restages nothing (all hits).
+    fn close_dataset(&mut self, core: &mut SimCore, d: usize) {
+        self.res.unpin_dataset(core, self.ds_ids[d]);
+        self.admitted_bytes -= self.cfg.dataset_bytes();
+        self.ds_state[d] = DsState::Cold;
+        self.try_admit(core);
     }
 
     fn start_tasks(&mut self, core: &mut SimCore, s: usize) {
@@ -333,14 +396,37 @@ impl Service {
         if self.cfg.mode == ServeMode::Staged {
             let d = self.specs[s].dataset;
             self.ds_users[d] -= 1;
-            if self.ds_users[d] == 0 {
-                // Last user out: unpin so the space serves the next
-                // tenant. Replicas stay resident until evicted, so a
-                // re-open usually restages nothing (all hits).
-                self.res.unpin_dataset(core, self.ds_ids[d]);
-                self.admitted_bytes -= self.cfg.dataset_bytes();
-                self.ds_state[d] = DsState::Cold;
-                self.try_admit(core);
+            // Close only when no recovery stage is in flight; a
+            // Staging dataset closes when its stage lands instead
+            // (see `on_stage_done`), keeping pin/commit ordering sane.
+            if self.ds_users[d] == 0 && self.ds_state[d] == DsState::Resident {
+                self.close_dataset(core, d);
+            }
+        }
+    }
+
+    /// A chaos kill fired: fail the node (replicas, mirrors, in-flight
+    /// plans), reassign its lost tasks exactly once, and re-stage every
+    /// open dataset the kill tore.
+    fn on_kill(&mut self, core: &mut SimCore, k: usize) {
+        let node = self.kills[k].1;
+        self.node_failures += 1;
+        core.fail_node(node);
+        self.lost_tasks += self.sched.on_node_failure(core, node);
+        for d in 0..self.ds_ids.len() {
+            if self.ds_state[d] == DsState::Resident
+                && !self.res.dataset_resident_on(core, self.ds_ids[d], node)
+            {
+                self.ds_state[d] = DsState::Staging;
+                self.res
+                    .begin_stage(
+                        core,
+                        &self.topo,
+                        &self.leader,
+                        self.ds_ids[d],
+                        STAGE_TAG_BASE + d as u64,
+                    )
+                    .expect("serve: recovery begin_stage failed");
             }
         }
     }
@@ -349,7 +435,15 @@ impl Service {
 impl Director for Service {
     fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
         match notice {
-            Notice::Timer { tag } => self.on_arrival(core, tag as usize),
+            Notice::Timer { tag } => {
+                // Session-arrival tags are small workload indices;
+                // chaos kill timers live in their own namespace.
+                if tag >= CHAOS_TAG_BASE {
+                    self.on_kill(core, (tag - CHAOS_TAG_BASE) as usize);
+                } else {
+                    self.on_arrival(core, tag as usize);
+                }
+            }
             Notice::PlanDone { tag, .. } => {
                 if tag >= TASK_TAG_BASE {
                     if let Some(sid) = self.sched.on_plan_done(core, tag) {
@@ -379,6 +473,9 @@ pub struct ServeOutcome {
     pub staged_bytes: u64,
     /// Bytes served by SSD-tier promotion instead of GPFS re-staging.
     pub promoted_bytes: u64,
+    /// Bytes recovery staging copied between surviving peers' RAM
+    /// instead of re-reading GPFS (0 without chaos).
+    pub copied_bytes: u64,
     /// Bytes RAM eviction demoted into the SSD tier (survived) over
     /// the run.
     pub demoted_bytes: u64,
@@ -393,6 +490,10 @@ pub struct ServeOutcome {
     pub sched_state: StateBytes,
     /// Residency-manager bookkeeping over catalogued datasets.
     pub residency_state: StateBytes,
+    /// Chaos kills that fired during the run.
+    pub node_failures: usize,
+    /// Dispatched tasks lost to kills and reassigned exactly once.
+    pub lost_tasks: usize,
 }
 
 /// Run one serve scenario on an Orthros-class cluster of `nodes` fat
@@ -465,6 +566,19 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
     for (s, sp) in specs.iter().enumerate() {
         core.timer(sp.arrival, s as u64);
     }
+    // Arm chaos: one kill timer per scheduled failure, and the
+    // peer-copy recovery source in the residency manager. A zero-kill
+    // schedule arms nothing, keeping the run bit-identical to
+    // `chaos: None` (tested in `rust/tests/integration_chaos.rs`).
+    let kills = cfg
+        .chaos
+        .as_ref()
+        .map(|c| kill_schedule(c, nodes))
+        .unwrap_or_default();
+    for (k, &(at, _)) in kills.iter().enumerate() {
+        core.timer(at, CHAOS_TAG_BASE + k as u64);
+    }
+    res.peer_copy = !kills.is_empty();
     let world = Comm::world(&topo.spec);
     let leader = Comm::leader(&topo.spec);
     let mut svc = Service {
@@ -484,6 +598,9 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         admitted_bytes: 0,
         budgets,
         peak_queue: 0,
+        kills,
+        node_failures: 0,
+        lost_tasks: 0,
     };
     core.run(&mut svc);
 
@@ -492,10 +609,14 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         "serve run drained with unserved sessions"
     );
     assert_eq!(core.node_write_rejections(), 0, "admission let a write be rejected");
-    // Promotion plans pin their SSD copies, so a planned promotion can
-    // neither miss nor be rejected mid-flight.
-    assert_eq!(core.metrics.count("node.promote.missed"), 0, "promotion missed its SSD copy");
-    assert_eq!(core.metrics.count("node.promote.rejected"), 0, "promotion rejected");
+    if svc.node_failures == 0 {
+        // Promotion plans pin their SSD copies, so a planned promotion
+        // can neither miss nor be rejected mid-flight — unless a chaos
+        // kill dropped the pinned copy underneath the plan, which the
+        // recovery path absorbs.
+        assert_eq!(core.metrics.count("node.promote.missed"), 0, "promotion missed its SSD copy");
+        assert_eq!(core.metrics.count("node.promote.rejected"), 0, "promotion rejected");
+    }
     let turnaround_secs: Vec<f64> = (0..n)
         .map(|s| (svc.done_at[s].unwrap() - svc.specs[s].arrival).secs_f64())
         .collect();
@@ -521,6 +642,7 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         reads.staged_bytes += st.reads.staged_bytes;
         reads.ssd_bytes += st.reads.ssd_bytes;
         reads.unstaged_bytes += st.reads.unstaged_bytes;
+        reads.peer_bytes += st.reads.peer_bytes;
         reads.cache_hits += st.reads.cache_hits;
     }
     ServeOutcome {
@@ -529,12 +651,15 @@ pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOut
         virtual_secs: core.now.secs_f64(),
         staged_bytes: svc.res.stats.staged_bytes,
         promoted_bytes: svc.res.stats.promoted_bytes,
+        copied_bytes: svc.res.stats.copied_bytes,
         demoted_bytes: core.metrics.bytes("node.demote"),
         reads,
         peak_queue: svc.peak_queue,
         sessions: n,
         sched_state: StateBytes::new(svc.sched.state_bytes(), svc.sched.session_count() as u64),
         residency_state: StateBytes::new(svc.res.state_bytes(), cfg.datasets as u64),
+        node_failures: svc.node_failures,
+        lost_tasks: svc.lost_tasks,
     }
 }
 
@@ -694,6 +819,41 @@ mod tests {
         let again = run_serve(2, &cfg, ThroughputMode::Fast);
         assert_eq!(tiered.turnaround_secs, again.turnaround_secs);
         assert_eq!(tiered.promoted_bytes, again.promoted_bytes);
+    }
+
+    #[test]
+    fn chaos_serving_recovers_and_stays_deterministic() {
+        let mut cfg = small_cfg(ServeMode::Staged);
+        cfg.chaos = Some(ChaosCfg { seed: 9, failures: 3, mean_gap_secs: 60.0 });
+        // `run_serve` itself asserts every session completed — no task
+        // loss — and that no node write was ever rejected.
+        let out = run_serve(2, &cfg, ThroughputMode::Fast);
+        assert_eq!(out.node_failures, 3);
+        assert_eq!(out.turnaround_secs.len(), 10);
+        // Recovery keeps task reads off the shared FS: torn replicas
+        // are served from the surviving peer until re-staging lands.
+        assert_eq!(out.reads.unstaged_bytes, 0);
+        // The whole chaotic run is bit-reproducible.
+        let again = run_serve(2, &cfg, ThroughputMode::Fast);
+        assert_eq!(out.turnaround_secs, again.turnaround_secs);
+        assert_eq!(out.lost_tasks, again.lost_tasks);
+        assert_eq!(out.copied_bytes, again.copied_bytes);
+        assert_eq!(out.staged_bytes, again.staged_bytes);
+        assert_eq!(out.virtual_secs, again.virtual_secs);
+    }
+
+    #[test]
+    fn zero_failure_chaos_is_bit_identical_to_none() {
+        let mut cfg = small_cfg(ServeMode::Staged);
+        cfg.chaos = Some(ChaosCfg { failures: 0, ..Default::default() });
+        let armed = run_serve(2, &cfg, ThroughputMode::Fast);
+        let plain = run_serve(2, &small_cfg(ServeMode::Staged), ThroughputMode::Fast);
+        assert_eq!(armed.turnaround_secs, plain.turnaround_secs);
+        assert_eq!(armed.virtual_secs, plain.virtual_secs);
+        assert_eq!(armed.staged_bytes, plain.staged_bytes);
+        assert_eq!(armed.node_failures, 0);
+        assert_eq!(armed.lost_tasks, 0);
+        assert_eq!(armed.copied_bytes, 0);
     }
 
     #[test]

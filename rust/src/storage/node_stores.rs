@@ -363,6 +363,47 @@ impl TierStore {
         }
     }
 
+    /// Remove the single-node slice covering `node` from every replica
+    /// of every path (the node's memory vanished), splitting
+    /// stragglers. Pins are intentionally **not** consulted — hardware
+    /// failure does not honour them. Returns the removed slices as
+    /// (path id, replica restricted to `node`) in id order.
+    fn drop_node(&mut self, node: u32) -> Vec<(u32, Replica)> {
+        let ids: Vec<u32> = self
+            .iter_entries()
+            .filter(|(_, e)| e.covering_idx(node).is_some())
+            .map(|(id, _)| id)
+            .collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let mut entry = self.take_entry(id).expect("id listed as resident");
+            let mut kept: Vec<Replica> = Vec::with_capacity(entry.reps.len() + 1);
+            for r in entry.reps.drain(..) {
+                if !r.covers(node) {
+                    kept.push(r);
+                    continue;
+                }
+                let b = r.blob.len();
+                if b > 0 {
+                    self.sub_used(node, b);
+                }
+                if r.lo < node {
+                    kept.push(Replica { lo: r.lo, hi: node - 1, ..r.clone() });
+                }
+                if r.hi > node {
+                    kept.push(Replica { lo: node + 1, hi: r.hi, ..r.clone() });
+                }
+                out.push((id, Replica { lo: node, hi: node, ..r }));
+            }
+            if !kept.is_empty() {
+                entry.reps = kept;
+                entry.refresh_coverage();
+                self.put_entry(id, entry);
+            }
+        }
+        out
+    }
+
     /// Usage of `n` once the same-path replica covering it (if any) is
     /// replaced by the pending write.
     fn used_after_overwrite(&self, n: u32, id: u32) -> u64 {
@@ -822,6 +863,33 @@ impl NodeStores {
             for r in store.purge_path(id) {
                 out.push(Eviction {
                     path: path.to_string(),
+                    lo: r.lo,
+                    hi: r.hi,
+                    bytes: r.blob.len(),
+                    tier,
+                    demoted: false,
+                });
+            }
+        }
+        out
+    }
+
+    /// Crash `node`: every replica slice it held — RAM and SSD, pinned
+    /// or not — is destroyed (hardware failure does not honour pins,
+    /// and nothing demotes: the memory is simply gone). Pin refcounts
+    /// themselves survive — they belong to the dataset owners, who
+    /// will re-stage and re-deliver under the same pins. Returns the
+    /// losses as eviction records (`demoted == false`) so the caller
+    /// can keep the residency mirror in sync.
+    pub fn fail_node(&mut self, node: u32) -> Vec<Eviction> {
+        let mut out = Vec::new();
+        for (tier, store) in [
+            (StorageTier::Ram, &mut self.ram),
+            (StorageTier::Ssd, &mut self.ssd),
+        ] {
+            for (id, r) in store.drop_node(node) {
+                out.push(Eviction {
+                    path: self.interner.resolve(id).to_string(),
                     lo: r.lo,
                     hi: r.hi,
                     bytes: r.blob.len(),
@@ -1366,6 +1434,35 @@ mod tests {
         assert!(ev.iter().all(|e| !e.demoted));
         assert_eq!(ns.path_count_tier(StorageTier::Ssd), 0);
         assert!(!ns.exists_on(3, "/tmp/a"));
+    }
+
+    #[test]
+    fn fail_node_drops_both_tiers_ignoring_pins() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(200));
+        ns.write_range(0, 3, "/tmp/a", Blob::synthetic(60, 1));
+        ns.write_range(0, 3, "/tmp/b", Blob::synthetic(60, 2)); // a -> SSD
+        ns.pin("/tmp/a");
+        ns.pin("/tmp/b");
+        let ev = ns.fail_node(2);
+        // One RAM slice (b) and one SSD slice (a), node 2 only.
+        assert_eq!(ev.len(), 2, "{ev:?}");
+        assert!(ev.iter().all(|e| e.lo == 2 && e.hi == 2 && !e.demoted));
+        assert!(ev.iter().any(|e| e.path == "/tmp/b" && e.tier == StorageTier::Ram));
+        assert!(ev.iter().any(|e| e.path == "/tmp/a" && e.tier == StorageTier::Ssd));
+        // Survivors keep their slices; the dead node lost both tiers.
+        assert!(ns.exists_on(1, "/tmp/b"));
+        assert!(!ns.exists_on(2, "/tmp/b"));
+        assert!(ns.read_tier(StorageTier::Ssd, 2, "/tmp/a").is_none());
+        assert!(ns.read_tier(StorageTier::Ssd, 3, "/tmp/a").is_some());
+        assert_eq!(ns.bytes_on(2), 0);
+        assert_eq!(ns.bytes_on_tier(StorageTier::Ssd, 2), 0);
+        assert_eq!(ns.coverage_of("/tmp/b"), vec![(0, 1), (3, 3)]);
+        // Pins survive the crash: the owners still hold them.
+        assert!(ns.is_pinned("/tmp/a"));
+        // A node holding nothing reports no losses.
+        assert!(ns.fail_node(7).is_empty());
     }
 
     #[test]

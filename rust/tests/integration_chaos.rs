@@ -1,0 +1,89 @@
+//! Integration tests for chaos serving: arming the fault-injection
+//! machinery must be invisible until a kill actually fires, and a
+//! genuinely chaotic run must drain completely and replay
+//! bit-identically.
+
+use xstage::chaos::ChaosCfg;
+use xstage::dataflow::sched::SchedulerCfg;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::service::{run_serve, ServeMode, ServiceCfg};
+use xstage::units::MB;
+
+fn cfg(stealing: bool, chaos: Option<ChaosCfg>) -> ServiceCfg {
+    ServiceCfg {
+        seed: 77,
+        sessions: 10,
+        mean_gap_secs: 18.0,
+        datasets: 3,
+        files_per_dataset: 4,
+        file_bytes: 8 * MB,
+        mode: ServeMode::Staged,
+        sched: SchedulerCfg {
+            locality_aware: true,
+            work_stealing: stealing,
+            ..Default::default()
+        },
+        chaos,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn zero_failure_chaos_and_stealing_are_bit_identical_to_seed_scheduler() {
+    // The acceptance bar: at failure rate 0, neither arming the chaos
+    // config nor enabling work stealing may change a single decision —
+    // the turnaround table, virtual clock, byte accounting, and read
+    // stats must be bit-identical to the seed FIFO scheduler.
+    let baseline = run_serve(2, &cfg(false, None), ThroughputMode::Fast);
+    let zero = ChaosCfg { failures: 0, ..Default::default() };
+    for (label, variant) in [
+        ("stealing on", cfg(true, None)),
+        ("chaos armed at rate 0", cfg(false, Some(zero))),
+        ("both", cfg(true, Some(zero))),
+    ] {
+        let out = run_serve(2, &variant, ThroughputMode::Fast);
+        assert_eq!(out.turnaround_secs, baseline.turnaround_secs, "{label}");
+        assert_eq!(out.virtual_secs, baseline.virtual_secs, "{label}");
+        assert_eq!(out.staged_bytes, baseline.staged_bytes, "{label}");
+        assert_eq!(out.promoted_bytes, baseline.promoted_bytes, "{label}");
+        assert_eq!(out.reads, baseline.reads, "{label}");
+        assert_eq!(out.node_failures, 0, "{label}");
+        assert_eq!(out.lost_tasks, 0, "{label}");
+        assert_eq!(out.copied_bytes, 0, "{label}");
+    }
+}
+
+#[test]
+fn chaotic_runs_drain_and_replay_bit_identically() {
+    let chaotic = ChaosCfg { seed: 3, failures: 4, mean_gap_secs: 60.0 };
+    for stealing in [false, true] {
+        let c = cfg(stealing, Some(chaotic));
+        // `run_serve` asserts internally that every session completed.
+        let a = run_serve(3, &c, ThroughputMode::Fast);
+        let b = run_serve(3, &c, ThroughputMode::Fast);
+        assert_eq!(a.node_failures, 4, "stealing {stealing}");
+        assert_eq!(a.turnaround_secs, b.turnaround_secs, "stealing {stealing}");
+        assert_eq!(a.lost_tasks, b.lost_tasks);
+        assert_eq!(a.copied_bytes, b.copied_bytes);
+        assert_eq!(a.staged_bytes, b.staged_bytes);
+        assert_eq!(a.virtual_secs, b.virtual_secs);
+        // Recovery never routes a task read to the shared FS.
+        assert_eq!(a.reads.unstaged_bytes, 0);
+    }
+}
+
+#[test]
+fn throughput_models_agree_under_chaos() {
+    // Flow cancellation rides the same completion hook in both
+    // throughput models, so a chaotic run must produce the same
+    // turnarounds under the fast incremental model and the slow
+    // reference model.
+    let c = cfg(true, Some(ChaosCfg { seed: 5, failures: 3, mean_gap_secs: 70.0 }));
+    let fast = run_serve(2, &c, ThroughputMode::Fast);
+    let slow = run_serve(2, &c, ThroughputMode::Slow);
+    assert_eq!(fast.node_failures, slow.node_failures);
+    assert_eq!(fast.lost_tasks, slow.lost_tasks);
+    for (f, s) in fast.turnaround_secs.iter().zip(&slow.turnaround_secs) {
+        assert!((f - s).abs() < 1e-5, "fast {f} vs slow {s}");
+    }
+}

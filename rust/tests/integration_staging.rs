@@ -232,7 +232,7 @@ fn evicted_files_restage_byte_identical() {
     // With A whole again, a further incremental plan moves nothing.
     let mut p = Plan::new(3);
     let (again, _) =
-        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &leader, &spec_a, vec![])
+        incremental_plan(&mut p, &core.pfs, &core.nodes, &topo, &leader, &spec_a, false, vec![])
             .unwrap();
     assert!(again.staged.is_empty());
     assert_eq!(again.hit_rate(), 1.0);
