@@ -1,0 +1,95 @@
+//! Bench: streaming detector ingest vs write-to-GPFS-then-stage.
+//!
+//! Prints the cadence x RAM-slice x landing-mode matrix, then asserts
+//! the acceptance bar:
+//!
+//! - **streaming wins ttfr everywhere** — at every matrix point the
+//!   streaming detector's time-to-first-result beats the GPFS-first
+//!   baseline's (the baseline pays the shared-FS leg per frame before
+//!   the data is addressable, then a full-dataset stage before any
+//!   session starts);
+//! - **zero-rate identity** — a detector armed with zero frames
+//!   reproduces the plain staged service bit-for-bit;
+//! - **conservation and determinism** — every emitted frame lands in
+//!   exactly one tier, no task read ever falls back to the shared FS,
+//!   and every point is bit-reproducible across two same-seed runs.
+//!
+//! With `XSTAGE_BENCH_JSON` set the measurements emit one JSON point
+//! each — CI uploads them per run as the `BENCH_ingest.json` artifact.
+//!
+//! Run: `cargo bench --bench ingest`
+
+use xstage::experiments::ingest;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::{run_serve, IngestCfg, IngestMode, ServiceCfg};
+use xstage::util::bench::{bench_n, section, smoke};
+
+fn main() {
+    section("ingest — streaming detector vs GPFS-first baseline");
+    let sessions = if smoke() { 3 } else { ingest::SESSIONS };
+    ingest::run_with(sessions, ingest::SEED).print();
+
+    // Acceptance: streaming wins time-to-first-result at every point,
+    // frames are conserved, and every point replays bit-identically.
+    for &gap in ingest::GAP_SWEEP {
+        for &slice in ingest::SLICE_SWEEP {
+            let s = ingest::run_point(gap, slice, IngestMode::Stream, sessions, ingest::SEED);
+            let g = ingest::run_point(gap, slice, IngestMode::GpfsFirst, sessions, ingest::SEED);
+            let si = s.ingest.clone().expect("stream point lost its detector");
+            let gi = g.ingest.expect("baseline point lost its detector");
+            assert_eq!(si.ram_frames + si.ssd_frames + si.gpfs_frames, ingest::FRAMES);
+            assert_eq!(gi.gpfs_frames, ingest::FRAMES);
+            let st = si.first_result_secs.expect("no session read the live dataset");
+            let gt = gi.first_result_secs.expect("no session read the live dataset");
+            assert!(
+                st < gt,
+                "streaming lost ttfr at gap {gap} slice {slice}: {st:.2}s vs {gt:.2}s"
+            );
+            assert_eq!(
+                s.reads.unstaged_bytes, 0,
+                "a live-frame read fell back to the shared FS"
+            );
+            let again = ingest::run_point(gap, slice, IngestMode::Stream, sessions, ingest::SEED);
+            assert_eq!(
+                s.turnaround_secs, again.turnaround_secs,
+                "same-seed ingest runs diverged at gap {gap} slice {slice}"
+            );
+            assert_eq!(Some(si), again.ingest);
+        }
+    }
+    println!(
+        "\nall {} matrix points: streaming ttfr < gpfs-first ttfr, \
+         frames conserved, deterministic",
+        ingest::GAP_SWEEP.len() * ingest::SLICE_SWEEP.len()
+    );
+
+    // Acceptance: a zero-rate detector is the plain service, bit for
+    // bit — arming the ingest path must cost nothing when idle.
+    let base = || ServiceCfg { sessions, ..Default::default() };
+    let mut armed = base();
+    armed.ingest = Some(IngestCfg { frames: 0, ..Default::default() });
+    let a = run_serve(2, &armed, ThroughputMode::Fast);
+    let b = run_serve(2, &base(), ThroughputMode::Fast);
+    assert!(a.ingest.is_none(), "zero frames means no detector outcome");
+    assert_eq!(a.turnaround_secs, b.turnaround_secs);
+    assert_eq!(a.virtual_secs, b.virtual_secs);
+    assert_eq!(a.staged_bytes, b.staged_bytes);
+    println!("zero-rate detector reproduces the plain service bit-for-bit");
+
+    section("host-time: ingest serve simulation throughput");
+    let hot = ingest::GAP_SWEEP[0];
+    let roomy = ingest::SLICE_SWEEP[0];
+    let tight = *ingest::SLICE_SWEEP.last().unwrap();
+    bench_n("ingest/stream-roomy-point", 3, || {
+        let out = ingest::run_point(hot, roomy, IngestMode::Stream, sessions, ingest::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("ingest/stream-tight-point", 3, || {
+        let out = ingest::run_point(hot, tight, IngestMode::Stream, sessions, ingest::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+    bench_n("ingest/gpfs-first-point", 3, || {
+        let out = ingest::run_point(hot, tight, IngestMode::GpfsFirst, sessions, ingest::SEED);
+        assert_eq!(out.sessions, sessions);
+    });
+}

@@ -35,11 +35,12 @@ fn main() {
         assert!(pt.overflow_regime());
         let (t1, d1) = tiers::run_point(&pt, sessions, 42);
         let (t2, _) = tiers::run_point(&pt, sessions, 42);
+        let (tp, dp) = (t1.percentiles.unwrap(), d1.percentiles.unwrap());
         assert!(
-            t1.percentiles.p99 < d1.percentiles.p99,
+            tp.p99 < dp.p99,
             "tiered P99 {} must beat discard P99 {} at {pt:?}",
-            t1.percentiles.p99,
-            d1.percentiles.p99
+            tp.p99,
+            dp.p99
         );
         assert!(
             t1.staged_bytes < d1.staged_bytes,

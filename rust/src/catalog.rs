@@ -64,6 +64,16 @@ impl Catalog {
         id
     }
 
+    /// Grow a dataset that is still being written: incremental
+    /// visibility for streaming ingest, where each landed frame bumps
+    /// `files`/`bytes` so a session can open the dataset mid-stream
+    /// and see exactly how much has arrived.
+    pub fn record_growth(&mut self, id: DatasetId, files: u64, bytes: u64) {
+        let d = self.datasets.get_mut(&id).expect("growth on unregistered dataset");
+        d.files += files;
+        d.bytes += bytes;
+    }
+
     pub fn set_attr(&mut self, id: DatasetId, key: impl Into<String>, val: impl Into<String>) {
         if let Some(d) = self.datasets.get_mut(&id) {
             d.attrs.insert(key.into(), val.into());
@@ -128,6 +138,22 @@ mod tests {
         assert_eq!(c.get(raw).unwrap().files, 736);
         assert_eq!(c.find_by_attr("sample", "gold-wire").len(), 1);
         assert!(c.find_by_attr("sample", "steel").is_empty());
+    }
+
+    #[test]
+    fn growth_is_incremental() {
+        let mut c = Catalog::new();
+        let live = c.register("beamline-live", "/tmp/ingest", 0, 0);
+        c.record_growth(live, 1, 64);
+        c.record_growth(live, 1, 64);
+        let d = c.get(live).unwrap();
+        assert_eq!((d.files, d.bytes), (2, 128));
+    }
+
+    #[test]
+    #[should_panic(expected = "growth on unregistered dataset")]
+    fn growth_on_unknown_dataset_panics() {
+        Catalog::new().record_growth(DatasetId(3), 1, 1);
     }
 
     #[test]

@@ -186,6 +186,7 @@ mod tests {
 
     #[test]
     fn tag_namespace_sits_below_the_others() {
+        assert!(crate::staging::ingest::INGEST_TAG_BASE < CHAOS_TAG_BASE);
         assert!(CHAOS_TAG_BASE < crate::engine::DEMOTE_TAG);
         assert!(CHAOS_TAG_BASE < crate::staging::service::STAGE_TAG_BASE);
         assert!(CHAOS_TAG_BASE < crate::dataflow::sched::TASK_TAG_BASE);

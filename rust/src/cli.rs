@@ -27,7 +27,7 @@ pub fn commands() -> &'static [Command] {
     &COMMANDS
 }
 
-static COMMANDS: [Command; 14] = [
+static COMMANDS: [Command; 15] = [
     Command {
         name: "fig10",
         flags: "[--nodes a,b,c]",
@@ -175,6 +175,21 @@ static COMMANDS: [Command; 14] = [
         },
     },
     Command {
+        name: "ingest",
+        flags: "[--sessions N] [--seed S]",
+        summary: "Ingest matrix: streaming detector vs GPFS-first baseline",
+        run: |args| {
+            let sessions = args.u64_or("sessions", experiments::ingest::SESSIONS as u64)?;
+            anyhow::ensure!(
+                (1..=65536).contains(&sessions),
+                "--sessions must be in 1..=65536, got {sessions}"
+            );
+            let seed = args.u64_or("seed", experiments::ingest::SEED)?;
+            experiments::ingest::run_with(sessions as usize, seed).print();
+            Ok(())
+        },
+    },
+    Command {
         name: "all",
         flags: "",
         summary: "Run every experiment table in order",
@@ -204,6 +219,8 @@ static COMMANDS: [Command; 14] = [
             experiments::scale::run_with(&[128], &[500], experiments::scale::SEED).print();
             println!();
             experiments::chaos::run_with(8, experiments::chaos::SEED).print();
+            println!();
+            experiments::ingest::run_with(4, experiments::ingest::SEED).print();
             Ok(())
         },
     },
@@ -344,6 +361,11 @@ mod tests {
     #[test]
     fn chaos_small_matrix_runs() {
         dispatch(&parse("chaos --sessions 6 --seed 9")).unwrap();
+    }
+
+    #[test]
+    fn ingest_small_matrix_runs() {
+        dispatch(&parse("ingest --sessions 3 --seed 9")).unwrap();
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct MachineSpec {
     /// Per-node SSD streaming bandwidth, bytes/s — the rate demotion
     /// and promotion transfers ride on the aggregated SSD link.
     pub ssd_bw: f64,
+    /// Detector-to-facility beamline pipe bandwidth, bytes/s (0 = no
+    /// beamline attached). Streaming frame ingest
+    /// ([`crate::staging::ingest`]) rides this link into node memory.
+    pub beamline_bw: f64,
 }
 
 impl MachineSpec {
@@ -151,6 +155,9 @@ pub fn bgq(nodes: u32) -> MachineSpec {
         // Paper fidelity: BG/Q compute nodes are diskless.
         ssd_capacity: 0,
         ssd_bw: 0.0,
+        // APS -> ALCF wide-area pipe (the transfer experiments'
+        // calibrated inter-facility rate).
+        beamline_bw: 1.25 * GB as f64,
     }
 }
 
@@ -177,6 +184,9 @@ pub fn orthros() -> MachineSpec {
         // The node-local disks become the demotion tier.
         ssd_capacity: TB,
         ssd_bw: 1.5 * GB as f64,
+        // Same-sector beamline: the detector sits metres away (see
+        // EXPERIMENTS.md "Beamline link").
+        beamline_bw: 3.0 * GB as f64,
     }
 }
 
@@ -198,6 +208,9 @@ pub struct Topology {
     /// Aggregated node-local SSD layer (None when the machine has no
     /// SSD tier). Demotion and promotion transfers ride this link.
     pub ssd_layer: Option<LinkId>,
+    /// Detector-to-facility beamline pipe (None when no beamline is
+    /// attached). Streaming frame ingest rides this link.
+    pub beamline: Option<LinkId>,
 }
 
 impl Topology {
@@ -248,6 +261,18 @@ impl Topology {
         } else {
             None
         };
+        // Added last so machines without a beamline allocate the same
+        // LinkIds as before the ingest layer existed (bit-identity for
+        // non-ingest runs).
+        let beamline = if spec.beamline_bw > 0.0 {
+            Some(net.add_link_classed(
+                "beamline.link",
+                Capacity::Fixed(spec.beamline_bw),
+                LinkClass::Beamline,
+            ))
+        } else {
+            None
+        };
         Topology {
             spec,
             gpfs,
@@ -257,6 +282,7 @@ impl Topology {
             ion_layer,
             torus,
             ssd_layer,
+            beamline,
         }
     }
 
@@ -293,6 +319,14 @@ impl Topology {
     /// pathless (instantaneous) tier transfer cannot arise by accident.
     pub fn path_ssd(&self) -> Vec<LinkId> {
         self.ssd_layer.into_iter().collect()
+    }
+
+    /// Path of detector frame traffic: the shared beamline pipe every
+    /// streaming ingest flow funnels through. Empty when no beamline
+    /// is attached (frames then land instantaneously — only meaningful
+    /// in unit tests; both machine specs attach one).
+    pub fn path_beamline(&self) -> Vec<LinkId> {
+        self.beamline.into_iter().collect()
     }
 
     /// Path of metadata operations.
@@ -368,6 +402,28 @@ mod tests {
         // BG/Q is diskless: no SSD layer, paper fidelity.
         assert!(t.ssd_layer.is_none());
         assert!(t.path_ssd().is_empty());
+        // But it does have the APS -> ALCF beamline pipe.
+        assert_eq!(t.path_beamline().len(), 1);
+        assert_eq!(net.link_class(t.beamline.unwrap()), LinkClass::Beamline);
+    }
+
+    #[test]
+    fn beamline_link_carries_the_spec_rate() {
+        let mut net = FlowNet::new();
+        let t = Topology::build(orthros(), GpfsParams::default(), &mut net);
+        let l = t.beamline.unwrap();
+        assert_eq!(net.link_class(l), LinkClass::Beamline);
+        let f = net.start(vec![l], 1, GB);
+        net.recompute();
+        assert!((net.rate_each(f) - 3.0 * GB as f64).abs() < 1.0);
+
+        // A spec with no beamline builds no link: pathless ingest.
+        let mut spec = bgq(16);
+        spec.beamline_bw = 0.0;
+        let mut net = FlowNet::new();
+        let t = Topology::build(spec, GpfsParams::default(), &mut net);
+        assert!(t.beamline.is_none());
+        assert!(t.path_beamline().is_empty());
     }
 
     #[test]

@@ -231,6 +231,36 @@ impl SimCore {
         outcome
     }
 
+    /// Capacity-checked **direct SSD** write keeping metrics and the
+    /// residency mirror in sync — the ingest backpressure path: a
+    /// detector frame that cannot be admitted to RAM lands on the SSD
+    /// tier without displacing anything from RAM. Books under its own
+    /// labels (`node.write.ssd` / `node.write.ssd.rejected`), distinct
+    /// from the RAM-write telemetry, so harnesses asserting
+    /// [`SimCore::node_write_rejections`]` == 0` are unaffected by
+    /// expected SSD backpressure.
+    pub fn node_write_range_ssd(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        data: crate::pfs::Blob,
+    ) -> StoreWrite {
+        let per_node = data.len();
+        let outcome = self.nodes.write_range_ssd_evicting(lo, hi, path, data);
+        match &outcome {
+            StoreWrite::Stored { evicted } => {
+                self.metrics.add_bytes("node.write.ssd", per_node * (hi - lo + 1) as u64);
+                self.residency.on_ssd_stored(lo, hi, path, evicted);
+                self.book_evictions(evicted);
+            }
+            StoreWrite::Rejected { .. } => {
+                self.metrics.incr("node.write.ssd.rejected");
+            }
+        }
+        outcome
+    }
+
     /// Account displacement telemetry with tier provenance and submit
     /// the timed demotion transfers. `node.evict`/`node.evictions`
     /// keep their original meaning — replicas displaced from RAM —

@@ -93,22 +93,23 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
         for (pi, stealing) in [false, true].into_iter().enumerate() {
             let out = run_point(failures, stealing, sessions, seed);
             debug_assert_eq!(out.node_failures, failures);
+            let p = out.percentiles.unwrap();
             if failures == 0 {
-                calm_p99[pi] = out.percentiles.p99;
+                calm_p99[pi] = p.p99;
             }
             table.row(&[
                 failures.to_string(),
                 if stealing { "steal" } else { "fifo" }.to_string(),
-                format!("{:.1}", out.percentiles.p50),
-                format!("{:.1}", out.percentiles.p95),
-                format!("{:.1}", out.percentiles.p99),
+                format!("{:.1}", p.p50),
+                format!("{:.1}", p.p95),
+                format!("{:.1}", p.p99),
                 out.lost_tasks.to_string(),
                 fmt_bytes(out.copied_bytes),
                 fmt_bytes(out.staged_bytes),
-                format!("{:.2}x", out.percentiles.p99 / calm_p99[pi]),
+                format!("{:.2}x", p.p99 / calm_p99[pi]),
             ]);
             let pts = if stealing { &mut steal_pts } else { &mut fifo_pts };
-            pts.push((failures as f64, out.percentiles.p99));
+            pts.push((failures as f64, p.p99));
         }
     }
     ExpResult {

@@ -1,0 +1,198 @@
+//! The ingest experiment: a beamline detector streaming frames into
+//! node memory while sessions read, vs the write-to-GPFS-then-stage
+//! baseline the paper's Fig 7 workflow starts from.
+//!
+//! Each matrix point replays the same seeded serve workload on a
+//! two-node Orthros-class cluster while a [`crate::staging::ingest`]
+//! detector emits fixed-size frames over the machine's beamline link.
+//! The matrix sweeps frame cadence x per-node RAM slice for both
+//! landing modes: `stream` lands frames directly in the staging tiers
+//! (RAM slice, then SSD, then GPFS spill under backpressure), while
+//! `gpfs-first` writes every frame to the shared filesystem and stages
+//! the whole dataset afterwards — the status quo the paper's
+//! interactive loop is trying to beat. The table reports
+//! time-to-first-result, ingest completion, detector stalls, and the
+//! per-tier frame split; `benches/ingest.rs` asserts streaming wins
+//! ttfr at every point and that a zero-rate detector reproduces the
+//! plain service bit-for-bit.
+
+use crate::dataflow::sched::SchedulerCfg;
+use crate::metrics::Table;
+use crate::simtime::flownet::ThroughputMode;
+use crate::staging::ingest::{IngestCfg, IngestMode};
+use crate::staging::service::{run_serve, ServeMode, ServeOutcome, ServiceCfg};
+use crate::units::{fmt_bytes, MB};
+
+use super::ExpResult;
+
+/// Orthros-class fat nodes per run.
+pub const NODES: u32 = 2;
+/// Sessions per matrix point.
+pub const SESSIONS: usize = 8;
+/// Frames the detector emits (one per dataset file).
+pub const FRAMES: usize = 12;
+/// Detector frame size.
+pub const FRAME_BYTES: u64 = 64 * MB;
+/// Detector buffer depth before the cadence stalls.
+pub const BUFFER_FRAMES: usize = 4;
+/// Frame cadence sweep (seconds between frames; lower = hotter).
+pub const GAP_SWEEP: &[f64] = &[0.1, 0.5];
+/// Per-node RAM-slice sweep: the whole stream fits, or only a quarter
+/// does and the rest rides the SSD -> GPFS spill ladder.
+pub const SLICE_SWEEP: &[u64] = &[768 * MB, 192 * MB];
+/// SSD tier budget: two frames deep.
+pub const SSD_SLICE: u64 = 128 * MB;
+/// Default workload/detector seed.
+pub const SEED: u64 = 42;
+
+/// The serve scenario an ingest point runs: every session reads the
+/// one live dataset the detector is writing.
+pub fn cfg(gap: f64, ram_slice: u64, mode: IngestMode, sessions: usize, seed: u64) -> ServiceCfg {
+    let dataset_bytes = FRAMES as u64 * FRAME_BYTES;
+    ServiceCfg {
+        seed,
+        sessions,
+        mean_gap_secs: 2.0,
+        datasets: 1,
+        files_per_dataset: FRAMES,
+        file_bytes: FRAME_BYTES,
+        // Room for the frame slice plus twice the staged dataset, so
+        // admission never queues on capacity and the sweep isolates
+        // the landing mode.
+        ramdisk_slice: Some(ram_slice + 2 * dataset_bytes),
+        ssd_slice: Some(SSD_SLICE),
+        mode: ServeMode::Staged,
+        sched: SchedulerCfg { locality_aware: true, ..Default::default() },
+        ingest: Some(IngestCfg {
+            // Decorrelate the detector jitter from the workload stream.
+            seed: seed ^ 0x1_D7C7,
+            frames: FRAMES,
+            frame_bytes: FRAME_BYTES,
+            frame_gap_secs: gap,
+            buffer_frames: BUFFER_FRAMES,
+            ram_slice,
+            dataset: 0,
+            mode,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Run one matrix point.
+pub fn run_point(
+    gap: f64,
+    ram_slice: u64,
+    mode: IngestMode,
+    sessions: usize,
+    seed: u64,
+) -> ServeOutcome {
+    run_serve(NODES, &cfg(gap, ram_slice, mode, sessions, seed), ThroughputMode::Fast)
+}
+
+/// Run the cadence x RAM-slice x landing-mode matrix and render the
+/// table.
+pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    let mut table = Table::new(
+        format!(
+            "Ingest — streaming detector vs write-to-GPFS-then-stage, {sessions} \
+             sessions/point ({FRAMES} frames of {} each; seconds)",
+            fmt_bytes(FRAME_BYTES)
+        ),
+        &[
+            "gap (s)",
+            "RAM slice",
+            "mode",
+            "ttfr",
+            "ingest done",
+            "stalls",
+            "ram/ssd/gpfs",
+            "stall rate",
+        ],
+    );
+    let mut stream_pts = Vec::new();
+    let mut gpfs_pts = Vec::new();
+    for &gap in GAP_SWEEP {
+        for &slice in SLICE_SWEEP {
+            for mode in [IngestMode::Stream, IngestMode::GpfsFirst] {
+                let out = run_point(gap, slice, mode, sessions, seed);
+                let ing = out.ingest.expect("ingest point without a detector outcome");
+                let ttfr = ing.first_result_secs.expect("no session read the live dataset");
+                table.row(&[
+                    format!("{gap}"),
+                    fmt_bytes(slice),
+                    match mode {
+                        IngestMode::Stream => "stream",
+                        IngestMode::GpfsFirst => "gpfs-first",
+                    }
+                    .to_string(),
+                    format!("{ttfr:.1}"),
+                    format!("{:.1}", ing.ingest_done_secs),
+                    ing.stalls.to_string(),
+                    format!("{}/{}/{}", ing.ram_frames, ing.ssd_frames, ing.gpfs_frames),
+                    format!("{:.2}", ing.stall_rate()),
+                ]);
+                let pts = match mode {
+                    IngestMode::Stream => &mut stream_pts,
+                    IngestMode::GpfsFirst => &mut gpfs_pts,
+                };
+                pts.push((pts.len() as f64, ttfr));
+            }
+        }
+    }
+    ExpResult {
+        table,
+        series: vec![("stream ttfr".into(), stream_pts), ("gpfs ttfr".into(), gpfs_pts)],
+    }
+}
+
+pub fn run() -> ExpResult {
+    run_with(SESSIONS, SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_wins_ttfr_at_every_matrix_point() {
+        for &gap in GAP_SWEEP {
+            for &slice in SLICE_SWEEP {
+                let s = run_point(gap, slice, IngestMode::Stream, 4, 7);
+                let g = run_point(gap, slice, IngestMode::GpfsFirst, 4, 7);
+                let (si, gi) = (s.ingest.unwrap(), g.ingest.unwrap());
+                // Frame conservation on both sides of the comparison.
+                assert_eq!(si.ram_frames + si.ssd_frames + si.gpfs_frames, FRAMES);
+                assert_eq!((gi.ram_frames, gi.ssd_frames, gi.gpfs_frames), (0, 0, FRAMES));
+                let (st, gt) = (si.first_result_secs.unwrap(), gi.first_result_secs.unwrap());
+                assert!(st < gt, "gap {gap} slice {slice}: stream ttfr {st} vs gpfs {gt}");
+            }
+        }
+    }
+
+    #[test]
+    fn tight_slice_points_spill_deterministically() {
+        let tight = *SLICE_SWEEP.last().unwrap();
+        let out = run_point(0.1, tight, IngestMode::Stream, 4, 7);
+        let ing = out.ingest.clone().unwrap();
+        assert!(ing.gpfs_frames > 0, "the tight slice must overflow to GPFS");
+        assert!(ing.ram_frames > 0 && ing.ssd_frames > 0, "every tier takes frames");
+        // Spilled frames are re-staged, never read raw off the FS.
+        assert_eq!(out.reads.unstaged_bytes, 0);
+        let again = run_point(0.1, tight, IngestMode::Stream, 4, 7);
+        assert_eq!(out.ingest, again.ingest);
+        assert_eq!(out.turnaround_secs, again.turnaround_secs);
+    }
+
+    #[test]
+    fn ingest_experiment_table_renders() {
+        let r = run_with(3, 9);
+        assert_eq!(r.table.rows.len(), 2 * GAP_SWEEP.len() * SLICE_SWEEP.len());
+        let stream = r.series_named("stream ttfr").unwrap();
+        let gpfs = r.series_named("gpfs ttfr").unwrap();
+        assert_eq!(stream.len(), GAP_SWEEP.len() * SLICE_SWEEP.len());
+        assert_eq!(gpfs.len(), stream.len());
+        for (s, g) in stream.iter().zip(gpfs) {
+            assert!(s.1 > 0.0 && s.1 < g.1);
+        }
+    }
+}

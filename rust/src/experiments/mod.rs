@@ -10,6 +10,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod ingest;
 pub mod reduction;
 pub mod reuse;
 pub mod scale;

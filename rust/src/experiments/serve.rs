@@ -109,20 +109,21 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     let mut naive_pts = Vec::new();
     for (i, pt) in matrix().iter().enumerate() {
         let (s, n) = run_point(pt, sessions, seed);
+        let (sp, np) = (s.percentiles.unwrap(), n.percentiles.unwrap());
         table.row(&[
             pt.nodes.to_string(),
             format!("{:.0}", pt.mean_gap_secs),
             fmt_bytes(pt.working_set()),
-            format!("{:.1}", s.percentiles.p50),
-            format!("{:.1}", s.percentiles.p95),
-            format!("{:.1}", s.percentiles.p99),
-            format!("{:.1}", n.percentiles.p50),
-            format!("{:.1}", n.percentiles.p95),
-            format!("{:.1}", n.percentiles.p99),
-            format!("{:.2}x", n.percentiles.p99 / s.percentiles.p99),
+            format!("{:.1}", sp.p50),
+            format!("{:.1}", sp.p95),
+            format!("{:.1}", sp.p99),
+            format!("{:.1}", np.p50),
+            format!("{:.1}", np.p95),
+            format!("{:.1}", np.p99),
+            format!("{:.2}x", np.p99 / sp.p99),
         ]);
-        staged_pts.push((i as f64, s.percentiles.p99));
-        naive_pts.push((i as f64, n.percentiles.p99));
+        staged_pts.push((i as f64, sp.p99));
+        naive_pts.push((i as f64, np.p99));
     }
     ExpResult {
         table,
@@ -158,12 +159,8 @@ mod tests {
         let relaxed = pts.iter().find(|p| p.mean_gap_secs == GAP_SWEEP[1]).unwrap();
         for pt in [bursty, relaxed] {
             let (s, n) = run_point(pt, 12, 42);
-            assert!(
-                s.percentiles.p99 < n.percentiles.p99,
-                "staged {} vs naive {} at {pt:?}",
-                s.percentiles.p99,
-                n.percentiles.p99
-            );
+            let (sp, np) = (s.percentiles.unwrap(), n.percentiles.unwrap());
+            assert!(sp.p99 < np.p99, "staged {} vs naive {} at {pt:?}", sp.p99, np.p99);
         }
     }
 

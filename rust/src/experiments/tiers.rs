@@ -157,23 +157,24 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     let mut discard_pts = Vec::new();
     for (i, pt) in matrix().iter().enumerate() {
         let (t, d) = run_point(pt, sessions, seed);
+        let (tp, dp) = (t.percentiles.unwrap(), d.percentiles.unwrap());
         table.row(&[
             fmt_bytes(pt.working_set()),
             fmt_bytes(pt.ram_budget),
             fmt_bytes(pt.ssd_budget),
-            format!("{:.1}", t.percentiles.p50),
-            format!("{:.1}", t.percentiles.p99),
-            format!("{:.1}", d.percentiles.p50),
-            format!("{:.1}", d.percentiles.p99),
-            format!("{:.2}x", d.percentiles.p99 / t.percentiles.p99),
+            format!("{:.1}", tp.p50),
+            format!("{:.1}", tp.p99),
+            format!("{:.1}", dp.p50),
+            format!("{:.1}", dp.p99),
+            format!("{:.2}x", dp.p99 / tp.p99),
             format!(
                 "{:.1}x fewer",
                 d.staged_bytes as f64 / t.staged_bytes.max(1) as f64
             ),
             fmt_bytes(t.promoted_bytes),
         ]);
-        tiered_pts.push((i as f64, t.percentiles.p99));
-        discard_pts.push((i as f64, d.percentiles.p99));
+        tiered_pts.push((i as f64, tp.p99));
+        discard_pts.push((i as f64, dp.p99));
     }
     ExpResult {
         table,
@@ -212,11 +213,12 @@ mod tests {
         let loose = pts.iter().max_by_key(|p| p.ram_budget).unwrap();
         for pt in [tight, loose] {
             let (t, d) = run_point(pt, 8, 42);
+            let (tp, dp) = (t.percentiles.unwrap(), d.percentiles.unwrap());
             assert!(
-                t.percentiles.p99 < d.percentiles.p99,
+                tp.p99 < dp.p99,
                 "tiered P99 {} vs discard P99 {} at {pt:?}",
-                t.percentiles.p99,
-                d.percentiles.p99
+                tp.p99,
+                dp.p99
             );
             assert!(t.staged_bytes < d.staged_bytes, "no GPFS saving at {pt:?}");
             assert!(t.promoted_bytes > 0 && t.demoted_bytes > 0, "tier idle at {pt:?}");

@@ -29,20 +29,44 @@ pub struct Percentiles {
     pub p99: f64,
 }
 
+impl Percentiles {
+    /// P50/P95/P99 of an **ascending-sorted** sample slice; `None`
+    /// when the slice is empty (a zero-completion matrix point).
+    pub fn from_sorted(sorted: &[f64]) -> Option<Percentiles> {
+        Some(Percentiles {
+            p50: percentile(sorted, 50.0)?,
+            p95: percentile(sorted, 95.0)?,
+            p99: percentile(sorted, 99.0)?,
+        })
+    }
+
+    /// Render `[P50, P95, P99]` table cells, `"-"` for an empty
+    /// series: experiment tables report zero-completion points as
+    /// empty cells instead of aborting the whole run.
+    pub fn cells(p: Option<Percentiles>) -> [String; 3] {
+        match p {
+            Some(p) => [p.p50, p.p95, p.p99].map(|v| format!("{v:.1}")),
+            None => ["-", "-", "-"].map(String::from),
+        }
+    }
+}
+
 /// Nearest-rank percentile of an **ascending-sorted** sample slice:
-/// the smallest sample such that at least `q`% of the set is <= it.
-/// Deterministic (no interpolation), so percentile tables are
-/// bit-reproducible across runs.
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of empty sample set");
+/// the smallest sample such that at least `q`% of the set is <= it,
+/// `None` for an empty set. Deterministic (no interpolation), so
+/// percentile tables are bit-reproducible across runs.
+pub fn percentile(sorted: &[f64], q: f64) -> Option<f64> {
     assert!((0.0..=100.0).contains(&q), "bad percentile {q}");
     let n = sorted.len();
+    if n == 0 {
+        return None;
+    }
     // q*n first, one division last: whenever q*n/100 is mathematically
     // an integer the quotient is exact in IEEE, so ceil never rounds a
     // representation error up to the next rank (q/100 first would,
     // e.g. q=7, n=100).
     let rank = (q * n as f64 / 100.0).ceil() as usize;
-    sorted[rank.clamp(1, n) - 1]
+    Some(sorted[rank.clamp(1, n) - 1])
 }
 
 /// Phase spans + counters + sample series for one simulation run.
@@ -135,17 +159,9 @@ impl Metrics {
 
     /// Nearest-rank P50/P95/P99 of a series; `None` with no samples.
     pub fn percentiles(&self, label: &str) -> Option<Percentiles> {
-        let raw = self.samples.get(label)?;
-        if raw.is_empty() {
-            return None;
-        }
-        let mut sorted = raw.clone();
+        let mut sorted = self.samples.get(label)?.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(Percentiles {
-            p50: percentile(&sorted, 50.0),
-            p95: percentile(&sorted, 95.0),
-            p99: percentile(&sorted, 99.0),
-        })
+        Percentiles::from_sorted(&sorted)
     }
 }
 
@@ -250,14 +266,14 @@ mod tests {
     #[test]
     fn nearest_rank_percentiles() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 50.0), 50.0);
-        assert_eq!(percentile(&xs, 95.0), 95.0);
-        assert_eq!(percentile(&xs, 99.0), 99.0);
-        assert_eq!(percentile(&xs, 100.0), 100.0);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), Some(50.0));
+        assert_eq!(percentile(&xs, 95.0), Some(95.0));
+        assert_eq!(percentile(&xs, 99.0), Some(99.0));
+        assert_eq!(percentile(&xs, 100.0), Some(100.0));
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
         // Small sets: P99 of 4 samples is the max.
-        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 99.0), 4.0);
-        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 99.0), Some(4.0));
+        assert_eq!(percentile(&[7.5], 50.0), Some(7.5));
     }
 
     #[test]
@@ -276,8 +292,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "empty sample set")]
-    fn percentile_of_empty_panics() {
-        percentile(&[], 50.0);
+    fn empty_sample_sets_report_none_not_panic() {
+        // Regression: `percentile` used to assert non-emptiness, so a
+        // zero-completion matrix point (every session rejected, or a
+        // chaos run killing the whole machine) aborted the entire
+        // experiment instead of reporting an empty cell.
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[], 99.0), None);
+        assert_eq!(Percentiles::from_sorted(&[]), None);
+        assert_eq!(Percentiles::cells(None), ["-", "-", "-"]);
+        let mut m = Metrics::new();
+        assert!(m.percentiles("never-observed").is_none());
+        m.observe("one", 2.5);
+        let p = m.percentiles("one").unwrap();
+        assert_eq!((p.p50, p.p95, p.p99), (2.5, 2.5, 2.5));
+        assert_eq!(Percentiles::cells(Some(p)), ["2.5", "2.5", "2.5"]);
     }
 }

@@ -10,8 +10,8 @@
 //!
 //! 1. partition the component's flows into **spoke groups** — the
 //!    connected components of the sharing graph with hub-class links
-//!    ([`hub_class`]: the filesystem-side Backplane/Disk/Meta/Wan
-//!    layers) removed;
+//!    ([`hub_class`]: the facility-wide Backplane/Disk/Meta/Wan/
+//!    Beamline layers) removed;
 //! 2. water-fill each group independently with hub links excluded
 //!    ([`super::waterfill::assign_rates_filtered`]);
 //! 3. verify every hub link has **strict slack** under the combined
@@ -52,13 +52,19 @@ use crate::units::{Duration, SimTime};
 /// provably dormant for them.
 pub(crate) const GIANT_COMPONENT_MIN: usize = 256;
 
-/// True for the shared filesystem-side link layers a fleet-spanning
+/// True for the shared facility-wide link layers a fleet-spanning
 /// component funnels through; false for the per-node / cluster layers
-/// that partition into spoke groups.
+/// that partition into spoke groups. The beamline ingest pipe is a
+/// hub for the same reason the WAN is: one shared facility-wide link
+/// every detector stream funnels through.
 pub(crate) fn hub_class(c: LinkClass) -> bool {
     matches!(
         c,
-        LinkClass::Backplane | LinkClass::Disk | LinkClass::Meta | LinkClass::Wan
+        LinkClass::Backplane
+            | LinkClass::Disk
+            | LinkClass::Meta
+            | LinkClass::Wan
+            | LinkClass::Beamline
     )
 }
 

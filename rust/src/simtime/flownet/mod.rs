@@ -119,6 +119,8 @@ pub enum LinkClass {
     Ssd,
     /// Wide-area pipe between facilities.
     Wan,
+    /// Detector-to-facility beamline pipe (streaming frame ingest).
+    Beamline,
     /// Anything else (tests, ad-hoc scenarios).
     Other,
 }

@@ -1,0 +1,622 @@
+//! Beamline ingest: a seeded detector streams fixed-size frames over
+//! the machine's beamline link into node memory *while sessions read*.
+//!
+//! The paper's workflow stages datasets a detector already wrote to
+//! the shared filesystem. The interactive regime it argues for wants
+//! the opposite order: frames should land where analysis reads them —
+//! node RAM — the moment they cross the beamline, with the shared FS
+//! demoted to an overflow target. This module is that source:
+//!
+//! - [`Ingest`] emits `frames` fixed-size frames at a seeded, jittered
+//!   cadence over [`Topology::path_beamline`]. Each frame is one plan
+//!   under the [`INGEST_TAG_BASE`] tag band; the serving director
+//!   routes its `PlanDone` back here to land the bytes.
+//! - **Backpressure ladder**: a frame that fits the detector's RAM
+//!   slice lands in node RAM (pinned — live data must never be
+//!   evicted under a reader). One that does not takes the node-local
+//!   SSD tier via [`SimCore::node_write_range_ssd`]; when even that
+//!   rejects, the frame *spills* to GPFS over the shared-FS links and
+//!   is staged back like any cold file. When frames outrun every tier
+//!   the detector **stalls**: a tick that finds the frame buffer full
+//!   drops no data but stops the cadence until a landing drains a
+//!   slot — the paper's "beamline ran faster than the facility could
+//!   swallow" failure mode, surfaced as a counter instead of an error.
+//! - **Incremental visibility**: every landed frame grows the catalog
+//!   record ([`crate::catalog::Catalog::record_growth`]), so a session
+//!   admitted mid-stream observes exactly how much has arrived and the
+//!   serving layer blocks it only until the frames it reads exist.
+//!
+//! Frame content is bit-identical to what the write-to-GPFS-first
+//! baseline produces for the same dataset ([`IngestMode::GpfsFirst`]),
+//! so the two modes are directly comparable and a spilled frame passes
+//! the hook's checksum verification when re-staged.
+
+use crate::catalog::{Catalog, DatasetId};
+use crate::chaos::CHAOS_TAG_BASE;
+use crate::cluster::Topology;
+use crate::engine::SimCore;
+use crate::pfs::Blob;
+use crate::simtime::plan::{Effect, Plan, StepId};
+use crate::storage::{StorageTier, StoreWrite};
+use crate::units::{Duration, SimTime, MB};
+use crate::util::prng::Pcg64;
+
+/// Tag band of ingest plans and detector tick timers: above raw
+/// session-arrival indices, below [`CHAOS_TAG_BASE`]. Timer tags and
+/// plan tags arrive as distinct [`crate::engine::Notice`] variants, so
+/// `ingest_tag(k)` names both frame `k`'s cadence tick and its wire
+/// plan without collision; spill plans use `ingest_tag(frames + k)`.
+pub const INGEST_TAG_BASE: u64 = 1 << 44;
+
+/// Checked tag allocation for ingest plan or tick `k`: the band must
+/// stay strictly below the chaos kill-timer band.
+pub fn ingest_tag(k: usize) -> u64 {
+    let tag = INGEST_TAG_BASE + k as u64;
+    debug_assert!(tag < CHAOS_TAG_BASE, "ingest tag {k} overflows into the chaos band");
+    tag
+}
+
+/// Where detector frames go before a session can read them.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum IngestMode {
+    /// Frames stream over the beamline straight into node tiers
+    /// (RAM, then SSD, then GPFS spill) — the staged-ingest path.
+    Stream,
+    /// Frames stream over the beamline and then take the shared-FS
+    /// links down to GPFS; sessions stage the whole dataset afterwards
+    /// — the facility's traditional write-then-stage baseline.
+    GpfsFirst,
+}
+
+/// Detector configuration. `frames == 0` disables ingest (the serving
+/// layer treats it as "no detector attached").
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngestCfg {
+    pub seed: u64,
+    /// Frames the detector emits over the run.
+    pub frames: usize,
+    /// Bytes per frame — must equal the serving layer's file size so a
+    /// landed frame is exactly one dataset file.
+    pub frame_bytes: u64,
+    /// Mean seconds between frames; actual gaps are jittered to
+    /// `[0.75, 1.25) x` this.
+    pub frame_gap_secs: f64,
+    /// Emitted-but-unlanded frames the detector can buffer before its
+    /// cadence stalls.
+    pub buffer_frames: usize,
+    /// Node-RAM bytes reserved for live frames; frames beyond it take
+    /// the SSD, then GPFS.
+    pub ram_slice: u64,
+    /// Which serving dataset the detector writes (index into the
+    /// workload's dataset space).
+    pub dataset: usize,
+    pub mode: IngestMode,
+}
+
+impl Default for IngestCfg {
+    fn default() -> Self {
+        IngestCfg {
+            seed: 0xDE7EC7,
+            frames: 0,
+            frame_bytes: 16 * MB,
+            frame_gap_secs: 1.0,
+            buffer_frames: 4,
+            ram_slice: 256 * MB,
+            dataset: 0,
+            mode: IngestMode::Stream,
+        }
+    }
+}
+
+/// What a finished ingest run did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngestOutcome {
+    pub frames: usize,
+    /// Frames landed per tier, in spill order.
+    pub ram_frames: usize,
+    pub ssd_frames: usize,
+    pub gpfs_frames: usize,
+    /// Detector ticks that found the frame buffer full.
+    pub stalls: u64,
+    /// Virtual time at which the last frame landed in some tier.
+    pub ingest_done_secs: f64,
+    /// Virtual time of the first session result over the live dataset
+    /// (`None` when no session read it) — the time-to-first-result the
+    /// ingest experiment compares across modes.
+    pub first_result_secs: Option<f64>,
+}
+
+impl IngestOutcome {
+    /// Stalled ticks per emitted frame — the detector back-off rate.
+    pub fn stall_rate(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.stalls as f64 / self.frames as f64
+        }
+    }
+}
+
+/// The detector and its landing bookkeeping: emits frames on a seeded
+/// cadence, lands each under the backpressure ladder, and records
+/// which tier every frame ended in.
+#[derive(Debug)]
+pub struct Ingest {
+    cfg: IngestCfg,
+    ds_id: DatasetId,
+    rng: Pcg64,
+    /// Next frame index to emit.
+    next_frame: usize,
+    /// Frames emitted but not yet landed in any tier.
+    in_flight: usize,
+    /// The cadence is stopped waiting for a landing to drain a slot.
+    stalled: bool,
+    stalls: u64,
+    landed: usize,
+    /// RAM-slice bytes currently holding live frames.
+    ram_bytes: u64,
+    /// Tier each frame landed in (`None` until it lands).
+    frame_tiers: Vec<Option<StorageTier>>,
+    complete_at: Option<SimTime>,
+}
+
+impl Ingest {
+    pub fn new(cfg: IngestCfg, ds_id: DatasetId) -> Self {
+        assert!(cfg.frames > 0, "zero-frame ingest must be disabled, not constructed");
+        assert!(cfg.frame_bytes > 0, "zero-byte frames");
+        assert!(cfg.buffer_frames > 0, "detector needs at least one buffer slot");
+        assert!(cfg.frame_gap_secs > 0.0, "non-positive frame cadence");
+        let frames = cfg.frames;
+        Ingest {
+            rng: Pcg64::new(cfg.seed ^ 0x1_46E57),
+            cfg,
+            ds_id,
+            next_frame: 0,
+            in_flight: 0,
+            stalled: false,
+            stalls: 0,
+            landed: 0,
+            ram_bytes: 0,
+            frame_tiers: vec![None; frames],
+            complete_at: None,
+        }
+    }
+
+    pub fn dataset_id(&self) -> DatasetId {
+        self.ds_id
+    }
+
+    /// True once every frame has landed in some tier.
+    pub fn complete(&self) -> bool {
+        self.landed == self.cfg.frames
+    }
+
+    /// Detector ticks that found the frame buffer full.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Tier each landed frame ended in, by frame index.
+    pub fn frame_tiers(&self) -> &[Option<StorageTier>] {
+        &self.frame_tiers
+    }
+
+    /// Frames that ended on GPFS (spills, or every frame under
+    /// [`IngestMode::GpfsFirst`]) — the set a session stage must move.
+    pub fn gpfs_frames(&self) -> usize {
+        self.tier_count(StorageTier::Gpfs)
+    }
+
+    fn tier_count(&self, tier: StorageTier) -> usize {
+        self.frame_tiers.iter().filter(|t| **t == Some(tier)).count()
+    }
+
+    /// Node-local path frame `k` serves from (the serving layer's
+    /// staged-file naming, so tasks read frames like staged files).
+    fn node_path(&self, k: usize) -> String {
+        format!("/tmp/serve/ds{}/f{k:03}.bin", self.cfg.dataset)
+    }
+
+    /// Shared-FS path frame `k` spills to (the serving layer's source
+    /// naming, so the hook's glob re-stages exactly the spilled set).
+    fn pfs_path(&self, k: usize) -> String {
+        format!("/projects/serve/ds{}/f{k:03}.bin", self.cfg.dataset)
+    }
+
+    /// Frame content — same synthesis the serving layer uses for
+    /// pre-written datasets, keeping both ingest modes bit-comparable.
+    fn frame_blob(&self, k: usize) -> Blob {
+        Blob::synthetic(self.cfg.frame_bytes, 0x5EB0_0000 + (self.cfg.dataset * 1000 + k) as u64)
+    }
+
+    /// Jittered gap to the next frame: `[0.75, 1.25) x` the cadence,
+    /// drawn from the detector's own seeded stream.
+    fn gap(&mut self) -> Duration {
+        Duration::from_secs_f64(self.cfg.frame_gap_secs * (0.75 + 0.5 * self.rng.f64()))
+    }
+
+    fn arm_tick(&mut self, core: &mut SimCore) {
+        let gap = self.gap();
+        core.timer(core.now + gap, ingest_tag(self.next_frame));
+    }
+
+    /// Arm the first detector tick. Call once, before running the
+    /// core; everything after is driven by the director's notices.
+    pub fn start(&mut self, core: &mut SimCore) {
+        assert_eq!(self.next_frame, 0, "ingest already started");
+        self.arm_tick(core);
+    }
+
+    /// A cadence tick fired: emit the next frame, or stall if every
+    /// buffer slot is still in flight (the landing that drains a slot
+    /// restarts the cadence).
+    pub fn on_timer(&mut self, core: &mut SimCore, topo: &Topology) {
+        debug_assert!(self.next_frame < self.cfg.frames, "tick after the last frame");
+        if self.in_flight == self.cfg.buffer_frames {
+            self.stalls += 1;
+            self.stalled = true;
+            core.metrics.incr("ingest.stall");
+            return;
+        }
+        self.emit(core, topo);
+    }
+
+    fn emit(&mut self, core: &mut SimCore, topo: &Topology) {
+        let k = self.next_frame;
+        self.next_frame += 1;
+        self.in_flight += 1;
+        let mut p = Plan::new(ingest_tag(k));
+        let wire = wire_step(&mut p, topo, self.cfg.frame_bytes);
+        if self.cfg.mode == IngestMode::GpfsFirst {
+            // The baseline pays the shared-FS leg per frame before any
+            // byte is addressable: beamline, then backplane, then the
+            // data-plane write.
+            let write = p.flow(
+                topo.path_coordinated_read(), // same links, write direction
+                1,
+                self.cfg.frame_bytes,
+                vec![wire],
+                "ingest.gpfs",
+            );
+            p.effect(
+                Effect::PfsWrite { path: self.pfs_path(k), data: self.frame_blob(k) },
+                vec![write],
+                "ingest.gpfs",
+            );
+        }
+        core.metrics.add_bytes("ingest.wire", self.cfg.frame_bytes);
+        core.submit(p);
+        if self.next_frame < self.cfg.frames {
+            self.arm_tick(core);
+        }
+    }
+
+    /// An ingest-tagged `PlanDone` arrived: land the frame it carried.
+    /// Returns `true` when this landing completed the whole ingest.
+    pub fn on_plan_done(
+        &mut self,
+        core: &mut SimCore,
+        topo: &Topology,
+        catalog: &mut Catalog,
+        tag: u64,
+    ) -> bool {
+        let k = (tag - INGEST_TAG_BASE) as usize;
+        if k >= self.cfg.frames {
+            // Spill plan: the frame's bytes reached GPFS.
+            self.land(core, topo, catalog, k - self.cfg.frames, StorageTier::Gpfs);
+        } else if self.cfg.mode == IngestMode::GpfsFirst {
+            self.land(core, topo, catalog, k, StorageTier::Gpfs);
+        } else {
+            self.land_stream(core, topo, catalog, k);
+        }
+        self.complete()
+    }
+
+    /// The backpressure ladder: RAM slice, then SSD, then GPFS spill.
+    fn land_stream(
+        &mut self,
+        core: &mut SimCore,
+        topo: &Topology,
+        catalog: &mut Catalog,
+        k: usize,
+    ) {
+        let fb = self.cfg.frame_bytes;
+        let (lo, hi) = (0, topo.spec.nodes - 1);
+        let path = self.node_path(k);
+        if self.ram_bytes + fb <= self.cfg.ram_slice {
+            // The serving layer budgets admissions against the store
+            // capacity *minus* the RAM slice, so a write inside the
+            // slice is always feasible (pinned residents + this frame
+            // never exceed the store).
+            let w = core.node_write_range(lo, hi, &path, self.frame_blob(k));
+            assert!(
+                matches!(w, StoreWrite::Stored { .. }),
+                "RAM-slice frame write rejected: the slice reservation leaked"
+            );
+            core.nodes.pin(path);
+            self.ram_bytes += fb;
+            self.land(core, topo, catalog, k, StorageTier::Ram);
+            return;
+        }
+        match core.node_write_range_ssd(lo, hi, &path, self.frame_blob(k)) {
+            StoreWrite::Stored { .. } => {
+                core.nodes.pin(path);
+                self.land(core, topo, catalog, k, StorageTier::Ssd);
+            }
+            StoreWrite::Rejected { .. } => {
+                // Node tiers are full: spill to GPFS over the shared
+                // FS. The frame stays in flight (it occupies a buffer
+                // slot until its bytes are safe *somewhere*), which is
+                // what lets a saturated GPFS leg stall the detector.
+                core.metrics.add_bytes("ingest.spill", fb);
+                let mut p = Plan::new(ingest_tag(self.cfg.frames + k));
+                let write = p.flow(topo.path_coordinated_read(), 1, fb, vec![], "ingest.spill");
+                p.effect(
+                    Effect::PfsWrite { path: self.pfs_path(k), data: self.frame_blob(k) },
+                    vec![write],
+                    "ingest.spill",
+                );
+                core.submit(p);
+            }
+        }
+    }
+
+    fn land(
+        &mut self,
+        core: &mut SimCore,
+        topo: &Topology,
+        catalog: &mut Catalog,
+        k: usize,
+        tier: StorageTier,
+    ) {
+        debug_assert!(self.frame_tiers[k].is_none(), "frame {k} landed twice");
+        self.frame_tiers[k] = Some(tier);
+        self.landed += 1;
+        self.in_flight -= 1;
+        catalog.record_growth(self.ds_id, 1, self.cfg.frame_bytes);
+        core.metrics.incr(match tier {
+            StorageTier::Ram => "ingest.land.ram",
+            StorageTier::Ssd => "ingest.land.ssd",
+            StorageTier::Gpfs => "ingest.land.gpfs",
+        });
+        if self.complete() {
+            self.complete_at = Some(core.now);
+        } else if self.stalled {
+            // A slot drained: emit the frame the stalled tick owed
+            // immediately (the detector buffered it), which also
+            // re-arms the cadence for the frames after it.
+            self.stalled = false;
+            self.emit(core, topo);
+        }
+    }
+
+    /// End-of-run invariant: every frame's content is present and
+    /// bit-identical at the tier its landing recorded. RAM and SSD
+    /// frames are pinned so nothing can have displaced them; a spilled
+    /// frame's GPFS original must exist even if a later stage also
+    /// made it node-resident.
+    pub fn verify(&self, core: &SimCore, topo: &Topology) {
+        let (lo, hi) = (0, topo.spec.nodes - 1);
+        for (k, tier) in self.frame_tiers.iter().enumerate() {
+            let tier = tier.unwrap_or_else(|| panic!("frame {k} never landed"));
+            let want = self.frame_blob(k);
+            match tier {
+                StorageTier::Ram => assert!(
+                    core.nodes.resident_matches(lo, hi, &self.node_path(k), &want),
+                    "RAM frame {k} lost or corrupted"
+                ),
+                StorageTier::Ssd => assert!(
+                    core.nodes.resident_matches_tier(
+                        StorageTier::Ssd,
+                        lo,
+                        hi,
+                        &self.node_path(k),
+                        &want
+                    ),
+                    "SSD frame {k} lost or corrupted"
+                ),
+                StorageTier::Gpfs => assert!(
+                    core.pfs.read(&self.pfs_path(k)).is_some_and(|b| b.same_content(&want)),
+                    "GPFS frame {k} lost or corrupted"
+                ),
+            }
+        }
+    }
+
+    /// Summarise a completed ingest. `first_result_secs` is the
+    /// serving layer's first session turnaround over the live dataset.
+    pub fn outcome(&self, first_result_secs: Option<f64>) -> IngestOutcome {
+        IngestOutcome {
+            frames: self.cfg.frames,
+            ram_frames: self.tier_count(StorageTier::Ram),
+            ssd_frames: self.tier_count(StorageTier::Ssd),
+            gpfs_frames: self.tier_count(StorageTier::Gpfs),
+            stalls: self.stalls,
+            ingest_done_secs: self
+                .complete_at
+                .expect("outcome of an incomplete ingest")
+                .secs_f64(),
+            first_result_secs,
+        }
+    }
+}
+
+/// The beamline hop of one frame. With no beamline attached (unit
+/// tests only; both machine specs have one) the frame materialises
+/// instantaneously.
+fn wire_step(p: &mut Plan, topo: &Topology, bytes: u64) -> StepId {
+    let path = topo.path_beamline();
+    if path.is_empty() {
+        p.delay(Duration::ZERO, vec![], "ingest.wire")
+    } else {
+        p.flow(path, 1, bytes, vec![], "ingest.wire")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::sched::TASK_TAG_BASE;
+    use crate::engine::{Director, Notice};
+    use crate::pfs::GpfsParams;
+    use crate::staging::service::STAGE_TAG_BASE;
+
+    #[test]
+    fn tag_band_sits_between_arrivals_and_chaos() {
+        assert_eq!(ingest_tag(0), INGEST_TAG_BASE);
+        assert_eq!(ingest_tag(7), INGEST_TAG_BASE + 7);
+        // Arrival tags are raw session indices — far below the band.
+        assert!(INGEST_TAG_BASE > 1 << 32);
+        // Band order: ingest < chaos < stage < task.
+        assert!(ingest_tag(1 << 20) < CHAOS_TAG_BASE);
+        assert!(CHAOS_TAG_BASE < STAGE_TAG_BASE);
+        assert!(STAGE_TAG_BASE < TASK_TAG_BASE);
+    }
+
+    #[test]
+    fn cadence_is_seeded_and_jittered() {
+        let gaps = |seed: u64| -> Vec<f64> {
+            let cfg = IngestCfg { seed, frames: 1, frame_gap_secs: 2.0, ..IngestCfg::default() };
+            let mut ing = Ingest::new(cfg, DatasetId(0));
+            (0..100).map(|_| ing.gap().secs_f64()).collect()
+        };
+        let a = gaps(7);
+        assert_eq!(a, gaps(7), "same seed, same cadence");
+        assert_ne!(a, gaps(8), "different seed, different cadence");
+        for g in &a {
+            assert!((1.5..2.5).contains(g), "gap {g} outside the jitter band");
+        }
+    }
+
+    /// Forwards ingest-tagged notices to the detector, as the serving
+    /// director does.
+    struct Drive {
+        topo: Topology,
+        catalog: Catalog,
+        ing: Ingest,
+    }
+
+    impl Director for Drive {
+        fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
+            match notice {
+                Notice::Timer { tag } if tag >= INGEST_TAG_BASE => {
+                    self.ing.on_timer(core, &self.topo);
+                }
+                Notice::PlanDone { tag, .. } if tag >= INGEST_TAG_BASE => {
+                    self.ing.on_plan_done(core, &self.topo, &mut self.catalog, tag);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn drive(cfg: IngestCfg, ram_cap: u64, ssd_cap: Option<u64>) -> (SimCore, Drive) {
+        let mut core = SimCore::new();
+        let mut machine = crate::cluster::orthros();
+        machine.nodes = 2;
+        let topo = Topology::build(machine, GpfsParams::default(), &mut core.net);
+        core.nodes.set_capacity(Some(ram_cap));
+        core.nodes.set_ssd_capacity(ssd_cap);
+        let mut catalog = Catalog::new();
+        let id = catalog.register("live", "/projects/serve/ds0", 0, 0);
+        let mut ing = Ingest::new(cfg, id);
+        ing.start(&mut core);
+        let mut d = Drive { topo, catalog, ing };
+        core.run(&mut d);
+        (core, d)
+    }
+
+    #[test]
+    fn frames_fill_ram_then_ssd_then_spill_to_gpfs() {
+        let cfg = IngestCfg {
+            seed: 42,
+            frames: 6,
+            frame_bytes: MB,
+            frame_gap_secs: 0.05,
+            buffer_frames: 6,
+            ram_slice: 2 * MB,
+            ..IngestCfg::default()
+        };
+        let (core, d) = drive(cfg, 64 * MB, Some(2 * MB));
+        assert!(d.ing.complete());
+        let out = d.ing.outcome(None);
+        assert_eq!((out.ram_frames, out.ssd_frames, out.gpfs_frames), (2, 2, 2));
+        // Spill order is monotone: RAM frames first, then SSD, then
+        // the GPFS overflow.
+        use StorageTier::{Gpfs, Ram, Ssd};
+        let tiers: Vec<_> = d.ing.frame_tiers().iter().map(|t| t.unwrap()).collect();
+        assert_eq!(tiers, [Ram, Ram, Ssd, Ssd, Gpfs, Gpfs]);
+        // Landed frames are pinned, catalogued, and verifiable.
+        assert!(core.nodes.is_pinned("/tmp/serve/ds0/f000.bin"));
+        assert!(core.nodes.is_pinned("/tmp/serve/ds0/f003.bin"));
+        let ds = d.catalog.get(d.ing.dataset_id()).unwrap();
+        assert_eq!((ds.files, ds.bytes), (6, 6 * MB));
+        assert!(core.pfs.read("/projects/serve/ds0/f004.bin").is_some());
+        assert!(core.pfs.read("/projects/serve/ds0/f000.bin").is_none(), "no spurious spill");
+        d.ing.verify(&core, &d.topo);
+        assert!(core.residency.mirrors(&core.nodes));
+        assert_eq!(core.metrics.count("ingest.land.ram"), 2);
+        assert_eq!(core.metrics.count("ingest.land.ssd"), 2);
+        assert_eq!(core.metrics.count("ingest.land.gpfs"), 2);
+        assert_eq!(core.metrics.bytes("ingest.wire"), 6 * MB);
+    }
+
+    #[test]
+    fn gpfs_first_lands_everything_on_the_shared_fs() {
+        let cfg = IngestCfg {
+            seed: 42,
+            frames: 4,
+            frame_bytes: MB,
+            frame_gap_secs: 0.05,
+            mode: IngestMode::GpfsFirst,
+            ..IngestCfg::default()
+        };
+        let (core, d) = drive(cfg, 64 * MB, None);
+        let out = d.ing.outcome(None);
+        assert_eq!((out.ram_frames, out.ssd_frames, out.gpfs_frames), (0, 0, 4));
+        assert_eq!(core.nodes.bytes_on(0), 0, "no node tier is touched");
+        d.ing.verify(&core, &d.topo);
+        // The baseline's frames are bit-identical to streamed ones.
+        let want = Blob::synthetic(MB, 0x5EB0_0000);
+        assert!(core.pfs.read("/projects/serve/ds0/f000.bin").unwrap().same_content(&want));
+    }
+
+    #[test]
+    fn full_buffer_stalls_the_cadence_without_losing_frames() {
+        // One buffer slot and a cadence much faster than the wire:
+        // every second tick finds the slot occupied and stalls.
+        let cfg = IngestCfg {
+            seed: 42,
+            frames: 8,
+            frame_bytes: 64 * MB,
+            frame_gap_secs: 0.001,
+            buffer_frames: 1,
+            ram_slice: u64::MAX,
+            ..IngestCfg::default()
+        };
+        let (core, d) = drive(cfg, 1024 * MB, None);
+        assert!(d.ing.complete(), "stalls defer frames, never drop them");
+        let out = d.ing.outcome(None);
+        assert_eq!(out.ram_frames, 8);
+        assert!(out.stalls > 0, "cadence outran the wire yet never stalled");
+        assert_eq!(core.metrics.count("ingest.stall"), out.stalls);
+        assert!(out.stall_rate() > 0.0);
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let run = || {
+            let cfg = IngestCfg {
+                seed: 9,
+                frames: 5,
+                frame_bytes: MB,
+                frame_gap_secs: 0.02,
+                ram_slice: 3 * MB,
+                ..IngestCfg::default()
+            };
+            let (core, d) = drive(cfg, 64 * MB, Some(MB));
+            (core.now, d.ing.outcome(None))
+        };
+        assert_eq!(run(), run());
+    }
+}

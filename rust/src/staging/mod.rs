@@ -22,9 +22,15 @@
 //! - [`service`]: the interactive serving layer — seeded multi-session
 //!   workloads over staged, pinned, node-resident datasets, with
 //!   capacity admission and session-fair scheduling.
+//! - [`ingest`]: the beamline ingest source — a seeded detector
+//!   streaming fixed-size frames over the machine's beamline link into
+//!   node memory *while sessions read*, with RAM -> SSD -> GPFS
+//!   backpressure spill and a detector-stall counter when even the
+//!   GPFS leg saturates.
 
 pub mod gather;
 pub mod hook;
+pub mod ingest;
 pub mod naive;
 pub mod residency;
 pub mod service;
@@ -32,6 +38,7 @@ pub mod spec;
 
 pub use gather::{gather_plan, GatherManifest};
 pub use hook::{staged_plan, StagedManifest};
+pub use ingest::{IngestCfg, IngestMode, IngestOutcome};
 pub use naive::naive_plan;
 pub use residency::{
     incremental_plan, IncrementalManifest, Residency, ResidencyStats, ResidencyTable,

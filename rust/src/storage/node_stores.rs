@@ -769,6 +769,51 @@ impl NodeStores {
         }
     }
 
+    /// Capacity-checked **direct SSD** write of `data` at `path` on
+    /// every node in `lo..=hi` — the ingest backpressure path: a frame
+    /// that cannot be admitted to RAM lands on the SSD tier without
+    /// displacing anything from RAM. Displacement within the SSD tier
+    /// is the ordinary LRU discard (victims are *not* re-demoted —
+    /// there is no tier below). Rejected when the tier is absent
+    /// (`ssd_capacity() == None`) or pinned SSD residents leave no
+    /// room; rejection leaves the store byte-for-byte untouched.
+    pub fn write_range_ssd_evicting(
+        &mut self,
+        lo: u32,
+        hi: u32,
+        path: &str,
+        data: Blob,
+    ) -> StoreWrite {
+        if self.ssd.capacity.is_none() {
+            return StoreWrite::Rejected { short_bytes: data.len() };
+        }
+        let id = self.interner.intern(path);
+        match self.ssd.write_range_evicting(
+            lo,
+            hi,
+            id,
+            data,
+            &self.pinned,
+            &mut self.clock,
+            &mut self.seq,
+        ) {
+            TierWrite::Rejected { short_bytes } => StoreWrite::Rejected { short_bytes },
+            TierWrite::Stored { victims } => StoreWrite::Stored {
+                evicted: victims
+                    .into_iter()
+                    .map(|(vid, r)| Eviction {
+                        path: self.interner.resolve(vid).to_string(),
+                        lo: r.lo,
+                        hi: r.hi,
+                        bytes: r.blob.len(),
+                        tier: StorageTier::Ssd,
+                        demoted: false,
+                    })
+                    .collect(),
+            },
+        }
+    }
+
     /// Demote RAM victims into the SSD tier (where enabled and
     /// admissible), producing the eviction records: each RAM victim
     /// followed by the SSD discards its demotion caused.
@@ -1417,6 +1462,43 @@ mod tests {
             other => panic!("expected Stored, got {other:?}"),
         }
         assert!(ns.read_tier(StorageTier::Ssd, 0, "/tmp/a").is_some());
+    }
+
+    #[test]
+    fn direct_ssd_writes_bypass_ram() {
+        let mut ns = NodeStores::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        ns.write_range(0, 1, "/tmp/ram", Blob::synthetic(90, 1));
+        let a = Blob::synthetic(60, 2);
+        // Lands on SSD without touching the RAM resident.
+        let out = ns.write_range_ssd_evicting(0, 1, "/tmp/frame0", a.clone());
+        assert!(matches!(out, StoreWrite::Stored { ref evicted } if evicted.is_empty()));
+        assert!(ns.read_tier(StorageTier::Ssd, 0, "/tmp/frame0").unwrap().same_content(&a));
+        assert!(ns.read(0, "/tmp/frame0").is_none());
+        assert!(ns.exists_on(0, "/tmp/ram"));
+        // SSD pressure displaces the LRU SSD resident, never RAM.
+        let out = ns.write_range_ssd_evicting(0, 1, "/tmp/frame1", Blob::synthetic(60, 3));
+        match out {
+            StoreWrite::Stored { evicted } => {
+                assert_eq!(evicted.len(), 1);
+                assert_eq!(evicted[0].path, "/tmp/frame0");
+                assert_eq!(evicted[0].tier, StorageTier::Ssd);
+                assert!(!evicted[0].demoted);
+            }
+            other => panic!("expected Stored, got {other:?}"),
+        }
+        assert!(ns.exists_on(1, "/tmp/ram"));
+        // Pinned SSD residents reject the write, store untouched.
+        ns.pin("/tmp/frame1");
+        let before = ns.dump_tier(StorageTier::Ssd);
+        let out = ns.write_range_ssd_evicting(0, 1, "/tmp/frame2", Blob::synthetic(60, 4));
+        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 20 }));
+        assert_eq!(ns.dump_tier(StorageTier::Ssd), before);
+        // Tier absent: rejected outright.
+        let mut no_ssd = NodeStores::new();
+        let out = no_ssd.write_range_ssd_evicting(0, 0, "/tmp/f", Blob::synthetic(8, 1));
+        assert!(matches!(out, StoreWrite::Rejected { short_bytes: 8 }));
     }
 
     #[test]

@@ -130,6 +130,15 @@ impl ResidencyTable {
         }
     }
 
+    /// Record a stored **direct SSD** write of `path` on `lo..=hi`
+    /// (the ingest backpressure path) that displaced `evicted` SSD
+    /// residents first.
+    pub fn on_ssd_stored(&mut self, lo: u32, hi: u32, path: &str, evicted: &[Eviction]) {
+        self.on_evicted(evicted);
+        let id = self.interner.intern(path);
+        add_range(slot_mut(&mut self.ssd, id), lo, hi);
+    }
+
     /// Record a promotion of `path` on `lo..=hi` (`bytes` per node)
     /// whose RAM admission displaced `evicted` first.
     pub fn on_promoted(&mut self, lo: u32, hi: u32, path: &str, bytes: u64, evicted: &[Eviction]) {
@@ -350,6 +359,29 @@ mod tests {
         assert_eq!(table.promoted_bytes, 60 * 4);
         assert!(table.resident(1, "/tmp/a"));
         assert!(table.resident_tier(StorageTier::Ssd, 1, "/tmp/b"));
+    }
+
+    #[test]
+    fn mirror_tracks_direct_ssd_writes() {
+        let mut ns = NodeStores::new();
+        let mut table = ResidencyTable::new();
+        ns.set_capacity(Some(100));
+        ns.set_ssd_capacity(Some(100));
+        for (i, p) in ["/tmp/f0", "/tmp/f1"].iter().enumerate() {
+            match ns.write_range_ssd_evicting(0, 1, p, Blob::synthetic(60, i as u64)) {
+                StoreWrite::Stored { evicted } => table.on_ssd_stored(0, 1, p, &evicted),
+                StoreWrite::Rejected { .. } => panic!("unexpected rejection"),
+            }
+        }
+        // f1 displaced f0 (100 B budget): the mirror tracked both the
+        // landing and the discard, and RAM stayed empty.
+        assert!(table.mirrors(&ns));
+        assert!(table.resident_tier(StorageTier::Ssd, 0, "/tmp/f1"));
+        assert!(!table.resident_tier(StorageTier::Ssd, 0, "/tmp/f0"));
+        assert!(!table.resident(0, "/tmp/f1"));
+        assert_eq!(table.ssd_evictions, 1);
+        assert_eq!(table.ssd_evicted_bytes, 60 * 2);
+        assert_eq!(table.evictions, 0);
     }
 
     #[test]

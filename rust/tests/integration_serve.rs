@@ -108,12 +108,8 @@ fn session_fair_with_one_session_is_bit_identical_to_scheduler() {
 fn staged_serving_beats_naive_p99_end_to_end() {
     let s = run_serve(2, &serve_cfg(ServeMode::Staged, 7), ThroughputMode::Fast);
     let n = run_serve(2, &serve_cfg(ServeMode::Naive, 7), ThroughputMode::Fast);
-    assert!(
-        s.percentiles.p99 < n.percentiles.p99,
-        "staged P99 {} vs naive P99 {}",
-        s.percentiles.p99,
-        n.percentiles.p99
-    );
+    let (sp, np) = (s.percentiles.unwrap(), n.percentiles.unwrap());
+    assert!(sp.p99 < np.p99, "staged P99 {} vs naive P99 {}", sp.p99, np.p99);
     // Staged serving moved each dataset at most once (residency hits
     // absorb re-opens) while naive re-read from GPFS per task.
     assert!(s.staged_bytes <= 3 * 5 * 10 * MB);

@@ -1,0 +1,226 @@
+//! Property suite for the streaming-ingest path and the tiered node
+//! store underneath it, over randomized schedules:
+//!
+//! - **Detector schedules** — 500 random ingest configurations driven
+//!   through the real event loop: every emitted frame lands in exactly
+//!   one tier (nothing lost, nothing duplicated), the spill order is
+//!   monotone down the RAM -> SSD -> GPFS ladder, landed content
+//!   verifies bit-for-bit, the catalog grows to exactly the stream
+//!   size, no tier ever exceeds its capacity, and the whole run
+//!   replays bit-identically under both throughput models.
+//! - **Store op sequences** — 500 random interleavings of RAM writes,
+//!   direct SSD writes, pins, and unpins: per-tier capacity is never
+//!   exceeded, pinned replicas are never displaced, and a `Rejected`
+//!   write leaves both tiers byte-for-byte untouched.
+
+use xstage::catalog::Catalog;
+use xstage::cluster::{orthros, NodeStores, Topology};
+use xstage::engine::{Director, Notice, SimCore};
+use xstage::pfs::{Blob, GpfsParams};
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::ingest::{Ingest, IngestCfg, IngestMode, INGEST_TAG_BASE};
+use xstage::storage::{StorageTier, StoreWrite};
+use xstage::units::MB;
+use xstage::util::prng::Pcg64;
+
+const SCHEDULES: u64 = 500;
+
+/// Forwards ingest-tagged notices to the detector, exactly as the
+/// serving director does.
+struct Drive {
+    topo: Topology,
+    catalog: Catalog,
+    ing: Ingest,
+}
+
+impl Director for Drive {
+    fn on_notice(&mut self, core: &mut SimCore, notice: Notice) {
+        match notice {
+            Notice::Timer { tag } if tag >= INGEST_TAG_BASE => {
+                self.ing.on_timer(core, &self.topo);
+            }
+            Notice::PlanDone { tag, .. } if tag >= INGEST_TAG_BASE => {
+                self.ing.on_plan_done(core, &self.topo, &mut self.catalog, tag);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Run one detector schedule to completion on a 2-node Orthros slice.
+fn run_ingest(
+    cfg: IngestCfg,
+    ram_cap: u64,
+    ssd_cap: Option<u64>,
+    mode: ThroughputMode,
+) -> (SimCore, Drive) {
+    let mut core = SimCore::with_mode(mode);
+    let mut machine = orthros();
+    machine.nodes = 2;
+    let topo = Topology::build(machine, GpfsParams::default(), &mut core.net);
+    core.nodes.set_capacity(Some(ram_cap));
+    core.nodes.set_ssd_capacity(ssd_cap);
+    let mut catalog = Catalog::new();
+    let id = catalog.register("live", "/projects/serve/ds0", 0, 0);
+    let mut ing = Ingest::new(cfg, id);
+    ing.start(&mut core);
+    let mut d = Drive { topo, catalog, ing };
+    core.run(&mut d);
+    (core, d)
+}
+
+#[test]
+fn random_detector_schedules_conserve_frames_and_replay() {
+    let mut rng = Pcg64::new(0x1A6E57_600D);
+    for schedule in 0..SCHEDULES {
+        let frames = 1 + rng.below(8) as usize;
+        let frame_bytes = (1 + rng.below(3)) * MB;
+        let total = frames as u64 * frame_bytes;
+        let cfg = IngestCfg {
+            seed: rng.below(u64::MAX),
+            frames,
+            frame_bytes,
+            frame_gap_secs: 0.02 + 0.48 * rng.f64(),
+            buffer_frames: 1 + rng.below(4) as usize,
+            // 0..=total in whole frames: sweeps all-RAM, mixed, and
+            // nothing-fits regimes.
+            ram_slice: rng.below(frames as u64 + 1) * frame_bytes,
+            dataset: 0,
+            mode: IngestMode::Stream,
+        };
+        // The store itself always has room for the slice; the slice is
+        // the binding RAM constraint, as in the serving layer.
+        let ram_cap = total + MB;
+        let ssd_cap = match rng.below(3) {
+            0 => None,
+            _ => Some(rng.below(frames as u64 + 1) * frame_bytes),
+        };
+        let (core, d) = run_ingest(cfg.clone(), ram_cap, ssd_cap, ThroughputMode::Fast);
+        let ctx = format!("schedule {schedule}: {cfg:?} ssd {ssd_cap:?}");
+
+        // Conservation: every frame landed in exactly one tier.
+        assert!(d.ing.complete(), "{ctx}");
+        let tiers: Vec<StorageTier> =
+            d.ing.frame_tiers().iter().map(|t| t.expect("unlanded frame")).collect();
+        assert_eq!(tiers.len(), frames, "{ctx}");
+        let out = d.ing.outcome(None);
+        assert_eq!(out.ram_frames + out.ssd_frames + out.gpfs_frames, frames, "{ctx}");
+
+        // Spill order is monotone down the ladder (`StorageTier` is
+        // declared in ladder order): frames are all the same size and
+        // landed replicas are pinned, so once a tier rejects it stays
+        // rejected.
+        for w in tiers.windows(2) {
+            assert!(w[0] <= w[1], "{ctx}: tiers {tiers:?}");
+        }
+
+        // Capacity: the RAM slice and each tier budget are honored.
+        assert!(out.ram_frames as u64 * frame_bytes <= cfg.ram_slice, "{ctx}");
+        for node in 0..2 {
+            assert!(core.nodes.bytes_on(node) <= ram_cap, "{ctx}");
+            let ssd = core.nodes.bytes_on_tier(StorageTier::Ssd, node);
+            match ssd_cap {
+                Some(cap) => assert!(ssd <= cap, "{ctx}: ssd {ssd} > {cap}"),
+                None => assert_eq!(ssd, 0, "{ctx}"),
+            }
+        }
+
+        // Content verifies where the detector says it landed, and the
+        // catalog saw every frame exactly once.
+        d.ing.verify(&core, &d.topo);
+        let rec = d.catalog.get(d.ing.dataset_id()).unwrap();
+        assert_eq!((rec.files, rec.bytes), (frames as u64, total), "{ctx}");
+
+        // Bit-identical replay under both throughput models.
+        for mode in [ThroughputMode::Fast, ThroughputMode::Slow] {
+            let (ca, da) = run_ingest(cfg.clone(), ram_cap, ssd_cap, mode);
+            let (cb, db) = run_ingest(cfg.clone(), ram_cap, ssd_cap, mode);
+            assert_eq!(da.ing.frame_tiers(), db.ing.frame_tiers(), "{ctx} {mode:?}");
+            assert_eq!(da.ing.stalls(), db.ing.stalls(), "{ctx} {mode:?}");
+            assert_eq!(ca.now, cb.now, "{ctx} {mode:?}");
+            assert_eq!(ca.events_processed, cb.events_processed, "{ctx} {mode:?}");
+        }
+    }
+}
+
+#[test]
+fn random_store_sequences_respect_caps_pins_and_rejection() {
+    const NODES: u32 = 3;
+    let snapshot = |ns: &NodeStores| {
+        (ns.dump_tier(StorageTier::Ram), ns.dump_tier(StorageTier::Ssd))
+    };
+    let mut rng = Pcg64::new(0x570E_600D);
+    for schedule in 0..SCHEDULES {
+        let mut ns = NodeStores::new();
+        let ram_cap = (1 + rng.below(8)) * MB;
+        let ssd_cap = match rng.below(4) {
+            0 => None,
+            _ => Some((1 + rng.below(8)) * MB),
+        };
+        ns.set_capacity(Some(ram_cap));
+        ns.set_ssd_capacity(ssd_cap);
+        let mut pinned: Vec<String> = Vec::new();
+        for op in 0..30u64 {
+            let path = format!("/tmp/p{}.bin", rng.below(6));
+            let lo = rng.below(NODES as u64) as u32;
+            let hi = lo + rng.below(NODES as u64 - lo as u64) as u32;
+            let ctx = format!("schedule {schedule} op {op} {path} {lo}..={hi}");
+            match rng.below(6) {
+                0 | 1 => {
+                    let data = Blob::synthetic((1 + rng.below(6)) * MB / 2, op);
+                    let before = snapshot(&ns);
+                    match ns.write_range_evicting(lo, hi, &path, data) {
+                        StoreWrite::Stored { evicted } => {
+                            for e in &evicted {
+                                assert!(!pinned.contains(&e.path), "{ctx}: evicted pin {e:?}");
+                            }
+                        }
+                        StoreWrite::Rejected { short_bytes } => {
+                            assert!(short_bytes > 0, "{ctx}");
+                            assert_eq!(before, snapshot(&ns), "{ctx}: rejection mutated store");
+                        }
+                    }
+                }
+                2 | 3 => {
+                    let data = Blob::synthetic((1 + rng.below(6)) * MB / 2, op);
+                    let before = snapshot(&ns);
+                    match ns.write_range_ssd_evicting(lo, hi, &path, data) {
+                        StoreWrite::Stored { evicted } => {
+                            assert!(ssd_cap.is_some(), "{ctx}: stored into an absent tier");
+                            for e in &evicted {
+                                assert_eq!(e.tier, StorageTier::Ssd, "{ctx}");
+                                assert!(!e.demoted, "{ctx}: SSD discards never demote");
+                                assert!(!pinned.contains(&e.path), "{ctx}: evicted pin {e:?}");
+                            }
+                        }
+                        StoreWrite::Rejected { short_bytes } => {
+                            assert!(short_bytes > 0, "{ctx}");
+                            assert_eq!(before, snapshot(&ns), "{ctx}: rejection mutated store");
+                        }
+                    }
+                }
+                4 => {
+                    ns.pin(path.clone());
+                    if !pinned.contains(&path) {
+                        pinned.push(path);
+                    }
+                }
+                _ => {
+                    ns.unpin(&path);
+                    pinned.retain(|p| *p != path);
+                }
+            }
+            for node in 0..NODES {
+                assert!(ns.bytes_on(node) <= ram_cap, "{ctx}: RAM over budget");
+                let ssd = ns.bytes_on_tier(StorageTier::Ssd, node);
+                match ssd_cap {
+                    Some(cap) => assert!(ssd <= cap, "{ctx}: SSD over budget"),
+                    None => assert_eq!(ssd, 0, "{ctx}: bytes in an absent tier"),
+                }
+            }
+            for p in &pinned {
+                assert!(ns.is_pinned(p), "{ctx}: pin dropped");
+            }
+        }
+    }
+}
