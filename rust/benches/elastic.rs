@@ -1,0 +1,139 @@
+//! Bench: elastic multi-tenant serving — weighted admission, node
+//! churn, keep-alive/prewarm policies.
+//!
+//! Prints the bursty x diurnal x churn matrix, then asserts the
+//! acceptance bar:
+//!
+//! - **seed identity** — equal weights with policies off replays the
+//!   plain single-tenant service bit-for-bit (rule E1: the weighted
+//!   pick degenerates to the literal seed FIFO);
+//! - **fairness wins** — weighted admission beats FIFO on the starved
+//!   tenant's P99 at every bursty matrix point;
+//! - **policy wins** — keep-alive (fixed and adaptive) cuts the hot
+//!   tenant's GPFS re-read bytes vs the no-policy arm at every
+//!   diurnal matrix point;
+//! - **starvation-freedom** — every queued session is admitted within
+//!   the run (finite admission wait, every session served), on every
+//!   matrix point including under pool churn.
+//!
+//! With `XSTAGE_BENCH_JSON` set the measurements emit one JSON point
+//! each — CI uploads them per run as the `BENCH_elastic.json` artifact.
+//!
+//! Run: `cargo bench --bench elastic`
+
+use xstage::experiments::elastic;
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::{run_serve, PolicyKind, ServeOutcome, ServiceCfg, TenantsCfg};
+use xstage::util::bench::{bench_n, section, smoke};
+
+fn assert_starvation_free(out: &ServeOutcome, what: &str) {
+    assert_eq!(out.turnaround_secs.len(), out.sessions, "{what}: a session was never served");
+    assert!(
+        out.admit_wait_secs.iter().all(|w| w.is_finite() && *w <= out.virtual_secs),
+        "{what}: a queued session waited unbounded"
+    );
+}
+
+fn main() {
+    section("elastic — weighted tenants, keep-alive/prewarm, pool churn");
+    let sessions = if smoke() { 6 } else { elastic::SESSIONS };
+    elastic::run_with(sessions, elastic::SEED).print();
+
+    // Acceptance: equal weights + policies off is the seed service,
+    // bit for bit — the multi-tenant layer must cost nothing when it
+    // expresses no preference.
+    let plain = run_serve(2, &ServiceCfg { sessions, ..Default::default() }, ThroughputMode::Fast);
+    let tenanted = run_serve(
+        2,
+        &ServiceCfg {
+            sessions,
+            tenants: TenantsCfg { weights: vec![3, 3] },
+            policy: PolicyKind::None,
+            ..Default::default()
+        },
+        ThroughputMode::Fast,
+    );
+    assert_eq!(plain.turnaround_secs, tenanted.turnaround_secs);
+    assert_eq!(plain.virtual_secs, tenanted.virtual_secs);
+    assert_eq!(plain.staged_bytes, tenanted.staged_bytes);
+    assert_eq!(plain.peak_queue, tenanted.peak_queue);
+    assert_eq!(plain.admission_order, tenanted.admission_order);
+    println!("equal-weight/policy-off replay reproduces the plain service bit-for-bit");
+
+    // Acceptance: weighted admission beats FIFO on the starved
+    // tenant's P99 at every bursty point, and nobody starves.
+    for &burst in elastic::BURSTS {
+        let fifo = elastic::bursty_point(burst, false, elastic::SEED);
+        let weighted = elastic::bursty_point(burst, true, elastic::SEED);
+        assert_starvation_free(&fifo, "bursty fifo");
+        assert_starvation_free(&weighted, "bursty weighted");
+        let (fp, wp) = (elastic::tenant_p99(&fifo, 1), elastic::tenant_p99(&weighted, 1));
+        assert!(
+            wp < fp,
+            "weighted lost the victim P99 at burst {burst}: {wp:.2}s vs {fp:.2}s"
+        );
+        assert_eq!(fifo.staged_bytes, weighted.staged_bytes, "burst {burst} moved extra bytes");
+    }
+    println!(
+        "all {} bursty points: weighted victim P99 < FIFO victim P99, starvation-free",
+        elastic::BURSTS.len()
+    );
+
+    // Acceptance: keep-alive/prewarm cut the hot tenant's GPFS
+    // re-read bytes vs no-policy at every diurnal point.
+    for &sweepers in elastic::SWEEPERS {
+        let none = elastic::diurnal_point(sweepers, PolicyKind::None, elastic::SEED);
+        assert_starvation_free(&none, "diurnal none");
+        for (arm, policy) in elastic::policy_arms().into_iter().skip(1) {
+            let out = elastic::diurnal_point(sweepers, policy, elastic::SEED);
+            assert_starvation_free(&out, "diurnal policy");
+            assert!(
+                out.tenant_gpfs_bytes[0] < none.tenant_gpfs_bytes[0],
+                "{arm} did not cut hot-tenant GPFS bytes at {sweepers} sweepers: {} vs {}",
+                out.tenant_gpfs_bytes[0],
+                none.tenant_gpfs_bytes[0]
+            );
+            assert!(out.warm_hits >= 1, "{arm} never served a warm hit");
+        }
+    }
+    println!(
+        "all {} diurnal points: keep-alive/prewarm GPFS bytes < no-policy, warm hits served",
+        elastic::SWEEPERS.len()
+    );
+
+    // Acceptance: pool churn still serves every session, and the
+    // zero-event control is the static pool.
+    for &events in elastic::CHURN_EVENTS {
+        let out = elastic::churn_point(events, sessions, elastic::SEED);
+        assert_starvation_free(&out, "churn");
+        if events == 0 {
+            assert_eq!(out.pool_events, 0);
+        } else {
+            assert!(out.pool_events > 0, "churn point {events} never fired a pool event");
+            assert!(out.min_warm_nodes >= 2, "pool shrank below its floor");
+        }
+        let again = elastic::churn_point(events, sessions, elastic::SEED);
+        assert_eq!(out.turnaround_secs, again.turnaround_secs, "churn {events} diverged");
+    }
+    println!(
+        "all {} churn points: starvation-free under pool churn, deterministic",
+        elastic::CHURN_EVENTS.len()
+    );
+
+    section("host-time: elastic serve simulation throughput");
+    let burst = *elastic::BURSTS.last().unwrap();
+    let sweepers = *elastic::SWEEPERS.last().unwrap();
+    bench_n("elastic/bursty-weighted-point", 3, || {
+        let out = elastic::bursty_point(burst, true, elastic::SEED);
+        assert_eq!(out.turnaround_secs.len(), out.sessions);
+    });
+    bench_n("elastic/diurnal-adaptive-point", 3, || {
+        let out = elastic::diurnal_point(sweepers, elastic::policy_arms()[2].1, elastic::SEED);
+        assert_eq!(out.turnaround_secs.len(), out.sessions);
+    });
+    let events = *elastic::CHURN_EVENTS.last().unwrap();
+    bench_n("elastic/churn-point", 3, || {
+        let out = elastic::churn_point(events, sessions, elastic::SEED);
+        assert_eq!(out.turnaround_secs.len(), out.sessions);
+    });
+}

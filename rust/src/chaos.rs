@@ -186,6 +186,9 @@ mod tests {
 
     #[test]
     fn tag_namespace_sits_below_the_others() {
+        use crate::staging::policy::{ELASTIC_TAG_BASE, KEEPALIVE_TAG_BASE};
+        assert!(ELASTIC_TAG_BASE < KEEPALIVE_TAG_BASE);
+        assert!(KEEPALIVE_TAG_BASE < crate::staging::ingest::INGEST_TAG_BASE);
         assert!(crate::staging::ingest::INGEST_TAG_BASE < CHAOS_TAG_BASE);
         assert!(CHAOS_TAG_BASE < crate::engine::DEMOTE_TAG);
         assert!(CHAOS_TAG_BASE < crate::staging::service::STAGE_TAG_BASE);

@@ -27,7 +27,7 @@ pub fn commands() -> &'static [Command] {
     &COMMANDS
 }
 
-static COMMANDS: [Command; 15] = [
+static COMMANDS: [Command; 16] = [
     Command {
         name: "fig10",
         flags: "[--nodes a,b,c]",
@@ -190,6 +190,21 @@ static COMMANDS: [Command; 15] = [
         },
     },
     Command {
+        name: "elastic",
+        flags: "[--sessions N] [--seed S]",
+        summary: "Elastic matrix: weighted tenants, keep-alive/prewarm, pool churn",
+        run: |args| {
+            let sessions = args.u64_or("sessions", experiments::elastic::SESSIONS as u64)?;
+            anyhow::ensure!(
+                (1..=65536).contains(&sessions),
+                "--sessions must be in 1..=65536, got {sessions}"
+            );
+            let seed = args.u64_or("seed", experiments::elastic::SEED)?;
+            experiments::elastic::run_with(sessions as usize, seed).print();
+            Ok(())
+        },
+    },
+    Command {
         name: "all",
         flags: "",
         summary: "Run every experiment table in order",
@@ -221,6 +236,8 @@ static COMMANDS: [Command; 15] = [
             experiments::chaos::run_with(8, experiments::chaos::SEED).print();
             println!();
             experiments::ingest::run_with(4, experiments::ingest::SEED).print();
+            println!();
+            experiments::elastic::run_with(6, experiments::elastic::SEED).print();
             Ok(())
         },
     },
@@ -366,6 +383,11 @@ mod tests {
     #[test]
     fn ingest_small_matrix_runs() {
         dispatch(&parse("ingest --sessions 3 --seed 9")).unwrap();
+    }
+
+    #[test]
+    fn elastic_small_matrix_runs() {
+        dispatch(&parse("elastic --sessions 6 --seed 9")).unwrap();
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! The elastic multi-tenant experiment: weighted-fair admission vs
+//! seed FIFO under a bursty tenant mix, keep-alive / prewarm policies
+//! under a diurnal reopen pattern, and serving through elastic
+//! node-pool churn.
+//!
+//! Three matrices share one table:
+//!
+//! - **bursty** — a greedy tenant dumps a burst of sessions at t=0
+//!   while a light tenant trickles in just behind it, every session on
+//!   its own dataset so admission is the only coupling. The FIFO arm
+//!   (equal weights — the literal seed path, rule E1) makes the light
+//!   tenant wait out the whole burst; the weighted arm (victim weight
+//!   4x) must beat it on the victim's P99 at every burst size.
+//! - **diurnal** — a hot tenant reopens its dataset after a long idle
+//!   gap while a sweeper tenant stages one-shot datasets through the
+//!   same store, evicting whatever is unpinned. With policies off the
+//!   reopen re-stages from GPFS; keep-alive (fixed or adaptive) holds
+//!   the dataset warm through the gap, so the hot tenant's attributed
+//!   GPFS bytes must drop at every sweeper count.
+//! - **churn** — the generated serve workload replayed while the
+//!   elastic pool leases nodes away and back on a seeded schedule
+//!   (warm-up modeled); every session must still complete, and the
+//!   zero-event row is the bit-identical static control.
+//!
+//! `benches/elastic.rs` turns the series into hard assertions
+//! (per-point P99 and GPFS-byte wins, starvation-freedom).
+
+use crate::metrics::{Percentiles, Table};
+use crate::simtime::flownet::ThroughputMode;
+use crate::staging::policy::{ElasticCfg, PolicyKind, TenantId, TenantsCfg};
+use crate::staging::service::{
+    run_serve, run_serve_specs, Batch, BatchKind, ServeOutcome, ServiceCfg, SessionSpec,
+};
+use crate::units::{fmt_bytes, SimTime, MB};
+
+use super::ExpResult;
+
+/// Burst sizes the greedy tenant throws at the queue.
+pub const BURSTS: &[usize] = &[4, 6, 8];
+/// Light-tenant sessions trailing each burst.
+pub const VICTIM_SESSIONS: usize = 3;
+/// Sweeper one-shots between the hot tenant's open and reopen. All
+/// points are >= 3 so the policy-off arm really evicts the hot
+/// dataset (store capacity is three working sets).
+pub const SWEEPERS: &[usize] = &[3, 5, 7];
+/// Elastic lease-change counts swept (0 is the static control row).
+pub const CHURN_EVENTS: &[usize] = &[0, 8, 16];
+/// Sessions per churn point (the CLI overrides this).
+pub const SESSIONS: usize = 12;
+/// Default seed.
+pub const SEED: u64 = 42;
+
+fn session(arrival_secs: u64, dataset: usize, tenant: TenantId, tasks: usize) -> SessionSpec {
+    SessionSpec {
+        arrival: SimTime(arrival_secs * 1_000_000_000),
+        dataset,
+        tenant,
+        batches: vec![Batch { kind: BatchKind::Nf, tasks }],
+    }
+}
+
+/// P99 of one tenant's turnaround samples.
+pub fn tenant_p99(out: &ServeOutcome, tenant: TenantId) -> f64 {
+    let mut v: Vec<f64> = out
+        .turnaround_secs
+        .iter()
+        .zip(&out.tenant_of)
+        .filter(|&(_, &t)| t == tenant)
+        .map(|(&s, _)| s)
+        .collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles::from_sorted(&v).expect("tenant served no sessions").p99
+}
+
+/// One bursty matrix point: greedy tenant 0 bursts `burst` sessions at
+/// t=0, victim tenant 1 trails three sessions one second apart, every
+/// session on a distinct dataset, budget two working sets.
+pub fn bursty_point(burst: usize, weighted: bool, seed: u64) -> ServeOutcome {
+    let cfg = ServiceCfg {
+        seed,
+        sessions: burst + VICTIM_SESSIONS,
+        datasets: burst + VICTIM_SESSIONS,
+        files_per_dataset: 4,
+        file_bytes: 8 * MB,
+        ramdisk_slice: Some(2 * 4 * 8 * MB),
+        ssd_slice: Some(0),
+        tenants: TenantsCfg { weights: if weighted { vec![1, 4] } else { vec![1, 1] } },
+        ..Default::default()
+    };
+    let mut specs: Vec<SessionSpec> = (0..burst).map(|i| session(0, i, 0, 6)).collect();
+    specs.extend(
+        (0..VICTIM_SESSIONS).map(|i| session(1 + i as u64, burst + i, 1, 6)),
+    );
+    run_serve_specs(2, &cfg, ThroughputMode::Fast, specs)
+}
+
+/// One diurnal matrix point: hot tenant 0 opens dataset 0 at t=0 and
+/// reopens it at t=500 s; sweeper tenant 1 stages `sweepers` one-shot
+/// datasets through the three-working-set store in between. The SSD
+/// tier is off, so an evicted hot dataset costs a full GPFS re-stage.
+pub fn diurnal_point(sweepers: usize, policy: PolicyKind, seed: u64) -> ServeOutcome {
+    let cfg = ServiceCfg {
+        seed,
+        sessions: sweepers + 2,
+        datasets: sweepers + 1,
+        files_per_dataset: 4,
+        file_bytes: 8 * MB,
+        ramdisk_slice: Some(3 * 4 * 8 * MB),
+        ssd_slice: Some(0),
+        tenants: TenantsCfg { weights: vec![1, 1] },
+        policy,
+        ..Default::default()
+    };
+    let mut specs = vec![session(0, 0, 0, 6), session(500, 0, 0, 6)];
+    specs.extend((0..sweepers).map(|i| session(40 + 40 * i as u64, 1 + i, 1, 4)));
+    run_serve_specs(2, &cfg, ThroughputMode::Fast, specs)
+}
+
+/// One churn point: the generated workload on four nodes while the
+/// elastic pool walks its lease count between two and four.
+pub fn churn_point(events: usize, sessions: usize, seed: u64) -> ServeOutcome {
+    let cfg = ServiceCfg {
+        seed,
+        sessions,
+        mean_gap_secs: 25.0,
+        datasets: 3,
+        files_per_dataset: 5,
+        file_bytes: 8 * MB,
+        ramdisk_slice: Some(4 * 5 * 8 * MB),
+        elastic: Some(ElasticCfg {
+            // Decorrelate the lease walk from the workload stream.
+            seed: seed ^ 0xE1A5_71C0,
+            events,
+            mean_gap_secs: 40.0,
+            min_nodes: 2,
+            warmup_secs: 30.0,
+        }),
+        ..Default::default()
+    };
+    run_serve(4, &cfg, ThroughputMode::Fast)
+}
+
+/// The policy arms the diurnal matrix sweeps.
+pub fn policy_arms() -> [(&'static str, PolicyKind); 3] {
+    [
+        ("none", PolicyKind::None),
+        ("fixed", PolicyKind::FixedKeepAlive(600.0)),
+        (
+            "adaptive",
+            PolicyKind::Adaptive { default_keepalive_secs: 600.0, max_keepalive_secs: 900.0 },
+        ),
+    ]
+}
+
+/// Run all three matrices and render the combined table.
+pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    let mut table = Table::new(
+        format!(
+            "Elastic multi-tenant serving — bursty fairness, diurnal \
+             keep-alive/prewarm, pool churn (seed {seed})"
+        ),
+        &["matrix", "point", "arm", "P50", "P99", "tenant P99", "tenant GPFS", "warm", "pool"],
+    );
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = vec![
+        ("fifo victim p99".into(), Vec::new()),
+        ("weighted victim p99".into(), Vec::new()),
+        ("none hot gpfs".into(), Vec::new()),
+        ("fixed hot gpfs".into(), Vec::new()),
+        ("adaptive hot gpfs".into(), Vec::new()),
+        ("churn p99".into(), Vec::new()),
+    ];
+
+    for &burst in BURSTS {
+        for (arm, weighted) in [("fifo", false), ("weighted", true)] {
+            let out = bursty_point(burst, weighted, seed);
+            let p = out.percentiles.unwrap();
+            let victim = tenant_p99(&out, 1);
+            table.row(&[
+                "bursty".into(),
+                burst.to_string(),
+                arm.into(),
+                format!("{:.1}", p.p50),
+                format!("{:.1}", p.p99),
+                format!("{victim:.1}"),
+                fmt_bytes(out.tenant_gpfs_bytes[1]),
+                "-".into(),
+                "-".into(),
+            ]);
+            let s = if weighted { &mut series[1].1 } else { &mut series[0].1 };
+            s.push((burst as f64, victim));
+        }
+    }
+
+    for &sweepers in SWEEPERS {
+        for (si, (arm, policy)) in policy_arms().into_iter().enumerate() {
+            let out = diurnal_point(sweepers, policy, seed);
+            let p = out.percentiles.unwrap();
+            let hot = out.tenant_gpfs_bytes[0];
+            table.row(&[
+                "diurnal".into(),
+                sweepers.to_string(),
+                arm.into(),
+                format!("{:.1}", p.p50),
+                format!("{:.1}", p.p99),
+                format!("{:.1}", tenant_p99(&out, 0)),
+                fmt_bytes(hot),
+                format!("{}h/{}p/{}g", out.warm_hits, out.prewarms, out.keepalive_grants),
+                "-".into(),
+            ]);
+            series[2 + si].1.push((sweepers as f64, hot as f64));
+        }
+    }
+
+    for &events in CHURN_EVENTS {
+        let out = churn_point(events, sessions, seed);
+        let p = out.percentiles.unwrap();
+        table.row(&[
+            "churn".into(),
+            events.to_string(),
+            "elastic".into(),
+            format!("{:.1}", p.p50),
+            format!("{:.1}", p.p99),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{}ev / min {} warm", out.pool_events, out.min_warm_nodes),
+        ]);
+        series[5].1.push((events as f64, p.p99));
+    }
+
+    ExpResult { table, series }
+}
+
+pub fn run() -> ExpResult {
+    run_with(SESSIONS, SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_admission_rescues_the_victim_tenant() {
+        let fifo = bursty_point(6, false, 7);
+        let weighted = bursty_point(6, true, 7);
+        // Same sessions served either way, nobody starved.
+        assert_eq!(fifo.sessions, weighted.sessions);
+        assert!(fifo.admit_wait_secs.iter().all(|w| w.is_finite()));
+        assert!(weighted.admit_wait_secs.iter().all(|w| w.is_finite()));
+        // The weighted pick pulls the victim ahead of the tail of the
+        // burst: strictly better victim P99, by about a full session.
+        assert!(
+            tenant_p99(&weighted, 1) < tenant_p99(&fifo, 1),
+            "weighted {} !< fifo {}",
+            tenant_p99(&weighted, 1),
+            tenant_p99(&fifo, 1),
+        );
+        // Both arms move identical bytes from GPFS overall.
+        assert_eq!(fifo.staged_bytes, weighted.staged_bytes);
+    }
+
+    #[test]
+    fn keep_alive_cuts_hot_tenant_gpfs_bytes() {
+        let none = diurnal_point(5, PolicyKind::None, 7);
+        let per_ds = 4 * 8 * MB;
+        // Policy-off: the sweepers evict the hot dataset, the reopen
+        // re-stages it in full.
+        assert_eq!(none.tenant_gpfs_bytes[0], 2 * per_ds);
+        assert_eq!(none.warm_hits, 0);
+        for (arm, policy) in policy_arms().into_iter().skip(1) {
+            let out = diurnal_point(5, policy, 7);
+            assert_eq!(out.tenant_gpfs_bytes[0], per_ds, "{arm}");
+            assert!(out.warm_hits >= 1, "{arm}");
+            assert!(out.keepalive_grants >= 1, "{arm}");
+            // Every staged byte is attributed to exactly one tenant.
+            assert_eq!(out.tenant_gpfs_bytes.iter().sum::<u64>(), out.staged_bytes, "{arm}");
+        }
+    }
+
+    #[test]
+    fn churn_control_row_is_static_and_all_points_serve() {
+        let control = churn_point(0, 8, 7);
+        assert_eq!(control.pool_events, 0);
+        assert_eq!(control.min_warm_nodes, 4);
+        let churned = churn_point(16, 8, 7);
+        assert!(churned.pool_events > 0);
+        assert!(churned.min_warm_nodes >= 2 && churned.min_warm_nodes < 4);
+        assert_eq!(churned.turnaround_secs.len(), 8);
+        // Deterministic replay.
+        let again = churn_point(16, 8, 7);
+        assert_eq!(churned.turnaround_secs, again.turnaround_secs);
+        assert_eq!(churned.pool_events, again.pool_events);
+    }
+
+    #[test]
+    fn elastic_experiment_table_renders() {
+        let r = run_with(6, 9);
+        assert_eq!(
+            r.table.rows.len(),
+            2 * BURSTS.len() + 3 * SWEEPERS.len() + CHURN_EVENTS.len()
+        );
+        let fifo = r.series_named("fifo victim p99").unwrap();
+        let weighted = r.series_named("weighted victim p99").unwrap();
+        assert_eq!(fifo.len(), BURSTS.len());
+        for (f, w) in fifo.iter().zip(weighted) {
+            assert!(w.1 < f.1, "burst {}: weighted {} !< fifo {}", f.0, w.1, f.1);
+        }
+        let none = r.series_named("none hot gpfs").unwrap();
+        for arm in ["fixed hot gpfs", "adaptive hot gpfs"] {
+            for (n, p) in none.iter().zip(r.series_named(arm).unwrap()) {
+                assert!(p.1 < n.1, "{arm} point {}: {} !< {}", n.0, p.1, n.1);
+            }
+        }
+        assert!(r.series_named("churn p99").unwrap().iter().all(|&(_, y)| y > 0.0));
+    }
+}

@@ -6,6 +6,7 @@
 pub mod cache;
 pub mod campaign;
 pub mod chaos;
+pub mod elastic;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;

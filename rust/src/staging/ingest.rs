@@ -463,11 +463,16 @@ mod tests {
 
     #[test]
     fn tag_band_sits_between_arrivals_and_chaos() {
+        use crate::staging::policy::{elastic_tag, keepalive_tag, ELASTIC_TAG_BASE};
         assert_eq!(ingest_tag(0), INGEST_TAG_BASE);
         assert_eq!(ingest_tag(7), INGEST_TAG_BASE + 7);
         // Arrival tags are raw session indices — far below the band.
         assert!(INGEST_TAG_BASE > 1 << 32);
-        // Band order: ingest < chaos < stage < task.
+        // Band order: elastic < keep-alive < ingest < chaos < stage <
+        // task.
+        assert!(1 << 32 < ELASTIC_TAG_BASE);
+        assert!(elastic_tag(1 << 20) < keepalive_tag(0));
+        assert!(keepalive_tag(1 << 20) < INGEST_TAG_BASE);
         assert!(ingest_tag(1 << 20) < CHAOS_TAG_BASE);
         assert!(CHAOS_TAG_BASE < STAGE_TAG_BASE);
         assert!(STAGE_TAG_BASE < TASK_TAG_BASE);

@@ -27,11 +27,16 @@
 //!   node memory *while sessions read*, with RAM -> SSD -> GPFS
 //!   backpressure spill and a detector-stall counter when even the
 //!   GPFS leg saturates.
+//! - [`policy`]: the elastic multi-tenant layer — weighted-fair
+//!   admission across tenants, the seeded elastic node-pool schedule
+//!   with modeled warm-up, and the pluggable keep-alive / prewarm
+//!   policies driven by per-tenant access history.
 
 pub mod gather;
 pub mod hook;
 pub mod ingest;
 pub mod naive;
+pub mod policy;
 pub mod residency;
 pub mod service;
 pub mod spec;
@@ -40,11 +45,15 @@ pub use gather::{gather_plan, GatherManifest};
 pub use hook::{staged_plan, StagedManifest};
 pub use ingest::{IngestCfg, IngestMode, IngestOutcome};
 pub use naive::naive_plan;
+pub use policy::{
+    AdmitQueue, ElasticCfg, PolicyKind, TenantHistory, TenantId, TenantsCfg,
+};
 pub use residency::{
     incremental_plan, IncrementalManifest, Residency, ResidencyStats, ResidencyTable,
 };
 pub use service::{
-    generate_workload, run_serve, ServeMode, ServeOutcome, ServiceCfg, SessionSpec,
+    generate_workload, run_serve, run_serve_specs, ServeMode, ServeOutcome, ServiceCfg,
+    SessionSpec,
 };
 pub use spec::{BroadcastDef, HookSpec};
 

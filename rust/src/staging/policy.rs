@@ -1,0 +1,710 @@
+//! Elastic multi-tenant serving policy: weighted-fair admission, the
+//! elastic node-pool schedule, and pluggable prewarm/keep-alive
+//! policies driven by per-tenant access history.
+//!
+//! Three independent mechanisms, all consumed by
+//! [`crate::staging::service`]:
+//!
+//! - **Weighted-fair admission** ([`AdmitQueue`]): each session
+//!   carries a [`TenantId`]; admission picks the backlogged tenant
+//!   with the least *normalized service* (admitted bytes divided by
+//!   weight, compared exactly by integer cross-multiplication — no
+//!   floats, no division), then admits that tenant's earliest-arrival
+//!   session, head-of-line blocking on it. When every configured
+//!   weight is equal the pick degenerates to the globally
+//!   earliest-arrival session — the literal seed FIFO order, so
+//!   equal-weight runs are bit-identical to the pre-tenant service
+//!   (admission rule E1; tested). For two continuously backlogged
+//!   tenants the admitted-bytes deviation from the weight share is
+//!   provably below one max-session working set (rule E2; see
+//!   DESIGN.md and `tests/property_service.rs`).
+//! - **Elastic node pool** ([`ElasticCfg`], [`pool_schedule`]): nodes
+//!   lease in and out of the *staging budget* on a seeded schedule
+//!   (the chaos-style timer pattern under [`ELASTIC_TAG_BASE`]). A
+//!   joining node pays a modeled warm-up before its RAM counts toward
+//!   admission; a departing node first cancels the newest still-warming
+//!   join (LIFO), otherwise removes a warm node. The warm count never
+//!   dips below [`ElasticCfg::min_nodes`] (rule E3; tested).
+//! - **Prewarm / keep-alive policies** ([`ServePolicy`]): a trait
+//!   object the service consults at dataset close (how long to keep
+//!   the closing dataset pinned through the predicted idle gap) and
+//!   after admission passes (which dataset to prewarm into free
+//!   budget), fed by [`TenantHistory`] — per-tenant reopen-gap samples
+//!   and dataset-successor counts (rule E4). [`PolicyKind`] is the
+//!   config-level selector; [`PolicyKind::None`] is bit-identical to
+//!   the policy-free service (tested).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::staging::ingest::INGEST_TAG_BASE;
+use crate::units::{Duration, SimTime};
+use crate::util::prng::Pcg64;
+
+/// A tenant (beamline / user group) index into
+/// [`TenantsCfg::weights`].
+pub type TenantId = usize;
+
+/// Tag namespace for elastic pool warm/leave events, below the ingest
+/// band (`1 << 44`). Strictly a **timer** namespace — no plan is ever
+/// submitted with an elastic tag. The upper half of the band
+/// ([`KEEPALIVE_TAG_BASE`]) holds keep-alive expiry timers.
+pub const ELASTIC_TAG_BASE: u64 = 1 << 43;
+
+/// Tag namespace for keep-alive grant-expiry timers: the upper half of
+/// the elastic band, still below [`INGEST_TAG_BASE`]. One tag per
+/// grant, indexed by a monotone grant sequence so stale expirations
+/// are detected by id, never by guesswork.
+pub const KEEPALIVE_TAG_BASE: u64 = ELASTIC_TAG_BASE + (1 << 42);
+
+/// Checked tag for elastic pool event `k`.
+pub fn elastic_tag(k: usize) -> u64 {
+    let tag = ELASTIC_TAG_BASE + k as u64;
+    debug_assert!(tag < KEEPALIVE_TAG_BASE, "pool event {k} collides with the keep-alive band");
+    tag
+}
+
+/// Checked tag for keep-alive grant `g`.
+pub fn keepalive_tag(g: u64) -> u64 {
+    let tag = KEEPALIVE_TAG_BASE + g;
+    debug_assert!(tag < INGEST_TAG_BASE, "grant {g} collides with the ingest band");
+    tag
+}
+
+// ---------------------------------------------------------------------
+// Tenants
+// ---------------------------------------------------------------------
+
+/// The tenant population: one positive weight per tenant. The default
+/// is a single weight-1 tenant — the pre-tenant service, bit-identical
+/// to the seed FIFO path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantsCfg {
+    /// Admission weight per tenant; larger = a larger share of
+    /// admitted bytes under contention. All weights must be positive.
+    pub weights: Vec<u32>,
+}
+
+impl Default for TenantsCfg {
+    fn default() -> Self {
+        TenantsCfg { weights: vec![1] }
+    }
+}
+
+impl TenantsCfg {
+    pub fn count(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// All tenants share one weight (including the single-tenant
+    /// case): admission takes the literal seed FIFO path.
+    pub fn equal_weights(&self) -> bool {
+        self.weights.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// The tenant that owns dataset `d` in generated workloads: a
+    /// fixed partition (`d % tenants`), so tenant assignment consumes
+    /// no PRNG draws and the generated arrival/dataset stream is
+    /// unchanged from the pre-tenant workload.
+    pub fn owner(&self, dataset: usize) -> TenantId {
+        dataset % self.count().max(1)
+    }
+
+    pub fn validate(&self) {
+        assert!(!self.weights.is_empty(), "tenant population is empty");
+        assert!(self.weights.iter().all(|&w| w > 0), "tenant weights must be positive");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Weighted-fair admission
+// ---------------------------------------------------------------------
+
+/// The multi-tenant admission queue. Sessions are pushed in arrival
+/// order (a global sequence number records it); [`AdmitQueue::pick`]
+/// chooses which tenant's head to admit next.
+#[derive(Clone, Debug)]
+pub struct AdmitQueue {
+    weights: Vec<u64>,
+    /// Admitted bytes charged per tenant (`u128`: the comparison
+    /// cross-multiplies by a weight and must never overflow).
+    served: Vec<u128>,
+    /// Per-tenant FIFO of (arrival sequence, session index).
+    queues: Vec<VecDeque<(u64, usize)>>,
+    seq: u64,
+    len: usize,
+    equal: bool,
+}
+
+impl AdmitQueue {
+    pub fn new(tenants: &TenantsCfg) -> AdmitQueue {
+        tenants.validate();
+        AdmitQueue {
+            weights: tenants.weights.iter().map(|&w| w as u64).collect(),
+            served: vec![0; tenants.count()],
+            queues: vec![VecDeque::new(); tenants.count()],
+            seq: 0,
+            len: 0,
+            equal: tenants.equal_weights(),
+        }
+    }
+
+    pub fn push(&mut self, tenant: TenantId, session: usize) {
+        self.queues[tenant].push_back((self.seq, session));
+        self.seq += 1;
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The tenant whose head admission would pick next, if any queue
+    /// is non-empty. Equal weights: the globally earliest arrival (the
+    /// seed FIFO order, rule E1). Otherwise: the least normalized
+    /// service `served/weight`, compared exactly as
+    /// `served[a] * w[b] < served[b] * w[a]`; ties break to the
+    /// earlier arrival, so the pick is total and deterministic.
+    fn pick(&self) -> Option<TenantId> {
+        let mut best: Option<TenantId> = None;
+        for (t, q) in self.queues.iter().enumerate() {
+            let Some(&(seq, _)) = q.front() else { continue };
+            let Some(b) = best else {
+                best = Some(t);
+                continue;
+            };
+            let b_seq = self.queues[b].front().unwrap().0;
+            let better = if self.equal {
+                seq < b_seq
+            } else {
+                let (sa, sb) = (self.served[t], self.served[b]);
+                let (wa, wb) = (self.weights[t], self.weights[b]);
+                match (sa * wb as u128).cmp(&(sb * wa as u128)) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => seq < b_seq,
+                }
+            };
+            if better {
+                best = Some(t);
+            }
+        }
+        best
+    }
+
+    /// The (tenant, session) the next admission would take, without
+    /// removing it. Admission blocks head-of-line on exactly this
+    /// session when it does not fit the budget.
+    pub fn peek(&self) -> Option<(TenantId, usize)> {
+        let t = self.pick()?;
+        Some((t, self.queues[t].front().unwrap().1))
+    }
+
+    /// Remove the picked head (the same session [`AdmitQueue::peek`]
+    /// returned).
+    pub fn pop(&mut self) -> Option<(TenantId, usize)> {
+        let t = self.pick()?;
+        let (_, s) = self.queues[t].pop_front().unwrap();
+        self.len -= 1;
+        Some((t, s))
+    }
+
+    /// Charge `bytes` of admitted working set to `tenant` (zero for
+    /// admissions that joined an already-open dataset: they consumed
+    /// no budget, so they move no virtual service).
+    pub fn on_admitted(&mut self, tenant: TenantId, bytes: u64) {
+        self.served[tenant] += bytes as u128;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elastic node pool
+// ---------------------------------------------------------------------
+
+/// Parameters of the seeded elastic node-pool process. The pool is
+/// modeled in *budget space*: the physical per-node store capacity is
+/// unchanged (a leased-out node's replicas stay until evicted), but
+/// the admission budget scales with the warm share of the machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticCfg {
+    /// PRNG seed; the entire pool schedule is a pure function of the
+    /// config plus the node count.
+    pub seed: u64,
+    /// Number of lease-change events to inject. Zero disarms the
+    /// elastic pool entirely — a run with `events: 0` is bit-identical
+    /// to one with no elastic config at all (tested).
+    pub events: usize,
+    /// Mean of the exponential gap between lease changes, seconds.
+    pub mean_gap_secs: f64,
+    /// The leased (and therefore warm) node count never drops below
+    /// this floor, so admission always retains enough budget for one
+    /// working set (validated by the service).
+    pub min_nodes: u32,
+    /// Modeled warm-up cost: a joining node's RAM counts toward the
+    /// admission budget only this many seconds after the join.
+    pub warmup_secs: f64,
+}
+
+impl Default for ElasticCfg {
+    fn default() -> Self {
+        ElasticCfg {
+            seed: 0xE1A5,
+            events: 0,
+            mean_gap_secs: 300.0,
+            min_nodes: 1,
+            warmup_secs: 120.0,
+        }
+    }
+}
+
+/// Exponential sample with the given mean (inverse-CDF on the open
+/// unit interval; `1 - u` keeps the log away from zero).
+fn exp_secs(rng: &mut Pcg64, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// Materialise the pool schedule as **warm-delta events**: `(time,
+/// +1)` when a joined node finishes warming up, `(time, -1)` when a
+/// warm node leases out. The underlying process is a random walk on
+/// the leased count within `[min_nodes, nodes]` (exponential gaps,
+/// fair coin in the interior). A leave first cancels the newest join
+/// still warming up (LIFO — that node never becomes warm and emits no
+/// event); only then does it remove a warm node. All `nodes` start
+/// warm, and the warm count implied by the deltas never drops below
+/// `min_nodes` (tested). Deterministic in the config; callers arm each
+/// entry as an engine timer under [`ELASTIC_TAG_BASE`].
+pub fn pool_schedule(cfg: &ElasticCfg, nodes: u32) -> Vec<(SimTime, i32)> {
+    assert!(nodes > 0, "cannot lease an empty machine");
+    assert!(
+        cfg.min_nodes >= 1 && cfg.min_nodes <= nodes,
+        "min_nodes {} out of range for {} nodes",
+        cfg.min_nodes,
+        nodes
+    );
+    assert!(cfg.warmup_secs >= 0.0 && cfg.warmup_secs.is_finite(), "bad warm-up");
+    let warmup = Duration::from_secs_f64(cfg.warmup_secs);
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut t = SimTime::ZERO;
+    // Every node starts leased and warm; joins above `nodes` are
+    // impossible (the walk reflects at the boundaries).
+    let mut leased = nodes;
+    let mut events: Vec<(SimTime, i32)> = Vec::new();
+    // Indices into `events` of joins still warming up, newest last.
+    let mut warming: Vec<usize> = Vec::new();
+    for _ in 0..cfg.events {
+        t += Duration::from_secs_f64(exp_secs(&mut rng, cfg.mean_gap_secs));
+        let join = if leased <= cfg.min_nodes {
+            true
+        } else if leased >= nodes {
+            false
+        } else {
+            rng.f64() < 0.5
+        };
+        if join {
+            leased += 1;
+            events.push((t + warmup, 1));
+            warming.push(events.len() - 1);
+        } else {
+            leased -= 1;
+            while let Some(&i) = warming.last() {
+                if events[i].0 <= t {
+                    warming.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(i) = warming.pop() {
+                // Cancel the newest still-warming join: it leaves the
+                // pool before its RAM ever counted.
+                events[i].1 = 0;
+            } else {
+                events.push((t, -1));
+            }
+        }
+    }
+    events.retain(|&(_, d)| d != 0);
+    // Warm-up completions land `warmup` after their join and can
+    // interleave with later leaves; the timer order is by time,
+    // generation order breaking ties (stable sort).
+    events.sort_by_key(|&(at, _)| at);
+    events
+}
+
+/// Minimum warm-node count implied by a delta schedule that starts
+/// with all `nodes` warm.
+pub fn min_warm(schedule: &[(SimTime, i32)], nodes: u32) -> u32 {
+    let mut warm = nodes as i64;
+    let mut min = warm;
+    for &(_, d) in schedule {
+        warm += d as i64;
+        min = min.min(warm);
+    }
+    min as u32
+}
+
+// ---------------------------------------------------------------------
+// Prewarm / keep-alive policies
+// ---------------------------------------------------------------------
+
+/// Per-tenant access history the policies consume: reopen-gap samples
+/// and dataset-successor counts. Recording mutates only serving-layer
+/// bookkeeping — never the simulation core — so history is recorded
+/// unconditionally without perturbing policy-off runs.
+#[derive(Clone, Debug, Default)]
+pub struct TenantHistory {
+    /// Last close time per dataset (for reopen-gap sampling).
+    last_close: BTreeMap<usize, SimTime>,
+    /// Close->reopen gap samples per dataset, seconds.
+    gaps: BTreeMap<usize, Vec<f64>>,
+    /// Successor counts: dataset opened previously -> (next dataset ->
+    /// times observed).
+    succ: BTreeMap<usize, BTreeMap<usize, u32>>,
+    /// The dataset this tenant opened most recently.
+    last_open: Option<usize>,
+}
+
+impl TenantHistory {
+    /// The tenant opened (arrived for) dataset `d` at `now`.
+    pub fn record_open(&mut self, d: usize, now: SimTime) {
+        if let Some(closed) = self.last_close.get(&d) {
+            let gap = (now - *closed).secs_f64();
+            self.gaps.entry(d).or_default().push(gap);
+        }
+        if let Some(prev) = self.last_open {
+            *self.succ.entry(prev).or_default().entry(d).or_insert(0) += 1;
+        }
+        self.last_open = Some(d);
+    }
+
+    /// The tenant's session on dataset `d` completed at `now`.
+    pub fn record_close(&mut self, d: usize, now: SimTime) {
+        self.last_close.insert(d, now);
+    }
+
+    /// Mean observed close->reopen gap for dataset `d`, if any.
+    pub fn mean_gap_secs(&self, d: usize) -> Option<f64> {
+        let gaps = self.gaps.get(&d)?;
+        if gaps.is_empty() {
+            return None;
+        }
+        Some(gaps.iter().sum::<f64>() / gaps.len() as f64)
+    }
+
+    /// The most frequent successor of the tenant's most recent open
+    /// (ties break to the smaller dataset index).
+    pub fn predicted_next(&self) -> Option<usize> {
+        let succ = self.succ.get(&self.last_open?)?;
+        succ.iter()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            .map(|(&d, _)| d)
+    }
+}
+
+/// A prewarm/keep-alive policy: consulted at dataset close (how long
+/// to keep the dataset pinned through the predicted idle gap) and
+/// after admission passes (which dataset to prewarm into free budget).
+/// Implementations must be pure functions of the history — the whole
+/// run stays bit-reproducible.
+pub trait ServePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Keep-alive grant, seconds, when a tenant with history `hist`
+    /// closes `dataset`. Zero (or negative) releases immediately — the
+    /// seed close path.
+    fn keepalive_secs(&self, hist: &TenantHistory, dataset: usize) -> f64;
+
+    /// Dataset to prewarm for a tenant with history `hist`, if the
+    /// policy predicts one. The service validates fit and state.
+    fn prewarm(&self, hist: &TenantHistory) -> Option<usize>;
+}
+
+/// The seed behaviour: no keep-alive, no prewarm.
+pub struct NoPolicy;
+
+impl ServePolicy for NoPolicy {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn keepalive_secs(&self, _hist: &TenantHistory, _dataset: usize) -> f64 {
+        0.0
+    }
+
+    fn prewarm(&self, _hist: &TenantHistory) -> Option<usize> {
+        None
+    }
+}
+
+/// Keep every closing dataset pinned a fixed grace period; never
+/// prewarm. The dslab-faas "fixed keepalive" analogue.
+pub struct FixedKeepAlive {
+    pub secs: f64,
+}
+
+impl ServePolicy for FixedKeepAlive {
+    fn name(&self) -> &'static str {
+        "fixed-keepalive"
+    }
+
+    fn keepalive_secs(&self, _hist: &TenantHistory, _dataset: usize) -> f64 {
+        self.secs
+    }
+
+    fn prewarm(&self, _hist: &TenantHistory) -> Option<usize> {
+        None
+    }
+}
+
+/// History-driven policy: keep-alive covers the mean observed reopen
+/// gap times a safety margin (a configured default before any sample
+/// exists, everything capped), and prewarm predicts the most frequent
+/// successor dataset.
+pub struct Adaptive {
+    /// Grant before any reopen-gap sample exists, seconds.
+    pub default_keepalive_secs: f64,
+    /// Hard cap on any grant, seconds.
+    pub max_keepalive_secs: f64,
+    /// Multiplier over the mean observed gap.
+    pub margin: f64,
+}
+
+impl ServePolicy for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn keepalive_secs(&self, hist: &TenantHistory, dataset: usize) -> f64 {
+        let g = match hist.mean_gap_secs(dataset) {
+            Some(mean) => mean * self.margin,
+            None => self.default_keepalive_secs,
+        };
+        g.min(self.max_keepalive_secs)
+    }
+
+    fn prewarm(&self, hist: &TenantHistory) -> Option<usize> {
+        hist.predicted_next()
+    }
+}
+
+/// Config-level policy selector (keeps
+/// [`crate::staging::service::ServiceCfg`] `Clone + Debug` while the
+/// service works against a [`ServePolicy`] trait object).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// No keep-alive, no prewarm: bit-identical to the policy-free
+    /// service (tested).
+    None,
+    /// Fixed keep-alive grace period, seconds; no prewarm.
+    FixedKeepAlive(f64),
+    /// History-driven keep-alive + successor prewarm.
+    Adaptive {
+        default_keepalive_secs: f64,
+        max_keepalive_secs: f64,
+    },
+}
+
+impl PolicyKind {
+    pub fn build(&self) -> Box<dyn ServePolicy> {
+        match *self {
+            PolicyKind::None => Box::new(NoPolicy),
+            PolicyKind::FixedKeepAlive(secs) => Box::new(FixedKeepAlive { secs }),
+            PolicyKind::Adaptive { default_keepalive_secs, max_keepalive_secs } => {
+                Box::new(Adaptive {
+                    default_keepalive_secs,
+                    max_keepalive_secs,
+                    margin: 1.5,
+                })
+            }
+        }
+    }
+
+    /// Whether this policy can ever prewarm (gates the prediction pass
+    /// in the admission loop).
+    pub fn prewarms(&self) -> bool {
+        matches!(self, PolicyKind::Adaptive { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_bands_are_ordered() {
+        assert!(ELASTIC_TAG_BASE < KEEPALIVE_TAG_BASE);
+        assert!(KEEPALIVE_TAG_BASE < INGEST_TAG_BASE);
+        assert!(INGEST_TAG_BASE < crate::chaos::CHAOS_TAG_BASE);
+        assert_eq!(elastic_tag(0), ELASTIC_TAG_BASE);
+        assert_eq!(keepalive_tag(0), KEEPALIVE_TAG_BASE);
+    }
+
+    #[test]
+    fn equal_weights_pick_is_global_fifo() {
+        let tenants = TenantsCfg { weights: vec![3, 3, 3] };
+        assert!(tenants.equal_weights());
+        let mut q = AdmitQueue::new(&tenants);
+        q.push(2, 10);
+        q.push(0, 11);
+        q.push(1, 12);
+        // Arrival order regardless of served bytes.
+        q.on_admitted(2, 0);
+        assert_eq!(q.peek(), Some((2, 10)));
+        assert_eq!(q.pop(), Some((2, 10)));
+        assert_eq!(q.pop(), Some((0, 11)));
+        assert_eq!(q.pop(), Some((1, 12)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn weighted_pick_tracks_least_normalized_service() {
+        let tenants = TenantsCfg { weights: vec![1, 3] };
+        let mut q = AdmitQueue::new(&tenants);
+        for s in 0..4 {
+            q.push(0, s);
+            q.push(1, 100 + s);
+        }
+        // Both at zero service: tie breaks to the earlier arrival
+        // (tenant 0's session 0).
+        assert_eq!(q.pop(), Some((0, 0)));
+        q.on_admitted(0, 100);
+        // v0 = 100/1 > v1 = 0/3.
+        assert_eq!(q.pop(), Some((1, 100)));
+        q.on_admitted(1, 100);
+        // v0 = 100 > v1 = 100/3: tenant 1 keeps the pick until its
+        // normalized service catches up.
+        assert_eq!(q.pop(), Some((1, 101)));
+        q.on_admitted(1, 100);
+        assert_eq!(q.pop(), Some((1, 102)));
+        q.on_admitted(1, 100);
+        // v1 = 300/3 = 100 = v0: tie, earlier arrival is tenant 0's.
+        assert_eq!(q.pop(), Some((0, 1)));
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn zero_byte_admissions_do_not_move_service() {
+        let tenants = TenantsCfg { weights: vec![1, 2] };
+        let mut q = AdmitQueue::new(&tenants);
+        q.push(0, 0);
+        q.push(1, 1);
+        let (t, _) = q.pop().unwrap();
+        q.on_admitted(t, 0);
+        // A free admission leaves the virtual clocks tied; the next
+        // pick is the other tenant only via the arrival tie-break.
+        assert_eq!(q.pop(), Some((1, 1)));
+    }
+
+    #[test]
+    fn pool_schedule_is_deterministic_and_bounded() {
+        let cfg = ElasticCfg {
+            seed: 11,
+            events: 200,
+            mean_gap_secs: 30.0,
+            min_nodes: 2,
+            warmup_secs: 45.0,
+        };
+        let a = pool_schedule(&cfg, 8);
+        let b = pool_schedule(&cfg, 8);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[0].0 <= w[1].0, "pool events must be time-ordered");
+        }
+        // The warm count stays within [min_nodes, nodes] at all times.
+        let mut warm = 8i64;
+        for &(_, d) in &a {
+            warm += d as i64;
+            assert!((2..=8).contains(&warm), "warm count {warm} escaped the pool bounds");
+        }
+        assert!(min_warm(&a, 8) >= 2);
+        let c = pool_schedule(&ElasticCfg { seed: 12, ..cfg }, 8);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn zero_events_is_empty() {
+        let cfg = ElasticCfg::default();
+        assert_eq!(cfg.events, 0);
+        assert!(pool_schedule(&cfg, 4).is_empty());
+        assert_eq!(min_warm(&[], 4), 4);
+    }
+
+    #[test]
+    fn leaves_cancel_warming_joins_first() {
+        // Force an immediate join-then-leave: with warmup far longer
+        // than any gap, every leave that follows a join within the
+        // warm-up window must cancel it instead of emitting -1 — the
+        // schedule can never imply fewer warm nodes than leases.
+        let cfg = ElasticCfg {
+            seed: 3,
+            events: 400,
+            mean_gap_secs: 10.0,
+            min_nodes: 1,
+            warmup_secs: 1e6,
+        };
+        let sched = pool_schedule(&cfg, 4);
+        let mut warm = 4i64;
+        for &(_, d) in &sched {
+            warm += d as i64;
+            assert!(warm >= 1, "warm count {warm} dipped below the floor");
+        }
+    }
+
+    #[test]
+    fn history_learns_gaps_and_successors() {
+        let mut h = TenantHistory::default();
+        let t = |s: u64| SimTime(s * 1_000_000_000);
+        h.record_open(0, t(0));
+        h.record_close(0, t(50));
+        h.record_open(1, t(60));
+        h.record_close(1, t(100));
+        h.record_open(0, t(650));
+        assert_eq!(h.mean_gap_secs(0), Some(600.0));
+        assert_eq!(h.mean_gap_secs(1), None);
+        // After 0 came 1 once; after 1 came 0 once.
+        assert_eq!(h.predicted_next(), Some(1));
+        h.record_open(1, t(700));
+        assert_eq!(h.predicted_next(), Some(0));
+    }
+
+    #[test]
+    fn policies_behave_as_configured() {
+        let h = TenantHistory::default();
+        assert_eq!(PolicyKind::None.build().keepalive_secs(&h, 0), 0.0);
+        assert_eq!(PolicyKind::None.build().prewarm(&h), None);
+        assert!(!PolicyKind::None.prewarms());
+        let fixed = PolicyKind::FixedKeepAlive(300.0).build();
+        assert_eq!(fixed.keepalive_secs(&h, 3), 300.0);
+        assert_eq!(fixed.prewarm(&h), None);
+        let kind = PolicyKind::Adaptive {
+            default_keepalive_secs: 200.0,
+            max_keepalive_secs: 1000.0,
+        };
+        assert!(kind.prewarms());
+        let ad = kind.build();
+        // No samples: the default; with samples: mean x margin, capped.
+        assert_eq!(ad.keepalive_secs(&h, 0), 200.0);
+        let mut h = TenantHistory::default();
+        h.record_open(0, SimTime(0));
+        h.record_close(0, SimTime(0));
+        h.record_open(0, SimTime(400_000_000_000));
+        assert_eq!(ad.keepalive_secs(&h, 0), 600.0);
+        h.record_close(0, SimTime(400_000_000_000));
+        h.record_open(0, SimTime(2_400_000_000_000));
+        // Mean gap (400 + 2000) / 2 = 1200, x1.5 = 1800, capped at
+        // 1000.
+        assert_eq!(ad.keepalive_secs(&h, 0), 1000.0);
+    }
+
+    #[test]
+    fn owner_partition_covers_all_tenants() {
+        let t = TenantsCfg { weights: vec![1, 2, 3] };
+        let owners: Vec<TenantId> = (0..7).map(|d| t.owner(d)).collect();
+        assert_eq!(owners, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert!(!t.equal_weights());
+        assert!(TenantsCfg::default().equal_weights());
+    }
+}

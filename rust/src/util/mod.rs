@@ -3,3 +3,20 @@ pub mod json;
 pub mod prng;
 pub mod bench;
 pub mod args;
+
+/// Schedule count for the property suites: `XSTAGE_PROP_SCHEDULES` if
+/// set (CI pins it explicitly), else `default`. Lets a local
+/// `XSTAGE_PROP_SCHEDULES=25 cargo test -q` run a fast pass without
+/// weakening the pinned CI sweep.
+///
+/// Panics on an unparseable value — a typo silently falling back to
+/// the default would defeat the pin.
+pub fn prop_schedules(default: u64) -> u64 {
+    match std::env::var("XSTAGE_PROP_SCHEDULES") {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("XSTAGE_PROP_SCHEDULES={v:?} is not a count: {e}")),
+        Err(_) => default,
+    }
+}

@@ -105,6 +105,35 @@ fn session_fair_with_one_session_is_bit_identical_to_scheduler() {
 }
 
 #[test]
+fn new_admission_path_replays_the_baseline_serve_outcome_bit_identically() {
+    // Differential regression guarding the weighted-admission
+    // refactor: the single-tenant baseline run must be reproduced
+    // bit-for-bit when the same workload is routed through the
+    // weighted pick (two equal-weight tenants, policies off) —
+    // turnaround samples, GPFS bytes, and the queue high-water mark.
+    for mode in [ServeMode::Staged, ServeMode::Naive] {
+        let baseline = run_serve(2, &serve_cfg(mode, 1234), ThroughputMode::Fast);
+        let mut cfg = serve_cfg(mode, 1234);
+        cfg.tenants = xstage::staging::TenantsCfg { weights: vec![2, 2] };
+        cfg.policy = xstage::staging::PolicyKind::None;
+        let new = run_serve(2, &cfg, ThroughputMode::Fast);
+        assert_eq!(baseline.turnaround_secs, new.turnaround_secs, "mode {mode:?}");
+        assert_eq!(baseline.percentiles, new.percentiles, "mode {mode:?}");
+        assert_eq!(baseline.virtual_secs, new.virtual_secs, "mode {mode:?}");
+        assert_eq!(baseline.staged_bytes, new.staged_bytes, "mode {mode:?}");
+        assert_eq!(baseline.promoted_bytes, new.promoted_bytes, "mode {mode:?}");
+        assert_eq!(baseline.demoted_bytes, new.demoted_bytes, "mode {mode:?}");
+        assert_eq!(baseline.reads, new.reads, "mode {mode:?}");
+        assert_eq!(baseline.peak_queue, new.peak_queue, "mode {mode:?}");
+        assert_eq!(baseline.admission_order, new.admission_order, "mode {mode:?}");
+        // The new counters stay inert on the seed path.
+        assert_eq!(new.warm_hits, 0);
+        assert_eq!(new.keepalive_grants, 0);
+        assert_eq!(new.pool_events, 0);
+    }
+}
+
+#[test]
 fn staged_serving_beats_naive_p99_end_to_end() {
     let s = run_serve(2, &serve_cfg(ServeMode::Staged, 7), ThroughputMode::Fast);
     let n = run_serve(2, &serve_cfg(ServeMode::Naive, 7), ThroughputMode::Fast);

@@ -30,7 +30,10 @@ use xstage::staging::{HookSpec, Residency};
 use xstage::units::{Duration, SimTime, KIB, MB};
 use xstage::util::prng::Pcg64;
 
-const SCHEDULES: u64 = 500;
+/// Schedule count: `XSTAGE_PROP_SCHEDULES` if set, else 500.
+fn schedules() -> u64 {
+    xstage::util::prop_schedules(500)
+}
 
 // ---------------------------------------------------------------------
 // Family 1: exactly-once reassignment under random kill schedules
@@ -161,7 +164,7 @@ fn run_killed(sc: &Scenario, steal: bool) -> (SimTime, Vec<SessionStats>, usize,
 
 #[test]
 fn exactly_once_reassignment_on_500_random_kill_schedules() {
-    for seed in 0..SCHEDULES {
+    for seed in 0..schedules() {
         let sc = scenario(seed);
         let steal = seed % 2 == 0;
         let (now, stats, lost, aborted) = run_killed(&sc, steal);
@@ -192,7 +195,7 @@ fn exactly_once_reassignment_on_500_random_kill_schedules() {
 
 #[test]
 fn post_recovery_replicas_match_source_checksums_on_500_random_schedules() {
-    for seed in 0..SCHEDULES {
+    for seed in 0..schedules() {
         let mut rng = Pcg64::new(0xC8A05 ^ seed);
         let nodes = rng.range_u64(2, 4) as u32;
         let files = rng.range_u64(2, 4) as usize;
@@ -245,7 +248,7 @@ fn post_recovery_replicas_match_source_checksums_on_500_random_schedules() {
 
 #[test]
 fn work_stealing_is_bit_identical_at_failure_rate_zero_on_500_random_schedules() {
-    for seed in 0..SCHEDULES {
+    for seed in 0..schedules() {
         let mut sc = scenario(0xF0 ^ seed);
         sc.kills.clear(); // failure rate 0
         let (now_f, fifo, lost_f, _) = run_killed(&sc, false);

@@ -403,15 +403,20 @@ fn differential_schedule(seed: u64, ops: usize) -> usize {
 
 #[test]
 fn slow_vs_fast_equivalence_1000_schedules() {
-    // >= 1000 randomized schedules (acceptance floor); every op
+    // >= 1000 randomized schedules (acceptance floor; CI pins the
+    // count — locally `XSTAGE_PROP_SCHEDULES` scales it); every op
     // compares the full visible state of both models.
     let mut total_completions = 0usize;
-    for seed in 0..1000u64 {
+    // This suite's acceptance floor is 2x the other property suites'
+    // (1000 schedules at the 500-schedule default/CI pin).
+    let n = 2 * xstage::util::prop_schedules(500);
+    for seed in 0..n {
         total_completions += differential_schedule(0xD1FF_0000 + seed, 40);
     }
-    // Sanity: the suite actually exercised the completion path a lot.
+    // Sanity: the suite actually exercised the completion path a lot
+    // (two completions per schedule on average).
     assert!(
-        total_completions > 2000,
+        total_completions as u64 > 2 * n,
         "differential suite barely completed anything: {total_completions}"
     );
 }

@@ -23,7 +23,10 @@ use xstage::storage::{StorageTier, StoreWrite};
 use xstage::units::MB;
 use xstage::util::prng::Pcg64;
 
-const SCHEDULES: u64 = 500;
+/// Schedule count: `XSTAGE_PROP_SCHEDULES` if set, else 500.
+fn schedules() -> u64 {
+    xstage::util::prop_schedules(500)
+}
 
 /// Forwards ingest-tagged notices to the detector, exactly as the
 /// serving director does.
@@ -72,7 +75,7 @@ fn run_ingest(
 #[test]
 fn random_detector_schedules_conserve_frames_and_replay() {
     let mut rng = Pcg64::new(0x1A6E57_600D);
-    for schedule in 0..SCHEDULES {
+    for schedule in 0..schedules() {
         let frames = 1 + rng.below(8) as usize;
         let frame_bytes = (1 + rng.below(3)) * MB;
         let total = frames as u64 * frame_bytes;
@@ -150,7 +153,7 @@ fn random_store_sequences_respect_caps_pins_and_rejection() {
         (ns.dump_tier(StorageTier::Ram), ns.dump_tier(StorageTier::Ssd))
     };
     let mut rng = Pcg64::new(0x570E_600D);
-    for schedule in 0..SCHEDULES {
+    for schedule in 0..schedules() {
         let mut ns = NodeStores::new();
         let ram_cap = (1 + rng.below(8)) * MB;
         let ssd_cap = match rng.below(4) {

@@ -38,7 +38,10 @@ const PATHS: &[&str] = &[
     "/tmp/h.bin",
 ];
 const STEPS: usize = 30;
-const SCHEDULES: u64 = 500;
+/// Schedule count: `XSTAGE_PROP_SCHEDULES` if set, else 500.
+fn schedules() -> u64 {
+    xstage::util::prop_schedules(500)
+}
 
 /// One shadow replica (same semantics as the store's internal one).
 #[derive(Clone, Debug)]
@@ -332,14 +335,14 @@ fn drive(mode: ThroughputMode, schedule_seed: u64) {
 
 #[test]
 fn residency_invariants_hold_fast_model() {
-    for s in 0..SCHEDULES {
+    for s in 0..schedules() {
         drive(ThroughputMode::Fast, 0x5EED_0000 + s);
     }
 }
 
 #[test]
 fn residency_invariants_hold_slow_model() {
-    for s in 0..SCHEDULES {
+    for s in 0..schedules() {
         drive(ThroughputMode::Slow, 0xA5EED_000 + s);
     }
 }
@@ -774,14 +777,14 @@ fn drive_tiered(mode: ThroughputMode, schedule_seed: u64) {
 
 #[test]
 fn tiered_invariants_hold_fast_model() {
-    for s in 0..SCHEDULES {
+    for s in 0..schedules() {
         drive_tiered(ThroughputMode::Fast, 0x71E2_0000 + s);
     }
 }
 
 #[test]
 fn tiered_invariants_hold_slow_model() {
-    for s in 0..SCHEDULES {
+    for s in 0..schedules() {
         drive_tiered(ThroughputMode::Slow, 0xA71E2_000 + s);
     }
 }

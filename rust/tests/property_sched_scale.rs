@@ -30,7 +30,10 @@ use xstage::storage::{NodeStores, PromoteOutcome, StorageTier, StoreWrite};
 use xstage::units::{Duration, SimTime, MB};
 use xstage::util::prng::Pcg64;
 
-const SCHEDULES: u64 = 500;
+/// Schedule count: `XSTAGE_PROP_SCHEDULES` if set, else 500.
+fn schedules() -> u64 {
+    xstage::util::prop_schedules(500)
+}
 
 // ---------------------------------------------------------------------
 // Family 1: indexed fair pick == linear scan, schedule for schedule
@@ -119,7 +122,7 @@ fn run_scenario(
 
 #[test]
 fn indexed_fair_pick_matches_scan_on_500_random_schedules() {
-    for seed in 0..SCHEDULES {
+    for seed in 0..schedules() {
         let sc = scenario(seed);
         let (now_scan, scan) = run_scenario(&sc, FairPick::Scan, false);
         let (now_idx, idx) = run_scenario(&sc, FairPick::Indexed, true);
@@ -189,7 +192,7 @@ fn assert_surfaces_agree(a: &NodeStores, b: &NodeStores, rng: &mut Pcg64, step: 
 
 #[test]
 fn interned_storage_surface_answers_identically_on_500_random_schedules() {
-    for seed in 0..SCHEDULES {
+    for seed in 0..schedules() {
         let mut rng = Pcg64::new(0x1D5EED ^ seed);
         let mut qrng = Pcg64::new(0xC0FFEE ^ seed);
         let mut a = NodeStores::new(); // driven via the string surface

@@ -1,0 +1,226 @@
+//! Property suite for the elastic multi-tenant serving layer.
+//!
+//! Three randomized families, `XSTAGE_PROP_SCHEDULES` schedules each
+//! (default 500; CI pins it explicitly):
+//!
+//! - **Starvation-freedom**: random multi-tenant workloads — random
+//!   weight vectors, keep-alive/prewarm policies, tight budgets, and
+//!   (sometimes) elastic pool churn — must serve every session with a
+//!   finite admission wait, admit each session exactly once, and
+//!   replay bit-identically.
+//! - **Weighted-fairness bound**: two tenants dump a simultaneous
+//!   backlog of equal-sized working sets through a one-working-set
+//!   budget. Over every admission prefix where both tenants are still
+//!   backlogged, no tenant's admitted-bytes share may deviate from its
+//!   weight share by more than one max-session working set (checked in
+//!   exact integer form).
+//! - **Seed-FIFO identity**: equal weights with policies off (and a
+//!   zero-event elastic pool) must replay the single-tenant seed
+//!   service bit-for-bit, under both flow-network throughput models.
+
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::staging::service::{
+    run_serve, run_serve_specs, Batch, BatchKind, ServiceCfg, SessionSpec,
+};
+use xstage::staging::{ElasticCfg, PolicyKind, TenantsCfg};
+use xstage::units::{SimTime, MB};
+use xstage::util::prng::Pcg64;
+use xstage::util::prop_schedules;
+
+// ---------------------------------------------------------------------
+// Family 1: starvation-freedom under random multi-tenant schedules
+// ---------------------------------------------------------------------
+
+fn random_cfg(rng: &mut Pcg64) -> ServiceCfg {
+    let tenants = rng.range_u64(1, 3) as usize;
+    let weights: Vec<u32> = (0..tenants).map(|_| rng.range_u64(1, 4) as u32).collect();
+    let files = rng.range_u64(2, 4) as usize;
+    let file_bytes = rng.range_u64(2, 8) * MB;
+    let ds = files as u64 * file_bytes;
+    let policy = match rng.range_u64(0, 2) {
+        0 => PolicyKind::None,
+        1 => PolicyKind::FixedKeepAlive(rng.range_u64(30, 300) as f64),
+        _ => PolicyKind::Adaptive { default_keepalive_secs: 120.0, max_keepalive_secs: 600.0 },
+    };
+    // The elastic floor: 4 nodes, min 2 warm, budget >= 2 working
+    // sets, so even the smallest pool retains budget for one set.
+    let elastic = (rng.f64() < 0.4).then(|| ElasticCfg {
+        seed: rng.next_u64(),
+        events: rng.range_u64(1, 8) as usize,
+        mean_gap_secs: rng.log_uniform(20.0, 120.0),
+        min_nodes: 2,
+        warmup_secs: rng.log_uniform(5.0, 60.0),
+    });
+    ServiceCfg {
+        seed: rng.next_u64(),
+        sessions: rng.range_u64(3, 9) as usize,
+        mean_gap_secs: rng.log_uniform(5.0, 40.0),
+        datasets: rng.range_u64(2, 4) as usize,
+        files_per_dataset: files,
+        file_bytes,
+        ramdisk_slice: Some(rng.range_u64(2, 3) * ds),
+        ssd_slice: if rng.f64() < 0.5 { Some(0) } else { None },
+        tenants: TenantsCfg { weights },
+        policy,
+        elastic,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_queued_session_is_admitted_on_random_multi_tenant_schedules() {
+    for seed in 0..prop_schedules(500) {
+        let mut rng = Pcg64::new(0xE1A0 ^ seed);
+        let cfg = random_cfg(&mut rng);
+        let out = run_serve(4, &cfg, ThroughputMode::Fast);
+        // Starvation-freedom: every session served, every admission
+        // wait finite and inside the run.
+        assert_eq!(out.turnaround_secs.len(), cfg.sessions, "seed {seed}");
+        assert_eq!(out.admission_order.len(), cfg.sessions, "seed {seed}");
+        assert!(
+            out.admit_wait_secs
+                .iter()
+                .all(|w| w.is_finite() && *w >= 0.0 && *w <= out.virtual_secs),
+            "a session waited unbounded (seed {seed})"
+        );
+        // Admitted exactly once each.
+        let mut seen = vec![false; cfg.sessions];
+        for &s in &out.admission_order {
+            assert!(!seen[s], "session {s} admitted twice (seed {seed})");
+            seen[s] = true;
+        }
+        // Attribution closes: every staged byte belongs to a tenant.
+        assert_eq!(
+            out.tenant_gpfs_bytes.iter().sum::<u64>(),
+            out.staged_bytes,
+            "seed {seed}"
+        );
+        // Bit-identical replay, policies and churn included.
+        let again = run_serve(4, &cfg, ThroughputMode::Fast);
+        assert_eq!(out.turnaround_secs, again.turnaround_secs, "seed {seed}");
+        assert_eq!(out.admission_order, again.admission_order, "seed {seed}");
+        assert_eq!(out.warm_hits, again.warm_hits, "seed {seed}");
+        assert_eq!(out.pool_events, again.pool_events, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family 2: the weighted-fairness bound on simultaneous backlogs
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_fairness_bound_holds_on_random_two_tenant_backlogs() {
+    for seed in 0..prop_schedules(500) {
+        let mut rng = Pcg64::new(0xFA12 ^ seed);
+        let (w0, w1) = (rng.range_u64(1, 4) as u32, rng.range_u64(1, 4) as u32);
+        let (n0, n1) = (rng.range_u64(2, 6), rng.range_u64(2, 6));
+        let sessions = (n0 + n1) as usize;
+        // Interleave the two backlogs; every session gets its own
+        // equal-sized dataset so each admission charges exactly one
+        // working set.
+        let mut left = [n0, n1];
+        let specs: Vec<SessionSpec> = (0..sessions)
+            .map(|i| {
+                let mut t = i % 2;
+                if left[t] == 0 {
+                    t ^= 1;
+                }
+                left[t] -= 1;
+                SessionSpec {
+                    arrival: SimTime::ZERO,
+                    dataset: i,
+                    tenant: t,
+                    batches: vec![Batch {
+                        kind: BatchKind::Nf,
+                        tasks: rng.range_u64(1, 6) as usize,
+                    }],
+                }
+            })
+            .collect();
+        let ds = 3 * 4 * MB;
+        let cfg = ServiceCfg {
+            seed: rng.next_u64(),
+            sessions,
+            datasets: sessions,
+            files_per_dataset: 3,
+            file_bytes: 4 * MB,
+            // One working set of budget: admissions are serial, so
+            // every slot is a fresh weighted pick over the backlog.
+            ramdisk_slice: Some(ds),
+            ssd_slice: Some(0),
+            tenants: TenantsCfg { weights: vec![w0, w1] },
+            ..Default::default()
+        };
+        let out = run_serve_specs(2, &cfg, ThroughputMode::Fast, specs.clone());
+        assert_eq!(out.admission_order.len(), sessions, "seed {seed}");
+        // Exact integer form of the bound: with equal working sets,
+        // "admitted-bytes share deviates from weight share by at most
+        // one max-session working set" is
+        //   |served_T - k*ds*w_T/W| <= ds  <=>  |c0*w1 - c1*w0| <= max(w)
+        // over every prefix (length k, c_T admissions to tenant T)
+        // while both tenants are still backlogged.
+        let (mut c0, mut c1) = (0u64, 0u64);
+        for &s in &out.admission_order {
+            if c0 == n0 || c1 == n1 {
+                break; // one backlog drained: picks are forced now
+            }
+            if specs[s].tenant == 0 {
+                c0 += 1;
+            } else {
+                c1 += 1;
+            }
+            let dev = (c0 * w1 as u64).abs_diff(c1 * w0 as u64);
+            assert!(
+                dev <= w0.max(w1) as u64,
+                "fairness bound broken (seed {seed}, weights {w0}:{w1}, \
+                 counts {c0}:{c1}, dev {dev})"
+            );
+        }
+        // And nobody starves even when the weights are lopsided.
+        assert!(out.admit_wait_secs.iter().all(|w| w.is_finite()), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family 3: equal weights + policies off replay the seed FIFO
+// ---------------------------------------------------------------------
+
+#[test]
+fn equal_weights_and_policies_off_replay_the_seed_fifo_bit_identically() {
+    for seed in 0..prop_schedules(500) {
+        let mut rng = Pcg64::new(0x5EED ^ seed);
+        let files = rng.range_u64(2, 5) as usize;
+        let file_bytes = rng.range_u64(2, 8) * MB;
+        let ds = files as u64 * file_bytes;
+        let base = ServiceCfg {
+            seed: rng.next_u64(),
+            sessions: rng.range_u64(2, 8) as usize,
+            mean_gap_secs: rng.log_uniform(5.0, 40.0),
+            datasets: rng.range_u64(2, 4) as usize,
+            files_per_dataset: files,
+            file_bytes,
+            ramdisk_slice: Some(rng.range_u64(1, 2) * ds),
+            ssd_slice: if rng.f64() < 0.5 { Some(0) } else { None },
+            ..Default::default()
+        };
+        let mut tenanted = base.clone();
+        let count = rng.range_u64(1, 3) as usize;
+        tenanted.tenants = TenantsCfg { weights: vec![rng.range_u64(1, 4) as u32; count] };
+        tenanted.policy = PolicyKind::None;
+        // A zero-event pool must disarm entirely (rule E4).
+        tenanted.elastic = Some(ElasticCfg { events: 0, ..Default::default() });
+        for mode in [ThroughputMode::Fast, ThroughputMode::Slow] {
+            let a = run_serve(3, &base, mode);
+            let b = run_serve(3, &tenanted, mode);
+            assert_eq!(a.turnaround_secs, b.turnaround_secs, "seed {seed} {mode:?}");
+            assert_eq!(a.virtual_secs, b.virtual_secs, "seed {seed} {mode:?}");
+            assert_eq!(a.staged_bytes, b.staged_bytes, "seed {seed} {mode:?}");
+            assert_eq!(a.promoted_bytes, b.promoted_bytes, "seed {seed} {mode:?}");
+            assert_eq!(a.demoted_bytes, b.demoted_bytes, "seed {seed} {mode:?}");
+            assert_eq!(a.peak_queue, b.peak_queue, "seed {seed} {mode:?}");
+            assert_eq!(a.admission_order, b.admission_order, "seed {seed} {mode:?}");
+            assert_eq!(b.warm_hits, 0, "seed {seed} {mode:?}");
+            assert_eq!(b.pool_events, 0, "seed {seed} {mode:?}");
+        }
+    }
+}
