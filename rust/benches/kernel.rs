@@ -1,0 +1,134 @@
+//! Bench: the event-core kernel — bucketed timer wheel + eager
+//! stale-check reclamation vs the seed binary-heap backend, and the
+//! parallel experiment-matrix runner.
+//!
+//! Two acceptance bars (full mode only; smoke shrinks to a correctness
+//! pass):
+//!
+//! - **kernel speedup** — on a churn-heavy fleet point (chained tasks,
+//!   every completion re-settles live flow components, so the seed
+//!   heap drowns in stale `FlowCheck` timers) the wheel backend must
+//!   clear **2x** the seed backend's useful events/sec, with a
+//!   bit-identical virtual outcome (same per-session finish times,
+//!   same useful event count — raw event counts differ only by the
+//!   stale pops the wheel reclaims eagerly);
+//! - **parallel runner** — fanning the serve matrix across 4 workers
+//!   must cut wall-clock **2x** vs the serial path while producing a
+//!   byte-identical table and series.
+//!
+//! Also cross-checks a chaos point (kills retire components mid-run,
+//! the nastiest reclamation path) across both backends.
+//!
+//! With `XSTAGE_BENCH_JSON` set the measurements emit one JSON point
+//! each — CI uploads them per run as the `BENCH_kernel.json` artifact.
+//!
+//! Run: `cargo bench --bench kernel`
+
+use std::time::Instant;
+
+use xstage::experiments::scale::{self, PathMode};
+use xstage::experiments::{chaos, serve};
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::simtime::heap::HeapKind;
+use xstage::staging::service::run_serve_kernel;
+use xstage::util::bench::{record, report_counter, section, smoke};
+
+fn main() {
+    section("kernel — wheel vs seed event heap on a churn-heavy fleet point");
+    let (nodes, sessions) = if smoke() { (64, 200) } else { (512, 2_000) };
+    let seed_out = scale::run_point_kernel(nodes, sessions, PathMode::Flat, scale::SEED, HeapKind::Seed);
+    let wheel_out =
+        scale::run_point_kernel(nodes, sessions, PathMode::Flat, scale::SEED, HeapKind::Wheel);
+
+    // Bit-identical virtual outcome across backends: the wheel may
+    // reclaim timers the seed pops as no-ops, but every session
+    // finishes at the same virtual instant and the useful event
+    // stream is the same.
+    assert_eq!(
+        seed_out.finished, wheel_out.finished,
+        "per-session finish times diverged across event-heap backends"
+    );
+    assert_eq!(
+        seed_out.useful_events(),
+        wheel_out.useful_events(),
+        "useful event counts diverged across event-heap backends"
+    );
+    assert_eq!(wheel_out.kernel.stale_checks_reclaimed + wheel_out.kernel.stale_check_pops,
+        seed_out.kernel.stale_check_pops,
+        "every seed stale pop must be a wheel reclaim (or an unreclaimed pop)");
+
+    record(&format!("kernel/seed-heap/n{nodes}-s{sessions}"), seed_out.host_secs);
+    record(&format!("kernel/wheel/n{nodes}-s{sessions}"), wheel_out.host_secs);
+    report_counter("kernel/seed/heap-peak-depth", seed_out.kernel.heap.peak_depth as u64);
+    report_counter("kernel/wheel/heap-peak-depth", wheel_out.kernel.heap.peak_depth as u64);
+    report_counter("kernel/wheel/heap-peak-wheel", wheel_out.kernel.heap.peak_wheel as u64);
+    report_counter("kernel/wheel/heap-peak-overflow", wheel_out.kernel.heap.peak_overflow as u64);
+    report_counter("kernel/seed/stale-check-pops", seed_out.kernel.stale_check_pops);
+    report_counter("kernel/wheel/stale-check-pops", wheel_out.kernel.stale_check_pops);
+    report_counter("kernel/wheel/stale-checks-reclaimed", wheel_out.kernel.stale_checks_reclaimed);
+
+    let seed_rate = seed_out.useful_events() as f64 / seed_out.host_secs.max(1e-9);
+    let wheel_rate = wheel_out.useful_events() as f64 / wheel_out.host_secs.max(1e-9);
+    let speedup = wheel_rate / seed_rate.max(1e-9);
+    println!(
+        "  n{nodes}/s{sessions}: {} useful events; seed {:.0} ev/s (peak heap {}), \
+         wheel {:.0} ev/s (peak {} = wheel {} + overflow {}); {speedup:.1}x",
+        wheel_out.useful_events(),
+        seed_rate,
+        seed_out.kernel.heap.peak_depth,
+        wheel_rate,
+        wheel_out.kernel.heap.peak_depth,
+        wheel_out.kernel.heap.peak_wheel,
+        wheel_out.kernel.heap.peak_overflow,
+    );
+    if !smoke() {
+        assert!(
+            speedup >= 2.0,
+            "wheel backend must clear 2x the seed heap's useful events/sec on the \
+             churn-heavy point, got {speedup:.1}x"
+        );
+        println!("\nkernel speedup {speedup:.1}x >= 2x: acceptance bar cleared");
+    }
+
+    section("kernel — chaos point (mid-run component retirement) across backends");
+    let csessions = if smoke() { 8 } else { chaos::SESSIONS };
+    let failures = *chaos::FAILURE_SWEEP.last().unwrap();
+    let cfg = chaos::cfg(failures, true, csessions, chaos::SEED);
+    let t0 = Instant::now();
+    let cs = run_serve_kernel(chaos::NODES, &cfg, ThroughputMode::Fast, HeapKind::Seed);
+    let seed_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let cw = run_serve_kernel(chaos::NODES, &cfg, ThroughputMode::Fast, HeapKind::Wheel);
+    let wheel_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        cs.turnaround_secs, cw.turnaround_secs,
+        "chaos turnarounds diverged across event-heap backends"
+    );
+    assert_eq!(cs.useful_events(), cw.useful_events(), "chaos useful events diverged");
+    assert_eq!(cs.lost_tasks, cw.lost_tasks);
+    record("kernel/chaos-seed-heap", seed_secs);
+    record("kernel/chaos-wheel", wheel_secs);
+    report_counter("kernel/chaos-wheel/stale-checks-reclaimed", cw.kernel.stale_checks_reclaimed);
+
+    section("kernel — parallel matrix runner: serial vs 4 workers");
+    let psessions = if smoke() { 6 } else { serve::SESSIONS };
+    let t0 = Instant::now();
+    let serial = serve::run_with_jobs(psessions, 42, 1);
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let par = serve::run_with_jobs(psessions, 42, 4);
+    let par_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(serial.table.rows, par.table.rows, "parallel serve table diverged");
+    assert_eq!(serial.series, par.series, "parallel serve series diverged");
+    record("kernel/serve-matrix-jobs1", serial_secs);
+    record("kernel/serve-matrix-jobs4", par_secs);
+    let cut = serial_secs / par_secs.max(1e-9);
+    println!("  serve matrix: serial {serial_secs:.2}s, 4 workers {par_secs:.2}s ({cut:.1}x)");
+    if !smoke() {
+        assert!(
+            cut >= 2.0,
+            "4 workers must cut the serve-matrix wall-clock 2x, got {cut:.1}x"
+        );
+        println!("\nparallel runner cut {cut:.1}x >= 2x: acceptance bar cleared");
+    }
+}

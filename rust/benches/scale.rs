@@ -26,7 +26,7 @@ use xstage::pfs::Blob;
 use xstage::simtime::flownet::{Capacity, FlowNet, LinkClass, ThroughputMode};
 use xstage::storage::NodeStores;
 use xstage::units::{StateBytes, MB};
-use xstage::util::bench::{bench_n, record, report_state, section, smoke};
+use xstage::util::bench::{bench_n, record, report_counter, report_state, section, smoke};
 
 fn main() {
     section("scale — fleet matrix: seed vs flattened hot paths");
@@ -60,6 +60,26 @@ fn main() {
             &format!("scale/residency-per-path/n{nodes}-s{sessions}"),
             flat_out.residency_state,
         );
+        // Kernel observability: event-heap occupancy peaks and the
+        // stale-check economy at this point (wheel backend).
+        let k = flat_out.kernel;
+        report_counter(
+            &format!("scale/heap-peak-depth/n{nodes}-s{sessions}"),
+            k.heap.peak_depth as u64,
+        );
+        report_counter(
+            &format!("scale/heap-peak-wheel/n{nodes}-s{sessions}"),
+            k.heap.peak_wheel as u64,
+        );
+        report_counter(
+            &format!("scale/heap-peak-overflow/n{nodes}-s{sessions}"),
+            k.heap.peak_overflow as u64,
+        );
+        report_counter(
+            &format!("scale/stale-checks-reclaimed/n{nodes}-s{sessions}"),
+            k.stale_checks_reclaimed,
+        );
+        report_counter(&format!("scale/stale-check-pops/n{nodes}-s{sessions}"), k.stale_check_pops);
         // Post-drain footprint stays bounded per session regardless of
         // fleet size (completed sessions hold no graph storage).
         assert!(

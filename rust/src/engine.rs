@@ -14,7 +14,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::metrics::Metrics;
 use crate::pfs::ParallelFs;
 use crate::simtime::flownet::{CompId, FlowId, FlowNet, LinkId, ThroughputMode};
-use crate::simtime::heap::EventHeap;
+use crate::simtime::heap::{EventHeap, HeapKind, HeapStats};
 use crate::simtime::plan::{Effect, Plan, PlanId, Step};
 use crate::storage::{Eviction, NodeStores, PromoteOutcome, ResidencyTable, StoreWrite};
 use crate::units::{Duration, SimTime};
@@ -109,6 +109,22 @@ pub struct SimCore {
     flow_owner: HashMap<FlowId, (u32, u32)>,
     pending: VecDeque<Notice>,
     last_net_update: SimTime,
+    /// The live `FlowCheck` per component: `comp id -> (time, seq)`
+    /// heap coordinates. Maintained only on the wheel kernel (the seed
+    /// kernel keeps the original fire-as-stale-no-op behaviour as the
+    /// differential baseline). Invariant **K2**: at most one entry per
+    /// component — a component's check is scheduled once at the settle
+    /// that built it, and rescheduling happens only after the old
+    /// check popped (the rounding-residue re-dirty path).
+    pending_checks: HashMap<u64, (SimTime, u64)>,
+    /// Scratch for draining retired component ids (allocation reuse).
+    retired_scratch: Vec<u64>,
+    /// `FlowCheck` pops whose component had been invalidated — each is
+    /// a wasted heap round-trip the wheel kernel avoids by reclaiming.
+    stale_check_pops: u64,
+    /// Pending checks cancelled eagerly at the settle that retired
+    /// their component (wheel kernel only).
+    stale_checks_reclaimed: u64,
     /// Total events processed (perf telemetry).
     pub events_processed: u64,
     /// Incomplete submitted plans (kept O(1) for serving loops).
@@ -125,6 +141,13 @@ impl SimCore {
     /// A core whose flow network runs the given throughput model
     /// (`Slow` is the reference oracle for differential tests).
     pub fn with_mode(mode: ThroughputMode) -> Self {
+        SimCore::with_parts(mode, HeapKind::default())
+    }
+
+    /// A core with both the throughput model and the event-heap
+    /// backend chosen explicitly (`HeapKind::Seed` is the differential
+    /// baseline for `benches/kernel.rs` / `tests/property_kernel.rs`).
+    pub fn with_parts(mode: ThroughputMode, kind: HeapKind) -> Self {
         SimCore {
             now: SimTime::ZERO,
             net: FlowNet::with_mode(mode),
@@ -133,11 +156,15 @@ impl SimCore {
             residency: ResidencyTable::new(),
             metrics: Metrics::new(),
             demote_route: None,
-            heap: EventHeap::new(),
+            heap: EventHeap::with_kind(kind),
             plans: Vec::new(),
             flow_owner: HashMap::new(),
             pending: VecDeque::new(),
             last_net_update: SimTime::ZERO,
+            pending_checks: HashMap::new(),
+            retired_scratch: Vec::new(),
+            stale_check_pops: 0,
+            stale_checks_reclaimed: 0,
             events_processed: 0,
             live_plan_count: 0,
             retained_step_count: 0,
@@ -443,6 +470,7 @@ impl SimCore {
             "deadlock: {} plans incomplete at drain",
             self.plans.iter().filter(|p| p.remaining > 0).count()
         );
+        self.record_kernel_gauges();
     }
 
     /// Convenience: run with no director.
@@ -457,6 +485,14 @@ impl SimCore {
     fn handle(&mut self, ev: Ev) {
         match ev {
             Ev::FlowCheck { comp } => {
+                // This check is no longer pending (K2 frees the slot
+                // for the component's next schedule); a pop whose
+                // component has died is the waste the wheel kernel's
+                // eager reclamation exists to avoid — count it.
+                self.pending_checks.remove(&comp.0);
+                if !self.net.comp_live(comp) {
+                    self.stale_check_pops += 1;
+                }
                 self.advance_net();
                 // Drained flows of this component only (sorted; ties
                 // complete together at this timestamp). A stale check —
@@ -501,14 +537,65 @@ impl SimCore {
     /// dirty components and schedule their completion checks.
     /// Untouched components keep their already-scheduled checks.
     fn settle_network(&mut self) {
+        // Reclaim before the dirty check: a settle can retire
+        // components without leaving the network dirty afterwards
+        // (flood-fill absorption, singleton completion), and the seed
+        // kernel still needs the retired record drained so it stays
+        // bounded.
+        self.reclaim_retired_checks();
         if !self.net.is_dirty() {
             return;
         }
         self.advance_net();
+        let reclaiming = self.heap.kind() == HeapKind::Wheel;
         for check in self.net.settle_checks() {
             debug_assert!(check.at >= self.now, "check scheduled in the past");
-            self.heap.push(check.at, Ev::FlowCheck { comp: check.comp });
+            let seq = self.heap.push(check.at, Ev::FlowCheck { comp: check.comp });
+            if reclaiming {
+                // K2: the component was just built by this settle, so
+                // no earlier check can still be pending under its
+                // (never-reused) id.
+                let prev = self.pending_checks.insert(check.comp.0, (check.at, seq));
+                debug_assert!(prev.is_none(), "two live checks for one component");
+            }
         }
+    }
+
+    /// Cancel the pending checks of every component retired since the
+    /// last drain (**K3**: a retired component's check never fires on
+    /// the wheel kernel — it leaves the heap at the settle that killed
+    /// it). On the seed kernel the retired record is drained and
+    /// dropped: stale checks stay in the heap and fire as no-ops,
+    /// preserving the seed's exact event count and final clock.
+    fn reclaim_retired_checks(&mut self) {
+        let mut retired = std::mem::take(&mut self.retired_scratch);
+        self.net.drain_retired(&mut retired);
+        if self.heap.kind() == HeapKind::Wheel {
+            for comp in retired.drain(..) {
+                if let Some((at, seq)) = self.pending_checks.remove(&comp) {
+                    let hit = self.heap.cancel(at, seq);
+                    debug_assert!(hit, "pending check vanished before its cancel");
+                    self.stale_checks_reclaimed += u64::from(hit);
+                }
+            }
+        } else {
+            retired.clear();
+        }
+        self.retired_scratch = retired;
+    }
+
+    /// Fold the kernel's lifetime occupancy peaks and stale-check
+    /// counters into `metrics` (run on every drain; `record_max` keeps
+    /// the figures monotone across repeated [`SimCore::run`] calls).
+    fn record_kernel_gauges(&mut self) {
+        let st = self.heap.stats();
+        self.metrics.record_max("kernel.heap.peak_depth", st.peak_depth as f64);
+        self.metrics.record_max("kernel.heap.peak_wheel", st.peak_wheel as f64);
+        self.metrics.record_max("kernel.heap.peak_overflow", st.peak_overflow as f64);
+        self.metrics
+            .record_max("kernel.checks.stale_pops", self.stale_check_pops as f64);
+        self.metrics
+            .record_max("kernel.checks.reclaimed", self.stale_checks_reclaimed as f64);
     }
 
     fn start_step(&mut self, plan: u32, step: u32) {
@@ -621,6 +708,40 @@ impl SimCore {
     pub fn retained_steps(&self) -> usize {
         self.retained_step_count
     }
+
+    /// Which event-heap backend this core runs on.
+    pub fn heap_kind(&self) -> HeapKind {
+        self.heap.kind()
+    }
+
+    /// Kernel observability snapshot: heap occupancy peaks plus the
+    /// stale-check economy. `events_processed - stale_check_pops` is
+    /// the *useful* event count — the quantity that is identical
+    /// across heap backends (the wheel kernel reclaims checks before
+    /// they pop, so its raw event count can be lower, never higher).
+    pub fn kernel_stats(&self) -> KernelStats {
+        KernelStats {
+            heap: self.heap.stats(),
+            stale_check_pops: self.stale_check_pops,
+            stale_checks_reclaimed: self.stale_checks_reclaimed,
+        }
+    }
+}
+
+/// Kernel observability counters surfaced by [`SimCore::kernel_stats`]
+/// (see `DESIGN.md` "Event core" for the K1–K3 invariants they
+/// witness).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct KernelStats {
+    /// Event-heap occupancy peaks (wheel/overflow split is zero on
+    /// the seed backend).
+    pub heap: HeapStats,
+    /// `FlowCheck` pops whose component had already been invalidated
+    /// (zero-ish on the wheel kernel; the seed kernel's churn waste).
+    pub stale_check_pops: u64,
+    /// Pending checks cancelled eagerly when their component retired
+    /// (always zero on the seed kernel).
+    pub stale_checks_reclaimed: u64,
 }
 
 impl Default for SimCore {

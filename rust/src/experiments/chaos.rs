@@ -67,8 +67,16 @@ pub fn run_point(failures: usize, stealing: bool, sessions: usize, seed: u64) ->
     run_serve(NODES, &cfg(failures, stealing, sessions, seed), ThroughputMode::Fast)
 }
 
-/// Run the failure-count x requeue-policy matrix and render the table.
+/// Run the failure-count x requeue-policy matrix and render the
+/// table. Points fan out across `XSTAGE_JOBS` workers; the calm-P99
+/// ratio column folds serially over the ordered results (it reads the
+/// zero-failure row of the same policy).
 pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    run_with_jobs(sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(sessions: usize, seed: u64, jobs: usize) -> ExpResult {
     let mut table = Table::new(
         format!(
             "Chaos — serving under node-failure injection, {sessions} sessions/point \
@@ -89,28 +97,36 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     let mut fifo_pts = Vec::new();
     let mut steal_pts = Vec::new();
     let mut calm_p99 = [0.0f64; 2];
+    let mut points: Vec<(usize, usize, bool)> = Vec::new();
     for &failures in FAILURE_SWEEP {
         for (pi, stealing) in [false, true].into_iter().enumerate() {
-            let out = run_point(failures, stealing, sessions, seed);
-            debug_assert_eq!(out.node_failures, failures);
-            let p = out.percentiles.unwrap();
-            if failures == 0 {
-                calm_p99[pi] = p.p99;
-            }
-            table.row(&[
-                failures.to_string(),
-                if stealing { "steal" } else { "fifo" }.to_string(),
-                format!("{:.1}", p.p50),
-                format!("{:.1}", p.p95),
-                format!("{:.1}", p.p99),
-                out.lost_tasks.to_string(),
-                fmt_bytes(out.copied_bytes),
-                fmt_bytes(out.staged_bytes),
-                format!("{:.2}x", p.p99 / calm_p99[pi]),
-            ]);
-            let pts = if stealing { &mut steal_pts } else { &mut fifo_pts };
-            pts.push((failures as f64, p.p99));
+            points.push((failures, pi, stealing));
         }
+    }
+    let results = crate::util::par::matrix_map_jobs(points.clone(), jobs, |(f, _, st)| {
+        run_point(f, st, sessions, seed)
+    });
+    // The cross-point fold (the ratio column depends on the earlier
+    // zero-failure row) stays serial, in point order.
+    for ((failures, pi, stealing), out) in points.into_iter().zip(&results) {
+        debug_assert_eq!(out.node_failures, failures);
+        let p = out.percentiles.unwrap();
+        if failures == 0 {
+            calm_p99[pi] = p.p99;
+        }
+        table.row(&[
+            failures.to_string(),
+            if stealing { "steal" } else { "fifo" }.to_string(),
+            format!("{:.1}", p.p50),
+            format!("{:.1}", p.p95),
+            format!("{:.1}", p.p99),
+            out.lost_tasks.to_string(),
+            fmt_bytes(out.copied_bytes),
+            fmt_bytes(out.staged_bytes),
+            format!("{:.2}x", p.p99 / calm_p99[pi]),
+        ]);
+        let pts = if stealing { &mut steal_pts } else { &mut fifo_pts };
+        pts.push((failures as f64, p.p99));
     }
     ExpResult {
         table,

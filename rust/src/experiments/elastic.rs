@@ -152,8 +152,25 @@ pub fn policy_arms() -> [(&'static str, PolicyKind); 3] {
     ]
 }
 
-/// Run all three matrices and render the combined table.
+/// One point across the three matrices, so the whole experiment fans
+/// out as a single flat point list. `arm` indexes the bursty
+/// `[fifo, weighted]` pair or [`policy_arms`].
+#[derive(Clone, Copy, Debug)]
+enum Point {
+    Bursty { burst: usize, arm: usize },
+    Diurnal { sweepers: usize, arm: usize },
+    Churn { events: usize },
+}
+
+/// Run all three matrices and render the combined table. Points fan
+/// out across `XSTAGE_JOBS` workers (seeded, independent — the table
+/// is byte-identical at any worker count).
 pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    run_with_jobs(sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(sessions: usize, seed: u64, jobs: usize) -> ExpResult {
     let mut table = Table::new(
         format!(
             "Elastic multi-tenant serving — bursty fairness, diurnal \
@@ -170,62 +187,77 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
         ("churn p99".into(), Vec::new()),
     ];
 
+    let mut points: Vec<Point> = Vec::new();
     for &burst in BURSTS {
-        for (arm, weighted) in [("fifo", false), ("weighted", true)] {
-            let out = bursty_point(burst, weighted, seed);
-            let p = out.percentiles.unwrap();
-            let victim = tenant_p99(&out, 1);
-            table.row(&[
-                "bursty".into(),
-                burst.to_string(),
-                arm.into(),
-                format!("{:.1}", p.p50),
-                format!("{:.1}", p.p99),
-                format!("{victim:.1}"),
-                fmt_bytes(out.tenant_gpfs_bytes[1]),
-                "-".into(),
-                "-".into(),
-            ]);
-            let s = if weighted { &mut series[1].1 } else { &mut series[0].1 };
-            s.push((burst as f64, victim));
+        for arm in 0..2 {
+            points.push(Point::Bursty { burst, arm });
         }
     }
-
     for &sweepers in SWEEPERS {
-        for (si, (arm, policy)) in policy_arms().into_iter().enumerate() {
-            let out = diurnal_point(sweepers, policy, seed);
-            let p = out.percentiles.unwrap();
-            let hot = out.tenant_gpfs_bytes[0];
-            table.row(&[
-                "diurnal".into(),
-                sweepers.to_string(),
-                arm.into(),
-                format!("{:.1}", p.p50),
-                format!("{:.1}", p.p99),
-                format!("{:.1}", tenant_p99(&out, 0)),
-                fmt_bytes(hot),
-                format!("{}h/{}p/{}g", out.warm_hits, out.prewarms, out.keepalive_grants),
-                "-".into(),
-            ]);
-            series[2 + si].1.push((sweepers as f64, hot as f64));
+        for arm in 0..policy_arms().len() {
+            points.push(Point::Diurnal { sweepers, arm });
         }
     }
-
     for &events in CHURN_EVENTS {
-        let out = churn_point(events, sessions, seed);
+        points.push(Point::Churn { events });
+    }
+    let results = crate::util::par::matrix_map_jobs(points.clone(), jobs, |pt| match pt {
+        Point::Bursty { burst, arm } => bursty_point(burst, arm == 1, seed),
+        Point::Diurnal { sweepers, arm } => {
+            let (_, policy) = policy_arms().into_iter().nth(arm).unwrap();
+            diurnal_point(sweepers, policy, seed)
+        }
+        Point::Churn { events } => churn_point(events, sessions, seed),
+    });
+    // Table and series fold serially over the ordered results.
+    for (pt, out) in points.into_iter().zip(&results) {
         let p = out.percentiles.unwrap();
-        table.row(&[
-            "churn".into(),
-            events.to_string(),
-            "elastic".into(),
-            format!("{:.1}", p.p50),
-            format!("{:.1}", p.p99),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            format!("{}ev / min {} warm", out.pool_events, out.min_warm_nodes),
-        ]);
-        series[5].1.push((events as f64, p.p99));
+        match pt {
+            Point::Bursty { burst, arm } => {
+                let victim = tenant_p99(out, 1);
+                table.row(&[
+                    "bursty".into(),
+                    burst.to_string(),
+                    ["fifo", "weighted"][arm].into(),
+                    format!("{:.1}", p.p50),
+                    format!("{:.1}", p.p99),
+                    format!("{victim:.1}"),
+                    fmt_bytes(out.tenant_gpfs_bytes[1]),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                series[arm].1.push((burst as f64, victim));
+            }
+            Point::Diurnal { sweepers, arm } => {
+                let hot = out.tenant_gpfs_bytes[0];
+                table.row(&[
+                    "diurnal".into(),
+                    sweepers.to_string(),
+                    policy_arms()[arm].0.into(),
+                    format!("{:.1}", p.p50),
+                    format!("{:.1}", p.p99),
+                    format!("{:.1}", tenant_p99(out, 0)),
+                    fmt_bytes(hot),
+                    format!("{}h/{}p/{}g", out.warm_hits, out.prewarms, out.keepalive_grants),
+                    "-".into(),
+                ]);
+                series[2 + arm].1.push((sweepers as f64, hot as f64));
+            }
+            Point::Churn { events } => {
+                table.row(&[
+                    "churn".into(),
+                    events.to_string(),
+                    "elastic".into(),
+                    format!("{:.1}", p.p50),
+                    format!("{:.1}", p.p99),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{}ev / min {} warm", out.pool_events, out.min_warm_nodes),
+                ]);
+                series[5].1.push((events as f64, p.p99));
+            }
+        }
     }
 
     ExpResult { table, series }

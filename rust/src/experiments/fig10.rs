@@ -25,14 +25,21 @@ pub fn run_point(nodes: u32) -> (f64, f64) {
     (secs, agg)
 }
 
+/// Sweep points fan out across `XSTAGE_JOBS` workers (independent —
+/// the table is byte-identical at any worker count).
 pub fn run(sweep: &[u32]) -> ExpResult {
+    run_jobs(sweep, crate::util::par::jobs_from_env())
+}
+
+/// [`run`] with an explicit worker count.
+pub fn run_jobs(sweep: &[u32], jobs: usize) -> ExpResult {
     let mut table = Table::new(
         "Fig 10 — Staging+Write aggregate bandwidth (577 MB replica -> every node)",
         &["nodes", "time (s)", "agg GB/s", "paper GB/s (8192: 134)"],
     );
     let mut pts = Vec::new();
-    for &n in sweep {
-        let (secs, agg) = run_point(n);
+    let results = crate::util::par::matrix_map_jobs(sweep.to_vec(), jobs, run_point);
+    for (&n, &(secs, agg)) in sweep.iter().zip(&results) {
         let paper = if n == 8192 { "134".to_string() } else { "~linear".to_string() };
         table.row(&[
             n.to_string(),

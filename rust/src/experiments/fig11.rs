@@ -53,7 +53,14 @@ pub fn run_naive(nodes: u32) -> f64 {
     core.now.secs_f64()
 }
 
+/// Sweep points fan out across `XSTAGE_JOBS` workers (independent —
+/// the table is byte-identical at any worker count).
 pub fn run(sweep: &[u32]) -> ExpResult {
+    run_jobs(sweep, crate::util::par::jobs_from_env())
+}
+
+/// [`run`] with an explicit worker count.
+pub fn run_jobs(sweep: &[u32], jobs: usize) -> ExpResult {
     let mut table = Table::new(
         "Fig 11 — End-to-end input bandwidth: I/O hook vs naive (577 MB/node)",
         &[
@@ -68,9 +75,10 @@ pub fn run(sweep: &[u32]) -> ExpResult {
     );
     let mut staged_pts = Vec::new();
     let mut naive_pts = Vec::new();
-    for &n in sweep {
-        let s = run_staged(n);
-        let naive_secs = run_naive(n);
+    let results = crate::util::par::matrix_map_jobs(sweep.to_vec(), jobs, |n| {
+        (run_staged(n), run_naive(n))
+    });
+    for (&n, &(s, naive_secs)) in sweep.iter().zip(&results) {
         let bytes = n as f64 * DATASET_BYTES as f64;
         let s_bw = bytes / s.total_secs / GB as f64;
         let n_bw = bytes / naive_secs / GB as f64;

@@ -39,15 +39,23 @@ pub fn run_point(cores: u32, seed: u64) -> f64 {
     stats.makespan.secs_f64()
 }
 
+/// Sweep points fan out across `XSTAGE_JOBS` workers; the speedup
+/// column's first-point baseline folds serially over the ordered
+/// results (byte-identical at any worker count).
 pub fn run(sweep: &[u32]) -> ExpResult {
+    run_jobs(sweep, crate::util::par::jobs_from_env())
+}
+
+/// [`run`] with an explicit worker count.
+pub fn run_jobs(sweep: &[u32], jobs: usize) -> ExpResult {
     let mut table = Table::new(
         "Fig 12 — FF-HEDM stage 1 makespan (720 jobs, 5-160 s each, Orthros)",
         &["cores", "makespan (s)", "speedup vs 64", "ideal"],
     );
     let mut pts = Vec::new();
     let mut base = None;
-    for &c in sweep {
-        let m = run_point(c, 42);
+    let results = crate::util::par::matrix_map_jobs(sweep.to_vec(), jobs, |c| run_point(c, 42));
+    for (&c, &m) in sweep.iter().zip(&results) {
         let b = *base.get_or_insert(m);
         table.row(&[
             c.to_string(),

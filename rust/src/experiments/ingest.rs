@@ -90,8 +90,14 @@ pub fn run_point(
 }
 
 /// Run the cadence x RAM-slice x landing-mode matrix and render the
-/// table.
+/// table. Points fan out across `XSTAGE_JOBS` workers (seeded,
+/// independent — the table is byte-identical at any worker count).
 pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    run_with_jobs(sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(sessions: usize, seed: u64, jobs: usize) -> ExpResult {
     let mut table = Table::new(
         format!(
             "Ingest — streaming detector vs write-to-GPFS-then-stage, {sessions} \
@@ -111,33 +117,41 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     );
     let mut stream_pts = Vec::new();
     let mut gpfs_pts = Vec::new();
+    let mut points: Vec<(f64, u64, IngestMode)> = Vec::new();
     for &gap in GAP_SWEEP {
         for &slice in SLICE_SWEEP {
             for mode in [IngestMode::Stream, IngestMode::GpfsFirst] {
-                let out = run_point(gap, slice, mode, sessions, seed);
-                let ing = out.ingest.expect("ingest point without a detector outcome");
-                let ttfr = ing.first_result_secs.expect("no session read the live dataset");
-                table.row(&[
-                    format!("{gap}"),
-                    fmt_bytes(slice),
-                    match mode {
-                        IngestMode::Stream => "stream",
-                        IngestMode::GpfsFirst => "gpfs-first",
-                    }
-                    .to_string(),
-                    format!("{ttfr:.1}"),
-                    format!("{:.1}", ing.ingest_done_secs),
-                    ing.stalls.to_string(),
-                    format!("{}/{}/{}", ing.ram_frames, ing.ssd_frames, ing.gpfs_frames),
-                    format!("{:.2}", ing.stall_rate()),
-                ]);
-                let pts = match mode {
-                    IngestMode::Stream => &mut stream_pts,
-                    IngestMode::GpfsFirst => &mut gpfs_pts,
-                };
-                pts.push((pts.len() as f64, ttfr));
+                points.push((gap, slice, mode));
             }
         }
+    }
+    let results = crate::util::par::matrix_map_jobs(points.clone(), jobs, |(gap, slice, mode)| {
+        run_point(gap, slice, mode, sessions, seed)
+    });
+    // Table and series fold serially over the ordered results (the
+    // series x-coordinate is the per-mode point index).
+    for ((gap, slice, mode), out) in points.into_iter().zip(&results) {
+        let ing = out.ingest.as_ref().expect("ingest point without a detector outcome");
+        let ttfr = ing.first_result_secs.expect("no session read the live dataset");
+        table.row(&[
+            format!("{gap}"),
+            fmt_bytes(slice),
+            match mode {
+                IngestMode::Stream => "stream",
+                IngestMode::GpfsFirst => "gpfs-first",
+            }
+            .to_string(),
+            format!("{ttfr:.1}"),
+            format!("{:.1}", ing.ingest_done_secs),
+            ing.stalls.to_string(),
+            format!("{}/{}/{}", ing.ram_frames, ing.ssd_frames, ing.gpfs_frames),
+            format!("{:.2}", ing.stall_rate()),
+        ]);
+        let pts = match mode {
+            IngestMode::Stream => &mut stream_pts,
+            IngestMode::GpfsFirst => &mut gpfs_pts,
+        };
+        pts.push((pts.len() as f64, ttfr));
     }
     ExpResult {
         table,

@@ -26,10 +26,12 @@ use std::time::Instant;
 use crate::cluster::{bgq, Topology};
 use crate::dataflow::sched::{SessionId, SessionScheduler};
 use crate::dataflow::{FairPick, SchedulerCfg, Task, TaskGraph};
-use crate::engine::SimCore;
+use crate::engine::{KernelStats, SimCore};
 use crate::metrics::Table;
 use crate::mpisim::Comm;
 use crate::pfs::{Blob, GpfsParams};
+use crate::simtime::flownet::ThroughputMode;
+use crate::simtime::heap::HeapKind;
 use crate::units::{fmt_bytes, Duration, SimTime, StateBytes, MB};
 
 use super::ExpResult;
@@ -87,6 +89,10 @@ pub struct ScaleOutcome {
     pub store_state: StateBytes,
     /// Residency-mirror bookkeeping bytes over interned paths.
     pub residency_state: StateBytes,
+    /// Kernel observability: event-heap occupancy peaks and the
+    /// stale-check economy (`BENCH_scale.json` carries these as
+    /// counter lines).
+    pub kernel: KernelStats,
 }
 
 impl ScaleOutcome {
@@ -97,6 +103,13 @@ impl ScaleOutcome {
     /// Host seconds spent per simulated second (interactivity budget).
     pub fn wall_per_sim_sec(&self) -> f64 {
         self.host_secs / self.now.secs_f64().max(1e-9)
+    }
+
+    /// Events minus stale flow-check pops — identical across event-heap
+    /// backends (the wheel reclaims would-be stale pops eagerly), so
+    /// the cross-kernel comparison figure.
+    pub fn useful_events(&self) -> u64 {
+        self.events - self.kernel.stale_check_pops
     }
 }
 
@@ -126,7 +139,20 @@ pub fn session_graph(seed: u64, session: u64) -> TaskGraph {
 /// Run one matrix point: build the BG/Q fleet, stage the dataset on
 /// every node, admit all sessions, and drain.
 pub fn run_point(nodes: u32, sessions: usize, mode: PathMode, seed: u64) -> ScaleOutcome {
-    let mut core = SimCore::new();
+    run_point_kernel(nodes, sessions, mode, seed, HeapKind::default())
+}
+
+/// [`run_point`] with an explicit event-heap backend (`Seed` is the
+/// differential baseline for `benches/kernel.rs` and the kernel
+/// property suite).
+pub fn run_point_kernel(
+    nodes: u32,
+    sessions: usize,
+    mode: PathMode,
+    seed: u64,
+    kind: HeapKind,
+) -> ScaleOutcome {
+    let mut core = SimCore::with_parts(ThroughputMode::Fast, kind);
     let topo = Topology::build(bgq(nodes), GpfsParams::default(), &mut core.net);
     topo.apply_storage_budgets(&mut core);
     for i in 0..FILES {
@@ -158,6 +184,7 @@ pub fn run_point(nodes: u32, sessions: usize, mode: PathMode, seed: u64) -> Scal
         sched_state: StateBytes::new(ss.state_bytes(), sessions as u64),
         store_state: StateBytes::new(core.nodes.state_bytes(), paths),
         residency_state: StateBytes::new(core.residency.state_bytes(), paths),
+        kernel: core.kernel_stats(),
     }
 }
 
@@ -176,9 +203,15 @@ pub fn run_point_both(nodes: u32, sessions: usize, seed: u64) -> (ScaleOutcome, 
 }
 
 /// Run the matrix (`nodes[i]` paired with `sessions[i]`) and render
-/// the comparison table. Host-time columns vary with the machine; the
-/// virtual columns and the seed/flat identity do not.
+/// the comparison table. Host-time columns vary with the machine (and
+/// with `XSTAGE_JOBS` — points time-share cores under the parallel
+/// runner); the virtual columns and the seed/flat identity do not.
 pub fn run_with(nodes: &[u32], sessions: &[u32], seed: u64) -> ExpResult {
+    run_with_jobs(nodes, sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(nodes: &[u32], sessions: &[u32], seed: u64, jobs: usize) -> ExpResult {
     assert_eq!(nodes.len(), sessions.len(), "--nodes and --sessions must pair up");
     let mut table = Table::new(
         "Scale — fleet matrix, seed vs flattened hot paths (identical virtual outcomes)"
@@ -196,8 +229,12 @@ pub fn run_with(nodes: &[u32], sessions: &[u32], seed: u64) -> ExpResult {
     );
     let mut speedup_pts = Vec::new();
     let mut evps_pts = Vec::new();
-    for (&n, &s) in nodes.iter().zip(sessions) {
-        let (seed_out, flat_out) = run_point_both(n, s as usize, seed);
+    let pts: Vec<(u32, u32)> = nodes.iter().copied().zip(sessions.iter().copied()).collect();
+    let results = crate::util::par::matrix_map_jobs(pts.clone(), jobs, |(n, s)| {
+        run_point_both(n, s as usize, seed)
+    });
+    // Table and series fold serially over the ordered results.
+    for ((n, s), (seed_out, flat_out)) in pts.into_iter().zip(&results) {
         let speedup = flat_out.events_per_sec() / seed_out.events_per_sec().max(1e-9);
         table.row(&[
             n.to_string(),

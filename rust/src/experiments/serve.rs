@@ -85,8 +85,15 @@ pub fn run_point(
     (staged, naive)
 }
 
-/// Run the whole matrix and render the comparison table.
+/// Run the whole matrix and render the comparison table. Points fan
+/// out across `XSTAGE_JOBS` workers (seeded, independent — the table
+/// is byte-identical at any worker count).
 pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    run_with_jobs(sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(sessions: usize, seed: u64, jobs: usize) -> ExpResult {
     let mut table = Table::new(
         format!(
             "Serve — staged-resident vs naive GPFS re-read, {sessions} sessions/point \
@@ -107,8 +114,11 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     );
     let mut staged_pts = Vec::new();
     let mut naive_pts = Vec::new();
-    for (i, pt) in matrix().iter().enumerate() {
-        let (s, n) = run_point(pt, sessions, seed);
+    let pts = matrix();
+    let results =
+        crate::util::par::matrix_map_jobs(pts.clone(), jobs, |pt| run_point(&pt, sessions, seed));
+    // Table and series fold serially over the ordered results.
+    for (i, (pt, (s, n))) in pts.iter().zip(&results).enumerate() {
         let (sp, np) = (s.percentiles.unwrap(), n.percentiles.unwrap());
         table.row(&[
             pt.nodes.to_string(),

@@ -133,8 +133,15 @@ pub fn run_point(pt: &TierPoint, sessions: usize, seed: u64) -> (ServeOutcome, S
     (tiered, discard)
 }
 
-/// Run the whole matrix and render the comparison table.
+/// Run the whole matrix and render the comparison table. Points fan
+/// out across `XSTAGE_JOBS` workers (seeded, independent — the table
+/// is byte-identical at any worker count).
 pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
+    run_with_jobs(sessions, seed, crate::util::par::jobs_from_env())
+}
+
+/// [`run_with`] with an explicit worker count.
+pub fn run_with_jobs(sessions: usize, seed: u64, jobs: usize) -> ExpResult {
     let mut table = Table::new(
         format!(
             "Tiers — demote-to-SSD vs discard eviction, {sessions} sessions/point, \
@@ -155,8 +162,11 @@ pub fn run_with(sessions: usize, seed: u64) -> ExpResult {
     );
     let mut tiered_pts = Vec::new();
     let mut discard_pts = Vec::new();
-    for (i, pt) in matrix().iter().enumerate() {
-        let (t, d) = run_point(pt, sessions, seed);
+    let pts = matrix();
+    let results =
+        crate::util::par::matrix_map_jobs(pts.clone(), jobs, |pt| run_point(&pt, sessions, seed));
+    // Table and series fold serially over the ordered results.
+    for (i, (pt, (t, d))) in pts.iter().zip(&results).enumerate() {
         let (tp, dp) = (t.percentiles.unwrap(), d.percentiles.unwrap());
         table.row(&[
             fmt_bytes(pt.working_set()),

@@ -9,6 +9,7 @@
 //! [`Percentiles`]); [`Table`] renders the paper-vs-measured rows the
 //! experiment drivers print.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 
 use crate::units::{Duration, SimTime};
@@ -49,6 +50,79 @@ impl Percentiles {
             None => ["-", "-", "-"].map(String::from),
         }
     }
+
+    /// P50/P95/P99 by three nested `select_nth_unstable` passes
+    /// instead of a full sort — expected O(n), with each pass confined
+    /// to the left partition of the previous one (the three ranks are
+    /// nested). Produces exactly what [`Percentiles::from_sorted`]
+    /// would on the sorted copy (`select_nth_unstable` places the
+    /// element that sorting would put at that index); `samples` is
+    /// reordered arbitrarily. `None` when empty.
+    pub fn select(samples: &mut [f64]) -> Option<Percentiles> {
+        let n = samples.len();
+        if n == 0 {
+            return None;
+        }
+        let rank_idx = |q: f64| ((q * n as f64 / 100.0).ceil() as usize).clamp(1, n) - 1;
+        let (i50, i95, i99) = (rank_idx(50.0), rank_idx(95.0), rank_idx(99.0));
+        let cmp = |a: &f64, b: &f64| a.partial_cmp(b).expect("non-finite sample");
+        let (below99, p99, _) = samples.select_nth_unstable_by(i99, cmp);
+        let p99 = *p99;
+        let p95 = if i95 == i99 { p99 } else { *below99.select_nth_unstable_by(i95, cmp).1 };
+        let p50 = if i50 == i95 {
+            p95
+        } else {
+            // i50 < i95: the P50 sits strictly left of the P95 slot,
+            // and everything there is already <= P95.
+            *below99[..i95].select_nth_unstable_by(i50, cmp).1
+        };
+        Some(Percentiles { p50, p95, p99 })
+    }
+}
+
+/// One observed sample series: insertion-order raw observations plus
+/// a cached percentile summary, so repeated P50/P95/P99 queries after
+/// the series stops growing cost nothing.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    raw: Vec<f64>,
+    /// Valid while `raw` is unchanged since the computing query; any
+    /// push invalidates. `Cell`: summaries stay queryable by `&self`.
+    cached: Cell<Option<Percentiles>>,
+}
+
+impl Series {
+    pub fn push(&mut self, v: f64) {
+        self.raw.push(v);
+        self.cached.set(None);
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.raw
+    }
+
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// Nearest-rank P50/P95/P99 via [`Percentiles::select`], cached
+    /// until the next [`Series::push`]; `None` when empty.
+    pub fn percentiles(&self) -> Option<Percentiles> {
+        if self.raw.is_empty() {
+            return None;
+        }
+        if let Some(p) = self.cached.get() {
+            return Some(p);
+        }
+        let mut scratch = self.raw.clone();
+        let p = Percentiles::select(&mut scratch);
+        self.cached.set(p);
+        p
+    }
 }
 
 /// Nearest-rank percentile of an **ascending-sorted** sample slice:
@@ -75,7 +149,10 @@ pub struct Metrics {
     spans: BTreeMap<&'static str, Span>,
     bytes: BTreeMap<&'static str, u64>,
     counts: BTreeMap<&'static str, u64>,
-    samples: BTreeMap<&'static str, Vec<f64>>,
+    samples: BTreeMap<&'static str, Series>,
+    /// High-water gauges ([`Metrics::record_max`]): kernel occupancy
+    /// peaks and other "largest value seen" figures.
+    gauges: BTreeMap<&'static str, f64>,
 }
 
 impl Metrics {
@@ -154,14 +231,34 @@ impl Metrics {
 
     /// The raw observations of a series, in insertion order.
     pub fn samples(&self, label: &str) -> &[f64] {
-        self.samples.get(label).map(Vec::as_slice).unwrap_or(&[])
+        self.samples.get(label).map(Series::as_slice).unwrap_or(&[])
+    }
+
+    /// The full [`Series`] behind a label (cached-percentile access).
+    pub fn series(&self, label: &str) -> Option<&Series> {
+        self.samples.get(label)
     }
 
     /// Nearest-rank P50/P95/P99 of a series; `None` with no samples.
+    /// Selection, not a full sort, and cached on the series until its
+    /// next observation.
     pub fn percentiles(&self, label: &str) -> Option<Percentiles> {
-        let mut sorted = self.samples.get(label)?.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Percentiles::from_sorted(&sorted)
+        self.samples.get(label)?.percentiles()
+    }
+
+    /// Record a high-water gauge: keeps the largest value ever passed
+    /// under `label` (the engine folds kernel occupancy peaks in at
+    /// every drain, so repeated runs stay monotone).
+    pub fn record_max(&mut self, label: &'static str, v: f64) {
+        let g = self.gauges.entry(label).or_insert(f64::NEG_INFINITY);
+        if v > *g {
+            *g = v;
+        }
+    }
+
+    /// The recorded high-water value, `None` when never recorded.
+    pub fn gauge(&self, label: &str) -> Option<f64> {
+        self.gauges.get(label).copied()
     }
 }
 
@@ -289,6 +386,54 @@ mod tests {
         assert_eq!(p.p99, 5.0);
         assert!(m.percentiles("missing").is_none());
         assert!(m.samples("missing").is_empty());
+    }
+
+    #[test]
+    fn selection_matches_full_sort_everywhere() {
+        // Percentiles::select must agree with the sorted nearest-rank
+        // definition on every size, including the rank-collision
+        // shortcuts (i50 == i95 == i99 on tiny sets).
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        for n in 1..=257 {
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    ((state >> 33) % 1_000) as f64 / 10.0
+                })
+                .collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want = Percentiles::from_sorted(&sorted).unwrap();
+            let got = Percentiles::select(&mut xs).unwrap();
+            assert_eq!(got, want, "n={n}");
+        }
+        assert_eq!(Percentiles::select(&mut []), None);
+    }
+
+    #[test]
+    fn series_caches_until_next_push() {
+        let mut s = Series::default();
+        for v in [9.0, 1.0, 5.0] {
+            s.push(v);
+        }
+        let p = s.percentiles().unwrap();
+        assert_eq!((p.p50, p.p99), (5.0, 9.0));
+        // Cached: a second query returns the same summary.
+        assert_eq!(s.percentiles(), Some(p));
+        // A push invalidates and the summary tracks the new data.
+        s.push(100.0);
+        assert_eq!(s.percentiles().unwrap().p99, 100.0);
+        assert_eq!(s.as_slice(), &[9.0, 1.0, 5.0, 100.0], "raw order preserved");
+    }
+
+    #[test]
+    fn record_max_keeps_high_water() {
+        let mut m = Metrics::new();
+        assert_eq!(m.gauge("kernel.heap.peak_depth"), None);
+        m.record_max("kernel.heap.peak_depth", 4.0);
+        m.record_max("kernel.heap.peak_depth", 11.0);
+        m.record_max("kernel.heap.peak_depth", 7.0);
+        assert_eq!(m.gauge("kernel.heap.peak_depth"), Some(11.0));
     }
 
     #[test]

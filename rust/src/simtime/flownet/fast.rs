@@ -58,11 +58,21 @@ pub(crate) struct FastModel {
     dirty: Vec<FlowId>,
     /// Flood-fill visit stamp, bumped once per settle.
     round: u64,
+    /// Ids retired since the last [`ThroughputModel::drain_retired`]:
+    /// each id lands here exactly once, at the kill/absorb that
+    /// removed it from `comps`.
+    retired: Vec<u64>,
 }
 
 impl FastModel {
     pub(crate) fn new() -> FastModel {
-        FastModel { comps: BTreeMap::new(), next_comp: 1, dirty: Vec::new(), round: 0 }
+        FastModel {
+            comps: BTreeMap::new(),
+            next_comp: 1,
+            dirty: Vec::new(),
+            round: 0,
+            retired: Vec::new(),
+        }
     }
 
     fn mark_dirty(&mut self, st: &mut NetState, id: FlowId) {
@@ -77,6 +87,7 @@ impl FastModel {
     /// Remove `comp` and mark its members (minus `except`) dirty.
     fn kill(&mut self, st: &mut NetState, comp: CompId, except: Option<FlowId>) {
         let Some(c) = self.comps.remove(&comp.0) else { return };
+        self.retired.push(comp.0);
         for m in c.members {
             if Some(m) == except {
                 continue;
@@ -184,7 +195,9 @@ impl ThroughputModel for FastModel {
                 // its scheduled check goes stale with the dead id.
                 let c = st.slots[fid.idx()].flow.comp;
                 if c != CompId::NONE {
-                    self.comps.remove(&c.0);
+                    if self.comps.remove(&c.0).is_some() {
+                        self.retired.push(c.0);
+                    }
                     st.slots[fid.idx()].flow.comp = CompId::NONE;
                 }
                 let fidx = fid.idx();
@@ -232,6 +245,10 @@ impl ThroughputModel for FastModel {
 
     fn comp_members(&self, comp: CompId) -> Option<&[FlowId]> {
         self.comps.get(&comp.0).map(|c| &c.members[..])
+    }
+
+    fn drain_retired(&mut self, out: &mut Vec<u64>) {
+        out.append(&mut self.retired);
     }
 
     fn comp_count(&self) -> usize {

@@ -324,6 +324,21 @@ impl FlowNet {
         drained
     }
 
+    /// True when `comp` still names a live component — i.e. a pending
+    /// completion check for it is *not* stale. Used by the engine's
+    /// stale-pop accounting.
+    pub fn comp_live(&self, comp: CompId) -> bool {
+        self.model.comp_members(comp).is_some()
+    }
+
+    /// Append the ids of components retired since the last drain to
+    /// `out` (see [`ThroughputModel::drain_retired`]). The engine
+    /// drains this after every settle to reclaim the retired
+    /// components' pending checks from the event heap eagerly.
+    pub fn drain_retired(&mut self, out: &mut Vec<u64>) {
+        self.model.drain_retired(out);
+    }
+
     /// The earliest (time-from-now, flow) completion at current rates,
     /// across all components. Valid after a settle.
     pub fn next_completion(&self, now: SimTime) -> Option<(SimTime, FlowId)> {

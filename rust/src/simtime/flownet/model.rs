@@ -95,6 +95,14 @@ pub trait ThroughputModel {
     /// Members of `comp`, or `None` when the id is stale.
     fn comp_members(&self, comp: CompId) -> Option<&[FlowId]>;
 
+    /// Append the ids of components retired since the last drain to
+    /// `out`, clearing the internal record. Ids are never reused, so
+    /// each id is reported exactly once, at the settle/kill that
+    /// replaced or removed it. The engine uses this to reclaim the
+    /// retired components' pending `FlowCheck` timers eagerly instead
+    /// of letting them fire as stale no-ops.
+    fn drain_retired(&mut self, out: &mut Vec<u64>);
+
     /// Number of live components (diagnostics/benchmarks).
     fn comp_count(&self) -> usize;
 

@@ -23,6 +23,9 @@ pub(crate) struct SlowModel {
     comp: Option<GlobalComp>,
     next_comp: u64,
     dirty: bool,
+    /// Ids retired since the last drain (the old global component's
+    /// id, recorded when a settle replaces it).
+    retired: Vec<u64>,
 }
 
 #[derive(Debug)]
@@ -34,7 +37,7 @@ struct GlobalComp {
 
 impl SlowModel {
     pub(crate) fn new() -> SlowModel {
-        SlowModel { comp: None, next_comp: 1, dirty: false }
+        SlowModel { comp: None, next_comp: 1, dirty: false, retired: Vec::new() }
     }
 }
 
@@ -74,7 +77,9 @@ impl ThroughputModel for SlowModel {
         let id = self.next_comp;
         self.next_comp += 1;
         let next = super::model::settle_component(st, &members, CompId(id), out);
-        self.comp = Some(GlobalComp { id, members, next });
+        if let Some(old) = self.comp.replace(GlobalComp { id, members, next }) {
+            self.retired.push(old.id);
+        }
     }
 
     fn comp_members(&self, comp: CompId) -> Option<&[FlowId]> {
@@ -86,6 +91,10 @@ impl ThroughputModel for SlowModel {
 
     fn comp_count(&self) -> usize {
         usize::from(self.comp.is_some())
+    }
+
+    fn drain_retired(&mut self, out: &mut Vec<u64>) {
+        out.append(&mut self.retired);
     }
 
     fn next_completion(&self, st: &NetState) -> Option<(Duration, FlowId)> {

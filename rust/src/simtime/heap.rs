@@ -1,18 +1,75 @@
-//! Deterministic event heap.
+//! Deterministic event heap: a two-level bucketed timer wheel.
 //!
-//! A thin wrapper over `BinaryHeap` that (a) orders by time, (b) breaks
-//! ties by insertion sequence, so simulation runs are bit-reproducible
-//! regardless of hash-map iteration order upstream, and (c) supports
-//! *logical cancellation*: events carry an identity that is checked
-//! against current state when they fire (the engine's flow-completion
-//! checks name a network component whose id is never reused — a check
-//! for an invalidated component is simply ignored on pop, so nothing
-//! is ever removed from the middle of the heap).
+//! The heap (a) orders by time, (b) breaks ties by insertion sequence,
+//! so simulation runs are bit-reproducible regardless of hash-map
+//! iteration order upstream, and (c) supports two kinds of
+//! cancellation:
+//!
+//! - *logical* — events carry an identity that is checked against
+//!   current state when they fire (the engine's flow-completion checks
+//!   name a network component whose id is never reused; a check for an
+//!   invalidated component is simply ignored on pop), and
+//! - *eager* — [`EventHeap::cancel`] removes a still-pending entry by
+//!   its `(time, seq)` coordinates, so churn-heavy runs (chaos kills,
+//!   elastic re-settles) reclaim stale timers instead of carrying them
+//!   to their pop.
+//!
+//! Two backends sit behind one API, selected by [`HeapKind`]:
+//!
+//! - [`HeapKind::Seed`] — the original thin `BinaryHeap` wrapper,
+//!   kept as the differential baseline (`tests/property_kernel.rs`
+//!   drives both backends in lockstep and `benches/kernel.rs` measures
+//!   the wheel against it).
+//! - [`HeapKind::Wheel`] (default) — a two-level bucketed timer wheel:
+//!   a 1024-bucket near-future wheel of 2^26 ns (~67 ms) ticks
+//!   (~68.7 s horizon) plus a far-future overflow heap. Pops within
+//!   the current tick drain a sorted run; bucket occupancy is a
+//!   bitmap, so advancing to the next armed tick is a word scan, not
+//!   a sift. The wheel relies on the engine's monotone contract —
+//!   every push is at or after the last popped time — which holds by
+//!   construction (`SimCore` asserts `t >= now` on every pop and every
+//!   schedule).
+//!
+//! Pop order is identical across backends by a total order argument:
+//! both pop strictly ascending `(time, seq)`, and `(time, seq)` is
+//! unique per entry (`seq` is a monotone counter), so the sequence of
+//! live entries popped is the same regardless of internal layout.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::units::SimTime;
+
+/// Bucket granularity: one wheel tick is 2^26 ns (~67 ms).
+const GRAN_BITS: u32 = 26;
+/// 2^10 = 1024 buckets: the wheel covers ~68.7 s of virtual time.
+const WHEEL_BITS: u32 = 10;
+const BUCKETS: usize = 1 << WHEEL_BITS;
+const TICK_MASK: u64 = (BUCKETS as u64) - 1;
+
+/// Which event-heap backend a simulation core runs on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum HeapKind {
+    /// The seed `BinaryHeap` wrapper (differential baseline).
+    Seed,
+    /// The two-level bucketed timer wheel.
+    #[default]
+    Wheel,
+}
+
+/// Occupancy counters observed over a heap's lifetime — the kernel
+/// observability surface reported through `metrics` and the
+/// `BENCH_kernel.json` state lines.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct HeapStats {
+    /// Peak number of pending entries (live, post-cancel).
+    pub peak_depth: usize,
+    /// Peak entries resident in the near-future wheel (0 on `Seed`).
+    pub peak_wheel: usize,
+    /// Peak entries resident in the far-future overflow heap (0 on
+    /// `Seed`).
+    pub peak_overflow: usize,
+}
 
 /// An entry in the heap: fires `event` at `time`.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -22,41 +79,373 @@ struct Entry<E> {
     event: E,
 }
 
+fn tick_of(time: SimTime) -> u64 {
+    time.0 >> GRAN_BITS
+}
+
 /// Deterministic min-heap of timed events.
 #[derive(Debug)]
 pub struct EventHeap<E> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
+    backend: Backend<E>,
     seq: u64,
+    len: usize,
+    stats: HeapStats,
+}
+
+#[derive(Debug)]
+enum Backend<E> {
+    Seed {
+        heap: BinaryHeap<Reverse<Entry<E>>>,
+        /// Seqs cancelled while pending; skipped lazily on pop.
+        cancelled: HashSet<u64>,
+    },
+    Wheel(Wheel<E>),
+}
+
+/// The two-level wheel. Layout invariants (W1–W3, argued in
+/// DESIGN.md "Event core"):
+///
+/// - **W1 (window).** Bucketed entries have tick in
+///   `(cursor_tick, base_tick + BUCKETS)`; entries at `cursor_tick`
+///   live in the sorted `cur` run; overflow entries have tick
+///   `>= base_tick + BUCKETS`. Location by tick is therefore exact,
+///   which is what makes `cancel` O(bucket).
+/// - **W2 (monotone base).** `base_tick` and `cursor_tick` only
+///   advance. A refill happens only when the wheel is empty, sets
+///   `base_tick` to the overflow minimum's tick, and migrates
+///   ascending until the overflow top clears the new horizon — so the
+///   remainder is provably above it and every entry migrates at most
+///   once.
+/// - **W3 (sorted run).** `cur` is ascending `(time, seq)` from
+///   `cur_pos`; same-tick pushes binary-insert into the live tail
+///   (their seq is larger than every resident seq, so insertion order
+///   is preserved within equal times).
+#[derive(Debug)]
+struct Wheel<E> {
+    buckets: Vec<Vec<Entry<E>>>,
+    /// One bit per bucket: set iff the bucket is non-empty.
+    occ: Vec<u64>,
+    /// Entries in `buckets` (excludes `cur` and overflow).
+    in_buckets: usize,
+    /// The wheel window covers ticks `[base_tick, base_tick+BUCKETS)`.
+    base_tick: u64,
+    /// Tick currently draining through `cur`.
+    cursor_tick: u64,
+    /// Sorted drain run for `cursor_tick`; `cur_pos` is the next pop.
+    cur: Vec<Entry<E>>,
+    cur_pos: usize,
+    overflow: BinaryHeap<Reverse<Entry<E>>>,
+    /// Seqs cancelled while in overflow; dropped on migration or pop.
+    cancelled: HashSet<u64>,
+}
+
+impl<E: Ord + Copy> Wheel<E> {
+    fn new() -> Self {
+        Wheel {
+            buckets: (0..BUCKETS).map(|_| Vec::new()).collect(),
+            occ: vec![0u64; BUCKETS / 64],
+            in_buckets: 0,
+            base_tick: 0,
+            cursor_tick: 0,
+            cur: Vec::new(),
+            cur_pos: 0,
+            overflow: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+        }
+    }
+
+    fn horizon(&self) -> u64 {
+        self.base_tick + BUCKETS as u64
+    }
+
+    fn live_in_cur(&self) -> usize {
+        self.cur.len() - self.cur_pos
+    }
+
+    fn wheel_live(&self) -> usize {
+        self.in_buckets + self.live_in_cur()
+    }
+
+    fn overflow_live(&self) -> usize {
+        self.overflow.len() - self.cancelled.len()
+    }
+
+    fn push(&mut self, e: Entry<E>) {
+        let tick = tick_of(e.time);
+        debug_assert!(
+            tick >= self.cursor_tick,
+            "wheel push behind the cursor: tick {tick} < {}",
+            self.cursor_tick
+        );
+        if tick == self.cursor_tick {
+            // W3: the new seq is larger than every resident seq, so
+            // the first slot whose time is strictly later keeps the
+            // run sorted and FIFO within equal times.
+            let at = self.cur_pos
+                + self.cur[self.cur_pos..].partition_point(|r| r.time <= e.time);
+            self.cur.insert(at, e);
+        } else if tick < self.horizon() {
+            let idx = (tick & TICK_MASK) as usize;
+            self.buckets[idx].push(e);
+            self.occ[idx / 64] |= 1 << (idx % 64);
+            self.in_buckets += 1;
+        } else {
+            self.overflow.push(Reverse(e));
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry<E>> {
+        loop {
+            if self.cur_pos < self.cur.len() {
+                let e = self.cur[self.cur_pos];
+                self.cur_pos += 1;
+                return Some(e);
+            }
+            if self.in_buckets > 0 {
+                let tick = self
+                    .next_occupied(self.cursor_tick + 1)
+                    .expect("occupancy bitmap out of sync with in_buckets");
+                let idx = (tick & TICK_MASK) as usize;
+                // Recycle the drained run's allocation as the next
+                // bucket's backing store (and vice versa).
+                self.cur.clear();
+                self.cur_pos = 0;
+                std::mem::swap(&mut self.cur, &mut self.buckets[idx]);
+                self.occ[idx / 64] &= !(1 << (idx % 64));
+                self.in_buckets -= self.cur.len();
+                // Unique seqs: (time, seq) never ties, so unstable
+                // sorting is deterministic.
+                self.cur.sort_unstable_by_key(|e| (e.time, e.seq));
+                self.cursor_tick = tick;
+                continue;
+            }
+            if self.overflow.is_empty() {
+                return None;
+            }
+            self.refill();
+        }
+    }
+
+    /// First armed tick in `[from, horizon)`, by word-scanning the
+    /// occupancy bitmap (ticks map bijectively onto bucket indices
+    /// within one window, so every set bit met along the scan is the
+    /// tick the scan position says it is).
+    fn next_occupied(&self, from: u64) -> Option<u64> {
+        let horizon = self.horizon();
+        let mut tick = from;
+        while tick < horizon {
+            let idx = (tick & TICK_MASK) as usize;
+            let bit = idx % 64;
+            let w = self.occ[idx / 64] >> bit;
+            if w != 0 {
+                let cand = tick + w.trailing_zeros() as u64;
+                return (cand < horizon).then_some(cand);
+            }
+            tick += 64 - bit as u64;
+        }
+        None
+    }
+
+    /// Wheel empty, overflow not: advance the window to the overflow
+    /// minimum and migrate everything below the new horizon (W2).
+    fn refill(&mut self) {
+        debug_assert_eq!(self.in_buckets, 0);
+        debug_assert_eq!(self.cur_pos, self.cur.len());
+        // Cancelled entries that bubbled to the top are dropped here
+        // rather than steering the new base.
+        while let Some(Reverse(top)) = self.overflow.peek() {
+            if !self.cancelled.remove(&top.seq) {
+                break;
+            }
+            self.overflow.pop();
+        }
+        let Some(Reverse(top)) = self.overflow.peek() else { return };
+        let base = tick_of(top.time);
+        debug_assert!(base >= self.horizon(), "overflow entry inside the wheel window");
+        self.base_tick = base;
+        self.cursor_tick = base - 1;
+        let horizon = self.horizon();
+        while let Some(Reverse(top)) = self.overflow.peek() {
+            if tick_of(top.time) >= horizon {
+                break;
+            }
+            let Reverse(e) = self.overflow.pop().unwrap();
+            if self.cancelled.remove(&e.seq) {
+                continue;
+            }
+            let idx = (tick_of(e.time) & TICK_MASK) as usize;
+            self.buckets[idx].push(e);
+            self.occ[idx / 64] |= 1 << (idx % 64);
+            self.in_buckets += 1;
+        }
+    }
+
+    fn peek_time(&self) -> Option<SimTime> {
+        if self.cur_pos < self.cur.len() {
+            return Some(self.cur[self.cur_pos].time);
+        }
+        if self.in_buckets > 0 {
+            let tick = self
+                .next_occupied(self.cursor_tick + 1)
+                .expect("occupancy bitmap out of sync with in_buckets");
+            let bucket = &self.buckets[(tick & TICK_MASK) as usize];
+            return bucket.iter().map(|e| e.time).min();
+        }
+        // `peek` is `&self`, so a tombstoned overflow top falls back
+        // to a filtered scan (rare: only when the earliest far-future
+        // entry was cancelled and nothing has popped since).
+        let Reverse(top) = self.overflow.peek()?;
+        if !self.cancelled.contains(&top.seq) {
+            return Some(top.time);
+        }
+        self.overflow
+            .iter()
+            .filter(|Reverse(e)| !self.cancelled.contains(&e.seq))
+            .map(|Reverse(e)| e.time)
+            .min()
+    }
+
+    fn cancel(&mut self, time: SimTime, seq: u64) -> bool {
+        let tick = tick_of(time);
+        if tick >= self.horizon() {
+            // W1: at or past the horizon means overflow, exactly.
+            debug_assert!(self.overflow.iter().any(|Reverse(e)| e.seq == seq));
+            return self.cancelled.insert(seq);
+        }
+        if tick == self.cursor_tick {
+            // In the sorted live tail: locate by (time, seq) and
+            // remove preserving order.
+            let tail = &self.cur[self.cur_pos..];
+            let at = tail.partition_point(|r| (r.time, r.seq) < (time, seq));
+            if at < tail.len() && tail[at].seq == seq {
+                self.cur.remove(self.cur_pos + at);
+                return true;
+            }
+            return false;
+        }
+        // In a bucket (unsorted): swap-remove, clear the bit if empty.
+        let idx = (tick & TICK_MASK) as usize;
+        let bucket = &mut self.buckets[idx];
+        let Some(at) = bucket.iter().position(|e| e.seq == seq) else { return false };
+        bucket.swap_remove(at);
+        if bucket.is_empty() {
+            self.occ[idx / 64] &= !(1 << (idx % 64));
+        }
+        self.in_buckets -= 1;
+        true
+    }
 }
 
 impl<E: Ord + Copy> EventHeap<E> {
     pub fn new() -> Self {
-        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+        Self::with_kind(HeapKind::default())
     }
 
-    /// Schedule `event` at absolute virtual time `time`.
-    pub fn push(&mut self, time: SimTime, event: E) {
+    pub fn with_kind(kind: HeapKind) -> Self {
+        let backend = match kind {
+            HeapKind::Seed => {
+                Backend::Seed { heap: BinaryHeap::new(), cancelled: HashSet::new() }
+            }
+            HeapKind::Wheel => Backend::Wheel(Wheel::new()),
+        };
+        EventHeap { backend, seq: 0, len: 0, stats: HeapStats::default() }
+    }
+
+    pub fn kind(&self) -> HeapKind {
+        match self.backend {
+            Backend::Seed { .. } => HeapKind::Seed,
+            Backend::Wheel(_) => HeapKind::Wheel,
+        }
+    }
+
+    /// Schedule `event` at absolute virtual time `time`; returns the
+    /// entry's sequence number — the handle [`cancel`](Self::cancel)
+    /// takes. `time` must be at or after the last popped time (the
+    /// engine's monotone-clock contract); the wheel backend
+    /// debug-asserts it.
+    pub fn push(&mut self, time: SimTime, event: E) -> u64 {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Entry { time, seq, event }));
+        let e = Entry { time, seq, event };
+        match &mut self.backend {
+            Backend::Seed { heap, .. } => heap.push(Reverse(e)),
+            Backend::Wheel(w) => {
+                w.push(e);
+                self.stats.peak_wheel = self.stats.peak_wheel.max(w.wheel_live());
+                self.stats.peak_overflow = self.stats.peak_overflow.max(w.overflow_live());
+            }
+        }
+        self.len += 1;
+        self.stats.peak_depth = self.stats.peak_depth.max(self.len);
+        seq
     }
 
-    /// Pop the earliest event, if any.
+    /// Pop the earliest live event, if any.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|Reverse(e)| (e.time, e.event))
+        let popped = match &mut self.backend {
+            Backend::Seed { heap, cancelled } => loop {
+                let Some(Reverse(e)) = heap.pop() else { break None };
+                if cancelled.remove(&e.seq) {
+                    continue;
+                }
+                break Some(e);
+            },
+            Backend::Wheel(w) => w.pop(),
+        };
+        popped.map(|e| {
+            self.len -= 1;
+            (e.time, e.event)
+        })
     }
 
-    /// Time of the earliest pending event.
+    /// Time of the earliest pending live event.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.time)
+        match &self.backend {
+            Backend::Seed { heap, cancelled } => {
+                if cancelled.is_empty() {
+                    return heap.peek().map(|Reverse(e)| e.time);
+                }
+                heap.iter()
+                    .filter(|Reverse(e)| !cancelled.contains(&e.seq))
+                    .map(|Reverse(e)| e.time)
+                    .min()
+            }
+            Backend::Wheel(w) => w.peek_time(),
+        }
+    }
+
+    /// Eagerly remove a pending entry by its `(time, seq)`
+    /// coordinates (as returned by [`push`](Self::push)). Returns
+    /// whether an entry was reclaimed; cancelling an entry that
+    /// already popped (or was already cancelled) is a no-op. `time`
+    /// must be the exact scheduled time — it is what locates the
+    /// entry in O(bucket) on the wheel.
+    pub fn cancel(&mut self, time: SimTime, seq: u64) -> bool {
+        let hit = match &mut self.backend {
+            Backend::Seed { heap, cancelled } => {
+                heap.iter().any(|Reverse(e)| e.seq == seq && e.time == time)
+                    && cancelled.insert(seq)
+            }
+            Backend::Wheel(w) => w.cancel(time, seq),
+        };
+        if hit {
+            self.len -= 1;
+        }
+        hit
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
+    /// Live entries pending (cancelled entries are not counted).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
+    }
+
+    /// Lifetime occupancy counters (peaks are of live entries).
+    pub fn stats(&self) -> HeapStats {
+        self.stats
     }
 }
 
@@ -71,47 +460,123 @@ mod tests {
     use super::*;
     use crate::units::Duration;
 
+    fn both() -> [EventHeap<u32>; 2] {
+        [EventHeap::with_kind(HeapKind::Seed), EventHeap::with_kind(HeapKind::Wheel)]
+    }
+
     #[test]
     fn orders_by_time() {
-        let mut h = EventHeap::new();
-        h.push(SimTime(30), 3u32);
-        h.push(SimTime(10), 1);
-        h.push(SimTime(20), 2);
-        assert_eq!(h.pop(), Some((SimTime(10), 1)));
-        assert_eq!(h.pop(), Some((SimTime(20), 2)));
-        assert_eq!(h.pop(), Some((SimTime(30), 3)));
-        assert_eq!(h.pop(), None);
+        for mut h in both() {
+            h.push(SimTime(30), 3u32);
+            h.push(SimTime(10), 1);
+            h.push(SimTime(20), 2);
+            assert_eq!(h.pop(), Some((SimTime(10), 1)));
+            assert_eq!(h.pop(), Some((SimTime(20), 2)));
+            assert_eq!(h.pop(), Some((SimTime(30), 3)));
+            assert_eq!(h.pop(), None);
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut h = EventHeap::new();
-        let t = SimTime::ZERO + Duration::from_secs(1);
-        h.push(t, 7u32);
-        h.push(t, 3);
-        h.push(t, 9);
-        assert_eq!(h.pop().unwrap().1, 7);
-        assert_eq!(h.pop().unwrap().1, 3);
-        assert_eq!(h.pop().unwrap().1, 9);
+        for mut h in both() {
+            let t = SimTime::ZERO + Duration::from_secs(1);
+            h.push(t, 7u32);
+            h.push(t, 3);
+            h.push(t, 9);
+            assert_eq!(h.pop().unwrap().1, 7);
+            assert_eq!(h.pop().unwrap().1, 3);
+            assert_eq!(h.pop().unwrap().1, 9);
+        }
     }
 
     #[test]
     fn peek_does_not_consume() {
-        let mut h = EventHeap::new();
-        h.push(SimTime(5), 1u8);
-        assert_eq!(h.peek_time(), Some(SimTime(5)));
-        assert_eq!(h.len(), 1);
-        assert!(!h.is_empty());
+        for mut h in both() {
+            h.push(SimTime(5), 1u8);
+            assert_eq!(h.peek_time(), Some(SimTime(5)));
+            assert_eq!(h.len(), 1);
+            assert!(!h.is_empty());
+        }
     }
 
     #[test]
     fn interleaved_push_pop() {
-        let mut h = EventHeap::new();
-        h.push(SimTime(10), 1u32);
-        h.push(SimTime(5), 0);
-        assert_eq!(h.pop().unwrap().1, 0);
-        h.push(SimTime(7), 2);
-        assert_eq!(h.pop().unwrap().1, 2);
-        assert_eq!(h.pop().unwrap().1, 1);
+        for mut h in both() {
+            h.push(SimTime(10), 1u32);
+            h.push(SimTime(5), 0);
+            assert_eq!(h.pop().unwrap().1, 0);
+            h.push(SimTime(7), 2);
+            assert_eq!(h.pop().unwrap().1, 2);
+            assert_eq!(h.pop().unwrap().1, 1);
+        }
+    }
+
+    /// One second of virtual time is ~15 ticks; one hour crosses the
+    /// wheel horizon into overflow and back out through refills.
+    #[test]
+    fn wheel_spans_ticks_and_overflow() {
+        let secs = |s: u64| SimTime::ZERO + Duration::from_secs(s);
+        for mut h in both() {
+            // Far-future first, then near, then same-tick jitter.
+            h.push(secs(3_600), 4u32);
+            h.push(secs(7_200), 5);
+            h.push(secs(1), 1);
+            h.push(SimTime(secs(1).0 + 1), 2);
+            h.push(secs(120), 3);
+            let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, [1, 2, 3, 4, 5]);
+            assert!(h.is_empty());
+        }
+    }
+
+    #[test]
+    fn cancel_reclaims_pending_entries() {
+        let secs = |s: u64| SimTime::ZERO + Duration::from_secs(s);
+        for mut h in both() {
+            let s1 = h.push(secs(1), 1u32);
+            let s2 = h.push(secs(2), 2);
+            let s3 = h.push(secs(500), 3); // overflow on the wheel
+            assert_eq!(h.len(), 3);
+            assert!(h.cancel(secs(2), s2));
+            assert!(!h.cancel(secs(2), s2), "double cancel must be a no-op");
+            assert!(h.cancel(secs(500), s3));
+            assert_eq!(h.len(), 1);
+            assert_eq!(h.peek_time(), Some(secs(1)));
+            assert_eq!(h.pop(), Some((secs(1), 1)));
+            assert_eq!(h.pop(), None);
+            let _ = s1;
+        }
+    }
+
+    #[test]
+    fn cancelled_overflow_entries_never_resurface() {
+        let secs = |s: u64| SimTime::ZERO + Duration::from_secs(s);
+        for mut h in both() {
+            let s1 = h.push(secs(400), 1u32); // beyond the ~68.7 s horizon
+            h.push(secs(401), 2);
+            h.push(secs(1), 0);
+            assert!(h.cancel(secs(400), s1));
+            assert_eq!(h.pop(), Some((secs(1), 0)));
+            // The refill that services secs(401) must drop the
+            // cancelled secs(400) entry, not steer the window by it.
+            assert_eq!(h.pop(), Some((secs(401), 2)));
+            assert_eq!(h.pop(), None);
+        }
+    }
+
+    #[test]
+    fn stats_track_peaks() {
+        let secs = |s: u64| SimTime::ZERO + Duration::from_secs(s);
+        let mut h = EventHeap::with_kind(HeapKind::Wheel);
+        h.push(secs(1), 1u32);
+        h.push(secs(2), 2);
+        h.push(secs(900), 3);
+        let st = h.stats();
+        assert_eq!(st.peak_depth, 3);
+        assert_eq!(st.peak_wheel, 2);
+        assert_eq!(st.peak_overflow, 1);
+        while h.pop().is_some() {}
+        assert_eq!(h.stats().peak_depth, 3, "peaks survive the drain");
     }
 }

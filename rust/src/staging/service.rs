@@ -101,11 +101,12 @@ use crate::dataflow::graph::{Task, TaskGraph};
 use crate::dataflow::sched::{
     ReadStats, SchedulerCfg, SessionId, SessionScheduler, TASK_TAG_BASE,
 };
-use crate::engine::{Director, Notice, SimCore, DEMOTE_TAG};
+use crate::engine::{Director, KernelStats, Notice, SimCore, DEMOTE_TAG};
 use crate::metrics::Percentiles;
 use crate::mpisim::Comm;
 use crate::pfs::{Blob, GpfsParams};
 use crate::simtime::flownet::ThroughputMode;
+use crate::simtime::heap::HeapKind;
 use crate::staging::ingest::{Ingest, IngestCfg, IngestMode, IngestOutcome, INGEST_TAG_BASE};
 use crate::staging::policy::{
     elastic_tag, keepalive_tag, min_warm, pool_schedule, AdmitQueue, ElasticCfg, PolicyKind,
@@ -1004,6 +1005,26 @@ pub struct ServeOutcome {
     /// Fewest warm nodes the elastic pool ever held (`nodes` when the
     /// pool is disarmed).
     pub min_warm_nodes: u32,
+    /// Events the engine processed draining the run. **Kernel-
+    /// sensitive**: the wheel kernel reclaims stale flow checks before
+    /// they pop, so its raw count can be lower than the seed
+    /// kernel's — compare [`ServeOutcome::useful_events`] across
+    /// kernels, never this.
+    pub events_processed: u64,
+    /// Kernel observability snapshot at drain (heap occupancy peaks,
+    /// stale-check economy).
+    pub kernel: KernelStats,
+}
+
+impl ServeOutcome {
+    /// Events that did real work: total pops minus the stale flow
+    /// checks that fired as no-ops. Identical across event-heap
+    /// backends (the wheel kernel turns would-be stale pops into
+    /// eager cancels; everything else is bit-identical), so this is
+    /// the cross-kernel comparison figure.
+    pub fn useful_events(&self) -> u64 {
+        self.events_processed - self.kernel.stale_check_pops
+    }
 }
 
 /// Run one serve scenario on an Orthros-class cluster of `nodes` fat
@@ -1011,6 +1032,17 @@ pub struct ServeOutcome {
 /// shared NFS backplane — the campaign experiment's machine model).
 pub fn run_serve(nodes: u32, cfg: &ServiceCfg, mode: ThroughputMode) -> ServeOutcome {
     run_serve_specs(nodes, cfg, mode, generate_workload(cfg))
+}
+
+/// [`run_serve`] with an explicit event-heap backend (`Seed` is the
+/// differential baseline for the kernel bench and property suite).
+pub fn run_serve_kernel(
+    nodes: u32,
+    cfg: &ServiceCfg,
+    mode: ThroughputMode,
+    kind: HeapKind,
+) -> ServeOutcome {
+    run_serve_specs_kernel(nodes, cfg, mode, kind, generate_workload(cfg))
 }
 
 /// Run a serve scenario over an explicit session list: the property
@@ -1023,13 +1055,24 @@ pub fn run_serve_specs(
     mode: ThroughputMode,
     specs: Vec<SessionSpec>,
 ) -> ServeOutcome {
+    run_serve_specs_kernel(nodes, cfg, mode, HeapKind::default(), specs)
+}
+
+/// [`run_serve_specs`] with an explicit event-heap backend.
+pub fn run_serve_specs_kernel(
+    nodes: u32,
+    cfg: &ServiceCfg,
+    mode: ThroughputMode,
+    kind: HeapKind,
+    specs: Vec<SessionSpec>,
+) -> ServeOutcome {
     assert!(nodes >= 1);
     cfg.tenants.validate();
     for sp in &specs {
         assert!(sp.dataset < cfg.datasets, "session dataset {} out of range", sp.dataset);
         assert!(sp.tenant < cfg.tenants.count(), "session tenant {} out of range", sp.tenant);
     }
-    let mut core = SimCore::with_mode(mode);
+    let mut core = SimCore::with_parts(mode, kind);
     let mut spec = orthros();
     spec.nodes = nodes;
     let gpfs = GpfsParams { peak_bw: 1.25 * GB as f64, ..Default::default() };
@@ -1318,6 +1361,8 @@ pub fn run_serve_specs(
         reclaims: svc.reclaims,
         pool_events: svc.pool_events,
         min_warm_nodes: svc.min_warm_nodes,
+        events_processed: core.events_processed,
+        kernel: core.kernel_stats(),
     }
 }
 

@@ -155,6 +155,30 @@ pub fn report_state(name: &str, sb: crate::units::StateBytes) {
     }
 }
 
+/// Report a plain counter (kernel occupancy peaks, stale-check
+/// economy) in the grep-friendly shape and as a distinct JSON line
+/// (`{"name":…,"counter":…}`) appended to `$XSTAGE_BENCH_JSON`, so
+/// kernel-observability trajectories accumulate alongside timing and
+/// footprint ones.
+pub fn report_counter(name: &str, value: u64) {
+    println!("counter {name} ... {value}");
+    let Some(path) = std::env::var_os("XSTAGE_BENCH_JSON") else { return };
+    let line = counter_json_line(name, value);
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        eprintln!("warning: XSTAGE_BENCH_JSON append failed: {e}");
+    }
+}
+
+/// One counter as a JSON object line (stable key order).
+pub fn counter_json_line(name: &str, value: u64) -> String {
+    format!("{{\"name\":\"{}\",\"counter\":{}}}", escape_json(name), value)
+}
+
 /// One state measurement as a JSON object line (stable key order).
 pub fn state_json_line(name: &str, sb: crate::units::StateBytes) -> String {
     format!(
@@ -232,6 +256,14 @@ mod tests {
         assert_eq!(v.get("bytes_per_unit").and_then(|j| j.as_f64()), Some(256.0));
         // Zero units never divides by zero.
         assert_eq!(crate::units::StateBytes::new(100, 0).per_unit(), 0);
+    }
+
+    #[test]
+    fn counter_json_line_is_parseable() {
+        let line = counter_json_line("kernel/stale_pops", 1234);
+        assert_eq!(line, "{\"name\":\"kernel/stale_pops\",\"counter\":1234}");
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get("counter").and_then(|j| j.as_f64()), Some(1234.0));
     }
 
     #[test]

@@ -3,6 +3,7 @@ pub mod json;
 pub mod prng;
 pub mod bench;
 pub mod args;
+pub mod par;
 
 /// Schedule count for the property suites: `XSTAGE_PROP_SCHEDULES` if
 /// set (CI pins it explicitly), else `default`. Lets a local

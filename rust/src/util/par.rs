@@ -1,0 +1,112 @@
+//! The parallel experiment-matrix runner.
+//!
+//! Every experiment sweeps a matrix of *independent* seeded points:
+//! each point builds its own `SimCore` from its own seed, so points
+//! share no state and their results cannot observe each other. That
+//! makes the matrix embarrassingly parallel in *host* time while every
+//! per-point result stays bit-identical to a serial run — the only
+//! thing that changes is which OS thread happened to execute a point.
+//!
+//! [`matrix_map`] fans the points across `std::thread::scope` workers
+//! (no new dependencies — the workspace builds offline) and collects
+//! results **in point order**, so downstream tables and series are
+//! byte-identical regardless of scheduling. The worker count comes
+//! from `XSTAGE_JOBS`; `1` (the default) takes a plain serial loop —
+//! literally today's code path, not a one-thread pool.
+//!
+//! What must stay serial stays serial: anything that folds *across*
+//! points (the chaos table's calm-P99 baseline column, fig12/13's
+//! first-point speedup base, ingest's cross-point series) runs in a
+//! second, ordinary loop over the collected results.
+//!
+//! **Host-time caveat.** Wall-clock fields measured inside a point
+//! (`host_secs` and friends) remain meaningful per point, but points
+//! now time-share cores; see EXPERIMENTS.md "Host-time measurement
+//! under the parallel runner". Virtual-time outputs are unaffected.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count for experiment matrices: `XSTAGE_JOBS` if set, else 1
+/// (serial). Panics on an unparseable value — a typo silently falling
+/// back to serial would defeat a CI pin — and clamps 0 up to 1.
+pub fn jobs_from_env() -> usize {
+    match std::env::var("XSTAGE_JOBS") {
+        Ok(v) => v
+            .trim()
+            .parse::<usize>()
+            .unwrap_or_else(|e| panic!("XSTAGE_JOBS={v:?} is not a worker count: {e}"))
+            .max(1),
+        Err(_) => 1,
+    }
+}
+
+/// Map `f` over `points`, returning results in point order. With
+/// `XSTAGE_JOBS` <= 1 (or fewer than two points) this is exactly a
+/// serial `iter().map(f).collect()` on the calling thread.
+pub fn matrix_map<P, R, F>(points: Vec<P>, f: F) -> Vec<R>
+where
+    P: Send,
+    R: Send,
+    F: Fn(P) -> R + Sync,
+{
+    matrix_map_jobs(points, jobs_from_env(), f)
+}
+
+/// [`matrix_map`] with an explicit worker count (tests drive both
+/// paths without touching the process environment).
+pub fn matrix_map_jobs<P, R, F>(points: Vec<P>, jobs: usize, f: F) -> Vec<R>
+where
+    P: Send,
+    R: Send,
+    F: Fn(P) -> R + Sync,
+{
+    let n = points.len();
+    if jobs <= 1 || n <= 1 {
+        return points.into_iter().map(f).collect();
+    }
+    // Claim indices atomically, deposit each result in its own slot:
+    // collection order is the vector order, never completion order.
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let items: Vec<Mutex<Option<P>>> = points.into_iter().map(|p| Mutex::new(Some(p))).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let p = items[i].lock().unwrap().take().expect("point claimed twice");
+                let r = f(p);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker died before depositing"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_agree_in_order() {
+        let points: Vec<u64> = (0..37).collect();
+        let square = |p: u64| p * p;
+        let serial = matrix_map_jobs(points.clone(), 1, square);
+        let parallel = matrix_map_jobs(points, 4, square);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[10], 100);
+    }
+
+    #[test]
+    fn more_jobs_than_points_is_fine() {
+        assert_eq!(matrix_map_jobs(vec![7usize], 16, |p| p + 1), vec![8]);
+        let empty: Vec<u32> = Vec::new();
+        assert_eq!(matrix_map_jobs(empty, 8, |p| p), Vec::<u32>::new());
+    }
+}

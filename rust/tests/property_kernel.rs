@@ -1,0 +1,296 @@
+//! Property suite for the event-core kernel: the bucketed timer wheel
+//! vs the seed binary-heap backend, generation-stamped stale-check
+//! reclamation, and the parallel experiment-matrix runner.
+//!
+//! Four families:
+//!
+//! - **Heap differential** (500 schedules): random push/pop/cancel
+//!   interleavings — offsets spanning same-tick ties, the in-window
+//!   wheel range, and the far-future overflow heap — driven against
+//!   both [`HeapKind`] backends in lockstep. Every pop, peek, length,
+//!   and cancel verdict must match exactly, including the `(time,
+//!   seq)` FIFO tie-break, and both drains must agree to the end.
+//! - **Full-run bit-identity, scale**: a fleet matrix point run under
+//!   both backends must finish every session at the same virtual
+//!   instant with the same useful event count (raw event counts differ
+//!   only by the stale pops the wheel reclaims eagerly).
+//! - **Full-run bit-identity, chaos**: same under mid-run component
+//!   retirement (node kills) — the nastiest reclamation path.
+//! - **Parallel-runner determinism**: every experiment driver's
+//!   matrix, run serially and with 4 workers, must produce
+//!   byte-identical tables and series (the scale table's host-time
+//!   columns excluded — they measure the machine, not the model).
+
+use xstage::experiments::scale::{self, PathMode};
+use xstage::experiments::{chaos, elastic, fig10, fig11, fig12, fig13, ingest, serve, tiers};
+use xstage::simtime::flownet::ThroughputMode;
+use xstage::simtime::heap::{EventHeap, HeapKind};
+use xstage::staging::service::run_serve_kernel;
+use xstage::units::SimTime;
+use xstage::util::prng::Pcg64;
+
+/// Schedule count: `XSTAGE_PROP_SCHEDULES` if set, else 500.
+fn schedules() -> u64 {
+    xstage::util::prop_schedules(500)
+}
+
+// ---------------------------------------------------------------------
+// Family 1: wheel vs seed heap under random push/pop/cancel schedules
+// ---------------------------------------------------------------------
+
+/// One random offset from the current virtual floor, shaped to hit
+/// every wheel regime: exact ties (FIFO tie-break), same-tick
+/// neighbours, the in-window range, and the far-future overflow.
+fn offset(rng: &mut Pcg64) -> u64 {
+    match rng.range_u64(0, 9) {
+        0 => 0,                                    // same-instant tie
+        1 => rng.range_u64(0, 1 << 10),            // same wheel tick
+        2..=6 => rng.range_u64(0, 1 << 34),        // in-window
+        7 | 8 => rng.range_u64(1 << 34, 1 << 37),  // window edge / just past
+        _ => rng.range_u64(1 << 37, 1 << 40),      // deep overflow
+    }
+}
+
+#[test]
+fn wheel_and_seed_heap_agree_on_random_schedules() {
+    for seed in 0..schedules() {
+        let mut rng = Pcg64::new(0xFEE1_u64 ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut seed_heap: EventHeap<u32> = EventHeap::with_kind(HeapKind::Seed);
+        let mut wheel: EventHeap<u32> = EventHeap::with_kind(HeapKind::Wheel);
+        // The engine's monotone contract: no push below the last pop.
+        let mut floor = SimTime(0);
+        // Live entries both heaps hold, as (time, seq, payload).
+        let mut live: Vec<(SimTime, u64, u32)> = Vec::new();
+        let mut payload = 0u32;
+        for _ in 0..rng.range_u64(10, 300) {
+            match rng.range_u64(0, 9) {
+                // Push (~60%).
+                0..=5 => {
+                    let t = SimTime(floor.0 + offset(&mut rng));
+                    payload += 1;
+                    let s0 = seed_heap.push(t, payload);
+                    let s1 = wheel.push(t, payload);
+                    assert_eq!(s0, s1, "seq counters diverged (schedule {seed})");
+                    live.push((t, s0, payload));
+                }
+                // Pop (~30%).
+                6..=8 => {
+                    assert_eq!(seed_heap.peek_time(), wheel.peek_time(), "schedule {seed}");
+                    let a = seed_heap.pop();
+                    let b = wheel.pop();
+                    assert_eq!(a, b, "pop diverged (schedule {seed})");
+                    if let Some((t, p)) = a {
+                        floor = t;
+                        let i = live.iter().position(|&(_, _, lp)| lp == p).unwrap();
+                        live.swap_remove(i);
+                    }
+                }
+                // Cancel a random live entry (~10%).
+                _ => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range_u64(0, live.len() as u64 - 1) as usize;
+                    let (t, s, _) = live.swap_remove(i);
+                    let a = seed_heap.cancel(t, s);
+                    let b = wheel.cancel(t, s);
+                    assert!(a && b, "live cancel missed (schedule {seed})");
+                }
+            }
+            assert_eq!(seed_heap.len(), wheel.len(), "schedule {seed}");
+            assert_eq!(seed_heap.is_empty(), wheel.is_empty(), "schedule {seed}");
+        }
+        // Drain to the end: the full remaining order must match, and
+        // both heaps must surface exactly the surviving entries in
+        // (time, seq) order.
+        let mut drained = 0usize;
+        loop {
+            let a = seed_heap.pop();
+            let b = wheel.pop();
+            assert_eq!(a, b, "drain diverged (schedule {seed})");
+            match a {
+                Some((t, _)) => {
+                    assert!(t >= floor, "drain went backwards (schedule {seed})");
+                    floor = t;
+                    drained += 1;
+                }
+                None => break,
+            }
+        }
+        assert_eq!(drained, live.len(), "drain count wrong (schedule {seed})");
+    }
+}
+
+#[test]
+fn cancelled_entries_never_pop() {
+    // Cancel every pushed entry: both backends must drain empty, and a
+    // second cancel of the same handle must miss on both.
+    let mut seed_heap: EventHeap<u32> = EventHeap::with_kind(HeapKind::Seed);
+    let mut wheel: EventHeap<u32> = EventHeap::with_kind(HeapKind::Wheel);
+    let mut rng = Pcg64::new(77);
+    let mut handles = Vec::new();
+    for p in 0..200u32 {
+        let t = SimTime(offset(&mut rng));
+        handles.push((t, seed_heap.push(t, p)));
+        wheel.push(t, p);
+    }
+    for &(t, s) in &handles {
+        assert!(seed_heap.cancel(t, s));
+        assert!(wheel.cancel(t, s));
+    }
+    for &(t, s) in &handles {
+        assert!(!seed_heap.cancel(t, s), "double cancel hit");
+        assert!(!wheel.cancel(t, s), "double cancel hit");
+    }
+    assert_eq!(seed_heap.pop(), None);
+    assert_eq!(wheel.pop(), None);
+}
+
+// ---------------------------------------------------------------------
+// Families 2 + 3: full-run bit-identity across event-heap backends
+// ---------------------------------------------------------------------
+
+#[test]
+fn scale_point_is_bit_identical_across_backends() {
+    for (nodes, sessions, seed) in [(16, 60, 7), (8, 50, 3)] {
+        let s = scale::run_point_kernel(nodes, sessions, PathMode::Flat, seed, HeapKind::Seed);
+        let w = scale::run_point_kernel(nodes, sessions, PathMode::Flat, seed, HeapKind::Wheel);
+        assert_eq!(s.finished, w.finished, "finish times diverged at n{nodes}/s{sessions}");
+        assert_eq!(s.useful_events(), w.useful_events(), "useful events diverged");
+        // The wheel reclaims eagerly: what the seed pops stale, the
+        // wheel either reclaimed or (rarely) popped stale itself.
+        assert_eq!(
+            w.kernel.stale_checks_reclaimed + w.kernel.stale_check_pops,
+            s.kernel.stale_check_pops,
+            "stale-check economy out of balance"
+        );
+        assert_eq!(s.kernel.stale_checks_reclaimed, 0, "seed backend must not reclaim");
+    }
+}
+
+#[test]
+fn chaos_point_is_bit_identical_across_backends() {
+    for stealing in [false, true] {
+        let cfg = chaos::cfg(3, stealing, 8, 7);
+        let s = run_serve_kernel(chaos::NODES, &cfg, ThroughputMode::Fast, HeapKind::Seed);
+        let w = run_serve_kernel(chaos::NODES, &cfg, ThroughputMode::Fast, HeapKind::Wheel);
+        assert_eq!(s.turnaround_secs, w.turnaround_secs, "stealing {stealing}");
+        assert_eq!(s.useful_events(), w.useful_events(), "stealing {stealing}");
+        assert_eq!(s.lost_tasks, w.lost_tasks, "stealing {stealing}");
+        assert_eq!(s.staged_bytes, w.staged_bytes, "stealing {stealing}");
+        assert_eq!(s.copied_bytes, w.copied_bytes, "stealing {stealing}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family 4: the parallel matrix runner is worker-count-invisible
+// ---------------------------------------------------------------------
+
+/// Assert two experiment results byte-identical, optionally masking
+/// table columns (by header index) that measure host time.
+fn assert_result_identical(
+    name: &str,
+    a: &xstage::experiments::ExpResult,
+    b: &xstage::experiments::ExpResult,
+    host_cols: &[usize],
+) {
+    assert_eq!(a.series, b.series, "{name}: series diverged across worker counts");
+    assert_eq!(a.table.rows.len(), b.table.rows.len(), "{name}: row counts diverged");
+    for (ra, rb) in a.table.rows.iter().zip(&b.table.rows) {
+        for (ci, (ca, cb)) in ra.iter().zip(rb).enumerate() {
+            if host_cols.contains(&ci) {
+                continue;
+            }
+            assert_eq!(ca, cb, "{name}: cell diverged across worker counts");
+        }
+    }
+}
+
+#[test]
+fn serve_matrix_is_worker_count_invisible() {
+    assert_result_identical(
+        "serve",
+        &serve::run_with_jobs(3, 9, 1),
+        &serve::run_with_jobs(3, 9, 4),
+        &[],
+    );
+}
+
+#[test]
+fn tiers_matrix_is_worker_count_invisible() {
+    assert_result_identical(
+        "tiers",
+        &tiers::run_with_jobs(4, 7, 1),
+        &tiers::run_with_jobs(4, 7, 4),
+        &[],
+    );
+}
+
+#[test]
+fn chaos_matrix_is_worker_count_invisible() {
+    assert_result_identical(
+        "chaos",
+        &chaos::run_with_jobs(6, 9, 1),
+        &chaos::run_with_jobs(6, 9, 4),
+        &[],
+    );
+}
+
+#[test]
+fn ingest_matrix_is_worker_count_invisible() {
+    assert_result_identical(
+        "ingest",
+        &ingest::run_with_jobs(3, 9, 1),
+        &ingest::run_with_jobs(3, 9, 4),
+        &[],
+    );
+}
+
+#[test]
+fn elastic_matrix_is_worker_count_invisible() {
+    assert_result_identical(
+        "elastic",
+        &elastic::run_with_jobs(4, 9, 1),
+        &elastic::run_with_jobs(4, 9, 4),
+        &[],
+    );
+}
+
+#[test]
+fn scale_matrix_is_worker_count_invisible_outside_host_columns() {
+    // Scale is the one experiment whose table *and* series carry
+    // host-time measurements: columns 2-5 ("seed ev/s", "flat ev/s",
+    // "speedup", "ms-host/sim-s") and both series (speedup,
+    // events/sec) measure the machine, so only the virtual and
+    // resident-state columns must match bitwise.
+    let a = scale::run_with_jobs(&[8, 16], &[30, 40], 5, 1);
+    let b = scale::run_with_jobs(&[8, 16], &[30, 40], 5, 4);
+    assert_eq!(a.table.rows.len(), b.table.rows.len(), "scale: row counts diverged");
+    assert_eq!(a.series.len(), b.series.len(), "scale: series shape diverged");
+    for (ra, rb) in a.table.rows.iter().zip(&b.table.rows) {
+        for (ci, (ca, cb)) in ra.iter().zip(rb).enumerate() {
+            if (2..=5).contains(&ci) {
+                continue;
+            }
+            assert_eq!(ca, cb, "scale: cell diverged across worker counts");
+        }
+    }
+}
+
+#[test]
+fn fig_sweeps_are_worker_count_invisible() {
+    assert_result_identical("fig10", &fig10::run_jobs(&[512], 1), &fig10::run_jobs(&[512], 4), &[]);
+    assert_result_identical("fig11", &fig11::run_jobs(&[512], 1), &fig11::run_jobs(&[512], 4), &[]);
+    assert_result_identical(
+        "fig12",
+        &fig12::run_jobs(&[64, 128], 1),
+        &fig12::run_jobs(&[64, 128], 4),
+        &[],
+    );
+    assert_result_identical(
+        "fig13",
+        &fig13::run_jobs(&[64, 128], 1),
+        &fig13::run_jobs(&[64, 128], 4),
+        &[],
+    );
+}
